@@ -1,0 +1,64 @@
+//! Quickstart: one node, one telemetry stream, live admission decisions.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Generates a synthetic VM trace (52 VMware metrics at 20 s cadence),
+//! streams it through a PRONTO node (FPCA-Edge + Reject-Job), and prints
+//! the admission timeline plus summary statistics.
+
+use pronto::scheduler::{NodeScheduler, RejectConfig};
+use pronto::telemetry::{GeneratorConfig, TraceGenerator};
+
+fn main() {
+    let steps = 4_000;
+    let gen = TraceGenerator::new(GeneratorConfig::default(), 42);
+    let trace = gen.generate_vm(0, steps);
+    println!(
+        "trace: {} timesteps x {} metrics (VM 0, 20s cadence, ~{:.1} h)",
+        trace.len(),
+        trace.dim(),
+        trace.len() as f64 * 20.0 / 3600.0
+    );
+
+    let mut node = NodeScheduler::new(trace.dim(), RejectConfig::default());
+    let mut rejected_at = Vec::new();
+    for t in 0..trace.len() {
+        let accept = node.observe(trace.features(t));
+        if !accept {
+            rejected_at.push(t);
+        }
+    }
+
+    let stats = node.stats();
+    println!("\nadmission summary");
+    println!("  steps observed        : {}", stats.steps);
+    println!("  rejection raised      : {} steps", stats.rejected_steps);
+    println!("  downtime              : {:.2}%", 100.0 * stats.downtime());
+    println!("  current rank          : {}", node.estimate().rank());
+    println!(
+        "  leading singular value: {:.3}",
+        node.estimate().sigma.first().copied().unwrap_or(0.0)
+    );
+
+    // Cross-check the signal against the CPU Ready ground truth.
+    let threshold = 1000.0;
+    let spikes: Vec<usize> = (0..trace.len())
+        .filter(|&t| trace.cpu_ready(t) >= threshold)
+        .collect();
+    let predicted = spikes
+        .iter()
+        .filter(|&&t| {
+            let lo = t.saturating_sub(5);
+            rejected_at.iter().any(|&r| r >= lo && r <= t)
+        })
+        .count();
+    println!("\nvs CPU Ready ground truth (spike = ready >= {threshold} ms)");
+    println!("  CPU Ready spikes      : {}", spikes.len());
+    println!(
+        "  predicted (<=5 steps early): {} ({:.0}%)",
+        predicted,
+        100.0 * predicted as f64 / spikes.len().max(1) as f64
+    );
+}

@@ -1,0 +1,154 @@
+//! End-to-end driver: the full three-layer system on a realistic workload.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example trace_scheduling
+//! ```
+//!
+//! Composition proof for the whole stack:
+//!   L1/L2 — the AOT-compiled `fpca_update` / `project_detect` HLO
+//!           artifacts (Pallas projection kernel inside) execute on the
+//!           PJRT CPU client for node 0's pipeline;
+//!   L3    — the Rust coordinator runs a 24-node data center: telemetry
+//!           ticks, Poisson job arrivals, power-of-2 dispatch, per-node
+//!           PRONTO admission (native FPCA-Edge on the other 23 nodes).
+//!
+//! Reports the paper's headline quantities: spike-prediction rate,
+//! downtime, placement quality vs the always-accept and oracle baselines,
+//! plus decision latency. Results are recorded in EXPERIMENTS.md §E2E.
+
+use pronto::baselines::StreamingEmbedding;
+use pronto::fpca::{FpcaEdge, FpcaEdgeConfig};
+use pronto::scheduler::{
+    Admission, CpuReadyOracle, NodeScheduler, ProntoPolicy, RandomPolicy, RejectConfig,
+};
+use pronto::sim::{DataCenterSim, SimConfig};
+use pronto::telemetry::{GeneratorConfig, TraceGenerator, CPU_READY_IDX};
+use std::time::Instant;
+
+fn fleet(n: usize, steps: usize, seed: u64) -> Vec<pronto::telemetry::VmTrace> {
+    let gen = TraceGenerator::new(GeneratorConfig::default(), seed);
+    (0..n).map(|v| gen.generate_vm_in_cluster(v / 8, v, steps)).collect()
+}
+
+fn run_policy(
+    label: &str,
+    traces: &[pronto::telemetry::VmTrace],
+    policies: Vec<Box<dyn Admission>>,
+) {
+    let t0 = Instant::now();
+    let report = DataCenterSim::new(SimConfig::default(), traces.to_vec(), policies).run();
+    let wall = t0.elapsed();
+    let decisions = report.steps * report.nodes;
+    println!(
+        "{label:<14} accept {:>5.1}%  placement-quality {:>5.1}%  rejection-precision {:>5.1}%  ({} jobs, {:.2} µs/decision)",
+        100.0 * report.acceptance_rate(),
+        100.0 * report.placement_quality(),
+        100.0 * report.rejection_precision(),
+        report.jobs_arrived,
+        wall.as_micros() as f64 / decisions as f64,
+    );
+}
+
+fn main() {
+    let nodes = 24;
+    let steps = 6_000; // ≈ 33 h of 20 s samples per node
+    println!("end-to-end: {nodes} nodes x {steps} steps, Poisson job stream\n");
+    let traces = fleet(nodes, steps, 2021);
+    let d = traces[0].dim();
+
+    // --- L1/L2 composition check: artifact-backed pipeline on node 0 ----
+    match pronto::runtime::shared_runtime() {
+        Some(rt) => {
+            let t0 = Instant::now();
+            let mut xf = pronto::runtime::XlaFpca::new(rt.clone(), d).expect("XlaFpca");
+            let mut pd = pronto::runtime::XlaProjectDetect::new(rt.clone());
+            let cfg = rt.manifest().config;
+            let mut rejects = 0usize;
+            let mut blocks = 0usize;
+            let tr = &traces[0];
+            let mut block_buf = vec![0.0f32; cfg.block * cfg.dim];
+            for t in 0..steps {
+                let y = tr.features(t);
+                // Fill the detect block row-major (b × d).
+                let row = t % cfg.block;
+                for i in 0..d.min(cfg.dim) {
+                    block_buf[row * cfg.dim + i] = y[i] as f32;
+                }
+                xf.observe(y);
+                if row == cfg.block - 1 {
+                    let est = xf.estimate();
+                    if !est.is_empty() {
+                        let (_, reject) = pd.run_block(&est, &block_buf).expect("detect");
+                        rejects += reject.iter().filter(|&&r| r == 1.0).count();
+                    }
+                    blocks += 1;
+                }
+            }
+            println!(
+                "L1/L2 artifact path (node 0): {blocks} blocks through fpca_update + project_detect, {} rejection steps, {:.1} µs/observation",
+                rejects,
+                t0.elapsed().as_micros() as f64 / steps as f64
+            );
+        }
+        None => {
+            println!("L1/L2 artifacts not built (run `make artifacts`); skipping XLA path");
+        }
+    }
+
+    // --- L3: full-fleet simulations under competing policies -----------
+    println!("\npolicy comparison (same traces, same job stream):");
+    let pronto_policies: Vec<Box<dyn Admission>> = traces
+        .iter()
+        .map(|t| {
+            Box::new(ProntoPolicy::new(NodeScheduler::with_embedding(
+                FpcaEdge::new(t.dim(), FpcaEdgeConfig::default()),
+                RejectConfig::default(),
+            ))) as Box<dyn Admission>
+        })
+        .collect();
+    run_policy("PRONTO", &traces, pronto_policies);
+
+    let always: Vec<Box<dyn Admission>> = traces
+        .iter()
+        .map(|_| Box::new(RandomPolicy::always_accept(3)) as Box<dyn Admission>)
+        .collect();
+    run_policy("always-accept", &traces, always);
+
+    let random: Vec<Box<dyn Admission>> = traces
+        .iter()
+        .enumerate()
+        .map(|(i, _)| Box::new(RandomPolicy::new(0.2, i as u64)) as Box<dyn Admission>)
+        .collect();
+    run_policy("random-20%", &traces, random);
+
+    let oracle: Vec<Box<dyn Admission>> = traces
+        .iter()
+        .map(|_| Box::new(CpuReadyOracle::new(CPU_READY_IDX, 1000.0)) as Box<dyn Admission>)
+        .collect();
+    run_policy("oracle", &traces, oracle);
+
+    // --- Spike-prediction headline (Figure 6 criterion) ----------------
+    let tr = &traces[1];
+    let mut node = NodeScheduler::new(d, RejectConfig::default());
+    let mut raised = Vec::with_capacity(steps);
+    for t in 0..steps {
+        node.observe(tr.features(t));
+        raised.push(node.rejection_raised());
+    }
+    let mut spikes = 0;
+    let mut predicted = 0;
+    for t in 0..steps {
+        if tr.cpu_ready(t) >= 1000.0 {
+            spikes += 1;
+            let lo = t.saturating_sub(5);
+            if raised[lo..=t].iter().any(|&r| r) {
+                predicted += 1;
+            }
+        }
+    }
+    println!(
+        "\nheadline (node 1): {predicted}/{spikes} CPU Ready spikes preceded by a rejection raise ({:.0}%), downtime {:.1}%",
+        100.0 * predicted as f64 / spikes.max(1) as f64,
+        100.0 * node.stats().downtime()
+    );
+}

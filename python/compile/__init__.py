@@ -1,0 +1,3 @@
+# Build-time-only package: authors the L2 JAX graphs (calling the L1 Pallas
+# kernels) and AOT-lowers them to HLO text artifacts the Rust runtime loads.
+# Never imported on the request path.

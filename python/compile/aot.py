@@ -1,0 +1,160 @@
+"""AOT lowering: JAX/Pallas graphs → HLO *text* artifacts + manifest.
+
+HLO text (not ``.serialize()``) is the interchange format: jax ≥ 0.5 emits
+HloModuleProtos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Run from ``python/``:  ``python -m compile.aot --out ../artifacts``
+(this is what ``make artifacts`` does). Python never runs after this.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Default compiled configuration (the paper's evaluation setting):
+# d = 52 VM metrics, r = 4 (§7.1), block b = 32, z-score lag = 10.
+DEFAULT_D = 52
+DEFAULT_R = 4
+DEFAULT_B = 32
+DEFAULT_LAG = 10
+
+DTYPE = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(shape, DTYPE)
+
+
+def build_artifacts(d, r, b, lag):
+    """Lower the three graphs at one (d, r, b, lag) configuration.
+
+    Returns {name: (hlo_text, manifest_entry)}.
+    """
+    arts = {}
+
+    # --- fpca_update(U, S, B, forget) -> (U', S') ---------------------
+    lowered = jax.jit(model.fpca_update).lower(
+        _spec((d, r)), _spec((r,)), _spec((d, b)), _spec(())
+    )
+    arts["fpca_update"] = (
+        to_hlo_text(lowered),
+        {
+            "inputs": [
+                {"name": "u", "shape": [d, r]},
+                {"name": "s", "shape": [r]},
+                {"name": "block", "shape": [d, b]},
+                {"name": "forget", "shape": []},
+            ],
+            "outputs": [
+                {"name": "u_new", "shape": [d, r]},
+                {"name": "s_new", "shape": [r]},
+            ],
+        },
+    )
+
+    # --- merge_subspaces(U1, S1, U2, S2, forget) -> (U, S) -------------
+    lowered = jax.jit(model.merge_subspaces).lower(
+        _spec((d, r)), _spec((r,)), _spec((d, r)), _spec((r,)), _spec(())
+    )
+    arts["merge_subspaces"] = (
+        to_hlo_text(lowered),
+        {
+            "inputs": [
+                {"name": "u1", "shape": [d, r]},
+                {"name": "s1", "shape": [r]},
+                {"name": "u2", "shape": [d, r]},
+                {"name": "s2", "shape": [r]},
+                {"name": "forget", "shape": []},
+            ],
+            "outputs": [
+                {"name": "u", "shape": [d, r]},
+                {"name": "s", "shape": [r]},
+            ],
+        },
+    )
+
+    # --- project_detect(U, S, Y, buf, seen) -> (flags, reject, buf', seen')
+    lowered = jax.jit(model.project_detect).lower(
+        _spec((d, r)),
+        _spec((r,)),
+        _spec((b, d)),
+        _spec((r, lag)),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    )
+    arts["project_detect"] = (
+        to_hlo_text(lowered),
+        {
+            "inputs": [
+                {"name": "u", "shape": [d, r]},
+                {"name": "s", "shape": [r]},
+                {"name": "y_block", "shape": [b, d]},
+                {"name": "buf", "shape": [r, lag]},
+                {"name": "seen", "shape": [], "dtype": "s32"},
+            ],
+            "outputs": [
+                {"name": "flags", "shape": [b, r]},
+                {"name": "reject", "shape": [b]},
+                {"name": "buf_new", "shape": [r, lag]},
+                {"name": "seen_new", "shape": [], "dtype": "s32"},
+            ],
+        },
+    )
+    return arts
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--dim", type=int, default=DEFAULT_D)
+    ap.add_argument("--rank", type=int, default=DEFAULT_R)
+    ap.add_argument("--block", type=int, default=DEFAULT_B)
+    ap.add_argument("--lag", type=int, default=DEFAULT_LAG)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    arts = build_artifacts(args.dim, args.rank, args.block, args.lag)
+
+    manifest = {
+        "config": {
+            "dim": args.dim,
+            "rank": args.rank,
+            "block": args.block,
+            "lag": args.lag,
+            "dtype": "f32",
+        },
+        "artifacts": {},
+    }
+    for name, (text, entry) in arts.items():
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        entry["file"] = fname
+        manifest["artifacts"][name] = entry
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

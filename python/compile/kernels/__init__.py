@@ -1,0 +1,2 @@
+# L1: Pallas kernels for the hot matmuls (projection + Gram) and their
+# pure-jnp oracles (ref.py).

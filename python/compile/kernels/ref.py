@@ -1,0 +1,22 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness ground truth.
+
+Every kernel in this package must agree with its oracle to float tolerance
+across the pytest/hypothesis shape sweep (``python/tests/test_kernels.py``).
+"""
+
+import jax.numpy as jnp
+
+
+def project_block_ref(y_block, u):
+    """Reference for ``projection.project_block``: plain jnp matmul."""
+    return jnp.dot(y_block, u)
+
+
+def gram_ref(m):
+    """Reference for ``projection.gram``."""
+    return jnp.dot(m.T, m)
+
+
+def matmul_ref(x, y):
+    """Reference for ``projection.matmul_tiled``."""
+    return jnp.dot(x, y)

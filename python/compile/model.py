@@ -1,0 +1,119 @@
+"""L2: the PRONTO compute graphs, AOT-lowered to HLO artifacts.
+
+Three jitted functions, all static-shaped, all calling the L1 Pallas
+kernels, all free of LAPACK custom-calls (see ``linalg.py``):
+
+* ``fpca_update`` — one FPCA-Edge block update (Algorithm 5 at fixed rank):
+  SVD_r of [λ·UΣ | B] via Gram + orthogonal iteration. Handles the empty
+  estimate (Σ = 0) transparently — the first block reduces to SVD_r(B).
+* ``merge_subspaces`` — aggregator merge (Algorithm 3/4 semantics):
+  SVD_r of [λ₁·U₁Σ₁ | λ₂·U₂Σ₂].
+* ``project_detect`` — a block of Reject-Job (Algorithm 1): project b
+  observations onto (U, Σ), run the streaming z-score filter as a
+  ``lax.scan``, and emit per-step ternary spike flags plus the rejection
+  signal. State (the dampened lag buffer + count) threads through so the
+  Rust runtime can call block after block.
+
+The paper's evaluation fixes r = 4 (§7.1); rank *adaptation* (Eq. 7) is a
+per-block, data-dependent reshape and lives in the Rust native path — the
+artifact path compiles one module per (d, r, b) configuration instead
+(`aot.py` emits the default d=52, r=4, b=32, lag=10).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.projection import project_block
+from .linalg import svd_topk
+
+# The z-score constants of Algorithm 1.
+ZSCORE_ALPHA = 3.5
+ZSCORE_BETA = 0.5
+REJECT_THRESHOLD = 1.0
+
+
+def fpca_update(u, s, block, forget):
+    """One FPCA-Edge block update at fixed rank.
+
+    Args:
+      u: (d, r) current orthonormal estimate (zeros when empty).
+      s: (r,) current singular values (zeros when empty).
+      block: (d, b) new observations, one column per timestep.
+      forget: scalar λ ∈ (0, 1] down-weighting the previous estimate.
+
+    Returns:
+      (u', s'): the updated rank-r estimate of SVD_r([λ·U diag(S) | B]).
+    """
+    d, r = u.shape
+    m = jnp.concatenate([forget * u * s[None, :], block], axis=1)
+    u2, s2, _ = svd_topk(m, r)
+    return u2, s2
+
+
+def merge_subspaces(u1, s1, u2, s2, forget):
+    """Aggregator merge: SVD_r([λ·U₁Σ₁ | U₂Σ₂]) (Algorithm 3 semantics;
+    Algorithm 4 is the same operator factored to avoid Vᵀ — our Gram-based
+    svd_topk never forms Vᵀ either)."""
+    r = u1.shape[1]
+    m = jnp.concatenate([forget * u1 * s1[None, :], u2 * s2[None, :]], axis=1)
+    um, sm, _ = svd_topk(m, r)
+    return um, sm
+
+
+def _zscore_step(carry, p_row, *, lag):
+    """One timestep of the multi-lane z-score filter (Algorithm 1 body).
+
+    carry: (buf (r, lag) dampened history, seen scalar int32)
+    p_row: (r,) projections at this timestep.
+    Returns new carry and (flags (r,) in {−1,0,+1} float32).
+    """
+    buf, seen = carry
+    warmed = seen >= lag
+    mean = jnp.mean(buf, axis=1)
+    std = jnp.std(buf, axis=1)
+    dev = p_row - mean
+    is_spike = warmed & (jnp.abs(dev) > ZSCORE_ALPHA * std) & (std > 0)
+    flags = jnp.where(is_spike, jnp.sign(dev), 0.0).astype(p_row.dtype)
+    # Dampened entry for flagged lanes: β·x + (1−β)·previous.
+    last = buf[:, -1]
+    entering = jnp.where(
+        is_spike, ZSCORE_BETA * p_row + (1.0 - ZSCORE_BETA) * last, p_row
+    )
+    buf = jnp.concatenate([buf[:, 1:], entering[:, None]], axis=1)
+    return (buf, seen + 1), flags
+
+
+def project_detect(u, s, y_block, buf, seen):
+    """A block of Reject-Job evaluations.
+
+    Args:
+      u: (d, r) embedding; s: (r,) singular values.
+      y_block: (b, d) observations, one row per timestep.
+      buf: (r, lag) dampened-history state of the z-score filter.
+      seen: () int32 — observations consumed so far.
+
+    Returns:
+      flags: (b, r) ternary spike indicators,
+      reject: (b,) float32 {0, 1} rejection signal per timestep,
+      buf', seen': threaded filter state.
+    """
+    lag = buf.shape[1]
+    # L1 kernel: P = Y·U (b × r).
+    p = project_block(y_block, u)
+
+    (buf, seen), flags = jax.lax.scan(
+        lambda c, row: _zscore_step(c, row, lag=lag), (buf, seen), p
+    )
+
+    # Weighted spike sum with normalized spectrum (RejectConfig parity):
+    # R_s = Σ b_i σ_i / Σσ;  reject ⇔ R_s ≥ tr · σ₁/Σσ.
+    total = jnp.sum(s)
+    denom = jnp.where(total > 0, total, 1.0)
+    rs = jnp.dot(flags, s) / denom
+    tr = REJECT_THRESHOLD * s[0] / denom
+    reject = (rs >= tr).astype(y_block.dtype)
+    # Before warmup Algorithm 1 always returns false; the scan's per-step
+    # `warmed` gate already zeroes flags, so rs = 0 < tr ⇒ reject = 0,
+    # except when tr ≤ 0 (empty spectrum) — force accept there.
+    reject = jnp.where(total > 0, reject, jnp.zeros_like(reject))
+    return flags, reject, buf, seen

@@ -1,0 +1,5 @@
+# Enable 64-bit mode for the test session: dtype-sweep tests need f64 to
+# stay f64. Artifacts are lowered by aot.py in a separate process (f32).
+import jax
+
+jax.config.update("jax_enable_x64", True)

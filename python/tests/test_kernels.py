@@ -1,0 +1,98 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and dtypes; assert_allclose against ref.py is the
+core correctness signal for the kernel layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.projection import gram, matmul_tiled, project_block
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def rand(rng, *shape, dtype=np.float32):
+    return rng.standard_normal(shape).astype(dtype)
+
+
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 70),
+    n=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_tiled_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, m, k)
+    y = rand(rng, k, n)
+    got = matmul_tiled(jnp.asarray(x), jnp.asarray(y))
+    want = ref.matmul_ref(jnp.asarray(x), jnp.asarray(y))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_matmul_tiled_dtypes(dtype):
+    rng = np.random.default_rng(0)
+    x = rand(rng, 33, 52, dtype=dtype)
+    y = rand(rng, 52, 4, dtype=dtype)
+    got = matmul_tiled(jnp.asarray(x), jnp.asarray(y))
+    assert np.asarray(got).dtype == dtype
+    np.testing.assert_allclose(np.asarray(got), x @ y, rtol=1e-5, atol=1e-5)
+
+
+@given(
+    b=st.integers(1, 64),
+    d=st.integers(1, 64),
+    r=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_project_block_matches_ref(b, d, r, seed):
+    rng = np.random.default_rng(seed)
+    y = rand(rng, b, d)
+    u = rand(rng, d, r)
+    got = project_block(jnp.asarray(y), jnp.asarray(u))
+    want = ref.project_block_ref(jnp.asarray(y), jnp.asarray(u))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@given(d=st.integers(1, 64), c=st.integers(1, 40), seed=st.integers(0, 2**31 - 1))
+def test_gram_matches_ref(d, c, seed):
+    rng = np.random.default_rng(seed)
+    m = rand(rng, d, c)
+    got = gram(jnp.asarray(m))
+    want = ref.gram_ref(jnp.asarray(m))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_exact_tile_boundaries():
+    # Shapes exactly at tile multiples exercise the no-padding path.
+    rng = np.random.default_rng(7)
+    x = rand(rng, 32, 64)
+    y = rand(rng, 64, 32)
+    got = matmul_tiled(jnp.asarray(x), jnp.asarray(y))
+    np.testing.assert_allclose(np.asarray(got), x @ y, rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_multi_tile_k_accumulation():
+    # k spanning several tiles exercises the accumulate-over-k grid axis.
+    rng = np.random.default_rng(8)
+    x = rand(rng, 16, 200)
+    y = rand(rng, 200, 8)
+    got = matmul_tiled(jnp.asarray(x), jnp.asarray(y))
+    np.testing.assert_allclose(np.asarray(got), x @ y, rtol=1e-4, atol=1e-4)
+
+
+def test_kernel_is_jittable_and_stable():
+    # Calling through jit twice must give identical results (purity).
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rand(rng, 10, 52))
+    u = jnp.asarray(rand(rng, 52, 4))
+    a = project_block(x, u)
+    b = project_block(x, u)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

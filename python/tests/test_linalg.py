@@ -1,0 +1,93 @@
+"""L2 decompositions vs scipy/numpy ground truth."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.linalg import householder_qr, svd_topk
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@given(m=st.integers(1, 40), n=st.integers(1, 12), seed=st.integers(0, 2**31 - 1))
+def test_qr_reconstructs_and_is_orthonormal(m, n, seed):
+    if m < n:
+        m, n = n, m
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((m, n)).astype(np.float32)
+    q, r = householder_qr(jnp.asarray(a))
+    q, r = np.asarray(q), np.asarray(r)
+    np.testing.assert_allclose(q @ r, a, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(q.T @ q, np.eye(n), atol=1e-4)
+    # Upper triangular with non-negative diagonal (uniqueness convention).
+    assert np.all(np.diag(r) >= -1e-6)
+    assert np.allclose(r, np.triu(r), atol=1e-6)
+
+
+def test_qr_matches_numpy_on_fixed_case():
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((20, 5)).astype(np.float64)
+    q, r = householder_qr(jnp.asarray(a))
+    qn, rn = np.linalg.qr(a)
+    # Fix numpy's sign convention to ours.
+    sign = np.sign(np.diag(rn))
+    sign[sign == 0] = 1.0
+    qn, rn = qn * sign[None, :], rn * sign[:, None]
+    np.testing.assert_allclose(np.asarray(q), qn, atol=1e-8)
+    np.testing.assert_allclose(np.asarray(r), rn, atol=1e-8)
+
+
+def test_qr_rank_deficient_is_finite():
+    a = np.ones((6, 3), dtype=np.float32)
+    q, r = householder_qr(jnp.asarray(a))
+    assert np.all(np.isfinite(np.asarray(q)))
+    np.testing.assert_allclose(np.asarray(q) @ np.asarray(r), a, atol=1e-5)
+
+
+@given(
+    d=st.integers(4, 64),
+    c=st.integers(2, 36),
+    k=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_svd_topk_matches_numpy(d, c, k, seed):
+    if d < c:
+        d, c = c, d
+    k = min(k, c)
+    rng = np.random.default_rng(seed)
+    # Low-rank-plus-noise input: realistic spectrum with a gap, which is
+    # what the FPCA update always feeds this routine.
+    r_true = min(4, c)
+    a = (
+        rng.standard_normal((d, r_true)) @ rng.standard_normal((r_true, c))
+        + 0.01 * rng.standard_normal((d, c))
+    ).astype(np.float32)
+    u, s, v = svd_topk(jnp.asarray(a), k, iters=40)
+    u, s = np.asarray(u), np.asarray(s)
+    sn = np.linalg.svd(a, compute_uv=False)[:k]
+    np.testing.assert_allclose(s, sn, rtol=2e-2, atol=2e-3)
+    # u columns orthonormal where sigma > 0.
+    nz = s > 1e-5
+    if nz.any():
+        g = u[:, nz].T @ u[:, nz]
+        np.testing.assert_allclose(g, np.eye(nz.sum()), atol=5e-3)
+
+
+def test_svd_topk_reconstruction_error_is_tail_energy():
+    rng = np.random.default_rng(3)
+    d, c, k = 30, 10, 3
+    a = rng.standard_normal((d, c)).astype(np.float64)
+    u, s, v = svd_topk(jnp.asarray(a), k, iters=60)
+    approx = np.asarray(u) @ np.diag(np.asarray(s)) @ np.asarray(v).T
+    err = np.linalg.norm(a - approx)
+    tail = np.sqrt((np.linalg.svd(a, compute_uv=False)[k:] ** 2).sum())
+    assert err <= tail * 1.05 + 1e-8, f"err={err} tail={tail}"
+
+
+def test_svd_topk_zero_matrix():
+    a = jnp.zeros((10, 5), dtype=jnp.float32)
+    u, s, v = svd_topk(a, 3)
+    assert np.all(np.asarray(s) == 0.0)
+    assert np.all(np.isfinite(np.asarray(u)))

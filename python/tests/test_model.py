@@ -1,0 +1,170 @@
+"""L2 graph semantics: FPCA update, merge, and Reject-Job block vs numpy
+oracles (ports of the Rust reference implementations)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+def svd_r(a, r):
+    u, s, vt = np.linalg.svd(a, full_matrices=False)
+    return u[:, :r], s[:r]
+
+
+def rand_orth(rng, d, r):
+    q, _ = np.linalg.qr(rng.standard_normal((d, r)))
+    return q.astype(np.float32)
+
+
+# ---------------------------------------------------------------- fpca
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_fpca_update_first_block_is_block_svd(seed):
+    rng = np.random.default_rng(seed)
+    d, r, b = 20, 4, 16
+    block = rng.standard_normal((d, b)).astype(np.float32)
+    u0 = np.zeros((d, r), dtype=np.float32)
+    s0 = np.zeros(r, dtype=np.float32)
+    u, s = model.fpca_update(jnp.asarray(u0), jnp.asarray(s0), jnp.asarray(block), 1.0)
+    _, s_true = svd_r(block, r)
+    np.testing.assert_allclose(np.asarray(s), s_true, rtol=2e-2, atol=1e-3)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_fpca_update_matches_direct_svd_of_concatenation(seed):
+    rng = np.random.default_rng(seed)
+    d, r, b = 24, 4, 16
+    # Previous estimate = exact SVD of some earlier data.
+    prev = rng.standard_normal((d, 40)).astype(np.float32)
+    u0, s0 = svd_r(prev, r)
+    block = rng.standard_normal((d, b)).astype(np.float32)
+    u, s = model.fpca_update(
+        jnp.asarray(u0.astype(np.float32)),
+        jnp.asarray(s0.astype(np.float32)),
+        jnp.asarray(block),
+        1.0,
+    )
+    m = np.concatenate([u0 * s0[None, :], block], axis=1)
+    _, s_true = svd_r(m, r)
+    np.testing.assert_allclose(np.asarray(s), s_true, rtol=2e-2, atol=2e-3)
+
+
+def test_fpca_update_forget_shrinks_history():
+    rng = np.random.default_rng(5)
+    d, r, b = 16, 4, 16
+    u0 = rand_orth(rng, d, r)
+    s0 = np.array([10.0, 5.0, 2.0, 1.0], dtype=np.float32)
+    block = 0.01 * rng.standard_normal((d, b)).astype(np.float32)
+    _, s_keep = model.fpca_update(jnp.asarray(u0), jnp.asarray(s0), jnp.asarray(block), 1.0)
+    _, s_forget = model.fpca_update(jnp.asarray(u0), jnp.asarray(s0), jnp.asarray(block), 0.5)
+    assert np.asarray(s_forget)[0] < np.asarray(s_keep)[0]
+    np.testing.assert_allclose(np.asarray(s_forget)[0], 5.0, rtol=5e-2)
+
+
+# ---------------------------------------------------------------- merge
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_merge_matches_algorithm3_oracle(seed):
+    rng = np.random.default_rng(seed)
+    d, r = 20, 4
+    u1, s1 = rand_orth(rng, d, r), np.sort(rng.uniform(1, 10, r))[::-1].astype(np.float32)
+    u2, s2 = rand_orth(rng, d, r), np.sort(rng.uniform(1, 10, r))[::-1].astype(np.float32)
+    lam = 0.9
+    um, sm = model.merge_subspaces(
+        jnp.asarray(u1), jnp.asarray(s1), jnp.asarray(u2), jnp.asarray(s2), lam
+    )
+    cat = np.concatenate([lam * u1 * s1[None, :], u2 * s2[None, :]], axis=1)
+    _, s_true = svd_r(cat, r)
+    np.testing.assert_allclose(np.asarray(sm), s_true, rtol=2e-2, atol=2e-3)
+    # Merged basis orthonormal.
+    um = np.asarray(um)
+    np.testing.assert_allclose(um.T @ um, np.eye(r), atol=5e-3)
+
+
+# ---------------------------------------------------------- project_detect
+
+
+def zscore_oracle(p_seq, lag=10, alpha=3.5, beta=0.5):
+    """Numpy port of rust/src/detect/zscore.rs MultiDetector."""
+    b, r = p_seq.shape
+    buf = np.zeros((r, lag))
+    seen = 0
+    flags = np.zeros((b, r))
+    for t in range(b):
+        warmed = seen >= lag
+        mean = buf.mean(axis=1)
+        std = buf.std(axis=1)
+        dev = p_seq[t] - mean
+        spike = warmed & (np.abs(dev) > alpha * std) & (std > 0)
+        flags[t] = np.where(spike, np.sign(dev), 0.0)
+        last = buf[:, -1]
+        entering = np.where(spike, beta * p_seq[t] + (1 - beta) * last, p_seq[t])
+        buf = np.concatenate([buf[:, 1:], entering[:, None]], axis=1)
+        seen += 1
+    return flags, buf, seen
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_project_detect_flags_match_oracle(seed):
+    rng = np.random.default_rng(seed)
+    d, r, b, lag = 12, 4, 32, 10
+    u = rand_orth(rng, d, r)
+    s = np.array([4.0, 3.0, 2.0, 1.0], dtype=np.float32)
+    # Steady stream with one injected spike after warmup.
+    y = 0.05 * rng.standard_normal((b, d)).astype(np.float32) + 1.0
+    y[20] += 30.0 * u[:, 0]  # aligned with lane 0
+    buf0 = np.zeros((r, lag), dtype=np.float32)
+    flags, reject, buf, seen = model.project_detect(
+        jnp.asarray(u), jnp.asarray(s), jnp.asarray(y),
+        jnp.asarray(buf0), jnp.int32(0),
+    )
+    p = y @ u
+    want_flags, want_buf, want_seen = zscore_oracle(p.astype(np.float64))
+    np.testing.assert_array_equal(np.asarray(flags), want_flags)
+    np.testing.assert_allclose(np.asarray(buf), want_buf, rtol=1e-4, atol=1e-4)
+    assert int(seen) == want_seen
+
+
+def test_project_detect_rejects_on_dominant_spike():
+    rng = np.random.default_rng(11)
+    d, r, b, lag = 12, 4, 32, 10
+    u = rand_orth(rng, d, r)
+    s = np.array([4.0, 1.0, 0.5, 0.25], dtype=np.float32)
+    y = 0.05 * rng.standard_normal((b, d)).astype(np.float32)
+    y[25] += 50.0 * u[:, 0]
+    flags, reject, _, _ = model.project_detect(
+        jnp.asarray(u), jnp.asarray(s), jnp.asarray(y),
+        jnp.zeros((r, lag), dtype=jnp.float32), jnp.int32(0),
+    )
+    reject = np.asarray(reject)
+    assert reject[25] == 1.0, "dominant-lane spike must raise rejection"
+    assert reject[:lag].sum() == 0.0, "no rejections during warmup"
+
+
+def test_project_detect_state_threads_across_blocks():
+    # Two consecutive blocks must equal one double-length block.
+    rng = np.random.default_rng(13)
+    d, r, b, lag = 8, 4, 16, 10
+    u = rand_orth(rng, d, r)
+    s = np.ones(r, dtype=np.float32)
+    y = rng.standard_normal((2 * b, d)).astype(np.float32)
+    buf = jnp.zeros((r, lag), dtype=jnp.float32)
+    seen = jnp.int32(0)
+    f1, _, buf, seen = model.project_detect(
+        jnp.asarray(u), jnp.asarray(s), jnp.asarray(y[:b]), buf, seen
+    )
+    f2, _, buf, seen = model.project_detect(
+        jnp.asarray(u), jnp.asarray(s), jnp.asarray(y[b:]), buf, seen
+    )
+    p = y @ u
+    want, _, _ = zscore_oracle(p.astype(np.float64))
+    got = np.concatenate([np.asarray(f1), np.asarray(f2)])
+    np.testing.assert_array_equal(got, want)
+    assert int(seen) == 2 * b

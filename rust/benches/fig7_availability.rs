@@ -1,0 +1,51 @@
+//! Figure 7: CDFs of per-node downtime (7a) and contained-spike
+//! percentage (7b) per embedding method.
+//!
+//! Paper shape: PRONTO/SP/PM keep very low downtime; FD's downtime
+//! exceeds 50 % (≈ a random scheduler). Contained % near or above 100
+//! for all methods, with FD skewing high.
+
+use pronto::bench::experiments::{figure67_fleets, ExperimentScale};
+use pronto::bench::Table;
+use pronto::sim::EvalConfig;
+
+fn main() {
+    let scale = ExperimentScale::from_env();
+    let fleets = figure67_fleets(&scale, &EvalConfig::default());
+
+    let mut t7a = Table::new(
+        "Figure 7a: CDF of per-node downtime %",
+        &["downtime%", "PRONTO", "SP", "FD", "PM"],
+    );
+    let mut down_cdfs: Vec<_> = fleets.iter().map(|f| f.downtime_cdf()).collect();
+    for pct in [1.0, 2.0, 5.0, 10.0, 20.0, 30.0, 50.0, 75.0, 100.0] {
+        let mut row = vec![format!("{pct}")];
+        for cdf in down_cdfs.iter_mut() {
+            row.push(format!("{:.3}", cdf.eval(pct)));
+        }
+        t7a.row(&row);
+    }
+    t7a.print();
+    t7a.maybe_write_csv("fig7a_downtime_cdf");
+
+    let mut t7b = Table::new(
+        "Figure 7b: CDF of contained-spike %",
+        &["contained%", "PRONTO", "SP", "FD", "PM"],
+    );
+    let mut cont_cdfs: Vec<_> = fleets.iter().map(|f| f.contained_cdf()).collect();
+    for pct in [25.0, 50.0, 75.0, 100.0, 150.0, 200.0, 400.0, 1000.0] {
+        let mut row = vec![format!("{pct}")];
+        for cdf in cont_cdfs.iter_mut() {
+            row.push(format!("{:.3}", cdf.eval(pct)));
+        }
+        t7b.row(&row);
+    }
+    t7b.print();
+    t7b.maybe_write_csv("fig7b_contained_cdf");
+
+    println!("\nmean downtime per method:");
+    for f in &fleets {
+        println!("  {:<8} {:.1}%", f.method, 100.0 * f.mean_downtime());
+    }
+    println!("\nshape: FD downtime should dwarf PRONTO/SP/PM (paper: FD > 50%).");
+}

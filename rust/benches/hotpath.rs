@@ -1,0 +1,90 @@
+//! Hot-path microbenches: the L3 operations on the per-observation path,
+//! plus the XLA artifact execution costs. Drives the §Perf optimization
+//! loop (EXPERIMENTS.md).
+
+use pronto::bench::{Bencher, Sample, Table};
+use pronto::fpca::{merge_subspaces, FpcaEdge, FpcaEdgeConfig, MergeOptions, Subspace};
+use pronto::proptest::{gen_low_rank, gen_orthonormal};
+use pronto::rng::Xoshiro256;
+use pronto::scheduler::{NodeScheduler, RejectConfig, RejectJob};
+use pronto::telemetry::{GeneratorConfig, TraceGenerator};
+
+fn main() {
+    let d = 52;
+    let r = 4;
+    let bencher = Bencher::from_env();
+    let mut rng = Xoshiro256::seed_from_u64(3);
+    let mut t = Table::new("hot path microbenchmarks", &["op", "median", "p90"]);
+    let mut row = |s: Sample| {
+        t.row(&[s.name.clone(), Sample::human(s.median_ns), Sample::human(s.p90_ns)]);
+    };
+
+    // Reject-Job single observation (the admission decision).
+    let est = Subspace::new(gen_orthonormal(&mut rng, d, r), vec![4.0, 3.0, 2.0, 1.0]);
+    let mut rj = RejectJob::new(RejectConfig::default());
+    let y: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+    row(bencher.bench("reject_job_observe", || rj.observe(&est, &y)));
+
+    // Full node pipeline per observation (standardize + project + detect +
+    // buffered embedding update, amortized).
+    let gen = TraceGenerator::new(GeneratorConfig::default(), 5);
+    let trace = gen.generate_vm(0, 4096);
+    let mut node = NodeScheduler::new(d, RejectConfig::default());
+    let mut cursor = 0usize;
+    row(bencher.bench("node_observe (amortized)", || {
+        let t_ = cursor % trace.len();
+        cursor += 1;
+        node.observe(trace.features(t_))
+    }));
+
+    // FPCA block update (the per-block cost behind the amortization).
+    let block = gen_low_rank(&mut rng, d, 32, 4, 0.1);
+    let mut edge = FpcaEdge::new(d, FpcaEdgeConfig::default());
+    edge.update_block(&block);
+    row(bencher.bench("fpca_update_block (native)", || {
+        edge.update_block(&block);
+        edge.rank()
+    }));
+
+    // Subspace merge (aggregator cost).
+    let s1 = Subspace::new(gen_orthonormal(&mut rng, d, r), vec![4.0, 3.0, 2.0, 1.0]);
+    let s2 = Subspace::new(gen_orthonormal(&mut rng, d, r), vec![2.0, 1.5, 1.0, 0.5]);
+    row(bencher.bench("merge_subspaces (native)", || {
+        merge_subspaces(&s1, &s2, MergeOptions::rank(r))
+    }));
+
+    // XLA artifact executions (when built).
+    if let Some(rt) = pronto::runtime::shared_runtime() {
+        let cfg = rt.manifest().config;
+        use pronto::runtime::XlaFpca;
+        use pronto::baselines::StreamingEmbedding;
+        let mut xf = XlaFpca::new(rt.clone(), cfg.dim).unwrap();
+        let ys: Vec<Vec<f64>> = (0..cfg.block)
+            .map(|_| (0..cfg.dim).map(|_| rng.normal()).collect())
+            .collect();
+        let mut i = 0usize;
+        row(bencher.bench("xla fpca_update (per block)", || {
+            // Feed exactly one block per iteration.
+            for y in &ys {
+                xf.observe(y);
+            }
+            i += 1;
+            i
+        }));
+
+        let mut pd = pronto::runtime::XlaProjectDetect::new(rt.clone());
+        let est_x = Subspace::new(
+            gen_orthonormal(&mut rng, cfg.dim, cfg.rank),
+            vec![4.0, 3.0, 2.0, 1.0],
+        );
+        let block_f32: Vec<f32> = (0..cfg.block * cfg.dim).map(|_| rng.normal() as f32).collect();
+        row(bencher.bench("xla project_detect (per block)", || {
+            pd.run_block(&est_x, &block_f32).unwrap().1.len()
+        }));
+    } else {
+        eprintln!("(artifacts not built; skipping XLA rows)");
+    }
+
+    t.print();
+    t.maybe_write_csv("hotpath");
+}

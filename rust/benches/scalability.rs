@@ -1,0 +1,45 @@
+//! Horizontal scalability (§1, §9): aggregate federation throughput vs
+//! node count under the thread-per-leaf runtime.
+//!
+//! Claim: "in the absence of communication latency, it exhibits
+//! attractive horizontal scalability" — throughput grows near-linearly
+//! until physical cores saturate.
+
+use pronto::bench::Table;
+use pronto::federation::{ConcurrentFederation, TreeTopology};
+use pronto::telemetry::{GeneratorConfig, TraceGenerator};
+
+fn main() {
+    let quick = std::env::var("PRONTO_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let steps = if quick { 512 } else { 2_048 };
+    let sizes: &[usize] = if quick { &[1, 4, 8, 16] } else { &[1, 2, 4, 8, 16, 32, 64, 128] };
+
+    let mut t = Table::new(
+        "Scalability: federation throughput vs leaves (fanout 16)",
+        &["leaves", "wall (s)", "obs/s", "speedup", "pushes"],
+    );
+    let mut base = 0.0f64;
+    for &n in sizes {
+        let gen = TraceGenerator::new(GeneratorConfig::default(), 1);
+        let traces: Vec<_> = (0..n)
+            .map(|v| gen.generate_vm_in_cluster(v / 16, v, steps))
+            .collect();
+        let fed = ConcurrentFederation::new(TreeTopology::new(n, 16), 4, 0.5)
+            .with_push_every(64);
+        let report = fed.run(traces);
+        let thr = report.throughput();
+        if n == 1 {
+            base = thr;
+        }
+        t.row(&[
+            format!("{n}"),
+            format!("{:.3}", report.wall.as_secs_f64()),
+            format!("{:.0}", thr),
+            format!("{:.2}x", thr / base),
+            format!("{}", report.pushes),
+        ]);
+    }
+    t.print();
+    t.maybe_write_csv("scalability");
+    println!("\nshape: near-linear speedup until core count; flat wall time per leaf.");
+}

@@ -1,0 +1,120 @@
+//! Baseline streaming-PCA methods (paper §7 evaluation).
+//!
+//! The paper compares PRONTO's embedding engine (FPCA-Edge) against three
+//! established streaming subspace trackers:
+//!
+//! * **SPIRIT** (Papadimitriou, Sun, Faloutsos 2005) — PAST-style recursive
+//!   least squares with energy-based rank adaptation; produces (approximate)
+//!   singular values.
+//! * **Frequent Directions** (Liberty 2013) — deterministic matrix sketching;
+//!   produces a basis but no usable spectrum.
+//! * **Block Power Method** (Mitliagkas, Caramanis, Jain 2013) — memory-
+//!   limited streaming PCA via block power iterations; no spectrum either.
+//!
+//! All four implement [`StreamingEmbedding`], the interface the scheduler's
+//! Reject-Job consumes. Methods that cannot produce singular values fall
+//! back to the paper's synthetic decay spectrum σ_r = 1/r
+//! ([`decay_spectrum`]), exactly as §7 prescribes.
+
+mod frequent_directions;
+mod power_method;
+mod spirit;
+
+pub use frequent_directions::FrequentDirections;
+pub use power_method::BlockPowerMethod;
+pub use spirit::{Spirit, SpiritConfig};
+
+use crate::fpca::{FpcaEdge, Subspace};
+
+/// The streaming interface Reject-Job consumes: feed observations one at a
+/// time, read back the current `(U, Σ)` estimate.
+pub trait StreamingEmbedding {
+    /// Consume one d-dimensional observation.
+    fn observe(&mut self, y: &[f64]);
+
+    /// Current subspace estimate (may be empty before warmup).
+    fn estimate(&self) -> Subspace;
+
+    /// Ambient dimension d.
+    fn dim(&self) -> usize;
+
+    /// Current tracked rank.
+    fn rank(&self) -> usize;
+
+    /// Short method tag used in tables/figures ("PRONTO", "SP", "FD", "PM").
+    fn name(&self) -> &'static str;
+
+    /// Whether the method produces its own (approximate) singular values.
+    /// When `false`, [`Subspace::sigma`] holds the synthetic σ_r = 1/r decay.
+    fn has_spectrum(&self) -> bool;
+
+    /// Monotone counter that changes whenever [`estimate`] would return a
+    /// different subspace; `None` means "unknown — assume it changes every
+    /// observation". Block methods (FPCA, PM) bump it once per block, which
+    /// lets the scheduler cache the estimate between refreshes instead of
+    /// cloning it every timestep (§Perf).
+    ///
+    /// [`estimate`]: StreamingEmbedding::estimate
+    fn version(&self) -> Option<u64> {
+        None
+    }
+}
+
+/// The paper's fallback spectrum for methods without singular values:
+/// σ_r = 1/r, r = 1…k.
+pub fn decay_spectrum(k: usize) -> Vec<f64> {
+    (1..=k).map(|r| 1.0 / r as f64).collect()
+}
+
+impl StreamingEmbedding for FpcaEdge {
+    fn observe(&mut self, y: &[f64]) {
+        FpcaEdge::observe(self, y);
+    }
+
+    fn estimate(&self) -> Subspace {
+        FpcaEdge::estimate(self).clone()
+    }
+
+    fn dim(&self) -> usize {
+        FpcaEdge::dim(self)
+    }
+
+    fn rank(&self) -> usize {
+        FpcaEdge::rank(self)
+    }
+
+    fn name(&self) -> &'static str {
+        "PRONTO"
+    }
+
+    fn has_spectrum(&self) -> bool {
+        true
+    }
+
+    fn version(&self) -> Option<u64> {
+        Some(self.blocks_processed() as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decay_spectrum_values() {
+        let s = decay_spectrum(4);
+        assert_eq!(s, vec![1.0, 0.5, 1.0 / 3.0, 0.25]);
+    }
+
+    #[test]
+    fn fpca_edge_implements_trait() {
+        let mut e: Box<dyn StreamingEmbedding> =
+            Box::new(FpcaEdge::new(8, crate::fpca::FpcaEdgeConfig::default()));
+        assert_eq!(e.name(), "PRONTO");
+        assert!(e.has_spectrum());
+        for _ in 0..40 {
+            e.observe(&[1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        }
+        assert_eq!(e.estimate().dim(), 8);
+    }
+}

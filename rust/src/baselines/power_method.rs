@@ -1,0 +1,178 @@
+//! Memory-limited streaming PCA via the block power method
+//! (Mitliagkas, Caramanis & Jain, NeurIPS 2013).
+//!
+//! Buffers a block of observations, accumulates the empirical covariance
+//! action `(Σ_t y_t y_tᵀ) Q` on the current iterate, and re-orthonormalizes
+//! via QR once per block — one power iteration per block, O(d·r) state plus
+//! the block buffer. Footnote 2 of the paper applies: PM needs a block at
+//! least as large as the data dimensionality, which forces a larger window
+//! than the other methods.
+//!
+//! PM produces no singular values; PRONTO's weighting falls back to
+//! σ_r = 1/r (paper §7).
+
+use super::{decay_spectrum, StreamingEmbedding};
+use crate::fpca::Subspace;
+use crate::linalg::{householder_qr, Mat};
+use crate::rng::Xoshiro256;
+
+/// Block power method tracker.
+#[derive(Debug, Clone)]
+pub struct BlockPowerMethod {
+    d: usize,
+    r: usize,
+    /// Current orthonormal iterate Q ∈ ℝ^{d×r}.
+    q: Mat,
+    /// Accumulated covariance action on Q for the current block: (ΣyyᵀQ).
+    acc: Mat,
+    /// Observations accumulated in the current block.
+    in_block: usize,
+    /// Block size (≥ d per the paper's requirement).
+    block: usize,
+    /// Completed power iterations.
+    iterations: usize,
+    seen: usize,
+}
+
+impl BlockPowerMethod {
+    /// `block` defaults to `d` when 0 is passed (the paper's minimum).
+    pub fn new(d: usize, r: usize, block: usize, seed: u64) -> Self {
+        assert!(r >= 1 && r <= d);
+        let block = if block == 0 { d } else { block };
+        assert!(block >= d, "power method needs block >= d (paper footnote 2)");
+        // Random Gaussian start, orthonormalized.
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let g = Mat::from_col_major(d, r, (0..d * r).map(|_| rng.normal()).collect());
+        let (q, _) = householder_qr(&g);
+        Self {
+            d,
+            r,
+            q,
+            acc: Mat::zeros(d, r),
+            in_block: 0,
+            block,
+            iterations: 0,
+            seen: 0,
+        }
+    }
+
+    /// Number of completed power iterations (blocks).
+    pub fn iterations(&self) -> usize {
+        self.iterations
+    }
+}
+
+impl StreamingEmbedding for BlockPowerMethod {
+    fn observe(&mut self, y: &[f64]) {
+        assert_eq!(y.len(), self.d);
+        // acc += y (yᵀ Q): rank-1 covariance action, O(d·r).
+        let yq = self.q.transpose_matvec(y); // r values
+        for j in 0..self.r {
+            let w = yq[j];
+            if w == 0.0 {
+                continue;
+            }
+            let col = self.acc.col_mut(j);
+            for i in 0..self.d {
+                col[i] += y[i] * w;
+            }
+        }
+        self.in_block += 1;
+        self.seen += 1;
+        if self.in_block == self.block {
+            let (q, _) = householder_qr(&self.acc);
+            self.q = q;
+            self.acc = Mat::zeros(self.d, self.r);
+            self.in_block = 0;
+            self.iterations += 1;
+        }
+    }
+
+    fn estimate(&self) -> Subspace {
+        if self.iterations == 0 {
+            return Subspace::empty(self.d);
+        }
+        Subspace::new(self.q.clone(), decay_spectrum(self.r))
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn rank(&self) -> usize {
+        self.r
+    }
+
+    fn name(&self) -> &'static str {
+        "PM"
+    }
+
+    fn has_spectrum(&self) -> bool {
+        false
+    }
+
+    fn version(&self) -> Option<u64> {
+        Some(self.iterations as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{orthonormality_error, subspace_distance};
+    use crate::proptest::{forall, gen_low_rank};
+
+    #[test]
+    fn requires_full_block_before_estimate() {
+        let mut pm = BlockPowerMethod::new(6, 2, 0, 7);
+        for i in 0..5 {
+            pm.observe(&[1.0, 0.5, 0.0, 0.0, 0.0, 0.0]);
+            assert!(pm.estimate().is_empty(), "i={i}");
+        }
+        pm.observe(&[1.0, 0.5, 0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(pm.iterations(), 1);
+        assert!(!pm.estimate().is_empty());
+    }
+
+    #[test]
+    fn iterate_is_orthonormal() {
+        let mut rng = crate::rng::Xoshiro256::seed_from_u64(1);
+        let mut pm = BlockPowerMethod::new(8, 3, 8, 42);
+        for _ in 0..64 {
+            let y: Vec<f64> = (0..8).map(|_| rng.normal()).collect();
+            pm.observe(&y);
+        }
+        assert!(orthonormality_error(&pm.estimate().u) < 1e-9);
+    }
+
+    #[test]
+    fn converges_to_top_subspace() {
+        forall("pm converges", |rng| {
+            let d = 8 + rng.gen_range(12);
+            let data = gen_low_rank(rng, d, d * 30, 2, 0.02);
+            let mut pm = BlockPowerMethod::new(d, 2, d, 9);
+            for t in 0..data.cols() {
+                pm.observe(data.col(t));
+            }
+            let truth = crate::linalg::svd_truncated(&data, 2);
+            let dist = subspace_distance(&pm.estimate().u, &truth.u);
+            if dist < 0.25 {
+                Ok(())
+            } else {
+                Err(format!("distance {dist}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_small_blocks() {
+        let _ = BlockPowerMethod::new(10, 2, 5, 0);
+    }
+
+    #[test]
+    fn no_spectrum_fallback() {
+        let pm = BlockPowerMethod::new(6, 3, 0, 1);
+        assert!(!pm.has_spectrum());
+    }
+}

@@ -1,0 +1,279 @@
+//! SPIRIT (Streaming Pattern dIscoveRy in multIple Time-series),
+//! Papadimitriou, Sun & Faloutsos, VLDB 2005.
+//!
+//! Tracks k "hidden variables" (principal directions) with a PAST-style
+//! recursive least-squares update per observation and adapts k from the
+//! ratio of captured to total energy. SPIRIT maintains per-direction energy
+//! estimates `d_i` from which approximate singular values can be derived —
+//! the paper notes SPIRIT is the only baseline that produces a (guarantee-
+//! free) spectrum, which is why it partially supports PRONTO's weighting.
+
+use super::StreamingEmbedding;
+use crate::fpca::Subspace;
+use crate::linalg::Mat;
+
+/// SPIRIT configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct SpiritConfig {
+    /// Initial number of hidden variables.
+    pub initial_rank: usize,
+    /// Maximum tracked rank.
+    pub max_rank: usize,
+    /// Exponential forgetting factor λ ∈ (0, 1]; the paper's recommended
+    /// default is 0.96.
+    pub lambda: f64,
+    /// Energy thresholds (f_E, F_E): grow k when captured/total energy
+    /// drops below `low`, shrink when above `high`.
+    pub energy_low: f64,
+    pub energy_high: f64,
+}
+
+impl Default for SpiritConfig {
+    fn default() -> Self {
+        Self {
+            initial_rank: 4,
+            max_rank: 8,
+            lambda: 0.96,
+            energy_low: 0.95,
+            energy_high: 0.98,
+        }
+    }
+}
+
+/// Streaming SPIRIT tracker.
+#[derive(Debug, Clone)]
+pub struct Spirit {
+    cfg: SpiritConfig,
+    d: usize,
+    k: usize,
+    /// Hidden-variable directions (columns, approximately orthonormal).
+    w: Mat,
+    /// Per-direction energy estimates d_i (RLS gain denominators).
+    di: Vec<f64>,
+    /// Exponentially weighted total input energy.
+    total_energy: f64,
+    /// Exponentially weighted captured energy.
+    captured_energy: f64,
+    /// Observations seen.
+    seen: usize,
+}
+
+impl Spirit {
+    pub fn new(d: usize, cfg: SpiritConfig) -> Self {
+        assert!(cfg.initial_rank >= 1 && cfg.initial_rank <= cfg.max_rank);
+        assert!(cfg.max_rank <= d);
+        assert!(cfg.lambda > 0.0 && cfg.lambda <= 1.0);
+        assert!(cfg.energy_low < cfg.energy_high);
+        let mut w = Mat::zeros(d, cfg.max_rank);
+        // Canonical initialization, as in the reference implementation.
+        for j in 0..cfg.max_rank {
+            w.set(j % d, j, 1.0);
+        }
+        Self {
+            cfg,
+            d,
+            k: cfg.initial_rank,
+            w,
+            di: vec![1e-3; cfg.max_rank],
+            total_energy: 0.0,
+            captured_energy: 0.0,
+            seen: 0,
+        }
+    }
+
+    /// The TrackW update: deflate the observation through each hidden
+    /// variable in turn, updating direction and energy.
+    fn track_w(&mut self, y: &[f64]) {
+        let lambda = self.cfg.lambda;
+        let mut x: Vec<f64> = y.to_vec();
+        let mut captured = 0.0;
+        for j in 0..self.k {
+            // Projection onto current direction.
+            let mut yj = 0.0;
+            for i in 0..self.d {
+                yj += self.w.get(i, j) * x[i];
+            }
+            self.di[j] = lambda * self.di[j] + yj * yj;
+            // Per-coordinate error and gradient-style direction update.
+            let gain = yj / self.di[j].max(1e-12);
+            for i in 0..self.d {
+                let e = x[i] - yj * self.w.get(i, j);
+                let wij = self.w.get(i, j) + gain * e;
+                self.w.set(i, j, wij);
+            }
+            // Normalize immediately: deflation must use a unit direction or
+            // the captured energy (and the residual) blows up.
+            let n: f64 = (0..self.d).map(|i| self.w.get(i, j).powi(2)).sum::<f64>().sqrt();
+            if n > 0.0 {
+                for i in 0..self.d {
+                    self.w.set(i, j, self.w.get(i, j) / n);
+                }
+            }
+            // Re-project with the *updated, normalized* direction; deflate.
+            let mut yj2 = 0.0;
+            for i in 0..self.d {
+                yj2 += self.w.get(i, j) * x[i];
+            }
+            for i in 0..self.d {
+                x[i] -= yj2 * self.w.get(i, j);
+            }
+            captured += yj2 * yj2;
+        }
+
+        let input_energy: f64 = y.iter().map(|v| v * v).sum();
+        self.total_energy = lambda * self.total_energy + input_energy;
+        self.captured_energy = lambda * self.captured_energy + captured;
+    }
+
+    /// Energy-ratio rank adaptation (the paper's f_E/F_E rule).
+    fn adapt_rank(&mut self) {
+        if self.total_energy <= 0.0 || self.seen < 2 * self.d {
+            return;
+        }
+        let ratio = self.captured_energy / self.total_energy;
+        if ratio < self.cfg.energy_low && self.k < self.cfg.max_rank {
+            self.k += 1;
+            self.di[self.k - 1] = 1e-3;
+            // Fresh canonical direction, orthogonalized against current W.
+            let pivot = (self.seen + self.k) % self.d;
+            let mut v = vec![0.0; self.d];
+            v[pivot] = 1.0;
+            for j in 0..self.k - 1 {
+                let dot: f64 = (0..self.d).map(|i| v[i] * self.w.get(i, j)).sum();
+                for i in 0..self.d {
+                    v[i] -= dot * self.w.get(i, j);
+                }
+            }
+            let n: f64 = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+            for (i, vi) in v.iter().enumerate() {
+                self.w.set(i, self.k - 1, if n > 1e-9 { vi / n } else { 0.0 });
+            }
+        } else if ratio > self.cfg.energy_high && self.k > 1 {
+            self.k -= 1;
+        }
+    }
+
+    /// Current captured/total energy ratio (diagnostics + tests).
+    pub fn energy_ratio(&self) -> f64 {
+        if self.total_energy <= 0.0 {
+            return 0.0;
+        }
+        self.captured_energy / self.total_energy
+    }
+
+    /// Approximate singular values from the RLS energies: d_i accumulates
+    /// λ-discounted squared projections, so σ_i ≈ sqrt(d_i).
+    fn sigma(&self) -> Vec<f64> {
+        let mut s: Vec<f64> = self.di[..self.k].iter().map(|&d| d.max(0.0).sqrt()).collect();
+        s.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        s
+    }
+}
+
+impl StreamingEmbedding for Spirit {
+    fn observe(&mut self, y: &[f64]) {
+        assert_eq!(y.len(), self.d);
+        self.track_w(y);
+        self.seen += 1;
+        self.adapt_rank();
+    }
+
+    fn estimate(&self) -> Subspace {
+        if self.seen < self.cfg.initial_rank {
+            return Subspace::empty(self.d);
+        }
+        Subspace::new(self.w.take_cols(self.k), self.sigma())
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn rank(&self) -> usize {
+        self.k
+    }
+
+    fn name(&self) -> &'static str {
+        "SP"
+    }
+
+    fn has_spectrum(&self) -> bool {
+        true // approximate, without quality guarantees (paper §7)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::{forall, gen_low_rank};
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn directions_stay_normalized() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let mut sp = Spirit::new(10, SpiritConfig::default());
+        for _ in 0..500 {
+            let y: Vec<f64> = (0..10).map(|_| rng.normal()).collect();
+            sp.observe(&y);
+        }
+        let est = sp.estimate();
+        for j in 0..est.rank() {
+            let n: f64 = est.u.col(j).iter().map(|x| x * x).sum::<f64>().sqrt();
+            assert!((n - 1.0).abs() < 1e-6, "col {j} norm {n}");
+        }
+    }
+
+    #[test]
+    fn recovers_dominant_direction() {
+        forall("spirit finds top PC", |rng| {
+            let d = 8 + rng.gen_range(16);
+            let data = gen_low_rank(rng, d, 800, 1, 0.05);
+            let mut sp = Spirit::new(d, SpiritConfig { initial_rank: 2, ..Default::default() });
+            for t in 0..data.cols() {
+                sp.observe(data.col(t));
+            }
+            let truth = crate::linalg::svd_truncated(&data, 1);
+            let w0 = sp.estimate();
+            // |cos| between tracked direction 0 and true PC1.
+            let dot: f64 = (0..d).map(|i| w0.u.get(i, 0) * truth.u.get(i, 0)).sum();
+            if dot.abs() > 0.9 {
+                Ok(())
+            } else {
+                Err(format!("|cos|={}", dot.abs()))
+            }
+        });
+    }
+
+    #[test]
+    fn rank_grows_for_rich_signal() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let d = 16;
+        let data = gen_low_rank(&mut rng, d, 1500, 6, 0.02);
+        let mut sp = Spirit::new(
+            d,
+            SpiritConfig { initial_rank: 1, max_rank: 8, ..Default::default() },
+        );
+        for t in 0..data.cols() {
+            sp.observe(data.col(t));
+        }
+        assert!(sp.rank() > 1, "rank stayed {}", sp.rank());
+    }
+
+    #[test]
+    fn sigma_is_descending() {
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let mut sp = Spirit::new(12, SpiritConfig::default());
+        for _ in 0..300 {
+            let y: Vec<f64> = (0..12).map(|_| rng.normal()).collect();
+            sp.observe(&y);
+        }
+        let s = sp.estimate().sigma;
+        assert!(s.windows(2).all(|w| w[0] >= w[1]));
+    }
+
+    #[test]
+    fn empty_before_warmup() {
+        let sp = Spirit::new(12, SpiritConfig::default());
+        assert!(sp.estimate().is_empty());
+    }
+}

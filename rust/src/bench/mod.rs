@@ -1,0 +1,233 @@
+//! Micro/macro-benchmark harness (criterion replacement).
+//!
+//! `cargo bench` targets in `rust/benches/` are `harness = false` binaries
+//! built on this module: warmup, calibrated iteration counts, robust
+//! statistics (median + p10/p90), and plain-text table output matching the
+//! paper's rows so EXPERIMENTS.md can diff paper-vs-measured directly.
+
+pub mod experiments;
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement summary (nanoseconds).
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    pub iters: u64,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    pub mean_ns: f64,
+}
+
+impl Sample {
+    /// Human-friendly time with unit scaling.
+    pub fn human(ns: f64) -> String {
+        if ns < 1e3 {
+            format!("{ns:.1} ns")
+        } else if ns < 1e6 {
+            format!("{:.2} µs", ns / 1e3)
+        } else if ns < 1e9 {
+            format!("{:.2} ms", ns / 1e6)
+        } else {
+            format!("{:.2} s", ns / 1e9)
+        }
+    }
+}
+
+/// Benchmark runner with warmup and a measurement budget.
+pub struct Bencher {
+    warmup: Duration,
+    budget: Duration,
+    min_batches: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            min_batches: 20,
+        }
+    }
+}
+
+impl Bencher {
+    /// Quick-mode bencher for CI (shorter budget).
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(50),
+            budget: Duration::from_millis(400),
+            min_batches: 10,
+        }
+    }
+
+    /// Honour `PRONTO_BENCH_QUICK=1` (used by `make test` smoke runs).
+    pub fn from_env() -> Self {
+        if std::env::var("PRONTO_BENCH_QUICK").map(|v| v == "1").unwrap_or(false) {
+            Self::quick()
+        } else {
+            Self::default()
+        }
+    }
+
+    /// Measure `f`, returning robust statistics. `f` should perform one
+    /// logical operation; the harness batches calls to amortize timer costs.
+    pub fn bench<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Sample {
+        // Warmup + per-call cost estimate.
+        let warm_start = Instant::now();
+        let mut warm_iters: u64 = 0;
+        while warm_start.elapsed() < self.warmup {
+            std::hint::black_box(f());
+            warm_iters += 1;
+        }
+        let per_call = warm_start.elapsed().as_nanos() as f64 / warm_iters.max(1) as f64;
+
+        // Pick a batch size so each batch is ~budget/min_batches.
+        let batch_target_ns = self.budget.as_nanos() as f64 / self.min_batches as f64;
+        let batch = ((batch_target_ns / per_call.max(1.0)).ceil() as u64).max(1);
+
+        let mut batch_means: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        let mut total_iters = 0u64;
+        while start.elapsed() < self.budget || batch_means.len() < self.min_batches {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                std::hint::black_box(f());
+            }
+            let dt = t0.elapsed().as_nanos() as f64;
+            batch_means.push(dt / batch as f64);
+            total_iters += batch;
+            if batch_means.len() > 10_000 {
+                break; // safety for ultra-fast ops
+            }
+        }
+
+        batch_means.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = |p: f64| -> f64 {
+            let idx = ((batch_means.len() - 1) as f64 * p).round() as usize;
+            batch_means[idx]
+        };
+        let mean = batch_means.iter().sum::<f64>() / batch_means.len() as f64;
+        Sample {
+            name: name.to_string(),
+            iters: total_iters,
+            median_ns: q(0.5),
+            p10_ns: q(0.1),
+            p90_ns: q(0.9),
+            mean_ns: mean,
+        }
+    }
+}
+
+/// Fixed-width text table used by every bench binary so table/figure output
+/// is uniform and diffable against the paper.
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render with padded columns.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                line.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print to stdout (bench binaries' primary output path).
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    /// Also emit machine-readable CSV next to the human table when
+    /// `PRONTO_BENCH_CSV_DIR` is set (used to collect series for figures).
+    pub fn maybe_write_csv(&self, stem: &str) {
+        if let Ok(dir) = std::env::var("PRONTO_BENCH_CSV_DIR") {
+            let _ = std::fs::create_dir_all(&dir);
+            let path = format!("{dir}/{stem}.csv");
+            let mut s = String::new();
+            s.push_str(&self.header.join(","));
+            s.push('\n');
+            for row in &self.rows {
+                s.push_str(&row.join(","));
+                s.push('\n');
+            }
+            if let Err(e) = std::fs::write(&path, s) {
+                eprintln!("warn: could not write {path}: {e}");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let b = Bencher::quick();
+        let s = b.bench("noop-ish", || {
+            let mut acc = 0u64;
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(s.median_ns > 0.0);
+        assert!(s.p10_ns <= s.median_ns && s.median_ns <= s.p90_ns);
+        assert!(s.iters > 0);
+    }
+
+    #[test]
+    fn table_renders_all_rows() {
+        let mut t = Table::new("demo", &["method", "value"]);
+        t.row(&["naive".into(), "1.0".into()]);
+        t.row(&["svm".into(), "2.0".into()]);
+        let r = t.render();
+        assert!(r.contains("naive") && r.contains("svm") && r.contains("demo"));
+    }
+
+    #[test]
+    fn human_units() {
+        assert!(Sample::human(500.0).ends_with("ns"));
+        assert!(Sample::human(5_000.0).ends_with("µs"));
+        assert!(Sample::human(5_000_000.0).ends_with("ms"));
+        assert!(Sample::human(5e9).ends_with(" s"));
+    }
+}

@@ -1,0 +1,119 @@
+//! Minimal argument parser (clap replacement): `--key value`, `--flag`,
+//! and positional arguments, with typed accessors and unknown-flag errors.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed arguments for one subcommand.
+#[derive(Debug, Default)]
+pub struct Args {
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw arguments. `flag_names` lists boolean flags (no value);
+    /// everything else starting with `--` consumes the next token.
+    pub fn parse(raw: &[String], flag_names: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = raw.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if flag_names.contains(&name) {
+                    out.flags.push(name.to_string());
+                } else {
+                    let val = it
+                        .next()
+                        .ok_or_else(|| anyhow!("--{name} expects a value"))?;
+                    out.options.insert(name.to_string(), val.clone());
+                }
+            } else {
+                out.positional.push(tok.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name}: bad integer '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name}: bad integer '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name}: bad number '{v}'")),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Error if any option other than the allowed set was supplied.
+    pub fn reject_unknown(&self, allowed: &[&str]) -> Result<()> {
+        for key in self.options.keys() {
+            if !allowed.contains(&key.as_str()) {
+                bail!("unknown option --{key} (allowed: {allowed:?})");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn raw(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_options_flags_positionals() {
+        let a = Args::parse(&raw(&["--nodes", "8", "--quick", "sim"]), &["quick"]).unwrap();
+        assert_eq!(a.get("nodes"), Some("8"));
+        assert!(a.flag("quick"));
+        assert_eq!(a.positional(), &["sim".to_string()]);
+    }
+
+    #[test]
+    fn typed_accessors_and_defaults() {
+        let a = Args::parse(&raw(&["--n", "5"]), &[]).unwrap();
+        assert_eq!(a.get_usize("n", 1).unwrap(), 5);
+        assert_eq!(a.get_usize("m", 7).unwrap(), 7);
+        assert!(a.get_usize("n", 0).is_ok());
+        let b = Args::parse(&raw(&["--n", "xyz"]), &[]).unwrap();
+        assert!(b.get_usize("n", 1).is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&raw(&["--nodes"]), &[]).is_err());
+    }
+
+    #[test]
+    fn reject_unknown_options() {
+        let a = Args::parse(&raw(&["--bogus", "1"]), &[]).unwrap();
+        assert!(a.reject_unknown(&["nodes"]).is_err());
+        assert!(a.reject_unknown(&["bogus"]).is_ok());
+    }
+}

@@ -1,0 +1,470 @@
+//! The `pronto` command-line interface.
+//!
+//! ```text
+//! pronto gen-trace  --out DIR [--nodes N] [--steps T] [--seed S]
+//! pronto sim        [--config FILE] [--policy pronto|sp|fd|pm|random|always|oracle]
+//! pronto eval       [--config FILE] [--method pronto|sp|fd|pm] [--window W]
+//! pronto federate   [--config FILE] [--nodes N] [--fanout F]
+//! pronto bench-tables [--table 1..3] [--quick]
+//! pronto inspect    [--compile] — artifact manifest + compile check
+//! ```
+
+mod args;
+
+pub use args::Args;
+
+use crate::baselines::*;
+use crate::config::ProntoConfig;
+use crate::scheduler::{
+    Admission, CpuReadyOracle, NodeScheduler, ProntoPolicy, RandomPolicy,
+};
+use crate::sim::{evaluate_method, DataCenterSim, EvalConfig, FleetEvaluation};
+use crate::telemetry::{TraceGenerator, VmTrace, CPU_READY_IDX};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+const USAGE: &str = "\
+pronto — federated task scheduling (PRONTO reproduction)
+
+USAGE:
+  pronto <COMMAND> [OPTIONS]
+
+COMMANDS:
+  gen-trace     generate synthetic VMware-style traces as CSV
+  sim           run the data-center simulator under an admission policy
+  eval          fleet evaluation of rejection-signal quality (Fig 6/7)
+  federate      run the concurrent DASM federation
+  bench-tables  regenerate the paper tables (see also cargo bench)
+  serve         stream trace CSVs through node pipelines, emit decisions
+  inspect       show the AOT artifact manifest and compile status
+  help          show this message
+
+Options per command are documented in the README.
+";
+
+/// CLI entry point (wired from `main.rs`). Exits the process on error.
+pub fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match run(&argv) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+/// Dispatch; separated from [`main`] for testability.
+pub fn run(argv: &[String]) -> Result<()> {
+    let Some(cmd) = argv.first() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match cmd.as_str() {
+        "gen-trace" => cmd_gen_trace(rest),
+        "sim" => cmd_sim(rest),
+        "eval" => cmd_eval(rest),
+        "federate" => cmd_federate(rest),
+        "bench-tables" => cmd_bench_tables(rest),
+        "serve" => cmd_serve(rest),
+        "inspect" => cmd_inspect(rest),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n\n{USAGE}"),
+    }
+}
+
+fn load_config(args: &Args) -> Result<ProntoConfig> {
+    match args.get("config") {
+        Some(path) => ProntoConfig::load(Path::new(path)),
+        None => Ok(ProntoConfig::default()),
+    }
+}
+
+fn gen_fleet(cfg: &ProntoConfig) -> Vec<VmTrace> {
+    let gen = TraceGenerator::new(cfg.generator.clone(), cfg.seed);
+    (0..cfg.nodes)
+        .map(|v| gen.generate_vm_in_cluster(v / cfg.fanout, v, cfg.steps))
+        .collect()
+}
+
+fn cmd_gen_trace(raw: &[String]) -> Result<()> {
+    let args = Args::parse(raw, &[])?;
+    args.reject_unknown(&["out", "nodes", "steps", "seed", "config"])?;
+    let mut cfg = load_config(&args)?;
+    cfg.nodes = args.get_usize("nodes", cfg.nodes)?;
+    cfg.steps = args.get_usize("steps", cfg.steps)?;
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+    let out = args.get("out").unwrap_or("traces");
+    std::fs::create_dir_all(out).with_context(|| format!("creating {out}"))?;
+
+    let fleet = gen_fleet(&cfg);
+    for tr in &fleet {
+        let path = Path::new(out).join(format!("cluster{}_vm{}.csv", tr.cluster_id, tr.vm_id));
+        tr.write_csv(&path)?;
+    }
+    println!(
+        "wrote {} traces x {} steps x {} metrics to {out}/",
+        fleet.len(),
+        cfg.steps,
+        fleet[0].dim()
+    );
+    Ok(())
+}
+
+fn make_policy(
+    name: &str,
+    trace: &VmTrace,
+    idx: usize,
+    cfg: &ProntoConfig,
+) -> Result<Box<dyn Admission>> {
+    let d = trace.dim();
+    Ok(match name {
+        "pronto" => Box::new(ProntoPolicy::new(NodeScheduler::with_embedding(
+            crate::fpca::FpcaEdge::new(d, cfg.fpca),
+            cfg.reject,
+        ))),
+        "sp" => Box::new(ProntoPolicy::new(NodeScheduler::with_embedding(
+            Spirit::new(d, SpiritConfig::default()),
+            cfg.reject,
+        ))),
+        "fd" => Box::new(ProntoPolicy::new(NodeScheduler::with_embedding(
+            FrequentDirections::new(d, cfg.fpca.initial_rank),
+            cfg.reject,
+        ))),
+        "pm" => Box::new(ProntoPolicy::new(NodeScheduler::with_embedding(
+            BlockPowerMethod::new(d, cfg.fpca.initial_rank, d, cfg.seed ^ idx as u64),
+            cfg.reject,
+        ))),
+        "random" => Box::new(RandomPolicy::new(0.2, cfg.seed ^ idx as u64)),
+        "always" => Box::new(RandomPolicy::always_accept(cfg.seed ^ idx as u64)),
+        "oracle" => Box::new(CpuReadyOracle::new(CPU_READY_IDX, cfg.sim.ready_threshold)),
+        other => bail!("unknown policy '{other}'"),
+    })
+}
+
+fn cmd_sim(raw: &[String]) -> Result<()> {
+    let args = Args::parse(raw, &[])?;
+    args.reject_unknown(&["config", "policy", "nodes", "steps", "seed"])?;
+    let mut cfg = load_config(&args)?;
+    cfg.nodes = args.get_usize("nodes", cfg.nodes)?;
+    cfg.steps = args.get_usize("steps", cfg.steps)?;
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+    let policy = args.get("policy").unwrap_or("pronto");
+
+    let fleet = gen_fleet(&cfg);
+    let policies: Vec<Box<dyn Admission>> = fleet
+        .iter()
+        .enumerate()
+        .map(|(i, t)| make_policy(policy, t, i, &cfg))
+        .collect::<Result<_>>()?;
+    let report = DataCenterSim::new(cfg.sim.clone(), fleet, policies).run();
+
+    println!(
+        "simulation: {} nodes x {} steps, policy = {policy}",
+        report.nodes, report.steps
+    );
+    println!("  jobs arrived        : {}", report.jobs_arrived);
+    println!(
+        "  accepted            : {} ({:.1}%)",
+        report.jobs_accepted,
+        100.0 * report.acceptance_rate()
+    );
+    println!(
+        "  placement quality   : {:.1}%",
+        100.0 * report.placement_quality()
+    );
+    println!(
+        "  rejection precision : {:.1}%",
+        100.0 * report.rejection_precision()
+    );
+    Ok(())
+}
+
+fn cmd_eval(raw: &[String]) -> Result<()> {
+    let args = Args::parse(raw, &[])?;
+    args.reject_unknown(&["config", "method", "window", "nodes", "steps", "threshold"])?;
+    let mut cfg = load_config(&args)?;
+    cfg.nodes = args.get_usize("nodes", cfg.nodes)?;
+    cfg.steps = args.get_usize("steps", cfg.steps)?;
+    let method = args.get("method").unwrap_or("pronto");
+    let eval_cfg = EvalConfig {
+        window: args.get_usize("window", 10)?,
+        ready_threshold: args.get_f64("threshold", cfg.sim.ready_threshold)?,
+        reject: cfg.reject,
+    };
+
+    let fleet_traces = gen_fleet(&cfg);
+    let d = fleet_traces[0].dim();
+    let tag = match method {
+        "pronto" => "PRONTO",
+        "sp" => "SP",
+        "fd" => "FD",
+        "pm" => "PM",
+        other => bail!("unknown method '{other}'"),
+    };
+    let mut fleet = FleetEvaluation::new(tag);
+    for (i, tr) in fleet_traces.iter().enumerate() {
+        let ev = match method {
+            "pronto" => evaluate_method(crate::fpca::FpcaEdge::new(d, cfg.fpca), tr, &eval_cfg),
+            "sp" => evaluate_method(Spirit::new(d, SpiritConfig::default()), tr, &eval_cfg),
+            "fd" => evaluate_method(
+                FrequentDirections::new(d, cfg.fpca.initial_rank),
+                tr,
+                &eval_cfg,
+            ),
+            "pm" => evaluate_method(
+                BlockPowerMethod::new(d, cfg.fpca.initial_rank, d, cfg.seed ^ i as u64),
+                tr,
+                &eval_cfg,
+            ),
+            _ => unreachable!(),
+        };
+        fleet.push(ev);
+    }
+
+    println!("fleet evaluation: {} nodes, method = {tag}", cfg.nodes);
+    println!("  mean prediction rate : {:.3}", fleet.mean_prediction_rate());
+    println!("  mean downtime        : {:.3}", fleet.mean_downtime());
+    let spikes: usize = fleet.nodes.iter().map(|n| n.ready_spikes).sum();
+    let raises: usize = fleet.nodes.iter().map(|n| n.rejection_raises).sum();
+    println!("  CPU Ready spikes     : {spikes}");
+    println!("  rejection raises     : {raises}");
+    Ok(())
+}
+
+fn cmd_federate(raw: &[String]) -> Result<()> {
+    let args = Args::parse(raw, &[])?;
+    args.reject_unknown(&["config", "nodes", "fanout", "steps", "epsilon"])?;
+    let mut cfg = load_config(&args)?;
+    cfg.nodes = args.get_usize("nodes", cfg.nodes)?;
+    cfg.fanout = args.get_usize("fanout", cfg.fanout)?;
+    cfg.steps = args.get_usize("steps", cfg.steps)?;
+    cfg.epsilon = args.get_f64("epsilon", cfg.epsilon)?;
+
+    let traces = gen_fleet(&cfg);
+    let fed = crate::federation::ConcurrentFederation::new(
+        crate::federation::TreeTopology::new(cfg.nodes, cfg.fanout),
+        cfg.fpca.initial_rank,
+        cfg.epsilon,
+    );
+    let report = fed.run(traces);
+    println!(
+        "federation: {} leaves, {} steps each",
+        report.leaves, report.steps_per_leaf
+    );
+    println!("  wall          : {:?}", report.wall);
+    println!("  throughput    : {:.0} obs/s", report.throughput());
+    println!(
+        "  pushes        : {} (suppressed {})",
+        report.pushes, report.suppressed
+    );
+    println!("  global rank   : {}", report.global_view.rank());
+    Ok(())
+}
+
+fn cmd_bench_tables(raw: &[String]) -> Result<()> {
+    let args = Args::parse(raw, &["quick"])?;
+    args.reject_unknown(&["table"])?;
+    if args.flag("quick") {
+        std::env::set_var("PRONTO_BENCH_QUICK", "1");
+    }
+    let which = args.get("table").map(|s| s.to_string());
+    println!(
+        "bench-tables regenerates the paper tables inline; the full harness\n\
+         is `cargo bench` (one target per table/figure). Running: {}",
+        which.as_deref().unwrap_or("1-3")
+    );
+    use crate::bench::experiments::*;
+    let scale = ExperimentScale::from_env();
+    let sel = |n: &str| which.is_none() || which.as_deref() == Some(n);
+    if sel("1") {
+        println!("\nTable 1 (RMSE):");
+        for (name, c) in table1_rmse(&scale) {
+            println!("  {name:<12} {:.2} {:.2} {:.2} {:.2}", c[0], c[1], c[2], c[3]);
+        }
+    }
+    if sel("2") {
+        println!("\nTable 2 (clustered SVM RMSE):");
+        for (name, c) in table2_clustering(&scale) {
+            println!("  {name:<14} {:.2} {:.2}", c[0], c[1]);
+        }
+    }
+    if sel("3") {
+        println!("\nTable 3 (RMSE by window):");
+        let (labels, rows) = table3_windows(&scale);
+        println!("  {:<12} {}", "method", labels.join("  "));
+        for (name, cells) in rows {
+            let vals: Vec<String> = cells.iter().map(|c| format!("{c:.1}")).collect();
+            println!("  {name:<12} {}", vals.join("  "));
+        }
+    }
+    Ok(())
+}
+
+/// Streaming playback: load every `*.csv` trace in a directory, run one
+/// node pipeline per trace, and emit admission decisions as JSON lines —
+/// the shape of a leader process consuming live telemetry. `--realtime`
+/// sleeps the 20 s cadence between steps (default: full speed).
+fn cmd_serve(raw: &[String]) -> Result<()> {
+    let args = Args::parse(raw, &["realtime", "quiet"])?;
+    args.reject_unknown(&["traces", "config", "max-steps"])?;
+    let cfg = load_config(&args)?;
+    let dir = args.get("traces").unwrap_or("traces");
+    let max_steps = args.get_usize("max-steps", usize::MAX)?;
+
+    let mut paths: Vec<std::path::PathBuf> = std::fs::read_dir(dir)
+        .with_context(|| format!("reading {dir}"))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().map(|x| x == "csv").unwrap_or(false))
+        .collect();
+    paths.sort();
+    if paths.is_empty() {
+        bail!("no .csv traces in {dir} (generate with `pronto gen-trace`)");
+    }
+
+    let mut nodes = Vec::new();
+    let mut traces = Vec::new();
+    for (i, p) in paths.iter().enumerate() {
+        let tr = VmTrace::read_csv(p, i, 0)?;
+        nodes.push(NodeScheduler::new(tr.dim(), cfg.reject));
+        traces.push(tr);
+    }
+    let steps = traces.iter().map(VmTrace::len).min().unwrap().min(max_steps);
+    eprintln!("serving {} nodes x {steps} steps from {dir}/", traces.len());
+
+    let realtime = args.flag("realtime");
+    let quiet = args.flag("quiet");
+    use std::io::Write;
+    let stdout = std::io::stdout();
+    let mut out = std::io::BufWriter::new(stdout.lock());
+    for t in 0..steps {
+        for (i, (node, tr)) in nodes.iter_mut().zip(&traces).enumerate() {
+            let accept = node.observe(tr.features(t));
+            if !quiet {
+                writeln!(
+                    out,
+                    r#"{{"t":{t},"node":{i},"accept":{accept},"ready_ms":{ready:.1}}}"#,
+                    ready = tr.cpu_ready(t)
+                )?;
+            }
+        }
+        if !quiet {
+            out.flush()?;
+        }
+        if realtime {
+            std::thread::sleep(std::time::Duration::from_secs(20));
+        }
+    }
+    // Final per-node summary on stderr (stdout stays machine-readable).
+    for (i, node) in nodes.iter().enumerate() {
+        eprintln!(
+            "node {i}: downtime {:.2}%, rank {}",
+            100.0 * node.stats().downtime(),
+            node.estimate().rank()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_inspect(raw: &[String]) -> Result<()> {
+    let args = Args::parse(raw, &["compile"])?;
+    args.reject_unknown(&[])?;
+    let dir = crate::runtime::artifacts_dir();
+    println!("artifacts dir: {}", dir.display());
+    if !crate::runtime::artifacts_available() {
+        println!("manifest.json not found — run `make artifacts` first");
+        return Ok(());
+    }
+    let manifest = crate::runtime::Manifest::load(&dir)?;
+    let c = manifest.config;
+    println!(
+        "compiled config: dim={} rank={} block={} lag={}",
+        c.dim, c.rank, c.block, c.lag
+    );
+    for (name, art) in &manifest.artifacts {
+        let ins: Vec<String> = art
+            .inputs
+            .iter()
+            .map(|t| format!("{}{:?}", t.name, t.shape))
+            .collect();
+        println!("  {name:<18} {} <- {}", art.file, ins.join(", "));
+    }
+    if args.flag("compile") {
+        print!("compiling via PJRT CPU… ");
+        let t0 = std::time::Instant::now();
+        let _rt = crate::runtime::XlaRuntime::load(&dir)?;
+        println!("ok in {:?}", t0.elapsed());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(run(&argv(&["frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn help_runs() {
+        assert!(run(&argv(&["help"])).is_ok());
+        assert!(run(&[]).is_ok());
+    }
+
+    #[test]
+    fn sim_smoke() {
+        assert!(run(&argv(&[
+            "sim", "--nodes", "3", "--steps", "300", "--policy", "always"
+        ]))
+        .is_ok());
+    }
+
+    #[test]
+    fn eval_smoke() {
+        assert!(run(&argv(&[
+            "eval", "--nodes", "2", "--steps", "600", "--method", "sp"
+        ]))
+        .is_ok());
+    }
+
+    #[test]
+    fn gen_trace_smoke() {
+        let dir = std::env::temp_dir().join("pronto_cli_gen");
+        let out = dir.to_string_lossy().to_string();
+        assert!(run(&argv(&[
+            "gen-trace", "--out", &out, "--nodes", "2", "--steps", "50"
+        ]))
+        .is_ok());
+        assert!(dir.join("cluster0_vm0.csv").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn serve_smoke_roundtrip() {
+        let dir = std::env::temp_dir().join("pronto_cli_serve");
+        let out = dir.to_string_lossy().to_string();
+        run(&argv(&["gen-trace", "--out", &out, "--nodes", "2", "--steps", "120"])).unwrap();
+        assert!(run(&argv(&[
+            "serve", "--traces", &out, "--max-steps", "100", "--quiet"
+        ]))
+        .is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sim_rejects_bad_policy() {
+        assert!(
+            run(&argv(&["sim", "--policy", "nope", "--nodes", "2", "--steps", "100"])).is_err()
+        );
+    }
+}

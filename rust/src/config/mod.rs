@@ -1,0 +1,215 @@
+//! Configuration system: a TOML-subset parser + the typed [`ProntoConfig`].
+//!
+//! No serde in this environment, so we parse the practical subset of TOML
+//! the configs need: `[section]` headers, `key = value` with strings,
+//! numbers, booleans, and flat arrays. Unknown keys are rejected (typos
+//! should fail loudly at startup, not silently default).
+
+mod toml;
+
+pub use toml::{parse_toml, TomlValue};
+
+use crate::detect::ZScoreConfig;
+use crate::fpca::FpcaEdgeConfig;
+use crate::scheduler::RejectConfig;
+use crate::sim::SimConfig;
+use crate::telemetry::GeneratorConfig;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Top-level runtime configuration for the `pronto` binary.
+#[derive(Debug, Clone)]
+pub struct ProntoConfig {
+    /// Number of data-center nodes.
+    pub nodes: usize,
+    /// Trace length in 20 s timesteps.
+    pub steps: usize,
+    /// Federation fanout.
+    pub fanout: usize,
+    /// ε threshold of the upward-merge gate.
+    pub epsilon: f64,
+    /// Master seed.
+    pub seed: u64,
+    pub generator: GeneratorConfig,
+    pub fpca: FpcaEdgeConfig,
+    pub reject: RejectConfig,
+    pub sim: SimConfig,
+}
+
+impl Default for ProntoConfig {
+    fn default() -> Self {
+        Self {
+            nodes: 16,
+            steps: 4_000,
+            fanout: 8,
+            epsilon: 0.5,
+            seed: 2021,
+            generator: GeneratorConfig::default(),
+            fpca: FpcaEdgeConfig::default(),
+            reject: RejectConfig::default(),
+            sim: SimConfig::default(),
+        }
+    }
+}
+
+impl ProntoConfig {
+    /// Load from a TOML file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Parse from TOML text. Every key is optional; sections:
+    /// `[pronto]`, `[generator]`, `[fpca]`, `[reject]`, `[sim]`.
+    pub fn parse(text: &str) -> Result<Self> {
+        let doc = parse_toml(text).map_err(|e| anyhow::anyhow!("config: {e}"))?;
+        let mut cfg = Self::default();
+        for (section, entries) in &doc {
+            for (key, value) in entries {
+                cfg.apply(section, key, value)?;
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    fn apply(&mut self, section: &str, key: &str, v: &TomlValue) -> Result<()> {
+        let num = || -> Result<f64> {
+            v.as_f64().ok_or_else(|| anyhow::anyhow!("{section}.{key}: expected number"))
+        };
+        let uint = || -> Result<usize> { Ok(num()? as usize) };
+        let boolean = || -> Result<bool> {
+            v.as_bool().ok_or_else(|| anyhow::anyhow!("{section}.{key}: expected bool"))
+        };
+        match (section, key) {
+            ("pronto", "nodes") => self.nodes = uint()?,
+            ("pronto", "steps") => self.steps = uint()?,
+            ("pronto", "fanout") => self.fanout = uint()?,
+            ("pronto", "epsilon") => self.epsilon = num()?,
+            ("pronto", "seed") => self.seed = num()? as u64,
+
+            ("generator", "ready_mu_ms") => self.generator.ready_mu = num()?.ln(),
+            ("generator", "ready_sigma") => self.generator.ready_sigma = num()?,
+            ("generator", "episode_hazard") => self.generator.episode_hazard = num()?,
+            ("generator", "hazard_load_gain") => self.generator.hazard_load_gain = num()?,
+            ("generator", "lead") => self.generator.lead = uint()?,
+            ("generator", "mean_episode_len") => self.generator.mean_episode_len = num()?,
+            ("generator", "precursor_gain") => self.generator.precursor_gain = num()?,
+            ("generator", "surprise_rate") => self.generator.surprise_rate = num()?,
+            ("generator", "obs_noise") => self.generator.obs_noise = num()?,
+            ("generator", "ar_rho") => self.generator.ar_rho = num()?,
+
+            ("fpca", "initial_rank") => self.fpca.initial_rank = uint()?,
+            ("fpca", "max_rank") => self.fpca.max_rank = uint()?,
+            ("fpca", "min_rank") => self.fpca.min_rank = uint()?,
+            ("fpca", "block_size") => self.fpca.block_size = uint()?,
+            ("fpca", "forget") => self.fpca.forget = num()?,
+            ("fpca", "adaptive_rank") => self.fpca.adaptive_rank = boolean()?,
+            ("fpca", "energy_alpha") => self.fpca.energy.alpha = num()?,
+            ("fpca", "energy_beta") => self.fpca.energy.beta = num()?,
+
+            ("reject", "lag") => self.reject.zscore.lag = uint()?,
+            ("reject", "alpha") => self.reject.zscore.alpha = num()?,
+            ("reject", "beta") => self.reject.zscore.beta = num()?,
+            ("reject", "threshold") => self.reject.threshold = num()?,
+            ("reject", "max_rank") => self.reject.max_rank = uint()?,
+            ("reject", "normalize_sigma") => self.reject.normalize_sigma = boolean()?,
+            ("reject", "signed_flags") => self.reject.signed_flags = boolean()?,
+
+            ("sim", "arrival_rate_per_step") => self.sim.arrival_rate_per_step = num()?,
+            ("sim", "duration_mu") => self.sim.duration_mu = num()?,
+            ("sim", "duration_sigma") => self.sim.duration_sigma = num()?,
+            ("sim", "ready_threshold") => self.sim.ready_threshold = num()?,
+            ("sim", "score_window") => self.sim.score_window = uint()?,
+            ("sim", "seed") => self.sim.seed = num()? as u64,
+
+            _ => bail!("unknown config key [{section}] {key}"),
+        }
+        Ok(())
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.nodes == 0 || self.steps == 0 {
+            bail!("nodes and steps must be positive");
+        }
+        if self.fanout < 2 {
+            bail!("fanout must be >= 2");
+        }
+        if !(0.0..=1.0).contains(&self.generator.surprise_rate) {
+            bail!("generator.surprise_rate must be in [0, 1]");
+        }
+        if self.fpca.min_rank > self.fpca.max_rank
+            || self.fpca.initial_rank > self.fpca.max_rank
+        {
+            bail!("fpca rank bounds inconsistent");
+        }
+        let z: &ZScoreConfig = &self.reject.zscore;
+        if z.lag < 2 || z.alpha <= 0.0 || !(0.0..=1.0).contains(&z.beta) {
+            bail!("reject.zscore parameters out of range");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_valid() {
+        assert!(ProntoConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn parses_full_config() {
+        let cfg = ProntoConfig::parse(
+            r#"
+[pronto]
+nodes = 32
+steps = 1000
+fanout = 4
+epsilon = 0.25
+seed = 7
+
+[generator]
+ready_sigma = 0.9
+lead = 4
+
+[fpca]
+initial_rank = 3
+block_size = 16
+adaptive_rank = true
+
+[reject]
+alpha = 3.0
+threshold = 0.8
+signed_flags = true
+
+[sim]
+arrival_rate_per_step = 0.5
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.nodes, 32);
+        assert_eq!(cfg.fanout, 4);
+        assert_eq!(cfg.generator.lead, 4);
+        assert_eq!(cfg.fpca.initial_rank, 3);
+        assert!(cfg.fpca.adaptive_rank);
+        assert_eq!(cfg.reject.zscore.alpha, 3.0);
+        assert!(cfg.reject.signed_flags);
+        assert_eq!(cfg.sim.arrival_rate_per_step, 0.5);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(ProntoConfig::parse("[pronto]\nnodez = 3\n").is_err());
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        assert!(ProntoConfig::parse("[pronto]\nfanout = 1\n").is_err());
+        assert!(ProntoConfig::parse("[generator]\nsurprise_rate = 2.0\n").is_err());
+        assert!(ProntoConfig::parse("[reject]\nlag = 1\n").is_err());
+    }
+}

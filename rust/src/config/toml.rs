@@ -1,0 +1,201 @@
+//! Minimal TOML-subset parser.
+//!
+//! Supports: `[section]` headers, `key = value` pairs with strings
+//! (double-quoted), integers, floats, booleans, and flat arrays; `#`
+//! comments; blank lines. Dotted keys, inline tables, dates, and
+//! multi-line strings are out of scope (and rejected loudly).
+
+/// A parsed TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    String(String),
+    Number(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Number(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::String(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: ordered (section, entries) pairs. Keys before any
+/// section header land in the section named "" (root).
+pub type TomlDoc = Vec<(String, Vec<(String, TomlValue)>)>;
+
+/// Parse a TOML-subset document.
+pub fn parse_toml(text: &str) -> Result<TomlDoc, String> {
+    let mut doc: TomlDoc = Vec::new();
+    let mut current = String::new();
+    doc.push((current.clone(), Vec::new()));
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            if !line.ends_with(']') {
+                return Err(format!("line {}: malformed section header", lineno + 1));
+            }
+            current = line[1..line.len() - 1].trim().to_string();
+            if current.is_empty() || current.contains('[') {
+                return Err(format!("line {}: bad section name", lineno + 1));
+            }
+            doc.push((current.clone(), Vec::new()));
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            return Err(format!("line {}: expected key = value", lineno + 1));
+        };
+        let key = line[..eq].trim();
+        if key.is_empty() || key.contains(' ') || key.contains('.') {
+            return Err(format!("line {}: bad key '{key}'", lineno + 1));
+        }
+        let value = parse_value(line[eq + 1..].trim())
+            .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        doc.last_mut().unwrap().1.push((key.to_string(), value));
+    }
+    // Drop the root section if empty.
+    if doc[0].1.is_empty() {
+        doc.remove(0);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' outside a string starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    let s = s.trim();
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let Some(end) = rest.find('"') else {
+            return Err("unterminated string".into());
+        };
+        if !rest[end + 1..].trim().is_empty() {
+            return Err("trailing characters after string".into());
+        }
+        return Ok(TomlValue::String(rest[..end].to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if s.starts_with('[') {
+        if !s.ends_with(']') {
+            return Err("unterminated array".into());
+        }
+        let inner = &s[1..s.len() - 1];
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in inner.split(',') {
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    // TOML integers may use underscores.
+    let cleaned: String = s.chars().filter(|&c| c != '_').collect();
+    cleaned
+        .parse::<f64>()
+        .map(TomlValue::Number)
+        .map_err(|_| format!("cannot parse value '{s}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse_toml(
+            r#"
+# top comment
+[alpha]
+x = 1
+y = 2.5          # trailing comment
+name = "hello"
+flag = true
+xs = [1, 2, 3]
+
+[beta]
+z = 1_000
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.len(), 2);
+        let (name, entries) = &doc[0];
+        assert_eq!(name, "alpha");
+        assert_eq!(entries[0], ("x".into(), TomlValue::Number(1.0)));
+        assert_eq!(entries[1], ("y".into(), TomlValue::Number(2.5)));
+        assert_eq!(entries[2], ("name".into(), TomlValue::String("hello".into())));
+        assert_eq!(entries[3], ("flag".into(), TomlValue::Bool(true)));
+        assert_eq!(
+            entries[4],
+            (
+                "xs".into(),
+                TomlValue::Array(vec![
+                    TomlValue::Number(1.0),
+                    TomlValue::Number(2.0),
+                    TomlValue::Number(3.0)
+                ])
+            )
+        );
+        assert_eq!(doc[1].1[0], ("z".into(), TomlValue::Number(1000.0)));
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = parse_toml("[s]\nk = \"a#b\"\n").unwrap();
+        assert_eq!(doc[0].1[0].1, TomlValue::String("a#b".into()));
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(parse_toml("[unclosed\n").is_err());
+        assert!(parse_toml("[s]\nno_equals_here\n").is_err());
+        assert!(parse_toml("[s]\nbad key = 1\n").is_err());
+        assert!(parse_toml("[s]\nk = \n").is_err());
+        assert!(parse_toml("[s]\nk = \"unterminated\n").is_err());
+    }
+
+    #[test]
+    fn root_keys_allowed() {
+        let doc = parse_toml("top = 5\n[s]\nk = 1\n").unwrap();
+        assert_eq!(doc[0].0, "");
+        assert_eq!(doc[0].1[0], ("top".into(), TomlValue::Number(5.0)));
+    }
+}

@@ -1,0 +1,15 @@
+//! Streaming spike detection.
+//!
+//! Implements the robust z-score peak detector of van Brakel (2014) that
+//! Algorithm 1 (Reject-Job) embeds: a per-signal lag buffer of dampened
+//! history, running mean/std filters, threshold `alpha` (z-scores) and
+//! influence `beta` for detected peaks. [`ZScoreDetector`] tracks one scalar
+//! signal; [`MultiDetector`] tracks the r projection signals of a node;
+//! [`SlidingWindow`] provides the left/right-sided spike bookkeeping of
+//! Figure 5 used by the evaluation.
+
+mod window;
+mod zscore;
+
+pub use window::{SideCounts, SlidingWindow, SpikeSide};
+pub use zscore::{MultiDetector, Spike, ZScoreConfig, ZScoreDetector};

@@ -1,0 +1,206 @@
+//! Sliding-window spike bookkeeping (Figure 5).
+//!
+//! PRONTO classifies detected spikes relative to a *reference point* placed
+//! at the middle of a window of size `w`: events in the half *after* the
+//! reference point ("left-sided" in the paper's time-flows-right rendering —
+//! i.e. in the future relative to the reference) are treated as **incoming
+//! predictions**; events in the half before it are in the past
+//! ("right-sided": consecutive/delayed detections). A prediction counts as
+//! successful when a CPU Ready spike is preceded by ≥ 1 rejection-signal
+//! raise within the current window.
+
+/// Which half of the window an event falls in, relative to the reference
+/// point at w/2 (see Figure 5, third row).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpikeSide {
+    /// Between the reference point and the window head: imminent/incoming
+    /// (the important kind — rejection raises here *precede* CPU Ready spikes).
+    Left,
+    /// Behind the reference point: already happened (consecutive spikes or
+    /// delayed detection).
+    Right,
+}
+
+/// Counts of events by side within one window evaluation.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SideCounts {
+    pub left: usize,
+    pub right: usize,
+}
+
+impl SideCounts {
+    pub fn total(&self) -> usize {
+        self.left + self.right
+    }
+}
+
+/// Fixed-size boolean ring buffer over the last `w` timesteps with
+/// reference-point queries. One instance tracks one binary event stream
+/// (e.g. "rejection raised at t" or "CPU Ready spiked at t").
+#[derive(Debug, Clone)]
+pub struct SlidingWindow {
+    w: usize,
+    buf: Vec<bool>,
+    head: usize,
+    seen: usize,
+}
+
+impl SlidingWindow {
+    pub fn new(w: usize) -> Self {
+        assert!(w >= 2, "window must hold at least two timesteps");
+        Self { w, buf: vec![false; w], head: 0, seen: 0 }
+    }
+
+    /// Window size.
+    pub fn len(&self) -> usize {
+        self.w
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.seen == 0
+    }
+
+    /// Observations pushed so far.
+    pub fn seen(&self) -> usize {
+        self.seen
+    }
+
+    /// True once a full window of observations is available — the minimum
+    /// before any prediction can be made (Figure 5, second row).
+    pub fn full(&self) -> bool {
+        self.seen >= self.w
+    }
+
+    /// Push the event flag for the newest timestep.
+    pub fn push(&mut self, event: bool) {
+        self.buf[self.head] = event;
+        self.head = (self.head + 1) % self.w;
+        self.seen += 1;
+    }
+
+    /// Event flag `age` steps back from the newest observation
+    /// (`age = 0` is the newest). Panics if `age ≥ min(seen, w)`.
+    pub fn get_back(&self, age: usize) -> bool {
+        assert!(age < self.w.min(self.seen), "age out of range");
+        let idx = (self.head + self.w - 1 - age) % self.w;
+        self.buf[idx]
+    }
+
+    /// Index (in steps-back form) of the reference point: w/2.
+    pub fn reference_age(&self) -> usize {
+        self.w / 2
+    }
+
+    /// Classify a step-back age into a window side relative to the
+    /// reference point. Ages newer than the reference are `Left`
+    /// (incoming relative to the reference time), older are `Right`.
+    pub fn side_of(&self, age: usize) -> SpikeSide {
+        if age < self.reference_age() {
+            SpikeSide::Left
+        } else {
+            SpikeSide::Right
+        }
+    }
+
+    /// Count events in the current window by side. Requires a full window.
+    pub fn side_counts(&self) -> SideCounts {
+        assert!(self.full(), "side_counts needs a full window");
+        let mut c = SideCounts::default();
+        for age in 0..self.w {
+            if self.get_back(age) {
+                match self.side_of(age) {
+                    SpikeSide::Left => c.left += 1,
+                    SpikeSide::Right => c.right += 1,
+                }
+            }
+        }
+        c
+    }
+
+    /// Any event anywhere in the window?
+    pub fn any(&self) -> bool {
+        let n = self.w.min(self.seen);
+        (0..n).any(|age| self.get_back(age))
+    }
+
+    /// Any event within the last `k` observations?
+    pub fn any_within(&self, k: usize) -> bool {
+        let n = self.w.min(self.seen).min(k);
+        (0..n).any(|age| self.get_back(age))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fills_and_wraps() {
+        let mut w = SlidingWindow::new(4);
+        assert!(!w.full());
+        for i in 0..6 {
+            w.push(i % 2 == 0);
+        }
+        assert!(w.full());
+        // Last four pushes were for i = 2,3,4,5 → events at ages 1 (i=4) and 3 (i=2).
+        assert!(!w.get_back(0)); // i=5
+        assert!(w.get_back(1)); // i=4
+        assert!(!w.get_back(2)); // i=3
+        assert!(w.get_back(3)); // i=2
+    }
+
+    #[test]
+    fn reference_point_is_half_window() {
+        let w = SlidingWindow::new(10);
+        assert_eq!(w.reference_age(), 5);
+        assert_eq!(w.side_of(0), SpikeSide::Left);
+        assert_eq!(w.side_of(4), SpikeSide::Left);
+        assert_eq!(w.side_of(5), SpikeSide::Right);
+        assert_eq!(w.side_of(9), SpikeSide::Right);
+    }
+
+    #[test]
+    fn side_counts_split() {
+        let mut w = SlidingWindow::new(6);
+        // Push pattern oldest→newest: T F F T F T
+        for &e in &[true, false, false, true, false, true] {
+            w.push(e);
+        }
+        // ages: 0=T(newest) 1=F 2=T 3=F 4=F 5=T ; reference_age = 3
+        let c = w.side_counts();
+        assert_eq!(c, SideCounts { left: 2, right: 1 });
+        assert_eq!(c.total(), 3);
+    }
+
+    #[test]
+    fn any_within_respects_horizon() {
+        let mut w = SlidingWindow::new(8);
+        for _ in 0..7 {
+            w.push(false);
+        }
+        w.push(true); // newest
+        assert!(w.any_within(1));
+        for _ in 0..3 {
+            w.push(false);
+        }
+        assert!(!w.any_within(3));
+        assert!(w.any_within(4));
+    }
+
+    #[test]
+    #[should_panic]
+    fn side_counts_requires_full_window() {
+        let mut w = SlidingWindow::new(4);
+        w.push(true);
+        let _ = w.side_counts();
+    }
+
+    #[test]
+    fn get_back_before_full_window() {
+        let mut w = SlidingWindow::new(5);
+        w.push(true);
+        w.push(false);
+        assert!(!w.get_back(0));
+        assert!(w.get_back(1));
+    }
+}

@@ -1,0 +1,319 @@
+//! Robust streaming z-score peak detection (van Brakel 2014), as embedded in
+//! Algorithm 1 of the paper.
+//!
+//! For each tracked signal we keep a lag buffer of the *dampened* signal
+//! (peaks contribute with weight β so one spike does not inflate the filter),
+//! and flag a new observation as a spike when it deviates from the buffer
+//! mean by more than α buffer standard deviations. The sign of the deviation
+//! distinguishes positive (+1) from negative (−1) spikes — exactly the
+//! ternary `b[i] ∈ {−1, 0, 1}` of Reject-Job.
+
+/// Spike classification for one observation of one signal.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Spike {
+    /// Positive deviation beyond α·std.
+    Positive,
+    /// Negative deviation beyond α·std.
+    Negative,
+    /// Within the band (or warmup).
+    None,
+}
+
+impl Spike {
+    /// The paper's ternary encoding: +1 / −1 / 0.
+    #[inline]
+    pub fn as_i8(self) -> i8 {
+        match self {
+            Spike::Positive => 1,
+            Spike::Negative => -1,
+            Spike::None => 0,
+        }
+    }
+}
+
+/// Detector parameters. Defaults follow Algorithm 1's initialization:
+/// `lag = 10`, `alpha = 3.5`, `beta = 0.5`.
+#[derive(Debug, Clone, Copy)]
+pub struct ZScoreConfig {
+    /// Lag-buffer length (observations used for mean/std).
+    pub lag: usize,
+    /// Z-score threshold for flagging a spike.
+    pub alpha: f64,
+    /// Influence of flagged observations on the dampened buffer
+    /// (0 = ignore peaks entirely, 1 = no dampening).
+    pub beta: f64,
+}
+
+impl Default for ZScoreConfig {
+    fn default() -> Self {
+        Self { lag: 10, alpha: 3.5, beta: 0.5 }
+    }
+}
+
+/// Streaming z-score detector for one scalar signal.
+///
+/// Memory is O(lag); each observation is O(lag) work (mean/std over the
+/// small buffer — recomputed rather than incrementally updated to avoid
+/// drift, matching the reference implementation).
+#[derive(Debug, Clone)]
+pub struct ZScoreDetector {
+    cfg: ZScoreConfig,
+    /// Dampened history ring buffer.
+    buf: Vec<f64>,
+    /// Next write position in `buf`.
+    head: usize,
+    /// Observations seen so far.
+    seen: usize,
+}
+
+impl ZScoreDetector {
+    pub fn new(cfg: ZScoreConfig) -> Self {
+        assert!(cfg.lag >= 2, "lag must be >= 2");
+        assert!(cfg.alpha > 0.0 && (0.0..=1.0).contains(&cfg.beta));
+        Self { cfg, buf: vec![0.0; cfg.lag], head: 0, seen: 0 }
+    }
+
+    /// Number of observations consumed.
+    pub fn seen(&self) -> usize {
+        self.seen
+    }
+
+    /// True once the lag buffer has filled and spikes can be flagged.
+    pub fn warmed_up(&self) -> bool {
+        self.seen >= self.cfg.lag
+    }
+
+    /// Current buffer mean (0.0 during warmup of an empty buffer).
+    pub fn mean(&self) -> f64 {
+        let n = self.seen.min(self.cfg.lag);
+        if n == 0 {
+            return 0.0;
+        }
+        self.buf[..n.max(self.cfg.lag).min(self.cfg.lag)]
+            .iter()
+            .take(n)
+            .sum::<f64>()
+            / n as f64
+    }
+
+    /// Current buffer standard deviation (population).
+    pub fn std(&self) -> f64 {
+        let n = self.seen.min(self.cfg.lag);
+        if n == 0 {
+            return 0.0;
+        }
+        let m = self.mean();
+        let var = self.buf.iter().take(n).map(|x| (x - m) * (x - m)).sum::<f64>() / n as f64;
+        var.sqrt()
+    }
+
+    /// Consume one observation; returns its spike classification.
+    pub fn observe(&mut self, x: f64) -> Spike {
+        if !self.warmed_up() {
+            // Warmup: fill the buffer verbatim, never flag.
+            self.push(x);
+            return Spike::None;
+        }
+        let mean = self.mean();
+        let std = self.std();
+        let spike = if (x - mean).abs() > self.cfg.alpha * std && std > 0.0 {
+            if x > mean {
+                Spike::Positive
+            } else {
+                Spike::Negative
+            }
+        } else {
+            Spike::None
+        };
+        // Dampen flagged observations before they enter the buffer so a
+        // burst of spikes does not drag the filter along with it.
+        let entering = if spike == Spike::None {
+            x
+        } else {
+            let prev = self.last();
+            self.cfg.beta * x + (1.0 - self.cfg.beta) * prev
+        };
+        self.push(entering);
+        spike
+    }
+
+    #[inline]
+    fn last(&self) -> f64 {
+        let idx = (self.head + self.cfg.lag - 1) % self.cfg.lag;
+        self.buf[idx]
+    }
+
+    #[inline]
+    fn push(&mut self, x: f64) {
+        self.buf[self.head] = x;
+        self.head = (self.head + 1) % self.cfg.lag;
+        self.seen += 1;
+    }
+}
+
+/// Bank of [`ZScoreDetector`]s, one per tracked projection signal.
+///
+/// This is the `w_avg`/`w_std`/`w_p` state of Algorithm 1 for all r
+/// projections at once. The detector count is fixed at construction
+/// (`r_max`); when the effective rank is lower, unused lanes simply see
+/// zeros and never spike.
+#[derive(Debug, Clone)]
+pub struct MultiDetector {
+    lanes: Vec<ZScoreDetector>,
+}
+
+impl MultiDetector {
+    pub fn new(r: usize, cfg: ZScoreConfig) -> Self {
+        Self { lanes: (0..r).map(|_| ZScoreDetector::new(cfg)).collect() }
+    }
+
+    /// Number of tracked signals.
+    pub fn lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// True once every lane's lag buffer has filled.
+    pub fn warmed_up(&self) -> bool {
+        self.lanes.iter().all(ZScoreDetector::warmed_up)
+    }
+
+    /// Consume one observation per lane; writes each lane's ternary spike
+    /// indicator into `out` (len ≥ projections len).
+    pub fn observe_into(&mut self, projections: &[f64], out: &mut [i8]) {
+        assert!(projections.len() <= self.lanes.len());
+        assert!(out.len() >= projections.len());
+        for (i, &p) in projections.iter().enumerate() {
+            out[i] = self.lanes[i].observe(p).as_i8();
+        }
+        // Idle lanes observe a constant zero: they warm up alongside the
+        // active lanes and can never spike (zero variance).
+        for lane in self.lanes.iter_mut().skip(projections.len()) {
+            let _ = lane.observe(0.0);
+        }
+        for o in out.iter_mut().skip(projections.len()) {
+            *o = 0;
+        }
+    }
+
+    /// Convenience allocating variant.
+    pub fn observe(&mut self, projections: &[f64]) -> Vec<i8> {
+        let mut out = vec![0i8; projections.len()];
+        self.observe_into(projections, &mut out);
+        out
+    }
+
+    /// Reset all lanes (used when a node's subspace is replaced wholesale,
+    /// e.g. after a global merge pull).
+    pub fn reset(&mut self) {
+        let cfg = self.lanes.first().map(|l| l.cfg).unwrap_or_default();
+        let n = self.lanes.len();
+        self.lanes = (0..n).map(|_| ZScoreDetector::new(cfg)).collect();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn detector() -> ZScoreDetector {
+        ZScoreDetector::new(ZScoreConfig::default())
+    }
+
+    #[test]
+    fn no_spikes_during_warmup() {
+        let mut d = detector();
+        for i in 0..10 {
+            assert_eq!(d.observe(i as f64 * 100.0), Spike::None, "i={i}");
+        }
+        assert!(d.warmed_up());
+    }
+
+    #[test]
+    fn flags_positive_spike() {
+        let mut d = detector();
+        // Flat-ish baseline with tiny jitter so std > 0.
+        for i in 0..20 {
+            d.observe(1.0 + 0.01 * ((i % 3) as f64 - 1.0));
+        }
+        assert_eq!(d.observe(10.0), Spike::Positive);
+    }
+
+    #[test]
+    fn flags_negative_spike() {
+        let mut d = detector();
+        for i in 0..20 {
+            d.observe(1.0 + 0.01 * ((i % 3) as f64 - 1.0));
+        }
+        assert_eq!(d.observe(-10.0), Spike::Negative);
+    }
+
+    #[test]
+    fn zero_variance_never_spikes() {
+        let mut d = detector();
+        for _ in 0..50 {
+            d.observe(5.0);
+        }
+        // std == 0 → detector refuses to flag (matches reference impl).
+        assert_eq!(d.observe(5.0), Spike::None);
+    }
+
+    #[test]
+    fn dampening_limits_spike_influence() {
+        let mut a = ZScoreDetector::new(ZScoreConfig { beta: 0.0, ..Default::default() });
+        let mut b = ZScoreDetector::new(ZScoreConfig { beta: 1.0, ..Default::default() });
+        for i in 0..20 {
+            let x = 1.0 + 0.01 * ((i % 3) as f64 - 1.0);
+            a.observe(x);
+            b.observe(x);
+        }
+        a.observe(100.0);
+        b.observe(100.0);
+        // With beta=0 the spike never enters the buffer: mean stays ~1.
+        assert!(a.mean() < 2.0, "a.mean()={}", a.mean());
+        // With beta=1 the spike fully enters: mean jumps.
+        assert!(b.mean() > 5.0, "b.mean()={}", b.mean());
+    }
+
+    #[test]
+    fn consecutive_spikes_with_dampening() {
+        let mut d = detector();
+        for i in 0..20 {
+            d.observe(1.0 + 0.01 * ((i % 3) as f64 - 1.0));
+        }
+        // A sustained step keeps flagging for a while because dampening
+        // slows buffer adaptation.
+        let flags: Vec<Spike> = (0..4).map(|_| d.observe(50.0)).collect();
+        assert_eq!(flags[0], Spike::Positive);
+        assert_eq!(flags[1], Spike::Positive);
+    }
+
+    #[test]
+    fn multi_detector_lanes_independent() {
+        let mut m = MultiDetector::new(3, ZScoreConfig::default());
+        for i in 0..20 {
+            let jitter = 0.01 * ((i % 3) as f64 - 1.0);
+            m.observe(&[1.0 + jitter, -1.0 + jitter, 0.0 + jitter]);
+        }
+        let b = m.observe(&[30.0, -30.0, 0.0]);
+        assert_eq!(b, vec![1, -1, 0]);
+    }
+
+    #[test]
+    fn multi_detector_handles_fewer_projections_than_lanes() {
+        let mut m = MultiDetector::new(4, ZScoreConfig::default());
+        let mut out = [9i8; 4];
+        m.observe_into(&[1.0, 2.0], &mut out);
+        assert_eq!(&out[2..], &[0, 0]);
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut m = MultiDetector::new(2, ZScoreConfig::default());
+        for _ in 0..15 {
+            m.observe(&[1.0, 1.0]);
+        }
+        assert!(m.warmed_up());
+        m.reset();
+        assert!(!m.warmed_up());
+    }
+}

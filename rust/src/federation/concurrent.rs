@@ -1,0 +1,250 @@
+//! Thread-per-leaf concurrent federation runtime.
+//!
+//! Exercises the same merge semantics as [`super::FederationTree`] under
+//! real parallelism: each leaf runs its full local pipeline (embedding +
+//! Reject-Job) over its own telemetry shard on a dedicated thread and
+//! pushes ε-gated iterates over a channel; aggregator threads merge
+//! summaries and forward upward once (DASM). This is the engine behind the
+//! horizontal-scalability bench (§1: "in the absence of communication
+//! latency, it exhibits attractive horizontal scalability").
+
+use super::tree::TreeTopology;
+use crate::fpca::{merge_subspaces, MergeOptions, Subspace};
+use crate::scheduler::{NodeScheduler, RejectConfig};
+use crate::telemetry::VmTrace;
+use std::sync::mpsc;
+use std::thread;
+use std::time::Instant;
+
+/// Message sent up the tree: a leaf/aggregator summary.
+struct Summary {
+    subspace: Subspace,
+}
+
+/// Outcome of a concurrent federation run.
+#[derive(Debug)]
+pub struct FederationReport {
+    /// Number of leaves.
+    pub leaves: usize,
+    /// Telemetry steps processed per leaf.
+    pub steps_per_leaf: usize,
+    /// Iterate pushes that reached an aggregator.
+    pub pushes: usize,
+    /// Pushes suppressed by the ε gate.
+    pub suppressed: usize,
+    /// Total timesteps with the rejection signal raised, summed over leaves.
+    pub rejected_steps: usize,
+    /// The merged global view at the root.
+    pub global_view: Subspace,
+    /// Wall-clock duration of the whole run.
+    pub wall: std::time::Duration,
+}
+
+impl FederationReport {
+    /// Aggregate throughput in observations/second.
+    pub fn throughput(&self) -> f64 {
+        (self.leaves * self.steps_per_leaf) as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+}
+
+/// Concurrent federation driver.
+pub struct ConcurrentFederation {
+    topo: TreeTopology,
+    rank: usize,
+    epsilon: f64,
+    reject_cfg: RejectConfig,
+    /// Push the local iterate every `push_every` observations.
+    push_every: usize,
+}
+
+impl ConcurrentFederation {
+    pub fn new(topo: TreeTopology, rank: usize, epsilon: f64) -> Self {
+        Self {
+            topo,
+            rank,
+            epsilon,
+            reject_cfg: RejectConfig::default(),
+            push_every: 64,
+        }
+    }
+
+    pub fn with_push_every(mut self, every: usize) -> Self {
+        assert!(every >= 1);
+        self.push_every = every;
+        self
+    }
+
+    /// Run the federation over per-leaf traces (one [`VmTrace`] per leaf).
+    /// Spawns one thread per leaf plus one per aggregator group and a root
+    /// merger; joins everything before returning.
+    pub fn run(&self, traces: Vec<VmTrace>) -> FederationReport {
+        assert_eq!(traces.len(), self.topo.leaves, "one trace per leaf");
+        assert!(!traces.is_empty());
+        let steps_per_leaf = traces.iter().map(|t| t.len()).min().unwrap_or(0);
+        let fanout = self.topo.fanout;
+        let groups = self.topo.leaves.div_ceil(fanout);
+        let start = Instant::now();
+
+        // Channels: leaves → their group aggregator; aggregators → root.
+        let (root_tx, root_rx) = mpsc::channel::<Summary>();
+        let mut group_txs = Vec::with_capacity(groups);
+        let mut agg_handles = Vec::with_capacity(groups);
+        for _ in 0..groups {
+            let (tx, rx) = mpsc::channel::<Summary>();
+            group_txs.push(tx);
+            let root_tx = root_tx.clone();
+            let rank = self.rank;
+            agg_handles.push(thread::spawn(move || {
+                // Aggregator: merge everything the group sends, then forward
+                // the group summary upward once the leaves hang up (DASM:
+                // summaries travel up once per propagation wave).
+                let mut summary: Option<Subspace> = None;
+                let mut merges = 0usize;
+                while let Ok(msg) = rx.recv() {
+                    summary = Some(match summary {
+                        None => msg.subspace,
+                        Some(cur) => {
+                            merges += 1;
+                            merge_subspaces(&cur, &msg.subspace, MergeOptions::rank(rank))
+                        }
+                    });
+                    // Forward the *current* group view upward; the root
+                    // keeps only the latest per group wave.
+                    if let Some(s) = &summary {
+                        let _ = root_tx.send(Summary { subspace: s.clone() });
+                    }
+                }
+                merges
+            }));
+        }
+        drop(root_tx);
+
+        // Leaves.
+        let mut leaf_handles = Vec::with_capacity(self.topo.leaves);
+        for (leaf, trace) in traces.into_iter().enumerate() {
+            let tx = group_txs[leaf / fanout].clone();
+            let epsilon = self.epsilon;
+            let push_every = self.push_every;
+            let cfg = self.reject_cfg;
+            leaf_handles.push(thread::spawn(move || {
+                let mut node = NodeScheduler::new(trace.dim(), cfg);
+                let mut last_pushed: Option<Subspace> = None;
+                let mut pushes = 0usize;
+                let mut suppressed = 0usize;
+                for t in 0..steps_per_leaf {
+                    node.observe(trace.features(t));
+                    if (t + 1) % push_every == 0 {
+                        let est = node.estimate();
+                        if est.is_empty() {
+                            continue;
+                        }
+                        let moved = match &last_pushed {
+                            None => true,
+                            Some(prev) => prev.abs_diff(&est) > epsilon,
+                        };
+                        if moved {
+                            last_pushed = Some(est.clone());
+                            let _ = tx.send(Summary { subspace: est });
+                            pushes += 1;
+                        } else {
+                            suppressed += 1;
+                        }
+                    }
+                }
+                (pushes, suppressed, node.stats().rejected_steps)
+            }));
+        }
+        drop(group_txs);
+
+        // Root: merge group summaries as they arrive.
+        let rank = self.rank;
+        let root_handle = thread::spawn(move || {
+            let mut global: Option<Subspace> = None;
+            while let Ok(msg) = root_rx.recv() {
+                global = Some(match global {
+                    None => msg.subspace,
+                    Some(cur) => merge_subspaces(&cur, &msg.subspace, MergeOptions::rank(rank)),
+                });
+            }
+            global
+        });
+
+        let mut pushes = 0;
+        let mut suppressed = 0;
+        let mut rejected_steps = 0;
+        let mut dim = 0;
+        for h in leaf_handles {
+            let (p, s, r) = h.join().expect("leaf thread panicked");
+            pushes += p;
+            suppressed += s;
+            rejected_steps += r;
+            dim = dim.max(1);
+        }
+        for h in agg_handles {
+            let _ = h.join().expect("aggregator thread panicked");
+        }
+        let global_view = root_handle
+            .join()
+            .expect("root thread panicked")
+            .unwrap_or_else(|| Subspace::empty(dim));
+
+        FederationReport {
+            leaves: self.topo.leaves,
+            steps_per_leaf,
+            pushes,
+            suppressed,
+            rejected_steps,
+            global_view,
+            wall: start.elapsed(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::{GeneratorConfig, TraceGenerator};
+
+    fn traces(n: usize, steps: usize, seed: u64) -> Vec<VmTrace> {
+        let gen = TraceGenerator::new(GeneratorConfig::default(), seed);
+        (0..n).map(|v| gen.generate_vm_in_cluster(0, v, steps)).collect()
+    }
+
+    #[test]
+    fn concurrent_run_produces_global_view() {
+        let fed = ConcurrentFederation::new(TreeTopology::new(8, 4), 4, 0.0)
+            .with_push_every(32);
+        let report = fed.run(traces(8, 256, 42));
+        assert_eq!(report.leaves, 8);
+        assert_eq!(report.steps_per_leaf, 256);
+        assert!(report.pushes > 0, "no pushes happened");
+        assert!(!report.global_view.is_empty());
+        assert_eq!(report.global_view.rank(), 4);
+        assert!(report.throughput() > 0.0);
+    }
+
+    #[test]
+    fn epsilon_gate_reduces_pushes() {
+        let loose = ConcurrentFederation::new(TreeTopology::new(4, 4), 4, 0.0)
+            .with_push_every(32)
+            .run(traces(4, 512, 7));
+        let gated = ConcurrentFederation::new(TreeTopology::new(4, 4), 4, 5.0)
+            .with_push_every(32)
+            .run(traces(4, 512, 7));
+        assert!(
+            gated.pushes < loose.pushes,
+            "gate did not reduce pushes: {} vs {}",
+            gated.pushes,
+            loose.pushes
+        );
+        assert!(gated.suppressed > 0);
+    }
+
+    #[test]
+    fn single_leaf_degenerate_tree() {
+        let fed = ConcurrentFederation::new(TreeTopology::new(1, 2), 4, 0.0)
+            .with_push_every(64);
+        let report = fed.run(traces(1, 256, 3));
+        assert!(!report.global_view.is_empty());
+    }
+}

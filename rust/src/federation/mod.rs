@@ -1,0 +1,23 @@
+//! Federation layer: the DASM aggregation tree (paper §4–5, Figure 2).
+//!
+//! Compute nodes sit at the leaves of a shallow, high-fanout tree;
+//! aggregator nodes merge the `(U, Σ)` iterates that leaves push upward.
+//! Summaries travel upward **once** per propagation (the distributed
+//! agglomerative summary model), so no synchronization is modelled — the
+//! paper explicitly scopes synchronization issues out. Leaves push only
+//! when their iterate moved by more than ε since the last push
+//! (Algorithm 2's `absdiff` gate), and may pull the merged global view to
+//! seed or refresh their local estimate (§5.2, including new/transient
+//! nodes joining the pool).
+//!
+//! Two runtimes are provided:
+//! * [`tree`] — the single-threaded federation engine (deterministic, used
+//!   by the evaluation benches);
+//! * [`concurrent`] — a thread-per-leaf actor runtime exercising the same
+//!   merge logic under real parallelism (scalability bench).
+
+mod concurrent;
+mod tree;
+
+pub use concurrent::{ConcurrentFederation, FederationReport};
+pub use tree::{FederationTree, NodeId, PushOutcome, TreeTopology};

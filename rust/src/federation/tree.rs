@@ -1,0 +1,272 @@
+//! The DASM federation tree (single-threaded engine).
+
+use crate::fpca::{merge_subspaces, MergeOptions, Subspace};
+
+/// Identifier of a tree node (leaves and aggregators share the space).
+pub type NodeId = usize;
+
+/// Result of a leaf push.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PushOutcome {
+    /// The iterate moved less than ε since the last push; nothing sent.
+    Suppressed,
+    /// The iterate was merged upward through `levels` aggregators.
+    Propagated { levels: usize },
+}
+
+/// Shape of the federation tree: `q` levels with the given fanout at each
+/// internal level. The paper expects "shallow yet very large fan-out".
+#[derive(Debug, Clone)]
+pub struct TreeTopology {
+    /// Number of leaves (compute nodes).
+    pub leaves: usize,
+    /// Aggregator fanout (children per aggregator).
+    pub fanout: usize,
+}
+
+impl TreeTopology {
+    pub fn new(leaves: usize, fanout: usize) -> Self {
+        assert!(leaves >= 1 && fanout >= 2);
+        Self { leaves, fanout }
+    }
+
+    /// Number of levels above the leaves (root included).
+    pub fn levels(&self) -> usize {
+        let mut n = self.leaves;
+        let mut levels = 0;
+        while n > 1 {
+            n = n.div_ceil(self.fanout);
+            levels += 1;
+        }
+        levels.max(1)
+    }
+}
+
+/// One aggregator's state: the merged summary of its subtree.
+#[derive(Debug, Clone)]
+struct Aggregator {
+    summary: Subspace,
+    merges: usize,
+}
+
+/// The federation tree engine.
+///
+/// Leaves are external ([`crate::scheduler::NodeScheduler`]s, or anything
+/// producing a [`Subspace`]); the tree stores per-leaf "last pushed"
+/// snapshots for the ε gate plus one [`Aggregator`] per internal node.
+pub struct FederationTree {
+    topo: TreeTopology,
+    d: usize,
+    /// Merge rank used at aggregators.
+    rank: usize,
+    /// ε threshold of the push gate.
+    epsilon: f64,
+    /// Last pushed iterate per leaf (None = never pushed).
+    last_push: Vec<Option<Subspace>>,
+    /// Aggregators per level: `aggs[0]` is the level directly above the
+    /// leaves, the last level has a single root.
+    aggs: Vec<Vec<Aggregator>>,
+    pushes: usize,
+    suppressed: usize,
+}
+
+impl FederationTree {
+    pub fn new(topo: TreeTopology, d: usize, rank: usize, epsilon: f64) -> Self {
+        let mut aggs = Vec::new();
+        let mut width = topo.leaves;
+        loop {
+            width = width.div_ceil(topo.fanout);
+            aggs.push(vec![
+                Aggregator { summary: Subspace::empty(d), merges: 0 };
+                width.max(1)
+            ]);
+            if width <= 1 {
+                break;
+            }
+        }
+        Self {
+            last_push: vec![None; topo.leaves],
+            topo,
+            d,
+            rank,
+            epsilon,
+            aggs,
+            pushes: 0,
+            suppressed: 0,
+        }
+    }
+
+    pub fn topology(&self) -> &TreeTopology {
+        &self.topo
+    }
+
+    /// Total pushes that actually propagated.
+    pub fn pushes(&self) -> usize {
+        self.pushes
+    }
+
+    /// Pushes suppressed by the ε gate.
+    pub fn suppressed(&self) -> usize {
+        self.suppressed
+    }
+
+    /// Leaf `leaf` offers its current iterate. Applies the ε gate, then
+    /// merges upward through every ancestor to the root (DASM: summaries
+    /// travel up once).
+    pub fn push_from_leaf(&mut self, leaf: NodeId, iterate: &Subspace) -> PushOutcome {
+        assert!(leaf < self.topo.leaves);
+        assert_eq!(iterate.dim(), self.d);
+        if iterate.is_empty() {
+            return PushOutcome::Suppressed;
+        }
+        if let Some(prev) = &self.last_push[leaf] {
+            if prev.abs_diff(iterate) <= self.epsilon {
+                self.suppressed += 1;
+                return PushOutcome::Suppressed;
+            }
+        }
+        self.last_push[leaf] = Some(iterate.clone());
+
+        // Walk ancestors: child index at level 0 is the leaf id.
+        let mut child = leaf;
+        let mut levels = 0;
+        for level in 0..self.aggs.len() {
+            let parent = child / self.topo.fanout;
+            let agg = &mut self.aggs[level][parent];
+            agg.summary = merge_subspaces(
+                &agg.summary,
+                iterate,
+                MergeOptions::rank(self.rank),
+            );
+            agg.merges += 1;
+            child = parent;
+            levels += 1;
+        }
+        self.pushes += 1;
+        PushOutcome::Propagated { levels }
+    }
+
+    /// The merged global view at the root (empty until any push).
+    pub fn global_view(&self) -> &Subspace {
+        &self.aggs.last().unwrap()[0].summary
+    }
+
+    /// The merged view of the level-0 aggregator covering `leaf` — what a
+    /// node would pull to seed/refresh its local estimate (§5.2).
+    pub fn local_group_view(&self, leaf: NodeId) -> &Subspace {
+        &self.aggs[0][leaf / self.topo.fanout].summary
+    }
+
+    /// Merge the global view *into* a leaf estimate (the "pull" direction),
+    /// returning the refreshed estimate. `forget` down-weights the global
+    /// side so a node's own history dominates.
+    pub fn pull_global(&self, local: &Subspace, forget: f64) -> Subspace {
+        merge_subspaces(
+            self.global_view(),
+            local,
+            MergeOptions { rank: self.rank, forget, enhance: 1.0 },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::subspace_distance;
+    use crate::proptest::{gen_low_rank, gen_orthonormal, gen_spectrum};
+    use crate::rng::Xoshiro256;
+
+    fn subspace(rng: &mut Xoshiro256, d: usize, r: usize) -> Subspace {
+        Subspace::new(gen_orthonormal(rng, d, r), gen_spectrum(rng, r))
+    }
+
+    #[test]
+    fn topology_levels() {
+        assert_eq!(TreeTopology::new(1, 4).levels(), 1);
+        assert_eq!(TreeTopology::new(4, 4).levels(), 1);
+        assert_eq!(TreeTopology::new(16, 4).levels(), 2);
+        assert_eq!(TreeTopology::new(100, 10).levels(), 2);
+        assert_eq!(TreeTopology::new(101, 10).levels(), 3);
+    }
+
+    #[test]
+    fn push_reaches_root() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let mut tree = FederationTree::new(TreeTopology::new(16, 4), 10, 4, 0.0);
+        let s = subspace(&mut rng, 10, 3);
+        let out = tree.push_from_leaf(5, &s);
+        assert_eq!(out, PushOutcome::Propagated { levels: 2 });
+        assert!(!tree.global_view().is_empty());
+        assert!(subspace_distance(&tree.global_view().u, &s.u) < 1e-6);
+    }
+
+    #[test]
+    fn epsilon_gate_suppresses_unchanged_iterates() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let mut tree = FederationTree::new(TreeTopology::new(8, 4), 10, 4, 0.05);
+        let s = subspace(&mut rng, 10, 3);
+        assert!(matches!(tree.push_from_leaf(0, &s), PushOutcome::Propagated { .. }));
+        // Identical iterate → suppressed.
+        assert_eq!(tree.push_from_leaf(0, &s), PushOutcome::Suppressed);
+        assert_eq!(tree.suppressed(), 1);
+        // A different leaf still propagates.
+        assert!(matches!(tree.push_from_leaf(1, &s), PushOutcome::Propagated { .. }));
+    }
+
+    #[test]
+    fn empty_iterate_never_pushes() {
+        let mut tree = FederationTree::new(TreeTopology::new(4, 2), 6, 2, 0.0);
+        assert_eq!(
+            tree.push_from_leaf(0, &Subspace::empty(6)),
+            PushOutcome::Suppressed
+        );
+    }
+
+    #[test]
+    fn global_view_aggregates_shared_structure() {
+        // All leaves observe streams drawn from the same rank-2 subspace;
+        // the root view should recover that subspace.
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let d = 16;
+        let shared = gen_low_rank(&mut rng, d, 400, 2, 0.01);
+        let truth = crate::linalg::svd_truncated(&shared, 2);
+
+        let mut tree = FederationTree::new(TreeTopology::new(8, 4), d, 4, 0.0);
+        for leaf in 0..8 {
+            // Each leaf sees a disjoint chunk of the stream.
+            let lo = leaf * 50;
+            let mut chunk = crate::linalg::Mat::zeros(d, 50);
+            for t in 0..50 {
+                chunk.col_mut(t).copy_from_slice(shared.col(lo + t));
+            }
+            let svd = crate::linalg::svd_truncated(&chunk, 2);
+            tree.push_from_leaf(leaf, &Subspace::new(svd.u, svd.sigma));
+        }
+        let dist = subspace_distance(&tree.global_view().truncate(2).u, &truth.u);
+        assert!(dist < 0.05, "global view off: {dist}");
+    }
+
+    #[test]
+    fn local_group_view_scopes_to_subtree() {
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let mut tree = FederationTree::new(TreeTopology::new(8, 4), 10, 4, 0.0);
+        let s0 = subspace(&mut rng, 10, 2);
+        tree.push_from_leaf(0, &s0); // group 0 (leaves 0–3)
+        assert!(!tree.local_group_view(1).is_empty());
+        assert!(tree.local_group_view(5).is_empty()); // group 1 untouched
+    }
+
+    #[test]
+    fn pull_global_merges_views() {
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let mut tree = FederationTree::new(TreeTopology::new(4, 4), 12, 4, 0.0);
+        let remote = subspace(&mut rng, 12, 3);
+        tree.push_from_leaf(2, &remote);
+        let local = subspace(&mut rng, 12, 3);
+        let refreshed = tree.pull_global(&local, 0.5);
+        assert_eq!(refreshed.dim(), 12);
+        assert!(refreshed.rank() <= 4);
+        // Refreshed view is not identical to local: global info arrived.
+        assert!(refreshed.abs_diff(&local) > 1e-6);
+    }
+}

@@ -1,0 +1,455 @@
+//! ARIMA(p, d, q) forecasting (§3.1 method 3).
+//!
+//! Fitting follows the Hannan–Rissanen two-stage scheme: (1) fit a long AR
+//! by ordinary least squares to estimate innovations, (2) regress the
+//! differenced series on its own lags *and* the lagged innovation estimates
+//! to get the AR + MA coefficients. Order (p, d, q) is selected per fit by
+//! minimum AIC over a small grid, exactly as the paper tunes "locally for
+//! each forecast according to the smallest AIC criteria". The "average VM"
+//! cluster variant fits on the mean series of the pool.
+
+use super::{with_normalization, Forecaster};
+
+/// An ARIMA order triple.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ArimaOrder {
+    pub p: usize,
+    pub d: usize,
+    pub q: usize,
+}
+
+/// ARIMA forecaster with AIC-selected order.
+#[derive(Debug, Clone)]
+pub struct Arima {
+    /// Candidate p values.
+    pub p_grid: Vec<usize>,
+    /// Candidate d values.
+    pub d_grid: Vec<usize>,
+    /// Candidate q values.
+    pub q_grid: Vec<usize>,
+    /// Fit on the pool's average series ("average VM", §3.1) when a pool
+    /// is supplied.
+    pub use_pool_average: bool,
+}
+
+impl Default for Arima {
+    fn default() -> Self {
+        Self {
+            p_grid: vec![1, 2, 3],
+            d_grid: vec![0, 1],
+            q_grid: vec![0, 1],
+            use_pool_average: true,
+        }
+    }
+}
+
+/// Difference a series `d` times.
+fn difference(xs: &[f64], d: usize) -> Vec<f64> {
+    let mut cur = xs.to_vec();
+    for _ in 0..d {
+        cur = cur.windows(2).map(|w| w[1] - w[0]).collect();
+    }
+    cur
+}
+
+/// Invert differencing for a forecast sequence given the history tail.
+fn undifference(history: &[f64], diffed_forecast: &[f64], d: usize) -> Vec<f64> {
+    if d == 0 {
+        return diffed_forecast.to_vec();
+    }
+    // Recursive reconstruction: for d=1, x_{t+1} = x_t + Δx_{t+1}; higher d
+    // applies the same one level down.
+    let lower_history = difference(history, d - 1);
+    let mut last = *lower_history.last().expect("history too short for d");
+    let mut lower_forecast = Vec::with_capacity(diffed_forecast.len());
+    for &dx in diffed_forecast {
+        last += dx;
+        lower_forecast.push(last);
+    }
+    undifference(history, &lower_forecast, d - 1)
+}
+
+/// OLS solve for small systems via normal equations + Gaussian elimination.
+fn ols(x_rows: &[Vec<f64>], y: &[f64]) -> Option<Vec<f64>> {
+    let n = x_rows.len();
+    if n == 0 {
+        return None;
+    }
+    let k = x_rows[0].len();
+    if n < k + 1 {
+        return None;
+    }
+    // Normal equations A = XᵀX (k×k), b = Xᵀy.
+    let mut a = vec![vec![0.0; k]; k];
+    let mut b = vec![0.0; k];
+    for (row, &yi) in x_rows.iter().zip(y) {
+        for i in 0..k {
+            b[i] += row[i] * yi;
+            for j in 0..k {
+                a[i][j] += row[i] * row[j];
+            }
+        }
+    }
+    // Ridge jitter for stability.
+    for (i, row) in a.iter_mut().enumerate() {
+        row[i] += 1e-8;
+    }
+    // Gaussian elimination with partial pivoting.
+    let mut aug: Vec<Vec<f64>> = a
+        .into_iter()
+        .zip(b)
+        .map(|(mut row, bi)| {
+            row.push(bi);
+            row
+        })
+        .collect();
+    for col in 0..k {
+        let pivot = (col..k).max_by(|&i, &j| {
+            aug[i][col].abs().partial_cmp(&aug[j][col].abs()).unwrap()
+        })?;
+        if aug[pivot][col].abs() < 1e-12 {
+            return None;
+        }
+        aug.swap(col, pivot);
+        let pv = aug[col][col];
+        for i in 0..k {
+            if i == col {
+                continue;
+            }
+            let f = aug[i][col] / pv;
+            for j in col..=k {
+                aug[i][j] -= f * aug[col][j];
+            }
+        }
+    }
+    Some((0..k).map(|i| aug[i][k] / aug[i][i]).collect())
+}
+
+/// A fitted ARMA(p, q) model on a (differenced, normalized) series.
+#[derive(Debug, Clone)]
+struct ArmaFit {
+    intercept: f64,
+    ar: Vec<f64>,
+    ma: Vec<f64>,
+    /// Residual variance.
+    sigma2: f64,
+    /// Innovation estimates aligned with the tail of the series.
+    residuals: Vec<f64>,
+    aic: f64,
+}
+
+/// Hannan–Rissanen ARMA fit. Returns None when the series is too short.
+fn fit_arma(xs: &[f64], p: usize, q: usize) -> Option<ArmaFit> {
+    let n = xs.len();
+    let long_ar = (p + q + 3).min(n / 3).max(1);
+    if n < long_ar + p.max(q) + 8 {
+        return None;
+    }
+
+    // Stage 1: long AR for innovation estimates.
+    let mut rows = Vec::new();
+    let mut ys = Vec::new();
+    for t in long_ar..n {
+        let mut row = Vec::with_capacity(long_ar + 1);
+        row.push(1.0);
+        for l in 1..=long_ar {
+            row.push(xs[t - l]);
+        }
+        rows.push(row);
+        ys.push(xs[t]);
+    }
+    let coef = ols(&rows, &ys)?;
+    let mut eps = vec![0.0; n];
+    for t in long_ar..n {
+        let mut pred = coef[0];
+        for l in 1..=long_ar {
+            pred += coef[l] * xs[t - l];
+        }
+        eps[t] = xs[t] - pred;
+    }
+
+    // Stage 2: regress on p AR lags + q innovation lags.
+    let start = long_ar + q.max(1);
+    let mut rows2 = Vec::new();
+    let mut ys2 = Vec::new();
+    for t in start.max(p)..n {
+        let mut row = Vec::with_capacity(1 + p + q);
+        row.push(1.0);
+        for l in 1..=p {
+            row.push(xs[t - l]);
+        }
+        for l in 1..=q {
+            row.push(eps[t - l]);
+        }
+        rows2.push(row);
+        ys2.push(xs[t]);
+    }
+    let coef2 = ols(&rows2, &ys2)?;
+    let intercept = coef2[0];
+    let ar = coef2[1..1 + p].to_vec();
+    let ma = coef2[1 + p..].to_vec();
+
+    // Residuals + AIC.
+    let mut sse = 0.0;
+    let m = rows2.len();
+    for (row, &yt) in rows2.iter().zip(&ys2) {
+        let pred: f64 = row.iter().zip(&coef2).map(|(a, b)| a * b).sum();
+        sse += (yt - pred) * (yt - pred);
+    }
+    let sigma2 = (sse / m as f64).max(1e-12);
+    let kparams = (1 + p + q) as f64;
+    let aic = m as f64 * sigma2.ln() + 2.0 * kparams;
+
+    Some(ArmaFit { intercept, ar, ma, sigma2, residuals: eps, aic })
+}
+
+impl Arima {
+    /// Fit all grid orders on the differenced series; lowest AIC wins.
+    fn best_fit(&self, xs: &[f64]) -> Option<(ArimaOrder, ArmaFit)> {
+        let mut best: Option<(ArimaOrder, ArmaFit)> = None;
+        for &d in &self.d_grid {
+            if xs.len() <= d + 10 {
+                continue;
+            }
+            let diffed = difference(xs, d);
+            for &p in &self.p_grid {
+                for &q in &self.q_grid {
+                    if let Some(fit) = fit_arma(&diffed, p, q) {
+                        let order = ArimaOrder { p, d, q };
+                        if best.as_ref().map(|(_, b)| fit.aic < b.aic).unwrap_or(true) {
+                            best = Some((order, fit));
+                        }
+                    }
+                }
+            }
+        }
+        best
+    }
+
+    /// Multi-step forecast on the differenced scale, then un-difference.
+    fn forecast_scaled(&self, xs: &[f64], horizon: usize) -> Vec<f64> {
+        let Some((order, fit)) = self.best_fit(xs) else {
+            // Degenerate fallback: persistence.
+            return vec![*xs.last().unwrap(); horizon];
+        };
+        let diffed = difference(xs, order.d);
+        let mut series = diffed.clone();
+        let mut eps = fit.residuals.clone();
+        let mut out = Vec::with_capacity(horizon);
+        for _ in 0..horizon {
+            let t = series.len();
+            let mut pred = fit.intercept;
+            for (l, phi) in fit.ar.iter().enumerate() {
+                if t > l {
+                    pred += phi * series[t - 1 - l];
+                }
+            }
+            for (l, theta) in fit.ma.iter().enumerate() {
+                if eps.len() > l {
+                    pred += theta * eps[eps.len() - 1 - l];
+                }
+            }
+            series.push(pred);
+            eps.push(0.0); // future innovations have zero expectation
+            out.push(pred);
+        }
+        let _ = fit.sigma2;
+        undifference(xs, &out, order.d)
+    }
+}
+
+impl Arima {
+    /// One-step rolling predictions on the (normalized) scale: fit once on
+    /// the history, then predict each future step from the actual values
+    /// revealed so far, updating the innovation estimates as we go.
+    fn rolling_scaled(&self, hist: &[f64], future: &[f64]) -> Vec<f64> {
+        let Some((order, fit)) = self.best_fit(hist) else {
+            // Persistence fallback.
+            let mut prev = *hist.last().unwrap();
+            return future
+                .iter()
+                .map(|&a| {
+                    let p = prev;
+                    prev = a;
+                    p
+                })
+                .collect();
+        };
+        // Work on the differenced joint series.
+        let mut joint = hist.to_vec();
+        let mut diffed = difference(hist, order.d);
+        let mut eps = fit.residuals.clone();
+        let mut out = Vec::with_capacity(future.len());
+        for &actual in future {
+            let t = diffed.len();
+            let mut pred_d = fit.intercept;
+            for (l, phi) in fit.ar.iter().enumerate() {
+                if t > l {
+                    pred_d += phi * diffed[t - 1 - l];
+                }
+            }
+            for (l, theta) in fit.ma.iter().enumerate() {
+                if eps.len() > l {
+                    pred_d += theta * eps[eps.len() - 1 - l];
+                }
+            }
+            // Un-difference the one-step prediction against the actual tail.
+            let pred = if order.d == 0 {
+                pred_d
+            } else {
+                // For d >= 1 the one-step reconstruction only needs the
+                // last actual level(s).
+                let lower = difference(&joint, order.d - 1);
+                lower.last().unwrap() + pred_d
+            };
+            out.push(pred);
+            // Reveal the actual: extend the joint + differenced series and
+            // update the innovation with the realized error.
+            joint.push(actual);
+            let new_d = {
+                let lower = difference(&joint, order.d);
+                *lower.last().unwrap()
+            };
+            eps.push(new_d - pred_d);
+            diffed.push(new_d);
+        }
+        out
+    }
+}
+
+impl Forecaster for Arima {
+    fn name(&self) -> &'static str {
+        "ARIMA"
+    }
+
+    fn forecast(&self, history: &[f64], pool: &[&[f64]], horizon: usize) -> Vec<f64> {
+        // "Average VM": build the model on the cluster mean when available.
+        if self.use_pool_average && !pool.is_empty() {
+            let n = history.len();
+            let mut avg = history.to_vec();
+            let mut count = 1.0;
+            for series in pool {
+                if series.len() == n {
+                    for (a, &x) in avg.iter_mut().zip(series.iter()) {
+                        *a += x;
+                    }
+                    count += 1.0;
+                }
+            }
+            for a in &mut avg {
+                *a /= count;
+            }
+            return with_normalization(&avg, |scaled| self.forecast_scaled(scaled, horizon));
+        }
+        with_normalization(history, |scaled| self.forecast_scaled(scaled, horizon))
+    }
+
+    fn forecast_rolling(&self, history: &[f64], pool: &[&[f64]], future: &[f64]) -> Vec<f64> {
+        // Build the (possibly pool-averaged) history, then normalize the
+        // history and future jointly on the history's scale.
+        let hist: Vec<f64> = if self.use_pool_average && !pool.is_empty() {
+            let n = history.len();
+            let mut avg = history.to_vec();
+            let mut count = 1.0;
+            for series in pool {
+                if series.len() == n {
+                    for (a, &x) in avg.iter_mut().zip(series.iter()) {
+                        *a += x;
+                    }
+                    count += 1.0;
+                }
+            }
+            for a in &mut avg {
+                *a /= count;
+            }
+            avg
+        } else {
+            history.to_vec()
+        };
+        let (scaled, lo, span) = crate::metrics::normalize(&hist);
+        let fut_scaled: Vec<f64> = future.iter().map(|x| (x - lo) / span).collect();
+        let out = self.rolling_scaled(&scaled, &fut_scaled);
+        crate::metrics::denormalize(&out, lo, span)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn difference_and_undifference_roundtrip() {
+        let xs = [1.0, 3.0, 6.0, 10.0, 15.0];
+        let d1 = difference(&xs, 1);
+        assert_eq!(d1, vec![2.0, 3.0, 4.0, 5.0]);
+        let rec = undifference(&xs, &[6.0, 7.0], 1);
+        assert_eq!(rec, vec![21.0, 28.0]);
+    }
+
+    #[test]
+    fn ols_recovers_exact_linear_system() {
+        // y = 2 + 3a - b
+        let rows = vec![
+            vec![1.0, 1.0, 0.0],
+            vec![1.0, 2.0, 1.0],
+            vec![1.0, 0.0, 2.0],
+            vec![1.0, 3.0, 3.0],
+            vec![1.0, 1.5, 0.5],
+        ];
+        let y: Vec<f64> = rows.iter().map(|r| 2.0 + 3.0 * r[1] - r[2]).collect();
+        let c = ols(&rows, &y).unwrap();
+        assert!((c[0] - 2.0).abs() < 1e-6 && (c[1] - 3.0).abs() < 1e-6 && (c[2] + 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn recovers_ar1_dynamics() {
+        // x_t = 0.8 x_{t-1} + ε: multi-step forecast must decay toward 0.
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let mut xs = vec![0.0];
+        for _ in 0..500 {
+            let prev = *xs.last().unwrap();
+            xs.push(0.8 * prev + 0.1 * rng.normal());
+        }
+        // Put the series well away from zero so normalization is benign.
+        let shifted: Vec<f64> = xs.iter().map(|x| x + 10.0).collect();
+        let arima = Arima { d_grid: vec![0], ..Default::default() };
+        let fc = arima.forecast(&shifted, &[], 20);
+        assert_eq!(fc.len(), 20);
+        // Forecast stays within the data range and trends to the mean.
+        let mean = shifted.iter().sum::<f64>() / shifted.len() as f64;
+        assert!((fc[19] - mean).abs() < 0.5, "fc={} mean={mean}", fc[19]);
+    }
+
+    #[test]
+    fn handles_trend_via_differencing() {
+        // Linear trend: ARIMA with d=1 should extrapolate roughly linearly.
+        let xs: Vec<f64> = (0..200).map(|i| 2.0 * i as f64 + 5.0).collect();
+        let arima = Arima::default();
+        let fc = arima.forecast(&xs, &[], 5);
+        for (i, v) in fc.iter().enumerate() {
+            let expected = 2.0 * (200 + i) as f64 + 5.0;
+            assert!((v - expected).abs() < 10.0, "step {i}: {v} vs {expected}");
+        }
+    }
+
+    #[test]
+    fn short_series_fallback_is_persistence() {
+        let arima = Arima::default();
+        let fc = arima.forecast(&[1.0, 2.0, 3.0], &[], 2);
+        assert_eq!(fc, vec![3.0, 3.0]);
+    }
+
+    #[test]
+    fn pool_average_changes_forecast() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let a: Vec<f64> = (0..300).map(|_| 10.0 + rng.normal()).collect();
+        let b: Vec<f64> = (0..300).map(|_| 50.0 + rng.normal()).collect();
+        let arima = Arima::default();
+        let pool: Vec<&[f64]> = vec![&b];
+        let with_pool = arima.forecast(&a, &pool, 3);
+        let without = arima.forecast(&a, &[], 3);
+        // The averaged series sits near 30, pulling the forecast up.
+        assert!(with_pool[0] > without[0] + 5.0);
+    }
+}

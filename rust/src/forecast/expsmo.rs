@@ -1,0 +1,85 @@
+//! Exponential smoothing (§3.1 method 2): the forecast is the smoothed
+//! average of the window, newest values weighted most. The paper reports
+//! best results at α = 0.2.
+
+use super::{with_normalization, Forecaster};
+
+/// Simple exponential smoothing forecaster.
+#[derive(Debug, Clone, Copy)]
+pub struct ExpSmoothing {
+    pub alpha: f64,
+}
+
+impl Default for ExpSmoothing {
+    fn default() -> Self {
+        Self { alpha: 0.2 }
+    }
+}
+
+impl ExpSmoothing {
+    /// The smoothed level after consuming the whole series.
+    pub fn level(&self, xs: &[f64]) -> f64 {
+        assert!(!xs.is_empty());
+        let mut level = xs[0];
+        for &x in &xs[1..] {
+            level = self.alpha * x + (1.0 - self.alpha) * level;
+        }
+        level
+    }
+}
+
+impl Forecaster for ExpSmoothing {
+    fn name(&self) -> &'static str {
+        "ExpSmo"
+    }
+
+    fn forecast(&self, history: &[f64], _pool: &[&[f64]], horizon: usize) -> Vec<f64> {
+        with_normalization(history, |scaled| vec![self.level(scaled); horizon])
+    }
+
+    fn forecast_rolling(&self, history: &[f64], _pool: &[&[f64]], future: &[f64]) -> Vec<f64> {
+        // Maintain the smoothed level over the revealed actuals (raw scale:
+        // smoothing is shift/scale-equivariant, so normalization is a
+        // no-op here).
+        let mut level = self.level(history);
+        future
+            .iter()
+            .map(|&actual| {
+                let pred = level;
+                level = self.alpha * actual + (1.0 - self.alpha) * level;
+                pred
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_series_predicts_constant() {
+        let f = ExpSmoothing::default();
+        let out = f.forecast(&[5.0; 20], &[], 3);
+        for v in out {
+            assert!((v - 5.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn level_weights_recent_values() {
+        let f = ExpSmoothing { alpha: 0.5 };
+        // Step from 0 to 10: level should sit between but closer to 10
+        // after several 10s.
+        let lvl = f.level(&[0.0, 10.0, 10.0, 10.0]);
+        assert!(lvl > 8.0 && lvl < 10.0, "lvl={lvl}");
+    }
+
+    #[test]
+    fn smoother_tracks_trend_slower_with_small_alpha() {
+        let xs: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let fast = ExpSmoothing { alpha: 0.8 }.level(&xs);
+        let slow = ExpSmoothing { alpha: 0.1 }.level(&xs);
+        assert!(fast > slow);
+    }
+}

@@ -1,0 +1,311 @@
+//! KMeans pre-clustering of VM series with the five Table 2 distances.
+//!
+//! Table 2 forecasts each VM from "all similar VMs" where similarity comes
+//! from KMeans over the VMs' CPU Ready series under different metrics:
+//! Euclidean, correlation, STS (short time series / slope), CORT
+//! (temporal-correlation-weighted), and ACF (autocorrelation-feature)
+//! distances. The "Ordered" row is the non-clustered ordering baseline
+//! (nearest VMs by plain distance).
+//!
+//! Centroids live in plain ℝ^T and are updated as coordinate means; the
+//! exotic metrics affect the *assignment* step only — the standard
+//! k-means-with-custom-distance construction used in the time-series
+//! clustering literature the paper draws on.
+
+use crate::rng::Xoshiro256;
+
+/// Distance metric between two equal-length series.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DistanceKind {
+    Euclidean,
+    Correlation,
+    Sts,
+    Cort,
+    Acf,
+}
+
+impl DistanceKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            DistanceKind::Euclidean => "KM Euclidean",
+            DistanceKind::Correlation => "KM Corr",
+            DistanceKind::Sts => "KM Sts",
+            DistanceKind::Cort => "KM Cort",
+            DistanceKind::Acf => "KM Acf",
+        }
+    }
+
+    pub fn distance(self, a: &[f64], b: &[f64]) -> f64 {
+        match self {
+            DistanceKind::Euclidean => euclidean(a, b),
+            DistanceKind::Correlation => 1.0 - pearson(a, b),
+            DistanceKind::Sts => sts_distance(a, b),
+            DistanceKind::Cort => cort_distance(a, b),
+            DistanceKind::Acf => acf_distance(a, b, 12),
+        }
+    }
+}
+
+fn euclidean(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f64>().sqrt()
+}
+
+fn pearson(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len() as f64;
+    let ma = a.iter().sum::<f64>() / n;
+    let mb = b.iter().sum::<f64>() / n;
+    let mut num = 0.0;
+    let mut da = 0.0;
+    let mut db = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        num += (x - ma) * (y - mb);
+        da += (x - ma) * (x - ma);
+        db += (y - mb) * (y - mb);
+    }
+    let denom = (da * db).sqrt();
+    if denom < 1e-12 {
+        0.0
+    } else {
+        num / denom
+    }
+}
+
+/// STS (short time series) distance: L2 between the slope sequences.
+pub fn sts_distance(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut s = 0.0;
+    for t in 1..a.len() {
+        let sa = a[t] - a[t - 1];
+        let sb = b[t] - b[t - 1];
+        s += (sa - sb) * (sa - sb);
+    }
+    s.sqrt()
+}
+
+/// CORT dissimilarity (Chouakria–Douzal): Euclidean distance modulated by
+/// the temporal correlation of the first differences,
+/// `d = euclid(a, b) · 2 / (1 + exp(k · cort))` with k = 2.
+pub fn cort_distance(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut num = 0.0;
+    let mut da = 0.0;
+    let mut db = 0.0;
+    for t in 1..a.len() {
+        let sa = a[t] - a[t - 1];
+        let sb = b[t] - b[t - 1];
+        num += sa * sb;
+        da += sa * sa;
+        db += sb * sb;
+    }
+    let denom = (da * db).sqrt();
+    let cort = if denom < 1e-12 { 0.0 } else { num / denom };
+    let k = 2.0;
+    euclidean(a, b) * 2.0 / (1.0 + (k * cort).exp())
+}
+
+/// Autocorrelation of `xs` at lags 1..=max_lag.
+fn acf(xs: &[f64], max_lag: usize) -> Vec<f64> {
+    let n = xs.len();
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var: f64 = xs.iter().map(|x| (x - mean) * (x - mean)).sum();
+    let mut out = Vec::with_capacity(max_lag);
+    for lag in 1..=max_lag.min(n - 1) {
+        let mut c = 0.0;
+        for t in lag..n {
+            c += (xs[t] - mean) * (xs[t - lag] - mean);
+        }
+        out.push(if var < 1e-12 { 0.0 } else { c / var });
+    }
+    out
+}
+
+/// ACF distance: L2 between autocorrelation vectors.
+pub fn acf_distance(a: &[f64], b: &[f64], max_lag: usize) -> f64 {
+    let fa = acf(a, max_lag);
+    let fb = acf(b, max_lag);
+    euclidean(&fa, &fb)
+}
+
+/// KMeans over a set of equal-length series with a pluggable distance.
+#[derive(Debug, Clone)]
+pub struct KMeansSeries {
+    pub k: usize,
+    pub kind: DistanceKind,
+    pub max_iters: usize,
+}
+
+impl KMeansSeries {
+    pub fn new(k: usize, kind: DistanceKind) -> Self {
+        Self { k, kind, max_iters: 50 }
+    }
+
+    /// Cluster the series; returns per-series cluster assignments.
+    pub fn fit(&self, series: &[Vec<f64>], seed: u64) -> Vec<usize> {
+        assert!(!series.is_empty());
+        let k = self.k.min(series.len());
+        let t = series[0].len();
+        assert!(series.iter().all(|s| s.len() == t), "unequal lengths");
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+
+        // k-means++-style seeding: first centroid random, rest by farthest
+        // distance sampling.
+        let mut centroids: Vec<Vec<f64>> = Vec::with_capacity(k);
+        centroids.push(series[rng.gen_range(series.len())].clone());
+        while centroids.len() < k {
+            let dists: Vec<f64> = series
+                .iter()
+                .map(|s| {
+                    centroids
+                        .iter()
+                        .map(|c| self.kind.distance(s, c))
+                        .fold(f64::INFINITY, f64::min)
+                        .powi(2)
+                })
+                .collect();
+            let total: f64 = dists.iter().sum();
+            if total <= 0.0 {
+                centroids.push(series[rng.gen_range(series.len())].clone());
+                continue;
+            }
+            let mut u = rng.next_f64() * total;
+            let mut pick = 0;
+            for (i, &d) in dists.iter().enumerate() {
+                u -= d;
+                if u <= 0.0 {
+                    pick = i;
+                    break;
+                }
+            }
+            centroids.push(series[pick].clone());
+        }
+
+        let mut assign = vec![0usize; series.len()];
+        for _ in 0..self.max_iters {
+            // Assignment.
+            let mut changed = false;
+            for (i, s) in series.iter().enumerate() {
+                let best = (0..k)
+                    .min_by(|&a, &b| {
+                        self.kind
+                            .distance(s, &centroids[a])
+                            .partial_cmp(&self.kind.distance(s, &centroids[b]))
+                            .unwrap()
+                    })
+                    .unwrap();
+                if assign[i] != best {
+                    assign[i] = best;
+                    changed = true;
+                }
+            }
+            // Update (coordinate means).
+            for (c, centroid) in centroids.iter_mut().enumerate() {
+                let members: Vec<&Vec<f64>> = series
+                    .iter()
+                    .zip(&assign)
+                    .filter(|(_, &a)| a == c)
+                    .map(|(s, _)| s)
+                    .collect();
+                if members.is_empty() {
+                    continue;
+                }
+                for j in 0..t {
+                    centroid[j] =
+                        members.iter().map(|m| m[j]).sum::<f64>() / members.len() as f64;
+                }
+            }
+            if !changed {
+                break;
+            }
+        }
+        assign
+    }
+
+    /// Indices of series sharing `target`'s cluster (excluding itself).
+    pub fn similar_to(&self, series: &[Vec<f64>], target: usize, seed: u64) -> Vec<usize> {
+        let assign = self.fit(series, seed);
+        let c = assign[target];
+        (0..series.len())
+            .filter(|&i| i != target && assign[i] == c)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    fn sine(n: usize, freq: f64, phase: f64, noise: f64, rng: &mut Xoshiro256) -> Vec<f64> {
+        (0..n)
+            .map(|t| (t as f64 * freq + phase).sin() + noise * rng.normal())
+            .collect()
+    }
+
+    #[test]
+    fn distances_are_zero_on_identical_series() {
+        let a = vec![1.0, 2.0, 1.5, 3.0, 2.5];
+        for kind in [
+            DistanceKind::Euclidean,
+            DistanceKind::Sts,
+            DistanceKind::Cort,
+            DistanceKind::Acf,
+        ] {
+            assert!(kind.distance(&a, &a) < 1e-9, "{kind:?}");
+        }
+        // Correlation distance of identical non-constant series is 0.
+        assert!(DistanceKind::Correlation.distance(&a, &a) < 1e-9);
+    }
+
+    #[test]
+    fn correlation_distance_ignores_scale() {
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let b: Vec<f64> = a.iter().map(|x| 100.0 * x + 7.0).collect();
+        assert!(DistanceKind::Correlation.distance(&a, &b) < 1e-9);
+        assert!(DistanceKind::Euclidean.distance(&a, &b) > 100.0);
+    }
+
+    #[test]
+    fn cort_penalizes_opposite_trends() {
+        let up: Vec<f64> = (0..20).map(|t| t as f64).collect();
+        let down: Vec<f64> = (0..20).map(|t| 19.0 - t as f64).collect();
+        let same_e = DistanceKind::Euclidean.distance(&up, &down);
+        let cort = cort_distance(&up, &down);
+        // CORT multiplies the euclidean distance by ~2/(1+e^{-2}) ≈ 1.76
+        // for perfectly anti-correlated slopes.
+        assert!(cort > same_e * 1.5, "cort={cort} e={same_e}");
+    }
+
+    #[test]
+    fn kmeans_separates_frequencies() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let mut series = Vec::new();
+        for i in 0..12 {
+            let freq = if i < 6 { 0.1 } else { 0.9 };
+            series.push(sine(200, freq, 0.0, 0.05, &mut rng));
+        }
+        let km = KMeansSeries::new(2, DistanceKind::Acf);
+        let assign = km.fit(&series, 3);
+        // All of the first six share a cluster; all of the last six the other.
+        let c0 = assign[0];
+        assert!(assign[..6].iter().all(|&a| a == c0));
+        assert!(assign[6..].iter().all(|&a| a != c0));
+    }
+
+    #[test]
+    fn similar_to_excludes_self() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let series: Vec<Vec<f64>> =
+            (0..8).map(|_| sine(100, 0.3, 0.0, 0.1, &mut rng)).collect();
+        let km = KMeansSeries::new(2, DistanceKind::Euclidean);
+        let sim = km.similar_to(&series, 3, 1);
+        assert!(!sim.contains(&3));
+    }
+
+    #[test]
+    fn acf_of_periodic_series_peaks_at_period() {
+        let xs: Vec<f64> = (0..100).map(|t| ((t % 10) as f64)).collect();
+        let f = acf(&xs, 20);
+        // lag 10 autocorrelation should dominate lag 5.
+        assert!(f[9] > f[4], "acf10={} acf5={}", f[9], f[4]);
+    }
+}

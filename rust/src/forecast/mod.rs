@@ -1,0 +1,92 @@
+//! Offline CPU Ready forecasting baselines (paper §3, Tables 1–6).
+//!
+//! These are the methods the paper evaluates *before* proposing PRONTO, to
+//! establish that classical forecasting cannot predict CPU Ready well:
+//!
+//! * [`naive`] / [`expsmo`] — last-value and exponential smoothing (α=0.2);
+//! * [`arima`] — ARIMA(p,d,q) with AIC order selection (CSS/Hannan–Rissanen
+//!   style fitting), optionally on the "average VM" of a cluster;
+//! * [`svr`] — linear ε-SVR over autoregressive features, trained on the
+//!   target VM or pooled over cluster VMs ("SVM cluster"/"SVM full");
+//! * [`kmeans`] — VM pre-clustering with the five distance metrics of
+//!   Table 2 (Euclidean, correlation, STS, CORT, ACF);
+//! * [`spikes`] — the §3.2 alarm method: spike-threshold definitions
+//!   (fixed / percentile / μ+3σ / xbar / median) and the accuracy metric.
+//!
+//! All forecasters implement [`Forecaster`]; inputs are min-max normalized
+//! and de-normalized around fitting, per §3.1.
+
+mod arima;
+mod expsmo;
+mod kmeans;
+mod naive;
+mod spikes;
+mod svr;
+
+pub use arima::{Arima, ArimaOrder};
+pub use expsmo::ExpSmoothing;
+pub use kmeans::{acf_distance, cort_distance, sts_distance, DistanceKind, KMeansSeries};
+pub use naive::Naive;
+pub use spikes::{alarm_forecast_accuracy, spike_mask, SpikeThreshold};
+pub use svr::LinearSvr;
+
+use crate::metrics::{denormalize, normalize};
+
+/// A forecasting method for a scalar series, optionally informed by a pool
+/// of aligned series from related VMs (same cluster / similar VMs).
+pub trait Forecaster {
+    /// Method tag used in the tables ("naive", "ExpSmo", "ARIMA", "SVM …").
+    fn name(&self) -> &'static str;
+
+    /// Forecast `horizon` future values of `history`, given `pool`
+    /// (other VMs' aligned histories; may be empty). Inputs are raw-scale;
+    /// implementations normalize internally per the paper.
+    fn forecast(&self, history: &[f64], pool: &[&[f64]], horizon: usize) -> Vec<f64>;
+
+    /// Rolling one-step-ahead forecasts over a revealed future: the model
+    /// is fit on `history` (+pool) once, then for each step t the method
+    /// predicts `future[t]` from the *actual* values up to t−1 — the §3
+    /// protocol for per-timestep next-day prediction. The default
+    /// re-invokes `forecast` with the extended history (correct but
+    /// O(n·fit)); methods with cheap recursive predictors override it.
+    fn forecast_rolling(&self, history: &[f64], pool: &[&[f64]], future: &[f64]) -> Vec<f64> {
+        let mut ext = history.to_vec();
+        let mut out = Vec::with_capacity(future.len());
+        for &actual in future {
+            out.push(self.forecast(&ext, pool, 1)[0]);
+            ext.push(actual);
+        }
+        out
+    }
+}
+
+/// Normalize history + pool jointly, run `f` on the scaled series, and
+/// de-normalize the output — the §3.1 protocol shared by every method.
+pub(crate) fn with_normalization(
+    history: &[f64],
+    f: impl FnOnce(&[f64]) -> Vec<f64>,
+) -> Vec<f64> {
+    let (scaled, lo, span) = normalize(history);
+    let mut out = f(&scaled);
+    // Clamp to a modest extrapolation band around the observed range:
+    // recursive multi-step forecasts (ARIMA/SVR) can diverge on very short
+    // histories, and the paper's normalize-then-denormalize protocol is
+    // explicitly about solver stability.
+    for x in &mut out {
+        *x = x.clamp(-0.5, 1.5);
+    }
+    denormalize(&out, lo, span)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalization_wrapper_roundtrips_scale() {
+        let hist = [100.0, 200.0, 300.0];
+        // Identity forecast of the last scaled value.
+        let out = with_normalization(&hist, |s| vec![s[s.len() - 1]; 2]);
+        assert_eq!(out, vec![300.0, 300.0]);
+    }
+}

@@ -1,0 +1,51 @@
+//! Naive forecaster: the prediction is the last observed value (§3.1
+//! method 1).
+
+use super::Forecaster;
+
+/// Last-value persistence forecast.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Naive;
+
+impl Forecaster for Naive {
+    fn name(&self) -> &'static str {
+        "naive"
+    }
+
+    fn forecast(&self, history: &[f64], _pool: &[&[f64]], horizon: usize) -> Vec<f64> {
+        assert!(!history.is_empty());
+        vec![history[history.len() - 1]; horizon]
+    }
+
+    fn forecast_rolling(&self, history: &[f64], _pool: &[&[f64]], future: &[f64]) -> Vec<f64> {
+        // One-step persistence over the revealed actuals.
+        let mut prev = *history.last().expect("empty history");
+        future
+            .iter()
+            .map(|&actual| {
+                let pred = prev;
+                prev = actual;
+                pred
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn repeats_last_value() {
+        let f = Naive;
+        assert_eq!(f.forecast(&[1.0, 5.0, 3.0], &[], 3), vec![3.0, 3.0, 3.0]);
+    }
+
+    #[test]
+    fn ignores_pool() {
+        let f = Naive;
+        let other = vec![9.0, 9.0, 9.0];
+        let pool: Vec<&[f64]> = vec![&other];
+        assert_eq!(f.forecast(&[2.0], &pool, 1), vec![2.0]);
+    }
+}

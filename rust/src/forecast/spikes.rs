@@ -1,0 +1,208 @@
+//! Spike definitions and the §3.2 "alarm method".
+//!
+//! §3.2 transforms the CPU Ready series into a binary spike series under a
+//! threshold definition, forecasts the *binary* series with the §3.1
+//! methods, and scores with the balanced accuracy metric
+//! ([`crate::metrics::spike_accuracy`]). Threshold families: fixed values
+//! (500/800/1000 ms, Table 4), per-VM percentiles (90/95/99, Table 5), and
+//! statistical rules (μ+3σ, xbar-chart upper control limit, median —
+//! Table 6).
+
+use super::Forecaster;
+use crate::metrics::spike_accuracy;
+
+/// A spike-threshold definition.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SpikeThreshold {
+    /// Fixed absolute value in ms (Table 4: 500, 800, 1000).
+    Fixed(f64),
+    /// Per-VM percentile in (0, 100) (Table 5: 90, 95, 99).
+    Percentile(f64),
+    /// μ + 3σ, assuming normality (Table 6 "statistical normal").
+    MeanPlus3Std,
+    /// Simplified xbar chart: UCL = mean + D4-corrected mean moving range
+    /// (Table 6 "statistical xbar"; D4 = 3.267 for subgroup size 2).
+    XBar,
+    /// Per-VM median (Table 6 "median").
+    Median,
+}
+
+impl SpikeThreshold {
+    pub fn name(&self) -> String {
+        match self {
+            SpikeThreshold::Fixed(v) => format!("{v:.0}"),
+            SpikeThreshold::Percentile(p) => format!("{p:.0}th"),
+            SpikeThreshold::MeanPlus3Std => "mu+3sigma".to_string(),
+            SpikeThreshold::XBar => "xbar".to_string(),
+            SpikeThreshold::Median => "median".to_string(),
+        }
+    }
+
+    /// Resolve the numeric threshold for a VM's series.
+    pub fn resolve(&self, xs: &[f64]) -> f64 {
+        assert!(!xs.is_empty());
+        match *self {
+            SpikeThreshold::Fixed(v) => v,
+            SpikeThreshold::Percentile(p) => {
+                let mut sorted = xs.to_vec();
+                sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let pos = (p / 100.0) * (sorted.len() - 1) as f64;
+                let lo = pos.floor() as usize;
+                let hi = pos.ceil() as usize;
+                let frac = pos - lo as f64;
+                sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+            }
+            SpikeThreshold::MeanPlus3Std => {
+                let n = xs.len() as f64;
+                let mean = xs.iter().sum::<f64>() / n;
+                let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+                mean + 3.0 * var.sqrt()
+            }
+            SpikeThreshold::XBar => {
+                let n = xs.len() as f64;
+                let mean = xs.iter().sum::<f64>() / n;
+                let mr: f64 = xs.windows(2).map(|w| (w[1] - w[0]).abs()).sum::<f64>()
+                    / (xs.len() - 1).max(1) as f64;
+                // UCL of the individuals chart via the D4 correction on MR.
+                const D4: f64 = 3.267;
+                mean + (D4 - 1.0) * mr
+            }
+            SpikeThreshold::Median => {
+                let mut sorted = xs.to_vec();
+                sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let m = sorted.len();
+                if m % 2 == 1 {
+                    sorted[m / 2]
+                } else {
+                    0.5 * (sorted[m / 2 - 1] + sorted[m / 2])
+                }
+            }
+        }
+    }
+}
+
+/// Binary spike mask of a series under a resolved threshold: a spike is a
+/// value **at or above** the threshold (§3.2).
+pub fn spike_mask(xs: &[f64], threshold: f64) -> Vec<bool> {
+    xs.iter().map(|&x| x >= threshold).collect()
+}
+
+/// The §3.2 alarm method: transform history to a binary series under
+/// `threshold` (resolved on the history), forecast the binary series with
+/// `method`, threshold the forecast at 0.5, and score against the true
+/// future spikes. Returns (accuracy, % of values that are spikes in the
+/// forecast window) — the two numbers each Table 4–6 cell needs.
+pub fn alarm_forecast_accuracy(
+    method: &dyn Forecaster,
+    history: &[f64],
+    pool: &[&[f64]],
+    future: &[f64],
+    threshold: SpikeThreshold,
+) -> (f64, f64) {
+    let thr = threshold.resolve(history);
+    let alarm_history: Vec<f64> = history
+        .iter()
+        .map(|&x| if x >= thr { 1.0 } else { 0.0 })
+        .collect();
+    // Pool series get their own thresholds (per-VM definitions).
+    let pool_alarms: Vec<Vec<f64>> = pool
+        .iter()
+        .map(|s| {
+            let t = threshold.resolve(s);
+            s.iter().map(|&x| if x >= t { 1.0 } else { 0.0 }).collect()
+        })
+        .collect();
+    let pool_refs: Vec<&[f64]> = pool_alarms.iter().map(|v| v.as_slice()).collect();
+
+    let alarm_future: Vec<f64> = future
+        .iter()
+        .map(|&x| if x >= thr { 1.0 } else { 0.0 })
+        .collect();
+    let fc = method.forecast_rolling(&alarm_history, &pool_refs, &alarm_future);
+    let pred: Vec<bool> = fc.iter().map(|&x| x >= 0.5).collect();
+    let truth = spike_mask(future, thr);
+    let spike_pct = 100.0 * truth.iter().filter(|&&s| s).count() as f64 / truth.len() as f64;
+    (spike_accuracy(&pred, &truth), spike_pct)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::forecast::Naive;
+
+    #[test]
+    fn fixed_threshold_resolution() {
+        assert_eq!(SpikeThreshold::Fixed(500.0).resolve(&[1.0, 2.0]), 500.0);
+    }
+
+    #[test]
+    fn percentile_thresholds_are_ordered() {
+        let xs: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let p90 = SpikeThreshold::Percentile(90.0).resolve(&xs);
+        let p99 = SpikeThreshold::Percentile(99.0).resolve(&xs);
+        assert!(p90 < p99);
+        assert!((p90 - 89.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mean_plus_3std_above_mean() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 100.0];
+        let t = SpikeThreshold::MeanPlus3Std.resolve(&xs);
+        let mean = xs.iter().sum::<f64>() / 5.0;
+        assert!(t > mean);
+    }
+
+    #[test]
+    fn xbar_ucl_above_mean_for_varying_series() {
+        let xs = [10.0, 12.0, 9.0, 14.0, 11.0, 10.0];
+        let t = SpikeThreshold::XBar.resolve(&xs);
+        assert!(t > 11.0);
+    }
+
+    #[test]
+    fn median_splits_half() {
+        let xs = [5.0, 1.0, 3.0];
+        assert_eq!(SpikeThreshold::Median.resolve(&xs), 3.0);
+        let even = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(SpikeThreshold::Median.resolve(&even), 2.5);
+    }
+
+    #[test]
+    fn spike_mask_inclusive() {
+        assert_eq!(spike_mask(&[1.0, 2.0, 3.0], 2.0), vec![false, true, true]);
+    }
+
+    #[test]
+    fn alarm_accuracy_on_trivially_predictable_series() {
+        // History ends in a non-spike run; future is all non-spikes: naive
+        // alarm forecasting is perfect.
+        let history: Vec<f64> = (0..50).map(|i| if i == 10 { 900.0 } else { 100.0 }).collect();
+        let future = vec![100.0; 20];
+        let (acc, pct) = alarm_forecast_accuracy(
+            &Naive,
+            &history,
+            &[],
+            &future,
+            SpikeThreshold::Fixed(500.0),
+        );
+        assert_eq!(acc, 1.0);
+        assert_eq!(pct, 0.0);
+    }
+
+    #[test]
+    fn alarm_accuracy_detects_rare_spike_rate() {
+        let mut history = vec![100.0; 100];
+        history.extend(vec![900.0; 2]);
+        history.extend(vec![100.0; 50]);
+        let mut future = vec![100.0; 45];
+        future.extend(vec![900.0; 5]);
+        let (_, pct) = alarm_forecast_accuracy(
+            &Naive,
+            &history,
+            &[],
+            &future,
+            SpikeThreshold::Fixed(500.0),
+        );
+        assert!((pct - 10.0).abs() < 1e-9);
+    }
+}

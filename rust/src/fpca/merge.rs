@@ -1,0 +1,234 @@
+//! Subspace merging (paper Algorithms 3 and 4).
+//!
+//! Merging combines two `(U, Σ)` estimates into one describing the union of
+//! the workloads they summarize. Algorithm 3 is the direct SVD of the
+//! concatenated scaled bases; Algorithm 4 avoids materializing Vᵀ by
+//! reducing to a small ((r₁+r₂) × (r₁+r₂)) SVD via a Gram product and one
+//! QR — the variant both the aggregator tree and FPCA-Edge use.
+
+use super::Subspace;
+use crate::linalg::{householder_qr, svd_truncated, Mat};
+
+/// Merge parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct MergeOptions {
+    /// Target rank r of the merged estimate.
+    pub rank: usize,
+    /// Forgetting factor λ₁ ∈ (0, 1] applied to the *first* (older)
+    /// subspace (Algorithm 3).
+    pub forget: f64,
+    /// Enhancing factor λ₂ ≥ 1 applied to the second (newer) subspace.
+    pub enhance: f64,
+}
+
+impl MergeOptions {
+    pub fn rank(rank: usize) -> Self {
+        Self { rank, forget: 1.0, enhance: 1.0 }
+    }
+}
+
+/// Algorithm 3: `[U', Σ', ~] ← SVD_r([λ₁ U₁Σ₁, λ₂ U₂Σ₂])`.
+///
+/// Direct and simple; costs an SVD of a d × (r₁+r₂) matrix. Used as the
+/// reference implementation and in tests against [`merge_subspaces`].
+pub fn merge_svd_basic(s1: &Subspace, s2: &Subspace, opts: MergeOptions) -> Subspace {
+    assert_eq!(s1.dim(), s2.dim(), "merge dimension mismatch");
+    if s1.is_empty() {
+        return s2.truncate(opts.rank);
+    }
+    if s2.is_empty() {
+        return s1.truncate(opts.rank);
+    }
+    let left = s1.scaled_basis().scaled(opts.forget);
+    let right = s2.scaled_basis().scaled(opts.enhance);
+    let cat = left.hcat(&right);
+    let svd = svd_truncated(&cat, opts.rank.min(cat.cols()));
+    Subspace::new(svd.u, svd.sigma)
+}
+
+/// Algorithm 4: the optimized, Vᵀ-free merge.
+///
+/// ```text
+/// Z ← U₁ᵀ U₂
+/// [Q, R] ← QR(U₂ − U₁ Z)
+/// [U', Σ', ~] ← SVD_r([[λ₁Σ₁, Z Σ₂], [0, R Σ₂]])
+/// U'' ← [U₁, Q] U'
+/// ```
+///
+/// Requires both bases orthonormal (they are, by construction, everywhere in
+/// PRONTO). The expensive inputs are the two d × r Gram/QR products; the SVD
+/// itself is on an (r₁+r₂) square matrix.
+pub fn merge_subspaces(s1: &Subspace, s2: &Subspace, opts: MergeOptions) -> Subspace {
+    assert_eq!(s1.dim(), s2.dim(), "merge dimension mismatch");
+    if s1.is_empty() {
+        return s2.truncate(opts.rank);
+    }
+    if s2.is_empty() {
+        return s1.truncate(opts.rank);
+    }
+    let (r1, r2) = (s1.rank(), s2.rank());
+
+    // Z = U1ᵀ U2  (r1 × r2)
+    let z = s1.u.transpose_mul(&s2.u);
+    // QR of the component of U2 orthogonal to U1.
+    let u1z = s1.u.matmul(&z);
+    let (q, r) = householder_qr(&s2.u.sub(&u1z));
+
+    // Small block matrix  [[λ₁Σ₁, ZΣ₂], [0, RΣ₂]]  of size (r1+r2)².
+    let mut x = Mat::zeros(r1 + r2, r1 + r2);
+    for i in 0..r1 {
+        x.set(i, i, opts.forget * s1.sigma[i]);
+    }
+    let zs2 = z.mul_diag(&s2.sigma.iter().map(|s| s * opts.enhance).collect::<Vec<_>>());
+    for i in 0..r1 {
+        for j in 0..r2 {
+            x.set(i, r1 + j, zs2.get(i, j));
+        }
+    }
+    let rs2 = r.mul_diag(&s2.sigma.iter().map(|s| s * opts.enhance).collect::<Vec<_>>());
+    for i in 0..r2 {
+        for j in 0..r2 {
+            x.set(r1 + i, r1 + j, rs2.get(i, j));
+        }
+    }
+
+    let svd = svd_truncated(&x, opts.rank.min(r1 + r2));
+    // U'' = [U1, Q] U'
+    let basis = s1.u.hcat(&q);
+    let u2 = basis.matmul(&svd.u);
+    Subspace::new(u2, svd.sigma)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{orthonormality_error, subspace_distance};
+    use crate::proptest::{forall, gen_low_rank, gen_orthonormal, gen_spectrum};
+
+    fn random_subspace(rng: &mut crate::rng::Xoshiro256, d: usize, r: usize) -> Subspace {
+        let u = gen_orthonormal(rng, d, r);
+        let sigma = gen_spectrum(rng, r);
+        Subspace::new(u, sigma)
+    }
+
+    #[test]
+    fn merge_with_empty_is_truncation() {
+        let mut rng = crate::rng::Xoshiro256::seed_from_u64(1);
+        let s = random_subspace(&mut rng, 12, 4);
+        let e = Subspace::empty(12);
+        let m = merge_subspaces(&e, &s, MergeOptions::rank(3));
+        assert_eq!(m.rank(), 3);
+        assert_eq!(m.sigma, s.sigma[..3]);
+        let m2 = merge_subspaces(&s, &e, MergeOptions::rank(2));
+        assert_eq!(m2.rank(), 2);
+    }
+
+    #[test]
+    fn optimized_merge_matches_basic_svd_merge() {
+        forall("Alg4 == Alg3", |rng| {
+            let d = 8 + rng.gen_range(24);
+            let r1 = 1 + rng.gen_range(4);
+            let r2 = 1 + rng.gen_range(4);
+            let s1 = random_subspace(rng, d, r1);
+            let s2 = random_subspace(rng, d, r2);
+            let opts = MergeOptions { rank: (r1 + r2).min(4), forget: 0.9, enhance: 1.0 };
+            let a = merge_svd_basic(&s1, &s2, opts);
+            let b = merge_subspaces(&s1, &s2, opts);
+            // Same singular values…
+            for (x, y) in a.sigma.iter().zip(b.sigma.iter()) {
+                if (x - y).abs() > 1e-8 * (1.0 + x.abs()) {
+                    return Err(format!("sigma mismatch: {:?} vs {:?}", a.sigma, b.sigma));
+                }
+            }
+            // …and same span (bases may differ by rotation within equal
+            // singular-value groups; compare the subspaces).
+            let dist = subspace_distance(&a.u, &b.u);
+            if dist > 1e-6 {
+                return Err(format!("span mismatch: dist={dist}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn merged_basis_orthonormal() {
+        forall("merge orthonormality", |rng| {
+            let d = 8 + rng.gen_range(40);
+            let r1 = 1 + rng.gen_range(5);
+            let r2 = 1 + rng.gen_range(5);
+            let s1 = random_subspace(rng, d, r1);
+            let s2 = random_subspace(rng, d, r2);
+            let m = merge_subspaces(&s1, &s2, MergeOptions::rank(4));
+            let err = orthonormality_error(&m.u);
+            if err < 1e-8 {
+                Ok(())
+            } else {
+                Err(format!("orthonormality err {err}"))
+            }
+        });
+    }
+
+    #[test]
+    fn merge_sigma_descending_nonnegative() {
+        forall("merge spectrum ordered", |rng| {
+            let d = 10 + rng.gen_range(20);
+            let s1 = random_subspace(rng, d, 3);
+            let s2 = random_subspace(rng, d, 3);
+            let m = merge_subspaces(&s1, &s2, MergeOptions::rank(6));
+            if m.sigma.windows(2).all(|w| w[0] >= w[1] - 1e-12)
+                && m.sigma.iter().all(|&s| s >= 0.0)
+            {
+                Ok(())
+            } else {
+                Err(format!("bad spectrum {:?}", m.sigma))
+            }
+        });
+    }
+
+    #[test]
+    fn merging_identical_subspace_preserves_span() {
+        let mut rng = crate::rng::Xoshiro256::seed_from_u64(8);
+        let s = random_subspace(&mut rng, 16, 3);
+        let m = merge_subspaces(&s, &s, MergeOptions::rank(3));
+        assert!(subspace_distance(&m.u, &s.u) < 1e-6);
+        // Energy doubles in quadrature: sqrt(2)·σ.
+        for (ms, ss) in m.sigma.iter().zip(s.sigma.iter()) {
+            assert!((ms - ss * 2f64.sqrt()).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn merge_recovers_true_subspace_of_split_data() {
+        // SVD of [A | B] computed directly vs merging SVD(A) with SVD(B):
+        // for exact-rank inputs the merge is lossless.
+        let mut rng = crate::rng::Xoshiro256::seed_from_u64(9);
+        let d = 20;
+        let a = gen_low_rank(&mut rng, d, 15, 3, 0.0);
+        let b = gen_low_rank(&mut rng, d, 15, 3, 0.0);
+        let svd_a = crate::linalg::svd_truncated(&a, 3);
+        let svd_b = crate::linalg::svd_truncated(&b, 3);
+        let sa = Subspace::new(svd_a.u, svd_a.sigma);
+        let sb = Subspace::new(svd_b.u, svd_b.sigma);
+        let merged = merge_subspaces(&sa, &sb, MergeOptions::rank(6));
+
+        let cat = a.hcat(&b);
+        let direct = crate::linalg::svd_truncated(&cat, 6);
+        for (m, d_) in merged.sigma.iter().zip(direct.sigma.iter()) {
+            assert!((m - d_).abs() < 1e-7 * (1.0 + d_), "{:?} vs {:?}", merged.sigma, direct.sigma);
+        }
+        assert!(subspace_distance(&merged.u, &direct.u) < 1e-6);
+    }
+
+    #[test]
+    fn forgetting_factor_downweights_old_subspace() {
+        let mut rng = crate::rng::Xoshiro256::seed_from_u64(10);
+        let old = random_subspace(&mut rng, 12, 2);
+        let new = random_subspace(&mut rng, 12, 2);
+        let no_forget = merge_subspaces(&old, &new, MergeOptions { rank: 2, forget: 1.0, enhance: 1.0 });
+        let forget = merge_subspaces(&old, &new, MergeOptions { rank: 2, forget: 0.1, enhance: 1.0 });
+        // With heavy forgetting the merged span should be closer to `new`.
+        let d_no = subspace_distance(&no_forget.u, &new.u);
+        let d_yes = subspace_distance(&forget.u, &new.u);
+        assert!(d_yes <= d_no + 1e-9, "d_yes={d_yes} d_no={d_no}");
+    }
+}

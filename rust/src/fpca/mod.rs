@@ -1,0 +1,22 @@
+//! Federated PCA (FPCA-Edge) — the paper's local-update engine.
+//!
+//! Native Rust implementation of the constructions in the paper's appendix
+//! (Grammenos et al. 2019):
+//!
+//! * [`merge`] — Algorithm 3 (basic SVD merge with forgetting factor) and
+//!   Algorithm 4 (the V-free optimized merge via Gram + QR + small SVD);
+//! * [`edge`] — Algorithm 5 (`FPCA-Edge`): per-block SSVD update, merge with
+//!   the previous estimate, and energy-based adaptive rank (Eq. 7);
+//! * [`subspace`] — the `(U, Σ)` estimate type shared across the crate.
+//!
+//! This implementation is the *numerical oracle* for the AOT-compiled HLO
+//! artifacts (`python/compile/model.py` mirrors it with masked fixed-rank
+//! shapes) and the engine the pure-native scheduler path uses.
+
+mod edge;
+mod merge;
+mod subspace;
+
+pub use edge::{EnergyBounds, FpcaEdge, FpcaEdgeConfig};
+pub use merge::{merge_subspaces, merge_svd_basic, MergeOptions};
+pub use subspace::Subspace;

@@ -1,0 +1,189 @@
+//! The `(U, Σ)` principal-subspace estimate.
+
+use crate::linalg::Mat;
+
+/// A rank-r principal subspace estimate: orthonormal basis `U ∈ ℝ^{d×r}`
+/// with associated singular values `sigma` (descending). This is the only
+/// state FPCA-Edge keeps per node and the only structure the federation
+/// tree propagates — memory is O(d·r), as the paper requires.
+#[derive(Debug, Clone)]
+pub struct Subspace {
+    /// Orthonormal columns spanning the estimate.
+    pub u: Mat,
+    /// Singular values, one per column of `u`, descending.
+    pub sigma: Vec<f64>,
+}
+
+impl Subspace {
+    /// The empty estimate (paper: `(U, Σ) ← (0, 0)` at initialization).
+    pub fn empty(d: usize) -> Self {
+        Self { u: Mat::zeros(d, 0), sigma: Vec::new() }
+    }
+
+    pub fn new(u: Mat, sigma: Vec<f64>) -> Self {
+        assert_eq!(u.cols(), sigma.len(), "basis/spectrum arity mismatch");
+        Self { u, sigma }
+    }
+
+    /// Ambient dimension d.
+    pub fn dim(&self) -> usize {
+        self.u.rows()
+    }
+
+    /// Current rank r.
+    pub fn rank(&self) -> usize {
+        self.u.cols()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rank() == 0
+    }
+
+    /// Project a feature vector onto the subspace: `p = yᵀU ∈ ℝ^r`.
+    /// This is the per-timestep hot operation of Reject-Job.
+    pub fn project(&self, y: &[f64]) -> Vec<f64> {
+        self.u.transpose_matvec(y)
+    }
+
+    /// Projection without allocation (hot path).
+    pub fn project_into(&self, y: &[f64], out: &mut [f64]) {
+        assert!(out.len() >= self.rank());
+        for j in 0..self.rank() {
+            let c = self.u.col(j);
+            let mut s = 0.0;
+            for k in 0..c.len() {
+                s += c[k] * y[k];
+            }
+            out[j] = s;
+        }
+    }
+
+    /// Truncate to at most `r` leading components.
+    pub fn truncate(&self, r: usize) -> Subspace {
+        let k = r.min(self.rank());
+        Subspace { u: self.u.take_cols(k), sigma: self.sigma[..k].to_vec() }
+    }
+
+    /// Energy ratio of the r-th component (Eq. 7):
+    /// `E_r = σ_r / Σ_{i≤r} σ_i`. Returns 0 for an empty estimate.
+    pub fn energy_ratio(&self) -> f64 {
+        if self.is_empty() {
+            return 0.0;
+        }
+        let total: f64 = self.sigma.iter().sum();
+        if total <= 0.0 {
+            return 0.0;
+        }
+        self.sigma[self.rank() - 1] / total
+    }
+
+    /// Frobenius-scale difference between two subspace iterates, used for
+    /// the ε-gated upward propagation heuristic ("absdiff" in Algorithm 2).
+    /// Ranks may differ; the shorter basis is compared against the leading
+    /// columns of the longer one, and leftover columns count in full.
+    pub fn abs_diff(&self, other: &Subspace) -> f64 {
+        assert_eq!(self.dim(), other.dim());
+        let (a, b) = if self.rank() <= other.rank() { (self, other) } else { (other, self) };
+        let mut acc = 0.0f64;
+        for j in 0..a.rank() {
+            // Column sign is arbitrary in an SVD basis: compare up to sign.
+            let ca = a.u.col(j);
+            let cb = b.u.col(j);
+            let mut dplus = 0.0;
+            let mut dminus = 0.0;
+            for k in 0..ca.len() {
+                dplus += (ca[k] - cb[k]).powi(2);
+                dminus += (ca[k] + cb[k]).powi(2);
+            }
+            acc += dplus.min(dminus);
+        }
+        for j in a.rank()..b.rank() {
+            acc += b.u.col(j).iter().map(|x| x * x).sum::<f64>();
+        }
+        acc.sqrt()
+    }
+
+    /// Reconstruction `U diag(σ)` (d × r) — the scaled basis that merges
+    /// consume.
+    pub fn scaled_basis(&self) -> Mat {
+        self.u.mul_diag(&self.sigma)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::orthonormality_error;
+    use crate::proptest::{forall, gen_orthonormal, gen_spectrum};
+
+    #[test]
+    fn empty_subspace_basics() {
+        let s = Subspace::empty(10);
+        assert_eq!(s.dim(), 10);
+        assert_eq!(s.rank(), 0);
+        assert!(s.is_empty());
+        assert_eq!(s.energy_ratio(), 0.0);
+        assert!(s.project(&vec![1.0; 10]).is_empty());
+    }
+
+    #[test]
+    fn project_matches_manual_dot() {
+        let u = Mat::from_rows(3, 2, &[1.0, 0.0, 0.0, 1.0, 0.0, 0.0]);
+        let s = Subspace::new(u, vec![2.0, 1.0]);
+        let p = s.project(&[3.0, 4.0, 5.0]);
+        assert_eq!(p, vec![3.0, 4.0]);
+        let mut out = [0.0; 2];
+        s.project_into(&[3.0, 4.0, 5.0], &mut out);
+        assert_eq!(out, [3.0, 4.0]);
+    }
+
+    #[test]
+    fn energy_ratio_known() {
+        let u = Mat::from_rows(3, 2, &[1.0, 0.0, 0.0, 1.0, 0.0, 0.0]);
+        let s = Subspace::new(u, vec![3.0, 1.0]);
+        assert!((s.energy_ratio() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn abs_diff_zero_for_identical_and_sign_flips() {
+        forall("abs_diff sign invariance", |rng| {
+            let d = 6 + rng.gen_range(20);
+            let r = 1 + rng.gen_range(4);
+            let u = gen_orthonormal(rng, d, r);
+            let sig = gen_spectrum(rng, r);
+            let s1 = Subspace::new(u.clone(), sig.clone());
+            let mut flipped = u.clone();
+            for x in flipped.col_mut(0) {
+                *x = -*x;
+            }
+            let s2 = Subspace::new(flipped, sig);
+            let d12 = s1.abs_diff(&s2);
+            if d12 < 1e-10 {
+                Ok(())
+            } else {
+                Err(format!("sign flip not invariant: {d12}"))
+            }
+        });
+    }
+
+    #[test]
+    fn abs_diff_counts_rank_mismatch() {
+        let mut rng = crate::rng::Xoshiro256::seed_from_u64(5);
+        let u = gen_orthonormal(&mut rng, 10, 3);
+        let s3 = Subspace::new(u.clone(), vec![3.0, 2.0, 1.0]);
+        let s2 = Subspace::new(u.take_cols(2), vec![3.0, 2.0]);
+        // Extra orthonormal column has unit norm → diff ≈ 1.
+        assert!((s3.abs_diff(&s2) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn truncate_keeps_leading() {
+        let mut rng = crate::rng::Xoshiro256::seed_from_u64(6);
+        let u = gen_orthonormal(&mut rng, 8, 4);
+        let s = Subspace::new(u, vec![4.0, 3.0, 2.0, 1.0]);
+        let t = s.truncate(2);
+        assert_eq!(t.rank(), 2);
+        assert_eq!(t.sigma, vec![4.0, 3.0]);
+        assert!(orthonormality_error(&t.u) < 1e-10);
+    }
+}

@@ -1,0 +1,53 @@
+//! # PRONTO — federated task scheduling
+//!
+//! Production-quality reproduction of *"Pronto: Federated Task Scheduling"*
+//! (Grammenos, Kalyvianaki, Pietzuch, 2021): a federated, streaming,
+//! memory-limited scheduler in which every data-center node tracks the
+//! top-r principal subspace of its own telemetry via FPCA-Edge, projects
+//! incoming metric vectors onto it, detects projection spikes with a
+//! streaming z-score filter, and raises a **rejection signal** that gates
+//! job admission — no global synchronization on the decision path.
+//!
+//! The crate is the L3 layer of a three-layer Rust + JAX + Pallas stack:
+//! the FPCA block update / merge / project-detect graphs are authored in
+//! JAX (calling Pallas kernels) and AOT-lowered to HLO text that
+//! [`runtime`] loads and executes through the PJRT CPU client. A
+//! numerically identical native implementation lives in [`fpca`] and is
+//! used as the test oracle and as a fallback when artifacts are absent.
+//!
+//! Quick tour (see `examples/quickstart.rs`):
+//!
+//! ```no_run
+//! # // no_run: doctest binaries miss the libstdc++ rpath the xla crate
+//! # // needs at load time; the example is compile-checked only.
+//! use pronto::scheduler::{NodeScheduler, RejectConfig};
+//! use pronto::telemetry::{GeneratorConfig, TraceGenerator};
+//!
+//! let gen = TraceGenerator::new(GeneratorConfig::default(), 42);
+//! let trace = gen.generate_vm(0, 64);
+//! let mut node = NodeScheduler::new(trace.dim(), RejectConfig::default());
+//! for t in 0..trace.len() {
+//!     let _accept = node.observe(trace.features(t)); // admission decision
+//! }
+//! assert_eq!(node.stats().steps, 64);
+//! ```
+
+pub mod baselines;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod detect;
+pub mod forecast;
+pub mod federation;
+pub mod fpca;
+pub mod linalg;
+pub mod metrics;
+pub mod proptest;
+pub mod rng;
+pub mod runtime;
+pub mod scheduler;
+pub mod sim;
+pub mod ser;
+pub mod telemetry;
+
+pub use linalg::Mat;

@@ -1,0 +1,406 @@
+//! Column-major dense matrix.
+//!
+//! Column-major matches the paper's convention (data matrices are d × n with
+//! one *column* per observation) and makes appending streaming observations
+//! a memcpy.
+
+use std::fmt;
+
+/// Dense, heap-allocated, column-major `f64` matrix.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    /// Column-major storage: element (i, j) lives at `data[j * rows + i]`.
+    data: Vec<f64>,
+}
+
+impl Mat {
+    /// Zero-filled rows × cols matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity matrix of size n.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m.set(i, i, 1.0);
+        }
+        m
+    }
+
+    /// Build from a column-major buffer.
+    pub fn from_col_major(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer size mismatch");
+        Self { rows, cols, data }
+    }
+
+    /// Build from a row-major buffer (convenient for literals in tests).
+    pub fn from_rows(rows: usize, cols: usize, row_major: &[f64]) -> Self {
+        assert_eq!(row_major.len(), rows * cols, "buffer size mismatch");
+        let mut m = Self::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m.set(i, j, row_major[i * cols + j]);
+            }
+        }
+        m
+    }
+
+    /// Build a d × 1 column vector.
+    pub fn col_vec(v: &[f64]) -> Self {
+        Self::from_col_major(v.len(), 1, v.to_vec())
+    }
+
+    /// Diagonal matrix from a slice.
+    pub fn diag(d: &[f64]) -> Self {
+        let mut m = Self::zeros(d.len(), d.len());
+        for (i, &x) in d.iter().enumerate() {
+            m.set(i, i, x);
+        }
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// True when either dimension is zero.
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0 || self.cols == 0
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[j * self.rows + i]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[j * self.rows + i] = v;
+    }
+
+    /// Raw column-major buffer.
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Mutable raw column-major buffer.
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Borrow column j as a slice (free thanks to column-major layout).
+    #[inline]
+    pub fn col(&self, j: usize) -> &[f64] {
+        debug_assert!(j < self.cols);
+        &self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    /// Mutable borrow of column j.
+    #[inline]
+    pub fn col_mut(&mut self, j: usize) -> &mut [f64] {
+        debug_assert!(j < self.cols);
+        &mut self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    /// Copy of row i.
+    pub fn row(&self, i: usize) -> Vec<f64> {
+        (0..self.cols).map(|j| self.get(i, j)).collect()
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for j in 0..self.cols {
+            for i in 0..self.rows {
+                t.set(j, i, self.get(i, j));
+            }
+        }
+        t
+    }
+
+    /// Matrix product `self * rhs` with a column-blocked kernel: for each
+    /// output column we accumulate scaled columns of `self`, which walks both
+    /// operands in storage order.
+    pub fn matmul(&self, rhs: &Mat) -> Mat {
+        assert_eq!(self.cols, rhs.rows, "matmul dim mismatch");
+        let mut out = Mat::zeros(self.rows, rhs.cols);
+        for j in 0..rhs.cols {
+            let rcol = rhs.col(j);
+            let ocol = out.col_mut(j);
+            for (k, &rv) in rcol.iter().enumerate() {
+                if rv == 0.0 {
+                    continue;
+                }
+                let lcol = self.col(k);
+                for i in 0..lcol.len() {
+                    ocol[i] += lcol[i] * rv;
+                }
+            }
+        }
+        out
+    }
+
+    /// `selfᵀ * rhs` without materializing the transpose: each output entry
+    /// is a dot product of two columns — both contiguous.
+    pub fn transpose_mul(&self, rhs: &Mat) -> Mat {
+        assert_eq!(self.rows, rhs.rows, "transpose_mul dim mismatch");
+        let mut out = Mat::zeros(self.cols, rhs.cols);
+        for j in 0..rhs.cols {
+            let rcol = rhs.col(j);
+            for i in 0..self.cols {
+                let lcol = self.col(i);
+                let mut s = 0.0;
+                for k in 0..lcol.len() {
+                    s += lcol[k] * rcol[k];
+                }
+                out.set(i, j, s);
+            }
+        }
+        out
+    }
+
+    /// Gram matrix `selfᵀ · self`, exploiting symmetry (computes the upper
+    /// triangle once and mirrors it — ~2× over `transpose_mul(self)`).
+    pub fn gram(&self) -> Mat {
+        let c = self.cols;
+        let mut out = Mat::zeros(c, c);
+        for i in 0..c {
+            let ci = self.col(i);
+            for j in i..c {
+                let cj = self.col(j);
+                let mut s = 0.0;
+                for k in 0..ci.len() {
+                    s += ci[k] * cj[k];
+                }
+                out.set(i, j, s);
+                out.set(j, i, s);
+            }
+        }
+        out
+    }
+
+    /// Matrix–vector product `self * v`.
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, v.len(), "matvec dim mismatch");
+        let mut out = vec![0.0; self.rows];
+        for (j, &x) in v.iter().enumerate() {
+            if x == 0.0 {
+                continue;
+            }
+            let c = self.col(j);
+            for i in 0..self.rows {
+                out[i] += c[i] * x;
+            }
+        }
+        out
+    }
+
+    /// `selfᵀ * v` — projections of v onto each column.
+    pub fn transpose_matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.rows, v.len(), "transpose_matvec dim mismatch");
+        (0..self.cols)
+            .map(|j| {
+                let c = self.col(j);
+                c.iter().zip(v).map(|(a, b)| a * b).sum()
+            })
+            .collect()
+    }
+
+    /// Horizontal concatenation `[self | rhs]`.
+    pub fn hcat(&self, rhs: &Mat) -> Mat {
+        if self.is_empty() {
+            return rhs.clone();
+        }
+        if rhs.is_empty() {
+            return self.clone();
+        }
+        assert_eq!(self.rows, rhs.rows, "hcat row mismatch");
+        let mut data = Vec::with_capacity(self.data.len() + rhs.data.len());
+        data.extend_from_slice(&self.data);
+        data.extend_from_slice(&rhs.data);
+        Mat::from_col_major(self.rows, self.cols + rhs.cols, data)
+    }
+
+    /// Copy of the leading `k` columns.
+    pub fn take_cols(&self, k: usize) -> Mat {
+        assert!(k <= self.cols);
+        Mat::from_col_major(self.rows, k, self.data[..k * self.rows].to_vec())
+    }
+
+    /// Scale every entry in place.
+    pub fn scale_in_place(&mut self, s: f64) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+
+    /// Scaled copy.
+    pub fn scaled(&self, s: f64) -> Mat {
+        let mut m = self.clone();
+        m.scale_in_place(s);
+        m
+    }
+
+    /// Column-scaled copy: column j multiplied by `s[j]` (i.e. `self * diag(s)`).
+    pub fn mul_diag(&self, s: &[f64]) -> Mat {
+        assert_eq!(self.cols, s.len());
+        let mut m = self.clone();
+        for j in 0..m.cols {
+            let f = s[j];
+            for x in m.col_mut(j) {
+                *x *= f;
+            }
+        }
+        m
+    }
+
+    /// Element-wise difference.
+    pub fn sub(&self, rhs: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (rhs.rows, rhs.cols));
+        let data = self
+            .data
+            .iter()
+            .zip(rhs.data.iter())
+            .map(|(a, b)| a - b)
+            .collect();
+        Mat::from_col_major(self.rows, self.cols, data)
+    }
+
+    /// Element-wise sum.
+    pub fn add(&self, rhs: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (rhs.rows, rhs.cols));
+        let data = self
+            .data
+            .iter()
+            .zip(rhs.data.iter())
+            .map(|(a, b)| a + b)
+            .collect();
+        Mat::from_col_major(self.rows, self.cols, data)
+    }
+
+    /// Frobenius norm.
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Maximum absolute entry.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, &x| m.max(x.abs()))
+    }
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        for i in 0..self.rows.min(8) {
+            write!(f, "  ")?;
+            for j in 0..self.cols.min(8) {
+                write!(f, "{:>10.4} ", self.get(i, j))?;
+            }
+            writeln!(f, "{}", if self.cols > 8 { "…" } else { "" })?;
+        }
+        if self.rows > 8 {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Mat::from_rows(2, 3, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let i = Mat::eye(3);
+        assert_eq!(a.matmul(&i), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_rows(2, 2, &[1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_rows(2, 2, &[5.0, 6.0, 7.0, 8.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c, Mat::from_rows(2, 2, &[19.0, 22.0, 43.0, 50.0]));
+    }
+
+    #[test]
+    fn transpose_mul_matches_explicit() {
+        let a = Mat::from_rows(3, 2, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b = Mat::from_rows(3, 2, &[1.0, 0.0, 0.0, 1.0, 1.0, 1.0]);
+        let via_helper = a.transpose_mul(&b);
+        let explicit = a.transpose().matmul(&b);
+        assert_eq!(via_helper, explicit);
+    }
+
+    #[test]
+    fn matvec_and_transpose_matvec() {
+        let a = Mat::from_rows(2, 3, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(a.matvec(&[1.0, 1.0, 1.0]), vec![6.0, 15.0]);
+        assert_eq!(a.transpose_matvec(&[1.0, 1.0]), vec![5.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn hcat_shapes_and_content() {
+        let a = Mat::from_rows(2, 1, &[1.0, 2.0]);
+        let b = Mat::from_rows(2, 2, &[3.0, 4.0, 5.0, 6.0]);
+        let c = a.hcat(&b);
+        assert_eq!((c.rows(), c.cols()), (2, 3));
+        assert_eq!(c.get(0, 1), 3.0);
+        assert_eq!(c.get(1, 2), 6.0);
+    }
+
+    #[test]
+    fn hcat_with_empty() {
+        let e = Mat::zeros(3, 0);
+        let a = Mat::from_rows(3, 1, &[1.0, 2.0, 3.0]);
+        assert_eq!(e.hcat(&a), a);
+        assert_eq!(a.hcat(&e), a);
+    }
+
+    #[test]
+    fn mul_diag_scales_columns() {
+        let a = Mat::from_rows(2, 2, &[1.0, 1.0, 1.0, 1.0]);
+        let s = a.mul_diag(&[2.0, 3.0]);
+        assert_eq!(s, Mat::from_rows(2, 2, &[2.0, 3.0, 2.0, 3.0]));
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = Mat::from_rows(3, 2, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn frob_norm_known() {
+        let a = Mat::from_rows(2, 2, &[3.0, 0.0, 0.0, 4.0]);
+        assert!((a.frob_norm() - 5.0).abs() < 1e-12);
+    }
+}
+
+#[cfg(test)]
+mod gram_tests {
+    use super::*;
+
+    #[test]
+    fn gram_matches_transpose_mul() {
+        let mut rng = crate::rng::Xoshiro256::seed_from_u64(3);
+        let data: Vec<f64> = (0..52 * 36).map(|_| rng.normal()).collect();
+        let a = Mat::from_col_major(52, 36, data);
+        let fast = a.gram();
+        let slow = a.transpose_mul(&a);
+        assert!(crate::linalg::frob_diff(&fast, &slow) < 1e-10);
+    }
+}

@@ -1,0 +1,64 @@
+//! Dense linear-algebra substrate.
+//!
+//! The offline environment has no `nalgebra`/`ndarray`, and the HLO artifacts
+//! cannot carry LAPACK custom-calls, so PRONTO ships its own small dense
+//! linear algebra: a column-major [`Mat`] type, blocked matmul, Householder
+//! QR, and a one-sided Jacobi SVD. These are the same algorithms the L2 JAX
+//! graphs use (`python/compile/linalg.py`), which makes the Rust side a
+//! numerical oracle for the AOT artifacts.
+//!
+//! Sizes in PRONTO are modest (d ≲ 150 features, r ≤ 16 components,
+//! b ≤ 128 block columns), so clarity and cache-friendliness beat
+//! asymptotics here.
+
+mod mat;
+mod qr;
+mod svd;
+
+pub use mat::Mat;
+pub use qr::{householder_qr, thin_qr};
+pub use svd::{jacobi_svd, svd_gram_topk, svd_gram_topk_warm, svd_truncated, Svd};
+
+/// Machine-epsilon-scale tolerance used across decomposition tests.
+pub const EPS: f64 = 1e-10;
+
+/// Frobenius norm of the difference of two matrices (convenience for tests
+/// and convergence checks).
+pub fn frob_diff(a: &Mat, b: &Mat) -> f64 {
+    assert_eq!((a.rows(), a.cols()), (b.rows(), b.cols()));
+    let mut s = 0.0;
+    for (x, y) in a.data().iter().zip(b.data().iter()) {
+        let d = x - y;
+        s += d * d;
+    }
+    s.sqrt()
+}
+
+/// Largest absolute entry of `I - UᵀU`: how far `U`'s columns are from
+/// orthonormality.
+pub fn orthonormality_error(u: &Mat) -> f64 {
+    let g = u.transpose_mul(u);
+    let mut worst = 0.0f64;
+    for i in 0..g.rows() {
+        for j in 0..g.cols() {
+            let target = if i == j { 1.0 } else { 0.0 };
+            worst = worst.max((g.get(i, j) - target).abs());
+        }
+    }
+    worst
+}
+
+/// Principal-angle distance between the subspaces spanned by `u1` and `u2`
+/// (both assumed orthonormal): ‖U1U1ᵀ − U2U2ᵀ‖₂ approximated through the
+/// singular values of U1ᵀU2. Returns a value in [0, 1]; 0 means identical
+/// subspaces.
+pub fn subspace_distance(u1: &Mat, u2: &Mat) -> f64 {
+    assert_eq!(u1.rows(), u2.rows());
+    let g = u1.transpose_mul(u2); // r1 x r2
+    let svd = jacobi_svd(&g);
+    // cos of the largest principal angle is the smallest singular value of
+    // U1ᵀU2 (when ranks match); distance = sin(theta_max).
+    let r = g.rows().min(g.cols());
+    let min_sigma = (0..r).map(|i| svd.sigma[i]).fold(f64::INFINITY, f64::min);
+    (1.0 - min_sigma.min(1.0).powi(2)).max(0.0).sqrt()
+}

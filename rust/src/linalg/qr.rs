@@ -1,0 +1,163 @@
+//! Householder QR factorization.
+//!
+//! Used by the subspace merge (Algorithm 4: `QR(U₂ − U₁Z)`) and as the
+//! orthonormalization step of the power-method baseline. The thin variant
+//! returns Q ∈ ℝ^{m×n}, R ∈ ℝ^{n×n} for m ≥ n, which is all PRONTO needs
+//! (merge inputs are tall-skinny, d × r with r ≪ d).
+
+use super::Mat;
+
+/// Thin QR via Householder reflections: `a = Q R` with Q m×n orthonormal
+/// columns and R n×n upper triangular. Requires m ≥ n.
+///
+/// The sign convention makes the diagonal of R non-negative, matching the
+/// jnp implementation in `python/compile/linalg.py` so artifacts and native
+/// paths agree bit-for-bit up to rounding.
+pub fn householder_qr(a: &Mat) -> (Mat, Mat) {
+    let (m, n) = (a.rows(), a.cols());
+    assert!(m >= n, "householder_qr requires tall (m >= n) input");
+    let mut r = a.clone();
+    // Accumulate the reflectors' action on the leading n columns of I.
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n);
+
+    for k in 0..n {
+        // Build the reflector from column k, rows k..m.
+        let mut v: Vec<f64> = (k..m).map(|i| r.get(i, k)).collect();
+        let norm_x = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if norm_x > 0.0 {
+            let alpha = if v[0] >= 0.0 { -norm_x } else { norm_x };
+            v[0] -= alpha;
+            let norm_v = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if norm_v > 0.0 {
+                for x in &mut v {
+                    *x /= norm_v;
+                }
+                // Apply (I - 2vvᵀ) to the trailing submatrix of R.
+                for j in k..n {
+                    let mut dot = 0.0;
+                    for (i, &vi) in v.iter().enumerate() {
+                        dot += vi * r.get(k + i, j);
+                    }
+                    for (i, &vi) in v.iter().enumerate() {
+                        let cur = r.get(k + i, j);
+                        r.set(k + i, j, cur - 2.0 * vi * dot);
+                    }
+                }
+            } else {
+                v.clear();
+            }
+        } else {
+            v.clear();
+        }
+        vs.push(v);
+    }
+
+    // Q = H₀ H₁ … H_{n-1} applied to the first n columns of I_m.
+    let mut q = Mat::zeros(m, n);
+    for j in 0..n {
+        q.set(j, j, 1.0);
+    }
+    for k in (0..n).rev() {
+        let v = &vs[k];
+        if v.is_empty() {
+            continue;
+        }
+        for j in 0..n {
+            let mut dot = 0.0;
+            for (i, &vi) in v.iter().enumerate() {
+                dot += vi * q.get(k + i, j);
+            }
+            for (i, &vi) in v.iter().enumerate() {
+                let cur = q.get(k + i, j);
+                q.set(k + i, j, cur - 2.0 * vi * dot);
+            }
+        }
+    }
+
+    // Normalize signs so diag(R) >= 0 (uniqueness of the thin QR).
+    let mut r_thin = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            r_thin.set(i, j, r.get(i, j));
+        }
+    }
+    for i in 0..n {
+        if r_thin.get(i, i) < 0.0 {
+            for j in i..n {
+                r_thin.set(i, j, -r_thin.get(i, j));
+            }
+            for k in 0..m {
+                q.set(k, i, -q.get(k, i));
+            }
+        }
+    }
+    (q, r_thin)
+}
+
+/// Convenience alias used throughout the codebase.
+pub fn thin_qr(a: &Mat) -> (Mat, Mat) {
+    householder_qr(a)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{frob_diff, orthonormality_error};
+    use crate::rng::Xoshiro256;
+
+    fn random_mat(rng: &mut Xoshiro256, m: usize, n: usize) -> Mat {
+        let data: Vec<f64> = (0..m * n).map(|_| rng.normal()).collect();
+        Mat::from_col_major(m, n, data)
+    }
+
+    #[test]
+    fn qr_reconstructs() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        for &(m, n) in &[(4, 4), (10, 3), (50, 8), (7, 1)] {
+            let a = random_mat(&mut rng, m, n);
+            let (q, r) = householder_qr(&a);
+            assert!(frob_diff(&q.matmul(&r), &a) < 1e-9, "m={m} n={n}");
+        }
+    }
+
+    #[test]
+    fn q_is_orthonormal() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        for &(m, n) in &[(20, 5), (8, 8), (100, 4)] {
+            let a = random_mat(&mut rng, m, n);
+            let (q, _) = householder_qr(&a);
+            assert!(orthonormality_error(&q) < 1e-10, "m={m} n={n}");
+        }
+    }
+
+    #[test]
+    fn r_is_upper_triangular_nonneg_diag() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let a = random_mat(&mut rng, 12, 6);
+        let (_, r) = householder_qr(&a);
+        for i in 0..6 {
+            assert!(r.get(i, i) >= 0.0);
+            for j in 0..i {
+                assert_eq!(r.get(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn qr_of_rank_deficient_is_finite() {
+        // Two identical columns: R gets a ~0 diagonal entry; Q must stay finite.
+        let a = Mat::from_rows(4, 2, &[1.0, 1.0, 2.0, 2.0, 3.0, 3.0, 4.0, 4.0]);
+        let (q, r) = householder_qr(&a);
+        assert!(q.data().iter().all(|x| x.is_finite()));
+        assert!(r.get(1, 1).abs() < 1e-9);
+        assert!(frob_diff(&q.matmul(&r), &a) < 1e-9);
+    }
+
+    #[test]
+    fn qr_of_zero_matrix() {
+        let a = Mat::zeros(5, 3);
+        let (q, r) = householder_qr(&a);
+        assert!(q.data().iter().all(|x| x.is_finite()));
+        assert_eq!(r, Mat::zeros(3, 3));
+    }
+}

@@ -1,0 +1,4 @@
+//! `pronto` CLI entrypoint (subcommands filled in by cli module).
+fn main() {
+    pronto::cli::main();
+}

@@ -1,0 +1,112 @@
+//! Empirical CDFs — the primitive behind Figures 6 and 7.
+
+/// An empirical cumulative distribution function over collected samples.
+#[derive(Debug, Clone, Default)]
+pub struct EmpiricalCdf {
+    xs: Vec<f64>,
+    sorted: bool,
+}
+
+impl EmpiricalCdf {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn from_samples(xs: &[f64]) -> Self {
+        let mut c = Self::new();
+        c.extend(xs);
+        c
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.xs.push(x);
+        self.sorted = false;
+    }
+
+    pub fn extend(&mut self, xs: &[f64]) {
+        self.xs.extend_from_slice(xs);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    /// F(x) = P(X ≤ x).
+    pub fn eval(&mut self, x: f64) -> f64 {
+        assert!(!self.xs.is_empty());
+        self.ensure_sorted();
+        let count = self.xs.partition_point(|&v| v <= x);
+        count as f64 / self.xs.len() as f64
+    }
+
+    /// Evenly spaced (x, F(x)) points for plotting/CSV export.
+    pub fn series(&mut self, points: usize) -> Vec<(f64, f64)> {
+        assert!(points >= 2 && !self.xs.is_empty());
+        self.ensure_sorted();
+        let lo = self.xs[0];
+        let hi = self.xs[self.xs.len() - 1];
+        (0..points)
+            .map(|i| {
+                let x = lo + (hi - lo) * i as f64 / (points - 1) as f64;
+                (x, {
+                    let count = self.xs.partition_point(|&v| v <= x);
+                    count as f64 / self.xs.len() as f64
+                })
+            })
+            .collect()
+    }
+
+    /// Inverse CDF (quantile) by order statistic.
+    pub fn inverse(&mut self, q: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&q) && !self.xs.is_empty());
+        self.ensure_sorted();
+        let idx = ((self.xs.len() - 1) as f64 * q).round() as usize;
+        self.xs[idx]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_known_points() {
+        let mut c = EmpiricalCdf::from_samples(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(c.eval(0.5), 0.0);
+        assert_eq!(c.eval(1.0), 0.25);
+        assert_eq!(c.eval(2.5), 0.5);
+        assert_eq!(c.eval(4.0), 1.0);
+        assert_eq!(c.eval(9.0), 1.0);
+    }
+
+    #[test]
+    fn series_is_monotone() {
+        let mut c = EmpiricalCdf::from_samples(&[3.0, 1.0, 2.0, 2.0, 5.0]);
+        let s = c.series(11);
+        assert_eq!(s.len(), 11);
+        for w in s.windows(2) {
+            assert!(w[1].1 >= w[0].1);
+        }
+        assert_eq!(s.last().unwrap().1, 1.0);
+    }
+
+    #[test]
+    fn inverse_matches_order_stats() {
+        let mut c = EmpiricalCdf::from_samples(&[10.0, 20.0, 30.0]);
+        assert_eq!(c.inverse(0.0), 10.0);
+        assert_eq!(c.inverse(0.5), 20.0);
+        assert_eq!(c.inverse(1.0), 30.0);
+    }
+}

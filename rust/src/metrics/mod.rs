@@ -1,0 +1,114 @@
+//! Evaluation metrics: RMSE, the paper's spike accuracy, streaming moments,
+//! and empirical CDFs (the figures' primitive).
+
+mod cdf;
+mod stats;
+
+pub use cdf::EmpiricalCdf;
+pub use stats::{OnlineStats, Quantiles};
+
+/// Root mean square error between prediction and truth.
+pub fn rmse(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    assert!(!pred.is_empty());
+    let mse = pred
+        .iter()
+        .zip(truth)
+        .map(|(p, t)| (p - t) * (p - t))
+        .sum::<f64>()
+        / pred.len() as f64;
+    mse.sqrt()
+}
+
+/// The paper's spike-forecast accuracy (§3.2): the balanced mean of the
+/// spike hit-rate and the non-spike hit-rate,
+/// `(predicted_spikes/actual_spikes + predicted_nonspikes/actual_nonspikes) / 2`.
+/// Classes absent from the truth contribute a perfect score (matching the
+/// convention that a method cannot be penalized for a class that never
+/// occurs).
+pub fn spike_accuracy(pred_spike: &[bool], true_spike: &[bool]) -> f64 {
+    assert_eq!(pred_spike.len(), true_spike.len());
+    let mut tp = 0usize;
+    let mut tn = 0usize;
+    let mut p = 0usize;
+    let mut n = 0usize;
+    for (&pr, &tr) in pred_spike.iter().zip(true_spike) {
+        if tr {
+            p += 1;
+            if pr {
+                tp += 1;
+            }
+        } else {
+            n += 1;
+            if !pr {
+                tn += 1;
+            }
+        }
+    }
+    let spike_rate = if p == 0 { 1.0 } else { tp as f64 / p as f64 };
+    let non_rate = if n == 0 { 1.0 } else { tn as f64 / n as f64 };
+    (spike_rate + non_rate) / 2.0
+}
+
+/// Min-max normalization to [0, 1] (paper §3.1: inputs are scaled before
+/// fitting "to improve the stability of the solvers"). Returns the scaled
+/// series with the (min, span) needed to de-normalize.
+pub fn normalize(xs: &[f64]) -> (Vec<f64>, f64, f64) {
+    let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let span = if (hi - lo).abs() < 1e-12 { 1.0 } else { hi - lo };
+    (xs.iter().map(|x| (x - lo) / span).collect(), lo, span)
+}
+
+/// Undo [`normalize`].
+pub fn denormalize(xs: &[f64], lo: f64, span: f64) -> Vec<f64> {
+    xs.iter().map(|x| x * span + lo).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rmse_known() {
+        assert_eq!(rmse(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        assert!((rmse(&[0.0, 0.0], &[3.0, 4.0]) - (12.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spike_accuracy_perfect_and_inverted() {
+        let t = [true, false, true, false];
+        assert_eq!(spike_accuracy(&t, &t), 1.0);
+        let inv: Vec<bool> = t.iter().map(|x| !x).collect();
+        assert_eq!(spike_accuracy(&inv, &t), 0.0);
+    }
+
+    #[test]
+    fn spike_accuracy_balanced() {
+        // Predict everything non-spike on 25% spikes: 0.5·(0 + 1) = 0.5.
+        let truth = [true, false, false, false];
+        let pred = [false, false, false, false];
+        assert_eq!(spike_accuracy(&pred, &truth), 0.5);
+    }
+
+    #[test]
+    fn spike_accuracy_no_spikes_in_truth() {
+        let truth = [false, false];
+        assert_eq!(spike_accuracy(&[false, false], &truth), 1.0);
+        assert_eq!(spike_accuracy(&[true, true], &truth), 0.5);
+    }
+
+    #[test]
+    fn normalize_roundtrip() {
+        let xs = [5.0, 10.0, 7.5];
+        let (n, lo, span) = normalize(&xs);
+        assert_eq!(n, vec![0.0, 1.0, 0.5]);
+        assert_eq!(denormalize(&n, lo, span), xs.to_vec());
+    }
+
+    #[test]
+    fn normalize_constant_series() {
+        let (n, _, _) = normalize(&[3.0, 3.0, 3.0]);
+        assert!(n.iter().all(|x| x.is_finite()));
+    }
+}

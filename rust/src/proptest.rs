@@ -1,0 +1,122 @@
+//! Minimal property-testing support.
+//!
+//! The environment has no `proptest`/`quickcheck`, so invariant tests use
+//! this thin layer: seeded random generators over the domain types plus a
+//! [`forall`] driver that reports the failing case index and seed so any
+//! failure is reproducible with `PRONTO_PROP_SEED=<seed>`.
+
+use crate::linalg::Mat;
+use crate::rng::Xoshiro256;
+
+/// Number of cases per property (override with `PRONTO_PROP_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("PRONTO_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Base seed (override with `PRONTO_PROP_SEED` to replay a failure).
+pub fn base_seed() -> u64 {
+    std::env::var("PRONTO_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+/// Run `prop` over `cases` RNGs derived from the base seed. Panics with the
+/// case seed on first failure so it can be replayed in isolation.
+pub fn forall(name: &str, prop: impl Fn(&mut Xoshiro256) -> Result<(), String>) {
+    let cases = default_cases();
+    let base = base_seed();
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case}/{cases} \
+                 (replay with PRONTO_PROP_SEED={base} PRONTO_PROP_CASES={c}): {msg}",
+                c = case + 1
+            );
+        }
+    }
+}
+
+/// Random matrix with standard-normal entries.
+pub fn gen_mat(rng: &mut Xoshiro256, rows: usize, cols: usize) -> Mat {
+    let data = (0..rows * cols).map(|_| rng.normal()).collect();
+    Mat::from_col_major(rows, cols, data)
+}
+
+/// Random matrix with orthonormal columns (QR of a Gaussian draw).
+pub fn gen_orthonormal(rng: &mut Xoshiro256, rows: usize, cols: usize) -> Mat {
+    assert!(rows >= cols);
+    let (q, _) = crate::linalg::householder_qr(&gen_mat(rng, rows, cols));
+    q
+}
+
+/// Random low-rank-plus-noise matrix: rank `r` signal with singular values
+/// decaying as 1/k plus `noise`-scaled Gaussian perturbation. This mimics
+/// the telemetry structure PRONTO assumes.
+pub fn gen_low_rank(rng: &mut Xoshiro256, rows: usize, cols: usize, r: usize, noise: f64) -> Mat {
+    let r = r.min(rows.min(cols));
+    let u = gen_orthonormal(rng, rows, r);
+    let v = gen_orthonormal(rng, cols, r);
+    let sig: Vec<f64> = (1..=r).map(|k| 10.0 / k as f64).collect();
+    let mut m = u.mul_diag(&sig).matmul(&v.transpose());
+    if noise > 0.0 {
+        for x in m.data_mut() {
+            *x += noise * rng.normal();
+        }
+    }
+    m
+}
+
+/// Random descending non-negative spectrum of length `r` (σ₁ ≥ … ≥ σ_r ≥ 0).
+pub fn gen_spectrum(rng: &mut Xoshiro256, r: usize) -> Vec<f64> {
+    let mut s: Vec<f64> = (0..r).map(|_| rng.next_f64() * 10.0).collect();
+    s.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::orthonormality_error;
+
+    #[test]
+    fn forall_reports_failures() {
+        let res = std::panic::catch_unwind(|| {
+            forall("always-fails", |_| Err("nope".into()));
+        });
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn gen_orthonormal_is_orthonormal() {
+        forall("orthonormal generator", |rng| {
+            let m = 4 + rng.gen_range(30);
+            let n = 1 + rng.gen_range(m.min(8));
+            let q = gen_orthonormal(rng, m, n);
+            let err = orthonormality_error(&q);
+            if err < 1e-9 {
+                Ok(())
+            } else {
+                Err(format!("orthonormality error {err}"))
+            }
+        });
+    }
+
+    #[test]
+    fn gen_spectrum_descending() {
+        forall("spectrum generator", |rng| {
+            let r = 1 + rng.gen_range(10);
+            let s = gen_spectrum(rng, r);
+            if s.windows(2).all(|w| w[0] >= w[1]) {
+                Ok(())
+            } else {
+                Err(format!("not descending: {s:?}"))
+            }
+        });
+    }
+}

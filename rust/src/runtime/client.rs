@@ -1,0 +1,286 @@
+//! The PJRT client wrapper: compile HLO-text artifacts once, execute many.
+//!
+//! Pattern from /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. The jax side lowers with
+//! `return_tuple=True`, so every artifact's output is one tuple literal.
+
+use super::manifest::{ArtifactEntry, Manifest, TensorSpec};
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// A tensor crossing the runtime boundary (host side, f32 or i32 payload).
+#[derive(Debug, Clone)]
+pub enum HostTensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32(v) => v.len(),
+            HostTensor::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(v) => Ok(v),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32(v) => Ok(v),
+            _ => bail!("expected i32 tensor"),
+        }
+    }
+}
+
+/// One compiled artifact ready to execute.
+struct LoadedArtifact {
+    entry: ArtifactEntry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The runtime: one PJRT CPU client plus the compiled executables.
+///
+/// Compilation happens once at construction (or lazily per artifact);
+/// `execute` is the request-path entry and does no Python, no disk I/O.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    loaded: BTreeMap<String, LoadedArtifact>,
+}
+
+// SAFETY: the PJRT C API is documented thread-safe (clients, loaded
+// executables, and buffers may be used from multiple threads); the wrapper
+// types in the `xla` crate are !Send/!Sync only because they hold raw
+// pointers. `XlaRuntime` never exposes interior mutation after
+// construction — `execute` is &self and PJRT serializes internally.
+unsafe impl Send for XlaRuntime {}
+unsafe impl Sync for XlaRuntime {}
+
+impl XlaRuntime {
+    /// Load the manifest from `dir` and compile all artifacts eagerly.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("creating PJRT CPU client: {e:?}"))?;
+        let mut rt = Self {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            loaded: BTreeMap::new(),
+        };
+        let names: Vec<String> = rt.manifest.artifacts.keys().cloned().collect();
+        for name in names {
+            rt.compile_artifact(&name)?;
+        }
+        Ok(rt)
+    }
+
+    /// Load from the default artifacts location.
+    pub fn load_default() -> Result<Self> {
+        Self::load(&super::artifacts_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn compile_artifact(&mut self, name: &str) -> Result<()> {
+        let entry = self.manifest.artifact(name)?.clone();
+        let path = self.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        self.loaded.insert(name.to_string(), LoadedArtifact { entry, exe });
+        Ok(())
+    }
+
+    fn literal_for(spec: &TensorSpec, tensor: &HostTensor) -> Result<xla::Literal> {
+        if tensor.len() != spec.elements() {
+            bail!(
+                "input '{}' has {} elements, expected {} (shape {:?})",
+                spec.name,
+                tensor.len(),
+                spec.elements(),
+                spec.shape
+            );
+        }
+        let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+        let lit = match (tensor, spec.dtype.as_str()) {
+            (HostTensor::F32(v), "f32") => xla::Literal::vec1(v.as_slice()),
+            (HostTensor::I32(v), "s32") => xla::Literal::vec1(v.as_slice()),
+            (t, d) => bail!("dtype mismatch for '{}': host {t:?} vs spec {d}", spec.name),
+        };
+        if dims.is_empty() {
+            // Scalar: reshape the 1-element vector to rank 0.
+            lit.reshape(&[]).map_err(|e| anyhow!("scalar reshape: {e:?}"))
+        } else {
+            lit.reshape(&dims)
+                .map_err(|e| anyhow!("reshape to {dims:?}: {e:?}"))
+        }
+    }
+
+    fn tensor_from_literal(spec: &TensorSpec, lit: &xla::Literal) -> Result<HostTensor> {
+        match spec.dtype.as_str() {
+            "f32" => Ok(HostTensor::F32(
+                lit.to_vec::<f32>().map_err(|e| anyhow!("f32 readback: {e:?}"))?,
+            )),
+            "s32" => Ok(HostTensor::I32(
+                lit.to_vec::<i32>().map_err(|e| anyhow!("i32 readback: {e:?}"))?,
+            )),
+            d => bail!("unsupported output dtype {d}"),
+        }
+    }
+
+    /// Execute an artifact with positional inputs (row-major host buffers,
+    /// order/shape per the manifest). Returns one [`HostTensor`] per output.
+    pub fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let art = self
+            .loaded
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not loaded"))?;
+        if inputs.len() != art.entry.inputs.len() {
+            bail!(
+                "artifact '{name}' takes {} inputs, got {}",
+                art.entry.inputs.len(),
+                inputs.len()
+            );
+        }
+        let literals: Vec<xla::Literal> = art
+            .entry
+            .inputs
+            .iter()
+            .zip(inputs)
+            .map(|(spec, t)| Self::literal_for(spec, t))
+            .collect::<Result<_>>()?;
+
+        let result = art
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let mut tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("sync readback: {e:?}"))?;
+        // jax lowered with return_tuple=True: decompose the tuple.
+        let parts = tuple
+            .decompose_tuple()
+            .map_err(|e| anyhow!("tuple decompose: {e:?}"))?;
+        if parts.len() != art.entry.outputs.len() {
+            bail!(
+                "artifact '{name}' returned {} outputs, manifest says {}",
+                parts.len(),
+                art.entry.outputs.len()
+            );
+        }
+        art.entry
+            .outputs
+            .iter()
+            .zip(parts.iter())
+            .map(|(spec, lit)| Self::tensor_from_literal(spec, lit))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts_available;
+
+    fn runtime() -> Option<std::sync::Arc<XlaRuntime>> {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return None;
+        }
+        crate::runtime::shared_runtime()
+    }
+
+    #[test]
+    fn loads_and_compiles_all_artifacts() {
+        let Some(rt) = runtime() else { return };
+        assert!(rt.manifest().artifacts.len() >= 3);
+    }
+
+    #[test]
+    fn fpca_update_executes_and_matches_native() {
+        let Some(rt) = runtime() else { return };
+        let cfg = rt.manifest().config;
+        let (d, r, b) = (cfg.dim, cfg.rank, cfg.block);
+
+        // Random block; empty previous estimate.
+        let mut rng = crate::rng::Xoshiro256::seed_from_u64(77);
+        let block_rm: Vec<f32> = (0..d * b).map(|_| rng.normal() as f32).collect();
+        let inputs = vec![
+            HostTensor::F32(vec![0.0; d * r]),
+            HostTensor::F32(vec![0.0; r]),
+            HostTensor::F32(block_rm.clone()),
+            HostTensor::F32(vec![1.0]),
+        ];
+        let out = rt.execute("fpca_update", &inputs).expect("execute");
+        assert_eq!(out.len(), 2);
+        let s_new = out[1].as_f32().unwrap();
+        assert_eq!(s_new.len(), r);
+
+        // Native oracle: truncated SVD of the block.
+        let mut block = crate::linalg::Mat::zeros(d, b);
+        for i in 0..d {
+            for j in 0..b {
+                block.set(i, j, block_rm[i * b + j] as f64);
+            }
+        }
+        let svd = crate::linalg::svd_truncated(&block, r);
+        for (xla_s, native_s) in s_new.iter().zip(svd.sigma.iter()) {
+            let rel = (f64::from(*xla_s) - native_s).abs() / native_s.max(1e-9);
+            assert!(rel < 0.05, "sigma mismatch: {xla_s} vs {native_s}");
+        }
+    }
+
+    #[test]
+    fn project_detect_executes() {
+        let Some(rt) = runtime() else { return };
+        let cfg = rt.manifest().config;
+        let (d, r, b, lag) = (cfg.dim, cfg.rank, cfg.block, cfg.lag);
+        // Identity-ish embedding on the first r coordinates.
+        let mut u = vec![0.0f32; d * r];
+        for j in 0..r {
+            u[j * r + j] = 1.0; // row-major (d, r): row j, col j
+        }
+        let inputs = vec![
+            HostTensor::F32(u),
+            HostTensor::F32(vec![1.0; r]),
+            HostTensor::F32(vec![0.5; b * d]),
+            HostTensor::F32(vec![0.0; r * lag]),
+            HostTensor::I32(vec![0]),
+        ];
+        let out = rt.execute("project_detect", &inputs).expect("execute");
+        assert_eq!(out.len(), 4);
+        assert_eq!(out[0].as_f32().unwrap().len(), b * r);
+        assert_eq!(out[1].as_f32().unwrap().len(), b);
+        // Constant stream: no rejections.
+        assert!(out[1].as_f32().unwrap().iter().all(|&x| x == 0.0));
+        assert_eq!(out[3].as_i32().unwrap()[0], b as i32);
+    }
+
+    #[test]
+    fn wrong_arity_is_an_error() {
+        let Some(rt) = runtime() else { return };
+        assert!(rt.execute("fpca_update", &[]).is_err());
+    }
+}

@@ -1,0 +1,343 @@
+//! Typed entry points over the raw runtime + the artifact-backed embedding.
+//!
+//! [`XlaFpca`] implements [`crate::baselines::StreamingEmbedding`] on top of
+//! the `fpca_update` artifact: it buffers observations into blocks (padding
+//! the feature vector to the compiled `dim`) and refreshes its `(U, Σ)`
+//! estimate by executing the AOT-compiled HLO — the production
+//! configuration where Python never runs. The native [`crate::fpca`] path
+//! remains the numerical oracle; `rust/tests/runtime_parity.rs` pins the
+//! two against each other.
+
+use super::client::{HostTensor, XlaRuntime};
+use crate::fpca::Subspace;
+use crate::linalg::Mat;
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// Artifact-backed FPCA-Edge (fixed rank, as compiled).
+pub struct XlaFpca {
+    rt: Arc<XlaRuntime>,
+    /// Logical feature dimension (≤ compiled dim; padded with zeros).
+    d: usize,
+    /// Compiled shapes.
+    cd: usize,
+    rank: usize,
+    block: usize,
+    forget: f32,
+    /// Current estimate, row-major (cd × rank) on the artifact side.
+    u: Vec<f32>,
+    s: Vec<f32>,
+    /// Block buffer, row-major (cd × block): element (i, j) at i*block+j.
+    buf: Vec<f32>,
+    buffered: usize,
+    blocks: usize,
+}
+
+impl XlaFpca {
+    /// `d` is the logical feature dimension; it must not exceed the
+    /// compiled dimension recorded in the manifest.
+    pub fn new(rt: Arc<XlaRuntime>, d: usize) -> Result<Self> {
+        let cfg = rt.manifest().config;
+        if d > cfg.dim {
+            bail!("feature dim {d} exceeds compiled dim {}", cfg.dim);
+        }
+        Ok(Self {
+            rt,
+            d,
+            cd: cfg.dim,
+            rank: cfg.rank,
+            block: cfg.block,
+            forget: 1.0,
+            u: vec![0.0; cfg.dim * cfg.rank],
+            s: vec![0.0; cfg.rank],
+            buf: vec![0.0; cfg.dim * cfg.block],
+            buffered: 0,
+            blocks: 0,
+        })
+    }
+
+    pub fn with_forget(mut self, forget: f64) -> Self {
+        self.forget = forget as f32;
+        self
+    }
+
+    /// Blocks processed so far.
+    pub fn blocks_processed(&self) -> usize {
+        self.blocks
+    }
+
+    fn flush_block(&mut self) -> Result<()> {
+        let inputs = vec![
+            HostTensor::F32(self.u.clone()),
+            HostTensor::F32(self.s.clone()),
+            HostTensor::F32(self.buf.clone()),
+            HostTensor::F32(vec![self.forget]),
+        ];
+        let out = self.rt.execute("fpca_update", &inputs)?;
+        self.u = out[0].as_f32()?.to_vec();
+        self.s = out[1].as_f32()?.to_vec();
+        self.buf.iter_mut().for_each(|x| *x = 0.0);
+        self.buffered = 0;
+        self.blocks += 1;
+        Ok(())
+    }
+}
+
+impl crate::baselines::StreamingEmbedding for XlaFpca {
+    fn observe(&mut self, y: &[f64]) {
+        assert_eq!(y.len(), self.d, "feature dim mismatch");
+        // Column `buffered` of the row-major (cd × block) buffer.
+        for (i, &v) in y.iter().enumerate() {
+            self.buf[i * self.block + self.buffered] = v as f32;
+        }
+        self.buffered += 1;
+        if self.buffered == self.block {
+            self.flush_block().expect("fpca_update artifact execution failed");
+        }
+    }
+
+    fn estimate(&self) -> Subspace {
+        if self.blocks == 0 {
+            return Subspace::empty(self.d);
+        }
+        // Row-major (cd × rank) → column-major Mat over the logical d rows.
+        let mut u = Mat::zeros(self.d, self.rank);
+        for i in 0..self.d {
+            for j in 0..self.rank {
+                u.set(i, j, f64::from(self.u[i * self.rank + j]));
+            }
+        }
+        let sigma: Vec<f64> = self.s.iter().map(|&x| f64::from(x)).collect();
+        Subspace::new(u, sigma)
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn name(&self) -> &'static str {
+        "PRONTO-XLA"
+    }
+
+    fn has_spectrum(&self) -> bool {
+        true
+    }
+
+    fn version(&self) -> Option<u64> {
+        Some(self.blocks as u64)
+    }
+}
+
+/// Execute the `merge_subspaces` artifact on two host-side estimates.
+/// Both must have the compiled rank; dimensions are padded to the compiled
+/// dim.
+pub fn xla_merge(
+    rt: &XlaRuntime,
+    s1: &Subspace,
+    s2: &Subspace,
+    forget: f64,
+) -> Result<Subspace> {
+    let cfg = rt.manifest().config;
+    let (cd, r) = (cfg.dim, cfg.rank);
+    if s1.dim() > cd || s2.dim() > cd {
+        bail!("subspace dim exceeds compiled dim {cd}");
+    }
+    if s1.rank() != r || s2.rank() != r {
+        bail!("merge artifact requires rank {r} on both sides");
+    }
+    let pack = |s: &Subspace| -> (Vec<f32>, Vec<f32>) {
+        let mut u = vec![0.0f32; cd * r];
+        for i in 0..s.dim() {
+            for j in 0..r {
+                u[i * r + j] = s.u.get(i, j) as f32;
+            }
+        }
+        let sig: Vec<f32> = s.sigma.iter().map(|&x| x as f32).collect();
+        (u, sig)
+    };
+    let (u1, sg1) = pack(s1);
+    let (u2, sg2) = pack(s2);
+    let out = rt.execute(
+        "merge_subspaces",
+        &[
+            HostTensor::F32(u1),
+            HostTensor::F32(sg1),
+            HostTensor::F32(u2),
+            HostTensor::F32(sg2),
+            HostTensor::F32(vec![forget as f32]),
+        ],
+    )?;
+    let um = out[0].as_f32()?;
+    let sm = out[1].as_f32()?;
+    let d = s1.dim();
+    let mut u = Mat::zeros(d, r);
+    for i in 0..d {
+        for j in 0..r {
+            u.set(i, j, f64::from(um[i * r + j]));
+        }
+    }
+    Ok(Subspace::new(u, sm.iter().map(|&x| f64::from(x)).collect()))
+}
+
+/// Batched Reject-Job over the `project_detect` artifact: holds the z-score
+/// filter state across calls (threading `buf`/`seen` exactly like the
+/// native detector).
+pub struct XlaProjectDetect {
+    rt: Arc<XlaRuntime>,
+    buf: Vec<f32>,
+    seen: i32,
+    b: usize,
+    d: usize,
+    r: usize,
+}
+
+impl XlaProjectDetect {
+    pub fn new(rt: Arc<XlaRuntime>) -> Self {
+        let cfg = rt.manifest().config;
+        Self {
+            buf: vec![0.0; cfg.rank * cfg.lag],
+            seen: 0,
+            b: cfg.block,
+            d: cfg.dim,
+            r: cfg.rank,
+            rt,
+        }
+    }
+
+    /// Process one block of observations (row-major (b × d)) against the
+    /// estimate; returns (flags row-major (b × r), reject (b)).
+    pub fn run_block(
+        &mut self,
+        estimate: &Subspace,
+        y_block: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        assert_eq!(y_block.len(), self.b * self.d);
+        let mut u = vec![0.0f32; self.d * self.r];
+        for i in 0..estimate.dim().min(self.d) {
+            for j in 0..estimate.rank().min(self.r) {
+                u[i * self.r + j] = estimate.u.get(i, j) as f32;
+            }
+        }
+        let mut s = vec![0.0f32; self.r];
+        for (j, sv) in estimate.sigma.iter().take(self.r).enumerate() {
+            s[j] = *sv as f32;
+        }
+        let out = self.rt.execute(
+            "project_detect",
+            &[
+                HostTensor::F32(u),
+                HostTensor::F32(s),
+                HostTensor::F32(y_block.to_vec()),
+                HostTensor::F32(self.buf.clone()),
+                HostTensor::I32(vec![self.seen]),
+            ],
+        )?;
+        let flags = out[0].as_f32()?.to_vec();
+        let reject = out[1].as_f32()?.to_vec();
+        self.buf = out[2].as_f32()?.to_vec();
+        self.seen = out[3].as_i32()?[0];
+        Ok((flags, reject))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::StreamingEmbedding;
+    use crate::runtime::artifacts_available;
+
+    fn runtime() -> Option<Arc<XlaRuntime>> {
+        if !artifacts_available() {
+            return None;
+        }
+        crate::runtime::shared_runtime()
+    }
+
+    #[test]
+    fn xla_fpca_tracks_low_rank_stream() {
+        let Some(rt) = runtime() else { return };
+        let d = rt.manifest().config.dim;
+        let mut rng = crate::rng::Xoshiro256::seed_from_u64(5);
+        let data = crate::proptest::gen_low_rank(&mut rng, d, 256, 3, 0.01);
+        let mut xf = XlaFpca::new(rt, d).unwrap();
+        for t in 0..data.cols() {
+            xf.observe(data.col(t));
+        }
+        assert!(xf.blocks_processed() >= 8);
+        let est = xf.estimate();
+        let truth = crate::linalg::svd_truncated(&data, 3);
+        let dist = crate::linalg::subspace_distance(&est.truncate(3).u, &truth.u);
+        assert!(dist < 0.2, "artifact-tracked subspace off: {dist}");
+    }
+
+    #[test]
+    fn xla_merge_matches_native() {
+        let Some(rt) = runtime() else { return };
+        let cfg = rt.manifest().config;
+        let mut rng = crate::rng::Xoshiro256::seed_from_u64(9);
+        let s1 = Subspace::new(
+            crate::proptest::gen_orthonormal(&mut rng, cfg.dim, cfg.rank),
+            vec![4.0, 3.0, 2.0, 1.0],
+        );
+        let s2 = Subspace::new(
+            crate::proptest::gen_orthonormal(&mut rng, cfg.dim, cfg.rank),
+            vec![2.0, 1.5, 1.0, 0.5],
+        );
+        let xla = xla_merge(&rt, &s1, &s2, 1.0).unwrap();
+        let native = crate::fpca::merge_subspaces(
+            &s1,
+            &s2,
+            crate::fpca::MergeOptions::rank(cfg.rank),
+        );
+        for (a, b) in xla.sigma.iter().zip(native.sigma.iter()) {
+            let rel = (a - b).abs() / b.max(1e-9);
+            assert!(rel < 0.03, "sigma {a} vs {b}");
+        }
+        let dist = crate::linalg::subspace_distance(&xla.u, &native.u);
+        assert!(dist < 0.05, "merged span mismatch {dist}");
+    }
+
+    #[test]
+    fn xla_project_detect_matches_native_flags() {
+        let Some(rt) = runtime() else { return };
+        let cfg = rt.manifest().config;
+        let (d, r, b) = (cfg.dim, cfg.rank, cfg.block);
+        let mut rng = crate::rng::Xoshiro256::seed_from_u64(13);
+        let u = crate::proptest::gen_orthonormal(&mut rng, d, r);
+        let est = Subspace::new(u.clone(), vec![4.0, 3.0, 2.0, 1.0]);
+
+        // Stream: steady noise plus one aligned spike per block after warmup.
+        let mut y = vec![0.0f32; b * d];
+        for t in 0..b {
+            for i in 0..d {
+                y[t * d + i] = (0.05 * rng.normal()) as f32;
+            }
+        }
+        for i in 0..d {
+            y[20 * d + i] += (40.0 * u.get(i, 0)) as f32;
+        }
+
+        let mut xpd = XlaProjectDetect::new(rt);
+        let (_, reject) = xpd.run_block(&est, &y).unwrap();
+
+        // Native path over the same stream.
+        let mut rj = crate::scheduler::RejectJob::new(crate::scheduler::RejectConfig {
+            max_rank: r,
+            ..Default::default()
+        });
+        let mut native_reject = Vec::new();
+        for t in 0..b {
+            let row: Vec<f64> = (0..d).map(|i| f64::from(y[t * d + i])).collect();
+            native_reject.push(rj.observe(&est, &row) as u8 as f32);
+        }
+        assert_eq!(reject.len(), native_reject.len());
+        for (t, (a, nb)) in reject.iter().zip(native_reject.iter()).enumerate() {
+            assert_eq!(a, nb, "rejection mismatch at t={t}");
+        }
+        assert!(reject[20] == 1.0, "aligned spike must reject");
+    }
+}

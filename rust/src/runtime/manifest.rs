@@ -1,0 +1,189 @@
+//! Artifact manifest (`artifacts/manifest.json`) parsing.
+
+use crate::ser::{parse_json, JsonValue};
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Tensor spec within an artifact signature.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// "f32" (default) or "s32".
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    /// Total element count.
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One compiled artifact: file name plus typed signature.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Compile-time configuration the artifacts were lowered with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ArtifactConfig {
+    pub dim: usize,
+    pub rank: usize,
+    pub block: usize,
+    pub lag: usize,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub config: ArtifactConfig,
+    pub artifacts: BTreeMap<String, ArtifactEntry>,
+}
+
+fn tensor_specs(v: &JsonValue) -> Result<Vec<TensorSpec>> {
+    v.as_array()
+        .ok_or_else(|| anyhow!("expected array of tensor specs"))?
+        .iter()
+        .map(|t| {
+            let name = t
+                .get("name")
+                .and_then(JsonValue::as_str)
+                .ok_or_else(|| anyhow!("tensor spec missing name"))?
+                .to_string();
+            let shape = t
+                .get("shape")
+                .and_then(JsonValue::as_array)
+                .ok_or_else(|| anyhow!("tensor spec missing shape"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<Vec<_>>>()?;
+            let dtype = t
+                .get("dtype")
+                .and_then(JsonValue::as_str)
+                .unwrap_or("f32")
+                .to_string();
+            Ok(TensorSpec { name, shape, dtype })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load and parse `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Parse manifest JSON text.
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = parse_json(text).map_err(|e| anyhow!("manifest json: {e}"))?;
+        let cfg = v.get("config").ok_or_else(|| anyhow!("missing config"))?;
+        let get = |k: &str| -> Result<usize> {
+            cfg.get(k)
+                .and_then(JsonValue::as_usize)
+                .ok_or_else(|| anyhow!("config missing {k}"))
+        };
+        let config = ArtifactConfig {
+            dim: get("dim")?,
+            rank: get("rank")?,
+            block: get("block")?,
+            lag: get("lag")?,
+        };
+        let mut artifacts = BTreeMap::new();
+        let arts = v
+            .get("artifacts")
+            .and_then(JsonValue::as_object)
+            .ok_or_else(|| anyhow!("missing artifacts"))?;
+        for (name, entry) in arts {
+            let file = entry
+                .get("file")
+                .and_then(JsonValue::as_str)
+                .ok_or_else(|| anyhow!("artifact {name} missing file"))?
+                .to_string();
+            artifacts.insert(
+                name.clone(),
+                ArtifactEntry {
+                    name: name.clone(),
+                    file,
+                    inputs: tensor_specs(
+                        entry.get("inputs").ok_or_else(|| anyhow!("no inputs"))?,
+                    )?,
+                    outputs: tensor_specs(
+                        entry.get("outputs").ok_or_else(|| anyhow!("no outputs"))?,
+                    )?,
+                },
+            );
+        }
+        Ok(Manifest { config, artifacts })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "config": {"dim": 52, "rank": 4, "block": 32, "lag": 10, "dtype": "f32"},
+      "artifacts": {
+        "fpca_update": {
+          "file": "fpca_update.hlo.txt",
+          "inputs": [
+            {"name": "u", "shape": [52, 4]},
+            {"name": "s", "shape": [4]},
+            {"name": "block", "shape": [52, 32]},
+            {"name": "forget", "shape": []}
+          ],
+          "outputs": [
+            {"name": "u_new", "shape": [52, 4]},
+            {"name": "s_new", "shape": [4]}
+          ]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample_manifest() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.config, ArtifactConfig { dim: 52, rank: 4, block: 32, lag: 10 });
+        let a = m.artifact("fpca_update").unwrap();
+        assert_eq!(a.inputs.len(), 4);
+        assert_eq!(a.inputs[0].shape, vec![52, 4]);
+        assert_eq!(a.inputs[3].shape, Vec::<usize>::new());
+        assert_eq!(a.inputs[3].elements(), 1);
+        assert_eq!(a.outputs[1].name, "s_new");
+        assert_eq!(a.inputs[0].dtype, "f32");
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_when_present() {
+        let dir = crate::runtime::artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return; // artifacts not built yet
+        }
+        let m = Manifest::load(&dir).unwrap();
+        for name in ["fpca_update", "merge_subspaces", "project_detect"] {
+            let a = m.artifact(name).unwrap();
+            assert!(dir.join(&a.file).exists(), "{} missing", a.file);
+        }
+    }
+}

@@ -1,0 +1,62 @@
+//! PJRT runtime: load and execute the AOT-compiled HLO artifacts.
+//!
+//! The bridge between the build-time Python world and the request-path
+//! Rust world: [`manifest`] parses `artifacts/manifest.json` (with the
+//! in-crate JSON parser — no serde in this environment), [`client`] wraps
+//! the `xla` crate (`PjRtClient::cpu()` → `HloModuleProto::from_text_file`
+//! → compile → execute), and [`engine`] exposes typed entry points for the
+//! three artifacts (`fpca_update`, `merge_subspaces`, `project_detect`)
+//! plus an [`engine::XlaFpca`] adapter implementing
+//! [`crate::baselines::StreamingEmbedding`] so the artifact-backed path
+//! drops into every scheduler/bench unchanged.
+
+pub mod client;
+pub mod engine;
+pub mod manifest;
+
+pub use client::XlaRuntime;
+pub use engine::{xla_merge, XlaFpca, XlaProjectDetect};
+pub use manifest::{ArtifactEntry, Manifest};
+
+/// Default artifacts directory, relative to the repo root.
+pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";
+
+/// Locate the artifacts directory: `$PRONTO_ARTIFACTS`, else `artifacts/`
+/// relative to the current dir, else relative to the crate manifest dir.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("PRONTO_ARTIFACTS") {
+        return p.into();
+    }
+    let cwd = std::path::PathBuf::from(DEFAULT_ARTIFACTS_DIR);
+    if cwd.join("manifest.json").exists() {
+        return cwd;
+    }
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(DEFAULT_ARTIFACTS_DIR)
+}
+
+/// True when compiled artifacts are present (tests gate on this so the
+/// suite still passes before `make artifacts`).
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+/// Process-wide shared runtime. XLA compilation of the artifacts is
+/// expensive; tests, benches, and the CLI all share this single compiled
+/// instance. Returns `None` when artifacts are absent or compilation fails
+/// (callers degrade to the native path).
+pub fn shared_runtime() -> Option<std::sync::Arc<XlaRuntime>> {
+    use once_cell::sync::Lazy;
+    static RT: Lazy<Option<std::sync::Arc<XlaRuntime>>> = Lazy::new(|| {
+        if !artifacts_available() {
+            return None;
+        }
+        match XlaRuntime::load_default() {
+            Ok(rt) => Some(std::sync::Arc::new(rt)),
+            Err(e) => {
+                eprintln!("warn: XLA runtime unavailable ({e}); using native path");
+                None
+            }
+        }
+    });
+    RT.clone()
+}

@@ -1,0 +1,50 @@
+//! Job/task model (the paper uses the terms interchangeably, §4).
+
+/// Unique job identifier.
+pub type JobId = u64;
+
+/// A schedulable unit of work arriving at the data center.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Job {
+    pub id: JobId,
+    /// Arrival timestep (20 s trace ticks).
+    pub arrival: usize,
+    /// Nominal duration in timesteps once started.
+    pub duration: usize,
+    /// Relative CPU demand (1.0 = one nominal slot).
+    pub cpu_demand: f64,
+}
+
+impl Job {
+    pub fn new(id: JobId, arrival: usize, duration: usize, cpu_demand: f64) -> Self {
+        assert!(duration >= 1);
+        assert!(cpu_demand > 0.0);
+        Self { id, arrival, duration, cpu_demand }
+    }
+}
+
+/// Final disposition of a job in the simulator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobOutcome {
+    /// Accepted by a node at the given timestep.
+    Accepted { node: usize, at: usize },
+    /// Rejected by every probed node.
+    Rejected { at: usize },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_construction() {
+        let j = Job::new(1, 0, 10, 1.5);
+        assert_eq!(j.duration, 10);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_duration_rejected() {
+        let _ = Job::new(1, 0, 0, 1.0);
+    }
+}

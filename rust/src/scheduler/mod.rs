@@ -1,0 +1,24 @@
+//! The PRONTO scheduler (paper §6, Algorithms 1–2).
+//!
+//! * [`reject`] — Algorithm 1 (`Reject-Job`): project the incoming metric
+//!   vector onto the node's subspace iterate, detect per-projection spikes
+//!   with the z-score filter, and raise the **rejection signal** when the
+//!   singular-value-weighted spike sum crosses the threshold.
+//! * [`node`] — [`NodeScheduler`]: one node's full admission pipeline
+//!   (embedding tracker + Reject-Job + rejection-signal window), generic
+//!   over any [`crate::baselines::StreamingEmbedding`].
+//! * [`job`] — the job/task model (paper treats "job" ≡ "task").
+//! * [`policy`] — admission policies for the simulator: PRONTO, always-
+//!   accept, random, and CPU-Ready-oracle (upper bound).
+
+mod job;
+mod node;
+mod policy;
+mod reject;
+mod standardize;
+
+pub use job::{Job, JobId, JobOutcome};
+pub use node::{NodeScheduler, NodeStats};
+pub use policy::{Admission, CpuReadyOracle, ProntoPolicy, RandomPolicy, ThresholdPolicy};
+pub use reject::{RejectConfig, RejectJob};
+pub use standardize::OnlineStandardizer;

@@ -1,0 +1,243 @@
+//! Per-node admission pipeline: streaming embedding + Reject-Job.
+//!
+//! A [`NodeScheduler`] is the complete local decision stack the paper
+//! describes (Figure 3): each incoming telemetry vector updates the
+//! embedding tracker (block-wise) and flows through Reject-Job to produce
+//! the admission decision for that timestep — no communication involved.
+
+use super::{OnlineStandardizer, RejectConfig, RejectJob};
+use crate::baselines::StreamingEmbedding;
+use crate::fpca::{FpcaEdge, FpcaEdgeConfig, Subspace};
+
+/// Rolling statistics of one node's admission behaviour.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NodeStats {
+    /// Timesteps observed.
+    pub steps: usize,
+    /// Timesteps with the rejection signal raised.
+    pub rejected_steps: usize,
+    /// Jobs offered to this node.
+    pub jobs_offered: usize,
+    /// Jobs accepted.
+    pub jobs_accepted: usize,
+}
+
+impl NodeStats {
+    /// Fraction of time the node refused work (paper: "downtime").
+    pub fn downtime(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.rejected_steps as f64 / self.steps as f64
+        }
+    }
+
+    /// Fraction of offered jobs accepted.
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.jobs_offered == 0 {
+            1.0
+        } else {
+            self.jobs_accepted as f64 / self.jobs_offered as f64
+        }
+    }
+}
+
+/// One node's full local scheduling stack, generic over the embedding
+/// method (PRONTO's FPCA-Edge or any §7 baseline).
+pub struct NodeScheduler<E: StreamingEmbedding = FpcaEdge> {
+    embedding: E,
+    reject: RejectJob,
+    /// Online per-feature z-scaling ahead of the embedding (None = feed
+    /// raw vectors; see [`OnlineStandardizer`] for why the default is on).
+    standardizer: Option<OnlineStandardizer>,
+    /// Cached copy of the embedding's estimate, refreshed only when
+    /// [`StreamingEmbedding::version`] changes (block methods refresh once
+    /// per block — cloning the subspace every timestep dominated the hot
+    /// path before this cache; see EXPERIMENTS.md §Perf).
+    cached_estimate: Subspace,
+    cached_version: Option<u64>,
+    /// Rejection signal at the latest observed timestep.
+    raised: bool,
+    stats: NodeStats,
+}
+
+impl NodeScheduler<FpcaEdge> {
+    /// Standard PRONTO node: FPCA-Edge embedding with default parameters.
+    pub fn new(dim: usize, cfg: RejectConfig) -> Self {
+        let fpca = FpcaEdge::new(dim, FpcaEdgeConfig::default());
+        Self::with_embedding(fpca, cfg)
+    }
+}
+
+impl<E: StreamingEmbedding> NodeScheduler<E> {
+    /// Node with an explicit embedding engine (used for the §7 baselines).
+    pub fn with_embedding(embedding: E, cfg: RejectConfig) -> Self {
+        let dim = embedding.dim();
+        Self {
+            cached_estimate: Subspace::empty(dim),
+            cached_version: None,
+            embedding,
+            reject: RejectJob::new(cfg),
+            standardizer: Some(OnlineStandardizer::new(dim)),
+            raised: false,
+            stats: NodeStats::default(),
+        }
+    }
+
+    /// Disable the input standardizer (feed raw metric vectors).
+    pub fn without_standardizer(mut self) -> Self {
+        self.standardizer = None;
+        self
+    }
+
+    /// Feed the telemetry vector for the current timestep; returns `true`
+    /// when the node can ACCEPT a job arriving now (i.e. signal not raised).
+    pub fn observe(&mut self, y: &[f64]) -> bool {
+        // Refresh the cached estimate only when the embedding advanced
+        // (block methods: once per block). Methods reporting version None
+        // refresh every step.
+        let version = self.embedding.version();
+        if version.is_none() || version != self.cached_version {
+            self.cached_estimate = self.embedding.estimate();
+            self.cached_version = version;
+        }
+        // Standardize (borrowed scratch, no allocation), then Reject-Job
+        // (uses the estimate as of *before* this sample — the iterate only
+        // refreshes at block boundaries anyway).
+        let raised = match &mut self.standardizer {
+            Some(st) => {
+                let z = st.transform(y);
+                let raised = self.reject.observe(&self.cached_estimate, z);
+                self.embedding.observe(z);
+                raised
+            }
+            None => {
+                let raised = self.reject.observe(&self.cached_estimate, y);
+                self.embedding.observe(y);
+                raised
+            }
+        };
+        self.raised = raised;
+        self.stats.steps += 1;
+        if self.raised {
+            self.stats.rejected_steps += 1;
+        }
+        !self.raised
+    }
+
+    /// Offer a job at the current timestep; bookkeeping + decision.
+    pub fn offer_job(&mut self) -> bool {
+        self.stats.jobs_offered += 1;
+        if !self.raised {
+            self.stats.jobs_accepted += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Rejection signal at the latest timestep.
+    pub fn rejection_raised(&self) -> bool {
+        self.raised
+    }
+
+    /// Latest projections (diagnostics; Figure 4a).
+    pub fn projections(&self) -> &[f64] {
+        self.reject.projections()
+    }
+
+    /// Current subspace estimate.
+    pub fn estimate(&self) -> Subspace {
+        self.embedding.estimate()
+    }
+
+    /// Embedding engine (for federation pulls/pushes).
+    pub fn embedding(&self) -> &E {
+        &self.embedding
+    }
+
+    pub fn embedding_mut(&mut self) -> &mut E {
+        &mut self.embedding
+    }
+
+    pub fn stats(&self) -> NodeStats {
+        self.stats
+    }
+
+    /// Method tag ("PRONTO", "SP", "FD", "PM").
+    pub fn method(&self) -> &'static str {
+        self.embedding.name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::Spirit;
+    use crate::telemetry::{GeneratorConfig, TraceGenerator};
+
+    #[test]
+    fn node_accepts_during_calm_trace() {
+        let gen = TraceGenerator::new(
+            GeneratorConfig { episode_hazard: 0.0, ..Default::default() },
+            7,
+        );
+        let trace = gen.generate_vm(0, 400);
+        let mut node = NodeScheduler::new(trace.dim(), RejectConfig::default());
+        let mut accepts = 0;
+        for t in 0..trace.len() {
+            if node.observe(trace.features(t)) {
+                accepts += 1;
+            }
+        }
+        // Calm trace: vast majority of steps acceptable.
+        assert!(accepts as f64 / trace.len() as f64 > 0.85, "accepts={accepts}");
+    }
+
+    #[test]
+    fn node_raises_signal_sometimes_on_contended_trace() {
+        let gen = TraceGenerator::new(
+            GeneratorConfig { episode_hazard: 0.03, ..Default::default() },
+            11,
+        );
+        let trace = gen.generate_vm(0, 2000);
+        let mut node = NodeScheduler::new(trace.dim(), RejectConfig::default());
+        for t in 0..trace.len() {
+            node.observe(trace.features(t));
+        }
+        let down = node.stats().downtime();
+        assert!(down > 0.0, "rejection signal never raised");
+        assert!(down < 0.5, "downtime too high: {down}");
+    }
+
+    #[test]
+    fn offer_job_respects_signal_and_counts() {
+        let gen = TraceGenerator::new(GeneratorConfig::default(), 3);
+        let trace = gen.generate_vm(2, 600);
+        let mut node = NodeScheduler::new(trace.dim(), RejectConfig::default());
+        let mut offered = 0;
+        for t in 0..trace.len() {
+            node.observe(trace.features(t));
+            if t % 10 == 0 {
+                let ok = node.offer_job();
+                offered += 1;
+                assert_eq!(ok, !node.rejection_raised());
+            }
+        }
+        assert_eq!(node.stats().jobs_offered, offered);
+        assert!(node.stats().jobs_accepted <= offered);
+    }
+
+    #[test]
+    fn works_with_baseline_embedding() {
+        let gen = TraceGenerator::new(GeneratorConfig::default(), 5);
+        let trace = gen.generate_vm(1, 300);
+        let spirit = Spirit::new(trace.dim(), crate::baselines::SpiritConfig::default());
+        let mut node = NodeScheduler::with_embedding(spirit, RejectConfig::default());
+        for t in 0..trace.len() {
+            node.observe(trace.features(t));
+        }
+        assert_eq!(node.method(), "SP");
+        assert_eq!(node.stats().steps, 300);
+    }
+}

@@ -1,0 +1,158 @@
+//! Admission policies for the simulator.
+//!
+//! The paper's evaluation compares rejection-signal scheduling against the
+//! implicit alternatives: accepting everything, rejecting at random (what FD
+//! degenerates to, §7.1), and an oracle that sees the true CPU Ready value.
+//! All are expressed through the [`Admission`] trait so the simulator can
+//! sweep policies uniformly.
+
+use crate::rng::Xoshiro256;
+
+/// A per-node admission policy: consumes the node's telemetry each timestep
+/// and answers "can this node take a job right now?".
+pub trait Admission {
+    /// Observe the metric vector for the current timestep; returns `true`
+    /// when a job arriving now would be ACCEPTED.
+    fn observe(&mut self, y: &[f64]) -> bool;
+
+    /// Policy tag for tables.
+    fn name(&self) -> &'static str;
+}
+
+/// PRONTO (or any embedding-backed node) as an [`Admission`] policy.
+pub struct ProntoPolicy<E: crate::baselines::StreamingEmbedding> {
+    node: super::NodeScheduler<E>,
+}
+
+impl<E: crate::baselines::StreamingEmbedding> ProntoPolicy<E> {
+    pub fn new(node: super::NodeScheduler<E>) -> Self {
+        Self { node }
+    }
+
+    pub fn node(&self) -> &super::NodeScheduler<E> {
+        &self.node
+    }
+}
+
+impl<E: crate::baselines::StreamingEmbedding> Admission for ProntoPolicy<E> {
+    fn observe(&mut self, y: &[f64]) -> bool {
+        self.node.observe(y)
+    }
+
+    fn name(&self) -> &'static str {
+        self.node.method()
+    }
+}
+
+/// Accept always / reject with fixed probability (the "random scheduler"
+/// the paper likens FD's behaviour to).
+pub struct RandomPolicy {
+    rng: Xoshiro256,
+    reject_prob: f64,
+}
+
+impl RandomPolicy {
+    pub fn new(reject_prob: f64, seed: u64) -> Self {
+        assert!((0.0..=1.0).contains(&reject_prob));
+        Self { rng: Xoshiro256::seed_from_u64(seed), reject_prob }
+    }
+
+    /// Always-accept variant.
+    pub fn always_accept(seed: u64) -> Self {
+        Self::new(0.0, seed)
+    }
+}
+
+impl Admission for RandomPolicy {
+    fn observe(&mut self, _y: &[f64]) -> bool {
+        !self.rng.bernoulli(self.reject_prob)
+    }
+
+    fn name(&self) -> &'static str {
+        "RANDOM"
+    }
+}
+
+/// Oracle that rejects exactly when the *current* CPU Ready value exceeds
+/// the spike threshold — the information-upper-bound comparator (it reacts
+/// instantly but cannot see the future either).
+pub struct CpuReadyOracle {
+    /// Index of cpu.ready in the feature vector.
+    ready_idx: usize,
+    threshold: f64,
+}
+
+impl CpuReadyOracle {
+    pub fn new(ready_idx: usize, threshold: f64) -> Self {
+        Self { ready_idx, threshold }
+    }
+}
+
+impl Admission for CpuReadyOracle {
+    fn observe(&mut self, y: &[f64]) -> bool {
+        y[self.ready_idx] < self.threshold
+    }
+
+    fn name(&self) -> &'static str {
+        "ORACLE"
+    }
+}
+
+/// Static utilization-threshold policy (what CPU-utilization-based
+/// schedulers reduce to on a single node): reject when a chosen metric
+/// exceeds a fixed level.
+pub struct ThresholdPolicy {
+    metric_idx: usize,
+    threshold: f64,
+}
+
+impl ThresholdPolicy {
+    pub fn new(metric_idx: usize, threshold: f64) -> Self {
+        Self { metric_idx, threshold }
+    }
+}
+
+impl Admission for ThresholdPolicy {
+    fn observe(&mut self, y: &[f64]) -> bool {
+        y[self.metric_idx] < self.threshold
+    }
+
+    fn name(&self) -> &'static str {
+        "UTIL-THRESH"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_policy_rates() {
+        let mut p = RandomPolicy::new(0.3, 1);
+        let n = 10_000;
+        let accepts = (0..n).filter(|_| p.observe(&[0.0])).count();
+        let rate = accepts as f64 / n as f64;
+        assert!((rate - 0.7).abs() < 0.02, "rate={rate}");
+    }
+
+    #[test]
+    fn always_accept_never_rejects() {
+        let mut p = RandomPolicy::always_accept(2);
+        assert!((0..100).all(|_| p.observe(&[1.0])));
+    }
+
+    #[test]
+    fn oracle_tracks_threshold() {
+        let mut o = CpuReadyOracle::new(0, 500.0);
+        assert!(o.observe(&[499.0, 1.0]));
+        assert!(!o.observe(&[500.0, 1.0]));
+    }
+
+    #[test]
+    fn threshold_policy() {
+        let mut p = ThresholdPolicy::new(1, 80.0);
+        assert!(p.observe(&[0.0, 79.9]));
+        assert!(!p.observe(&[0.0, 85.0]));
+        assert_eq!(p.name(), "UTIL-THRESH");
+    }
+}

@@ -1,0 +1,114 @@
+//! Online per-feature standardization.
+//!
+//! Raw vSphere counters mix units (ms of CPU Ready, %, KB/s, counts), so an
+//! unscaled PCA is dominated by the largest-magnitude features. Every
+//! practical PCA pipeline scales features first; in a streaming setting the
+//! natural choice is a running Welford mean/variance per feature with
+//! z-scaling — O(d) state, one pass, no look-ahead. [`NodeScheduler`]
+//! applies this by default ahead of the embedding.
+//!
+//! [`NodeScheduler`]: super::NodeScheduler
+
+/// Streaming per-feature z-scaler.
+#[derive(Debug, Clone)]
+pub struct OnlineStandardizer {
+    n: f64,
+    mean: Vec<f64>,
+    m2: Vec<f64>,
+    /// Scratch output buffer.
+    out: Vec<f64>,
+}
+
+impl OnlineStandardizer {
+    pub fn new(dim: usize) -> Self {
+        Self { n: 0.0, mean: vec![0.0; dim], m2: vec![0.0; dim], out: vec![0.0; dim] }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.mean.len()
+    }
+
+    /// Observations consumed.
+    pub fn count(&self) -> u64 {
+        self.n as u64
+    }
+
+    /// Update the running moments with `y` and return the standardized
+    /// vector (borrowed scratch — copy if it must outlive the next call).
+    ///
+    /// Failure injection: real telemetry exporters emit NaN/∞ on counter
+    /// wrap or agent restart. Non-finite inputs are treated as "no signal"
+    /// — they do not update the moments and standardize to 0, so one bad
+    /// export can never poison the filter state or the embedding.
+    pub fn transform(&mut self, y: &[f64]) -> &[f64] {
+        assert_eq!(y.len(), self.mean.len());
+        self.n += 1.0;
+        for i in 0..y.len() {
+            if !y[i].is_finite() {
+                self.out[i] = 0.0;
+                continue;
+            }
+            let delta = y[i] - self.mean[i];
+            self.mean[i] += delta / self.n;
+            self.m2[i] += delta * (y[i] - self.mean[i]);
+            let std = (self.m2[i] / self.n).sqrt();
+            self.out[i] = if std > 1e-12 { (y[i] - self.mean[i]) / std } else { 0.0 };
+        }
+        &self.out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn standardized_stream_has_unit_scale() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let mut st = OnlineStandardizer::new(3);
+        let mut sums = [0.0f64; 3];
+        let mut sq = [0.0f64; 3];
+        let n = 20_000;
+        for _ in 0..n {
+            let y = [
+                1000.0 + 50.0 * rng.normal(),
+                rng.normal() * 0.001,
+                5.0,
+            ];
+            let z = st.transform(&y);
+            for i in 0..3 {
+                sums[i] += z[i];
+                sq[i] += z[i] * z[i];
+            }
+        }
+        for i in 0..2 {
+            let mean = sums[i] / n as f64;
+            let var = sq[i] / n as f64;
+            assert!(mean.abs() < 0.05, "feature {i} mean {mean}");
+            assert!((var - 1.0).abs() < 0.1, "feature {i} var {var}");
+        }
+        // Constant feature maps to exactly zero.
+        assert_eq!(sq[2], 0.0);
+    }
+
+    #[test]
+    fn non_finite_inputs_are_neutralized() {
+        let mut st = OnlineStandardizer::new(2);
+        for i in 0..50 {
+            st.transform(&[i as f64, 1.0]);
+        }
+        let z = st.transform(&[f64::NAN, f64::INFINITY]);
+        assert_eq!(z, &[0.0, 0.0]);
+        // Moments unpoisoned: next clean sample standardizes finitely.
+        let z = st.transform(&[25.0, 1.0]);
+        assert!(z.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn first_observation_is_zero() {
+        let mut st = OnlineStandardizer::new(2);
+        let z = st.transform(&[7.0, -3.0]);
+        assert_eq!(z, &[0.0, 0.0]);
+    }
+}

@@ -1,0 +1,8 @@
+//! Serialization substrate: minimal JSON (parse + emit) and CSV writers.
+//!
+//! The offline environment has no serde; the manifest and bench outputs
+//! need only a small, well-tested JSON subset.
+
+mod json;
+
+pub use json::{parse as parse_json, JsonValue};

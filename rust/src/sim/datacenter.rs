@@ -1,0 +1,291 @@
+//! Job-level data-center simulator.
+//!
+//! Trace-driven: each node's telemetry comes from the generator (the same
+//! protocol as the paper's evaluation — the admission decision does not
+//! feed back into the recorded trace). Jobs arrive as a Poisson stream;
+//! the dispatcher probes nodes under a [`DispatchPolicy`]; each probed
+//! node answers from its own [`crate::scheduler::Admission`] policy. The
+//! simulator scores decision quality against the ground truth: a *good
+//! accept* lands on a node whose CPU Ready stays calm over the job's first
+//! window; a *bad accept* lands right before/inside a spike episode.
+
+use crate::rng::Xoshiro256;
+use crate::scheduler::{Admission, Job, JobOutcome};
+use crate::telemetry::VmTrace;
+
+/// How the dispatcher picks candidate nodes for an arriving job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchPolicy {
+    /// Probe one uniformly random node (Sparrow-style single probe).
+    RandomProbe,
+    /// Probe `k` random nodes, accept the first that says yes.
+    PowerOfK(usize),
+    /// Round-robin over nodes.
+    RoundRobin,
+}
+
+/// Simulation parameters.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Mean job inter-arrival in timesteps (Poisson process).
+    pub arrival_rate_per_step: f64,
+    /// Log-normal job duration parameters (in timesteps).
+    pub duration_mu: f64,
+    pub duration_sigma: f64,
+    /// Dispatcher policy.
+    pub dispatch: DispatchPolicy,
+    /// CPU Ready level marking degraded service for scoring.
+    pub ready_threshold: f64,
+    /// Horizon after acceptance scored for degradation (timesteps).
+    pub score_window: usize,
+    /// RNG seed for arrivals/durations/probing.
+    pub seed: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self {
+            arrival_rate_per_step: 0.3,
+            duration_mu: 3.0,   // e^3 ≈ 20 steps ≈ 7 min
+            duration_sigma: 0.8,
+            dispatch: DispatchPolicy::PowerOfK(2),
+            ready_threshold: 1000.0,
+            score_window: 5,
+            seed: 7,
+        }
+    }
+}
+
+/// Aggregate result of a simulation run.
+#[derive(Debug, Clone, Default)]
+pub struct SimReport {
+    pub steps: usize,
+    pub nodes: usize,
+    pub jobs_arrived: usize,
+    pub jobs_accepted: usize,
+    pub jobs_rejected: usize,
+    /// Accepted jobs whose node stayed calm over the score window.
+    pub good_accepts: usize,
+    /// Accepted jobs whose node hit a CPU Ready spike in the score window.
+    pub bad_accepts: usize,
+    /// Rejections where the node indeed spiked in the score window
+    /// (justified rejections).
+    pub justified_rejections: usize,
+    /// Per-job outcomes (ordered by arrival).
+    pub outcomes: Vec<JobOutcome>,
+}
+
+impl SimReport {
+    /// Fraction of accepted jobs placed on nodes that stayed healthy.
+    pub fn placement_quality(&self) -> f64 {
+        if self.jobs_accepted == 0 {
+            return 1.0;
+        }
+        self.good_accepts as f64 / self.jobs_accepted as f64
+    }
+
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.jobs_arrived == 0 {
+            return 1.0;
+        }
+        self.jobs_accepted as f64 / self.jobs_arrived as f64
+    }
+
+    /// Fraction of rejections that avoided a real spike.
+    pub fn rejection_precision(&self) -> f64 {
+        if self.jobs_rejected == 0 {
+            return 1.0;
+        }
+        self.justified_rejections as f64 / self.jobs_rejected as f64
+    }
+}
+
+/// The simulator: N nodes with aligned traces and admission policies.
+pub struct DataCenterSim {
+    cfg: SimConfig,
+    traces: Vec<VmTrace>,
+    policies: Vec<Box<dyn Admission>>,
+}
+
+impl DataCenterSim {
+    /// One policy per trace (same order).
+    pub fn new(cfg: SimConfig, traces: Vec<VmTrace>, policies: Vec<Box<dyn Admission>>) -> Self {
+        assert_eq!(traces.len(), policies.len(), "one policy per node");
+        assert!(!traces.is_empty());
+        Self { cfg, traces, policies }
+    }
+
+    /// Run over the common trace prefix; returns the report.
+    pub fn run(mut self) -> SimReport {
+        let steps = self.traces.iter().map(VmTrace::len).min().unwrap();
+        let n = self.traces.len();
+        let mut rng = Xoshiro256::seed_from_u64(self.cfg.seed);
+        let mut report = SimReport { nodes: n, steps, ..Default::default() };
+        let mut next_job_id = 0u64;
+        let mut rr_cursor = 0usize;
+
+        // Per-node current admission answer for this timestep.
+        let mut can_accept = vec![true; n];
+
+        for t in 0..steps {
+            // 1. Telemetry tick: every node consumes its metric vector.
+            for (i, policy) in self.policies.iter_mut().enumerate() {
+                can_accept[i] = policy.observe(self.traces[i].features(t));
+            }
+
+            // 2. Job arrivals this step.
+            let arrivals = rng.poisson(self.cfg.arrival_rate_per_step) as usize;
+            for _ in 0..arrivals {
+                let duration = rng
+                    .log_normal(self.cfg.duration_mu, self.cfg.duration_sigma)
+                    .round()
+                    .max(1.0) as usize;
+                let job = Job::new(next_job_id, t, duration, 1.0);
+                next_job_id += 1;
+                report.jobs_arrived += 1;
+
+                // 3. Dispatch: probe nodes per policy.
+                let candidates: Vec<usize> = match self.cfg.dispatch {
+                    DispatchPolicy::RandomProbe => vec![rng.gen_range(n)],
+                    DispatchPolicy::PowerOfK(k) => rng.sample_indices(n, k.max(1)),
+                    DispatchPolicy::RoundRobin => {
+                        let c = rr_cursor;
+                        rr_cursor = (rr_cursor + 1) % n;
+                        vec![c]
+                    }
+                };
+                let placed = candidates.iter().copied().find(|&c| can_accept[c]);
+
+                // 4. Score against ground truth over the next window.
+                let spike_ahead = |node: usize| -> bool {
+                    let hi = (t + self.cfg.score_window).min(steps - 1);
+                    (t..=hi).any(|tt| {
+                        self.traces[node].cpu_ready(tt) >= self.cfg.ready_threshold
+                    })
+                };
+                match placed {
+                    Some(node) => {
+                        report.jobs_accepted += 1;
+                        if spike_ahead(node) {
+                            report.bad_accepts += 1;
+                        } else {
+                            report.good_accepts += 1;
+                        }
+                        report.outcomes.push(JobOutcome::Accepted { node, at: t });
+                    }
+                    None => {
+                        report.jobs_rejected += 1;
+                        if candidates.iter().any(|&c| spike_ahead(c)) {
+                            report.justified_rejections += 1;
+                        }
+                        report.outcomes.push(JobOutcome::Rejected { at: t });
+                    }
+                }
+                let _ = job;
+            }
+        }
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::{CpuReadyOracle, NodeScheduler, ProntoPolicy, RandomPolicy, RejectConfig};
+    use crate::telemetry::{GeneratorConfig, TraceGenerator, CPU_READY_IDX};
+
+    fn traces(n: usize, steps: usize, seed: u64) -> Vec<VmTrace> {
+        let gen = TraceGenerator::new(GeneratorConfig::default(), seed);
+        (0..n).map(|v| gen.generate_vm_in_cluster(0, v, steps)).collect()
+    }
+
+    fn pronto_policies(traces: &[VmTrace]) -> Vec<Box<dyn Admission>> {
+        traces
+            .iter()
+            .map(|t| {
+                Box::new(ProntoPolicy::new(NodeScheduler::new(
+                    t.dim(),
+                    RejectConfig::default(),
+                ))) as Box<dyn Admission>
+            })
+            .collect()
+    }
+
+    #[test]
+    fn conservation_of_jobs() {
+        let tr = traces(4, 800, 1);
+        let pol = pronto_policies(&tr);
+        let report = DataCenterSim::new(SimConfig::default(), tr, pol).run();
+        assert_eq!(
+            report.jobs_arrived,
+            report.jobs_accepted + report.jobs_rejected
+        );
+        assert_eq!(report.jobs_accepted, report.good_accepts + report.bad_accepts);
+        assert_eq!(report.outcomes.len(), report.jobs_arrived);
+    }
+
+    #[test]
+    fn oracle_placement_beats_always_accept() {
+        let steps = 6000;
+        let tr = traces(6, steps, 3);
+        let oracle: Vec<Box<dyn Admission>> = tr
+            .iter()
+            .map(|_| Box::new(CpuReadyOracle::new(CPU_READY_IDX, 1000.0)) as Box<dyn Admission>)
+            .collect();
+        let always: Vec<Box<dyn Admission>> = tr
+            .iter()
+            .map(|_| Box::new(RandomPolicy::always_accept(1)) as Box<dyn Admission>)
+            .collect();
+        let r_oracle = DataCenterSim::new(SimConfig::default(), tr.clone(), oracle).run();
+        let r_always = DataCenterSim::new(SimConfig::default(), tr, always).run();
+        assert!(
+            r_oracle.placement_quality() >= r_always.placement_quality(),
+            "oracle {:.3} vs always {:.3}",
+            r_oracle.placement_quality(),
+            r_always.placement_quality()
+        );
+    }
+
+    #[test]
+    fn round_robin_covers_all_nodes() {
+        let tr = traces(3, 500, 9);
+        let pol: Vec<Box<dyn Admission>> = tr
+            .iter()
+            .map(|_| Box::new(RandomPolicy::always_accept(2)) as Box<dyn Admission>)
+            .collect();
+        let cfg = SimConfig { dispatch: DispatchPolicy::RoundRobin, ..Default::default() };
+        let report = DataCenterSim::new(cfg, tr, pol).run();
+        let mut nodes_used = [false; 3];
+        for o in &report.outcomes {
+            if let JobOutcome::Accepted { node, .. } = o {
+                nodes_used[*node] = true;
+            }
+        }
+        assert!(nodes_used.iter().all(|&u| u));
+    }
+
+    #[test]
+    fn power_of_k_reduces_rejections_vs_single_probe() {
+        let steps = 4000;
+        let tr = traces(8, steps, 11);
+        let mk = |tr: &[VmTrace]| pronto_policies(tr);
+        let single = DataCenterSim::new(
+            SimConfig { dispatch: DispatchPolicy::RandomProbe, ..Default::default() },
+            tr.clone(),
+            mk(&tr),
+        )
+        .run();
+        let pok = DataCenterSim::new(
+            SimConfig { dispatch: DispatchPolicy::PowerOfK(3), ..Default::default() },
+            tr.clone(),
+            mk(&tr),
+        )
+        .run();
+        assert!(
+            pok.acceptance_rate() >= single.acceptance_rate(),
+            "PoK {:.3} vs single {:.3}",
+            pok.acceptance_rate(),
+            single.acceptance_rate()
+        );
+    }
+}

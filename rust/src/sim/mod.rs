@@ -1,0 +1,16 @@
+//! Data-center simulation and the §7.1 evaluation harness.
+//!
+//! * [`eval`] — trace-driven evaluation of a rejection-signal method
+//!   against the CPU Ready ground truth: left/right-sided spike counts per
+//!   CPU Ready spike (Figure 6), downtime and contained-spike percentages
+//!   (Figure 7), and per-method aggregation over a fleet of VMs.
+//! * [`datacenter`] — a job-level discrete-event simulator: Poisson
+//!   arrivals, dispatcher probing, per-node admission by any
+//!   [`crate::scheduler::Admission`] policy; used by the end-to-end
+//!   example and the scalability bench.
+
+pub mod datacenter;
+pub mod eval;
+
+pub use datacenter::{DataCenterSim, DispatchPolicy, SimConfig, SimReport};
+pub use eval::{evaluate_method, EvalConfig, FleetEvaluation, NodeEvaluation};

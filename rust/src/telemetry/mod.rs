@@ -1,0 +1,23 @@
+//! Telemetry substrate.
+//!
+//! The paper evaluates against a proprietary 1 TB VMware vSphere trace
+//! (100 clusters × ~14 ESX hosts × 250–350 VMs, one 52-metric VM vector
+//! every 20 s, four weeks). That dataset is not available, so this module
+//! provides the substitution documented in DESIGN.md §5:
+//!
+//! * [`catalog`] — the metric vocabulary (52 VM metrics / 134 host metrics,
+//!   named after the real vSphere counters);
+//! * [`generator`] — a synthetic trace generator that reproduces the causal
+//!   structure PRONTO exploits: telemetry is low-rank (a few latent workload
+//!   factors drive many correlated counters), CPU Ready is near zero except
+//!   for *contention episodes*, and episodes are preceded by precursor drift
+//!   in the latent factors a few samples ahead;
+//! * [`trace`] — in-memory trace containers with CSV round-trip.
+
+pub mod catalog;
+pub mod generator;
+pub mod trace;
+
+pub use catalog::{host_metric_names, vm_metric_names, CPU_READY_IDX, VM_DIM};
+pub use generator::{ClusterTrace, GeneratorConfig, TraceGenerator};
+pub use trace::VmTrace;

@@ -1,0 +1,216 @@
+//! Trace containers and CSV round-trip.
+
+use crate::linalg::Mat;
+use crate::telemetry::catalog::CPU_READY_IDX;
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+/// Telemetry trace of one VM: a d × T matrix, one metric vector (column)
+/// per 20 s sampling interval, plus identity metadata.
+#[derive(Debug, Clone)]
+pub struct VmTrace {
+    /// Stable VM identifier within its cluster.
+    pub vm_id: usize,
+    /// Cluster the VM belongs to.
+    pub cluster_id: usize,
+    /// Workload archetype index (generator-assigned; used as ground truth
+    /// for the KMeans pre-clustering experiments).
+    pub archetype: usize,
+    /// d × T metric matrix (column-major ⇒ each timestep contiguous).
+    data: Mat,
+    /// Metric names, length d.
+    metric_names: Vec<String>,
+}
+
+impl VmTrace {
+    pub fn new(
+        vm_id: usize,
+        cluster_id: usize,
+        archetype: usize,
+        data: Mat,
+        metric_names: Vec<String>,
+    ) -> Self {
+        assert_eq!(data.rows(), metric_names.len());
+        Self { vm_id, cluster_id, archetype, data, metric_names }
+    }
+
+    /// Feature dimension d.
+    pub fn dim(&self) -> usize {
+        self.data.rows()
+    }
+
+    /// Number of timesteps T.
+    pub fn len(&self) -> usize {
+        self.data.cols()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.cols() == 0
+    }
+
+    /// Metric vector at timestep t (a contiguous slice).
+    #[inline]
+    pub fn features(&self, t: usize) -> &[f64] {
+        self.data.col(t)
+    }
+
+    /// CPU Ready value (ms per 20 s period) at timestep t.
+    #[inline]
+    pub fn cpu_ready(&self, t: usize) -> f64 {
+        self.data.get(CPU_READY_IDX, t)
+    }
+
+    /// The full CPU Ready series.
+    pub fn cpu_ready_series(&self) -> Vec<f64> {
+        (0..self.len()).map(|t| self.cpu_ready(t)).collect()
+    }
+
+    /// The series of metric `idx`.
+    pub fn metric_series(&self, idx: usize) -> Vec<f64> {
+        assert!(idx < self.dim());
+        (0..self.len()).map(|t| self.data.get(idx, t)).collect()
+    }
+
+    /// Underlying matrix (d × T).
+    pub fn matrix(&self) -> &Mat {
+        &self.data
+    }
+
+    pub fn metric_names(&self) -> &[String] {
+        &self.metric_names
+    }
+
+    /// Sub-trace covering timesteps `[start, end)`.
+    pub fn slice(&self, start: usize, end: usize) -> VmTrace {
+        assert!(start <= end && end <= self.len());
+        let d = self.dim();
+        let mut m = Mat::zeros(d, end - start);
+        for (jt, t) in (start..end).enumerate() {
+            m.col_mut(jt).copy_from_slice(self.data.col(t));
+        }
+        VmTrace::new(self.vm_id, self.cluster_id, self.archetype, m, self.metric_names.clone())
+    }
+
+    /// Write as CSV: header `timestep,<metric...>`, one row per timestep.
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        let mut w = BufWriter::new(f);
+        write!(w, "timestep")?;
+        for name in &self.metric_names {
+            write!(w, ",{name}")?;
+        }
+        writeln!(w)?;
+        for t in 0..self.len() {
+            write!(w, "{t}")?;
+            for v in self.features(t) {
+                write!(w, ",{v:.6}")?;
+            }
+            writeln!(w)?;
+        }
+        Ok(())
+    }
+
+    /// Read back a CSV produced by [`VmTrace::write_csv`].
+    pub fn read_csv(path: &Path, vm_id: usize, cluster_id: usize) -> Result<VmTrace> {
+        let f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let mut lines = std::io::BufReader::new(f).lines();
+        let header = match lines.next() {
+            Some(h) => h?,
+            None => bail!("empty csv {}", path.display()),
+        };
+        let names: Vec<String> =
+            header.split(',').skip(1).map(|s| s.to_string()).collect();
+        if names.is_empty() {
+            bail!("csv {} has no metric columns", path.display());
+        }
+        let d = names.len();
+        let mut cols: Vec<f64> = Vec::new();
+        let mut t_count = 0usize;
+        for line in lines {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let mut parts = line.split(',');
+            let _t = parts.next();
+            let vals: Vec<f64> = parts
+                .map(|s| s.parse::<f64>().map_err(|e| anyhow::anyhow!("bad value {s}: {e}")))
+                .collect::<Result<_>>()?;
+            if vals.len() != d {
+                bail!("row {} has {} values, expected {d}", t_count, vals.len());
+            }
+            cols.extend_from_slice(&vals);
+            t_count += 1;
+        }
+        let data = Mat::from_col_major(d, t_count, cols);
+        Ok(VmTrace::new(vm_id, cluster_id, 0, data, names))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::catalog::vm_metric_names;
+
+    fn tiny_trace() -> VmTrace {
+        let names: Vec<String> = vm_metric_names().iter().map(|s| s.to_string()).collect();
+        let d = names.len();
+        let mut m = Mat::zeros(d, 5);
+        for t in 0..5 {
+            for i in 0..d {
+                m.set(i, t, (t * d + i) as f64 * 0.5);
+            }
+        }
+        VmTrace::new(7, 2, 1, m, names)
+    }
+
+    #[test]
+    fn accessors() {
+        let tr = tiny_trace();
+        assert_eq!(tr.dim(), 52);
+        assert_eq!(tr.len(), 5);
+        assert_eq!(tr.cpu_ready(0), 0.0);
+        assert_eq!(tr.cpu_ready(1), 52.0 * 0.5);
+        assert_eq!(tr.features(2).len(), 52);
+    }
+
+    #[test]
+    fn slice_preserves_content() {
+        let tr = tiny_trace();
+        let s = tr.slice(1, 4);
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.features(0), tr.features(1));
+        assert_eq!(s.features(2), tr.features(3));
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let tr = tiny_trace();
+        let dir = std::env::temp_dir().join("pronto_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("vm7.csv");
+        tr.write_csv(&path).unwrap();
+        let back = VmTrace::read_csv(&path, 7, 2).unwrap();
+        assert_eq!(back.dim(), tr.dim());
+        assert_eq!(back.len(), tr.len());
+        for t in 0..tr.len() {
+            for i in 0..tr.dim() {
+                assert!((back.features(t)[i] - tr.features(t)[i]).abs() < 1e-6);
+            }
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn cpu_ready_series_matches_column() {
+        let tr = tiny_trace();
+        let s = tr.cpu_ready_series();
+        assert_eq!(s.len(), 5);
+        for (t, v) in s.iter().enumerate() {
+            assert_eq!(*v, tr.cpu_ready(t));
+        }
+    }
+}

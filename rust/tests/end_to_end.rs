@@ -1,0 +1,223 @@
+//! End-to-end integration: telemetry → node pipelines → federation →
+//! simulator, all composed, plus CSV round-trips through the CLI surface.
+
+use pronto::config::ProntoConfig;
+use pronto::federation::{ConcurrentFederation, FederationTree, PushOutcome, TreeTopology};
+use pronto::scheduler::{Admission, NodeScheduler, ProntoPolicy, RandomPolicy, RejectConfig};
+use pronto::sim::{DataCenterSim, SimConfig};
+use pronto::telemetry::{GeneratorConfig, TraceGenerator, VmTrace};
+
+fn fleet(n: usize, steps: usize, seed: u64) -> Vec<VmTrace> {
+    let gen = TraceGenerator::new(GeneratorConfig::default(), seed);
+    (0..n).map(|v| gen.generate_vm_in_cluster(v / 4, v, steps)).collect()
+}
+
+#[test]
+fn full_pipeline_sim_with_pronto_policies() {
+    let traces = fleet(6, 1_500, 11);
+    let policies: Vec<Box<dyn Admission>> = traces
+        .iter()
+        .map(|t| {
+            Box::new(ProntoPolicy::new(NodeScheduler::new(
+                t.dim(),
+                RejectConfig::default(),
+            ))) as Box<dyn Admission>
+        })
+        .collect();
+    let report = DataCenterSim::new(SimConfig::default(), traces, policies).run();
+    assert!(report.jobs_arrived > 100);
+    assert_eq!(report.jobs_arrived, report.jobs_accepted + report.jobs_rejected);
+    // PRONTO must accept the vast majority (downtime is low by design).
+    assert!(report.acceptance_rate() > 0.7, "rate {}", report.acceptance_rate());
+}
+
+#[test]
+fn pronto_beats_random_rejection_on_placement() {
+    // Same traces + arrivals: PRONTO's informed rejections should yield
+    // at-least-as-good placement quality as random 20% rejection, while
+    // accepting more jobs.
+    let traces = fleet(8, 4_000, 21);
+    let pronto: Vec<Box<dyn Admission>> = traces
+        .iter()
+        .map(|t| {
+            Box::new(ProntoPolicy::new(NodeScheduler::new(
+                t.dim(),
+                RejectConfig::default(),
+            ))) as Box<dyn Admission>
+        })
+        .collect();
+    let random: Vec<Box<dyn Admission>> = traces
+        .iter()
+        .enumerate()
+        .map(|(i, _)| Box::new(RandomPolicy::new(0.2, i as u64)) as Box<dyn Admission>)
+        .collect();
+    // Single-probe dispatch so each node's admission decision is decisive.
+    let cfg = SimConfig {
+        dispatch: pronto::sim::DispatchPolicy::RandomProbe,
+        ..Default::default()
+    };
+    let rp = DataCenterSim::new(cfg.clone(), traces.clone(), pronto).run();
+    let rr = DataCenterSim::new(cfg, traces, random).run();
+    assert!(
+        rp.acceptance_rate() > rr.acceptance_rate(),
+        "pronto accepts {:.3} vs random {:.3}",
+        rp.acceptance_rate(),
+        rr.acceptance_rate()
+    );
+    assert!(
+        rp.placement_quality() + 0.02 >= rr.placement_quality(),
+        "pronto placement {:.3} far below random {:.3}",
+        rp.placement_quality(),
+        rr.placement_quality()
+    );
+}
+
+#[test]
+fn federation_tree_and_concurrent_agree_on_global_rank() {
+    let n = 8;
+    let steps = 512;
+    let traces = fleet(n, steps, 31);
+    let d = traces[0].dim();
+
+    // Single-threaded tree driven manually.
+    let mut tree = FederationTree::new(TreeTopology::new(n, 4), d, 4, 0.0);
+    for (leaf, tr) in traces.iter().enumerate() {
+        let mut node = NodeScheduler::new(d, RejectConfig::default());
+        for t in 0..steps {
+            node.observe(tr.features(t));
+        }
+        let est = node.estimate();
+        assert!(matches!(
+            tree.push_from_leaf(leaf, &est),
+            PushOutcome::Propagated { .. }
+        ));
+    }
+    assert_eq!(tree.global_view().rank(), 4);
+
+    // Concurrent runtime over the same traces.
+    let report = ConcurrentFederation::new(TreeTopology::new(n, 4), 4, 0.0)
+        .with_push_every(steps)
+        .run(traces);
+    assert_eq!(report.global_view.rank(), 4);
+    // Energy scale of both global views should be comparable (same data).
+    let s_tree = tree.global_view().sigma[0];
+    let s_conc = report.global_view.sigma[0];
+    let ratio = s_tree / s_conc;
+    assert!(
+        (0.5..2.0).contains(&ratio),
+        "global views diverge: {s_tree} vs {s_conc}"
+    );
+}
+
+#[test]
+fn trace_csv_roundtrip_preserves_scheduling_behaviour() {
+    let tr = fleet(1, 800, 41).pop().unwrap();
+    let dir = std::env::temp_dir().join("pronto_it_csv");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("vm.csv");
+    tr.write_csv(&path).unwrap();
+    let back = VmTrace::read_csv(&path, tr.vm_id, tr.cluster_id).unwrap();
+
+    let run = |t: &VmTrace| -> (usize, usize) {
+        let mut node = NodeScheduler::new(t.dim(), RejectConfig::default());
+        let mut rejections = 0;
+        for i in 0..t.len() {
+            if !node.observe(t.features(i)) {
+                rejections += 1;
+            }
+        }
+        (t.len(), rejections)
+    };
+    let (n1, r1) = run(&tr);
+    let (n2, r2) = run(&back);
+    assert_eq!(n1, n2);
+    // CSV stores 6 decimals; admission decisions must be identical.
+    assert_eq!(r1, r2, "decisions diverged after CSV roundtrip");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn config_drives_cli_sim() {
+    let dir = std::env::temp_dir().join("pronto_it_cfg");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg_path = dir.join("pronto.toml");
+    std::fs::write(
+        &cfg_path,
+        "[pronto]\nnodes = 3\nsteps = 400\n\n[sim]\narrival_rate_per_step = 0.5\n",
+    )
+    .unwrap();
+    let cfg = ProntoConfig::load(&cfg_path).unwrap();
+    assert_eq!(cfg.nodes, 3);
+    let argv = vec![
+        "sim".to_string(),
+        "--config".to_string(),
+        cfg_path.to_string_lossy().to_string(),
+        "--policy".to_string(),
+        "always".to_string(),
+    ];
+    pronto::cli::run(&argv).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn non_finite_telemetry_does_not_poison_the_pipeline() {
+    // Failure injection: an exporter glitch emits NaN/∞ mid-stream; the
+    // node (with the default standardizer) must keep producing boolean
+    // decisions and a finite estimate.
+    let tr = fleet(1, 1_000, 77).pop().unwrap();
+    let mut node = NodeScheduler::new(tr.dim(), RejectConfig::default());
+    for t in 0..tr.len() {
+        if t % 97 == 13 {
+            let mut bad = tr.features(t).to_vec();
+            bad[3] = f64::NAN;
+            bad[17] = f64::INFINITY;
+            bad[40] = f64::NEG_INFINITY;
+            node.observe(&bad);
+        } else {
+            node.observe(tr.features(t));
+        }
+    }
+    let est = node.estimate();
+    assert!(est.u.data().iter().all(|x| x.is_finite()), "estimate poisoned");
+    assert!(est.sigma.iter().all(|x| x.is_finite()));
+    assert!(node.stats().downtime() < 0.5);
+}
+
+#[test]
+fn transient_node_bootstraps_from_global_view() {
+    // §5.2: new/transient nodes pull the merged global estimate to seed
+    // their local subspace. A fresh node seeded from the federation should
+    // track the workload subspace immediately (no cold-start block).
+    let n = 8;
+    let steps = 1_024;
+    let traces = fleet(n, steps, 51);
+    let d = traces[0].dim();
+
+    let mut tree = FederationTree::new(TreeTopology::new(n, 4), d, 4, 0.0);
+    for (leaf, tr) in traces.iter().enumerate() {
+        let mut node = NodeScheduler::new(d, RejectConfig::default());
+        for t in 0..steps {
+            node.observe(tr.features(t));
+        }
+        tree.push_from_leaf(leaf, &node.estimate());
+    }
+
+    // Fresh node joins: seed its embedding from the global view.
+    let mut newcomer = pronto::fpca::FpcaEdge::new(d, pronto::fpca::FpcaEdgeConfig::default());
+    assert!(newcomer.estimate().is_empty());
+    newcomer.set_estimate(tree.global_view().clone());
+    assert_eq!(newcomer.estimate().rank(), 4);
+
+    // The seeded estimate must be close to what a veteran node learned
+    // (same standardized feature space as the tree pushes).
+    let mut veteran = NodeScheduler::new(d, RejectConfig::default());
+    let tr = &traces[0];
+    for t in 0..steps {
+        veteran.observe(tr.features(t));
+    }
+    let dist = pronto::linalg::subspace_distance(
+        &newcomer.estimate().truncate(1).u,
+        &veteran.estimate().truncate(1).u,
+    );
+    assert!(dist < 0.6, "seeded newcomer too far from veterans: {dist}");
+}

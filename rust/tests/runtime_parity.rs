@@ -1,0 +1,138 @@
+//! XLA-artifact vs native parity: the AOT-compiled HLO path must agree
+//! with the Rust oracle over realistic multi-block streams. Skipped when
+//! artifacts are absent (`make artifacts` not run).
+
+use pronto::baselines::StreamingEmbedding;
+use pronto::fpca::{FpcaEdge, FpcaEdgeConfig, Subspace};
+use pronto::linalg::subspace_distance;
+use pronto::runtime::{shared_runtime, XlaFpca, XlaProjectDetect};
+use pronto::scheduler::{RejectConfig, RejectJob};
+use pronto::telemetry::{GeneratorConfig, TraceGenerator};
+
+#[test]
+fn fpca_parity_over_many_blocks() {
+    let Some(rt) = shared_runtime() else {
+        eprintln!("artifacts missing; skipping");
+        return;
+    };
+    let cfg = rt.manifest().config;
+    let d = cfg.dim;
+    let gen = TraceGenerator::new(GeneratorConfig::default(), 99);
+    let trace = gen.generate_vm(0, cfg.block * 12);
+
+    let mut xla = XlaFpca::new(rt, d).unwrap();
+    let mut native = FpcaEdge::new(
+        d,
+        FpcaEdgeConfig {
+            initial_rank: cfg.rank,
+            max_rank: cfg.rank,
+            block_size: cfg.block,
+            adaptive_rank: false,
+            ..Default::default()
+        },
+    );
+    // Feed standardized-ish values: raw counters stress f32 less than the
+    // pipeline's standardizer would, so scale down by a constant.
+    for t in 0..trace.len() {
+        let y: Vec<f64> = trace.features(t).iter().map(|x| x / 100.0).collect();
+        StreamingEmbedding::observe(&mut xla, &y);
+        StreamingEmbedding::observe(&mut native, &y);
+    }
+    assert_eq!(xla.blocks_processed(), 12);
+
+    let ex = StreamingEmbedding::estimate(&xla);
+    let en = StreamingEmbedding::estimate(&native);
+    // Singular values within f32-accumulation tolerance.
+    for (a, b) in ex.sigma.iter().zip(en.sigma.iter()) {
+        let rel = (a - b).abs() / b.max(1e-6);
+        assert!(rel < 0.05, "sigma mismatch {a} vs {b} (rel {rel})");
+    }
+    // Subspace agreement on the dominant components.
+    let dist = subspace_distance(&ex.truncate(2).u, &en.truncate(2).u);
+    assert!(dist < 0.1, "dominant subspace diverged: {dist}");
+}
+
+#[test]
+fn project_detect_parity_over_stream() {
+    let Some(rt) = shared_runtime() else {
+        eprintln!("artifacts missing; skipping");
+        return;
+    };
+    let cfg = rt.manifest().config;
+    let (d, r, b) = (cfg.dim, cfg.rank, cfg.block);
+    let mut rng = pronto::rng::Xoshiro256::seed_from_u64(5);
+    let u = pronto::proptest::gen_orthonormal(&mut rng, d, r);
+    let est = Subspace::new(u.clone(), vec![4.0, 3.0, 2.0, 1.0]);
+
+    // Stream with injected aligned spikes at known offsets.
+    let blocks = 4;
+    let mut ys = vec![0.0f32; blocks * b * d];
+    for t in 0..blocks * b {
+        for i in 0..d {
+            ys[t * d + i] = (0.05 * rng.normal()) as f32;
+        }
+    }
+    for &spike_t in &[40usize, 70, 100] {
+        for i in 0..d {
+            ys[spike_t * d + i] += (30.0 * u.get(i, 0)) as f32;
+        }
+    }
+
+    let mut xpd = XlaProjectDetect::new(rt);
+    let mut xla_rejects = Vec::new();
+    for blk in 0..blocks {
+        let slice = &ys[blk * b * d..(blk + 1) * b * d];
+        let (_, reject) = xpd.run_block(&est, slice).unwrap();
+        xla_rejects.extend(reject);
+    }
+
+    let mut rj = RejectJob::new(RejectConfig { max_rank: r, ..Default::default() });
+    let mut native_rejects = Vec::new();
+    for t in 0..blocks * b {
+        let row: Vec<f64> = (0..d).map(|i| f64::from(ys[t * d + i])).collect();
+        native_rejects.push(rj.observe(&est, &row) as u8 as f32);
+    }
+
+    assert_eq!(xla_rejects.len(), native_rejects.len());
+    let diffs: Vec<usize> = (0..xla_rejects.len())
+        .filter(|&t| xla_rejects[t] != native_rejects[t])
+        .collect();
+    assert!(
+        diffs.is_empty(),
+        "rejection signals diverge at steps {diffs:?}"
+    );
+    // And the injected spikes were caught by both.
+    for &t in &[40usize, 70, 100] {
+        assert_eq!(xla_rejects[t], 1.0, "spike at {t} missed");
+    }
+}
+
+#[test]
+fn merge_artifact_parity_randomized() {
+    let Some(rt) = shared_runtime() else {
+        eprintln!("artifacts missing; skipping");
+        return;
+    };
+    let cfg = rt.manifest().config;
+    for seed in 0..5u64 {
+        let mut rng = pronto::rng::Xoshiro256::seed_from_u64(seed);
+        let s1 = Subspace::new(
+            pronto::proptest::gen_orthonormal(&mut rng, cfg.dim, cfg.rank),
+            pronto::proptest::gen_spectrum(&mut rng, cfg.rank),
+        );
+        let s2 = Subspace::new(
+            pronto::proptest::gen_orthonormal(&mut rng, cfg.dim, cfg.rank),
+            pronto::proptest::gen_spectrum(&mut rng, cfg.rank),
+        );
+        let xla = pronto::runtime::xla_merge(&rt, &s1, &s2, 0.9).unwrap();
+        let native = pronto::fpca::merge_subspaces(
+            &s1,
+            &s2,
+            pronto::fpca::MergeOptions { rank: cfg.rank, forget: 0.9, enhance: 1.0 },
+        );
+        for (a, b) in xla.sigma.iter().zip(native.sigma.iter()) {
+            let rel = (a - b).abs() / b.max(1e-6);
+            assert!(rel < 0.03, "seed {seed}: sigma {a} vs {b}");
+        }
+    }
+}
