@@ -1,0 +1,78 @@
+//! Scenario sweep: every named scenario through the discrete-event
+//! engine, PRONTO policies on every node.
+//!
+//! The paper's fig-1/fig-7 conditions are the `baseline-poisson` row; the
+//! rest are the production regimes the paper scopes out (bursty and
+//! diurnal arrivals, node churn, WAN push latency). Emits decision
+//! quality, churn/federation counters, and wall time per scenario; set
+//! `PRONTO_BENCH_CSV_DIR` to capture the CSV. `PRONTO_BENCH_QUICK=1`
+//! shrinks the fleet for smoke runs.
+
+use pronto::bench::Table;
+use pronto::scheduler::{Admission, NodeScheduler, ProntoPolicy, RejectConfig};
+use pronto::sim::{DiscreteEventEngine, Scenario, CATALOG};
+use pronto::telemetry::{GeneratorConfig, TraceGenerator, VmTrace};
+use std::time::Instant;
+
+fn fleet(nodes: usize, steps: usize, seed: u64) -> Vec<VmTrace> {
+    let gen = TraceGenerator::new(GeneratorConfig::default(), seed);
+    (0..nodes)
+        .map(|v| gen.generate_vm_in_cluster(v / 8, v, steps))
+        .collect()
+}
+
+fn pronto_policies(traces: &[VmTrace]) -> Vec<Box<dyn Admission>> {
+    traces
+        .iter()
+        .map(|t| {
+            Box::new(ProntoPolicy::new(NodeScheduler::new(
+                t.dim(),
+                RejectConfig::default(),
+            ))) as Box<dyn Admission>
+        })
+        .collect()
+}
+
+fn main() {
+    let quick = std::env::var("PRONTO_BENCH_QUICK")
+        .map(|v| v == "1")
+        .unwrap_or(false);
+    let (nodes, steps) = if quick { (6, 800) } else { (16, 4_000) };
+    let seed = 2021u64;
+
+    let mut table = Table::new(
+        &format!("Scenario sweep ({nodes} nodes x {steps} steps, PRONTO policy)"),
+        &[
+            "scenario", "jobs", "accept%", "quality%", "precision%", "leaves", "joins",
+            "pushes", "lat(steps)", "wall(ms)",
+        ],
+    );
+
+    for name in CATALOG {
+        let scenario = Scenario::named(name)
+            .expect("catalog entry")
+            .with_nodes(nodes)
+            .with_steps(steps)
+            .with_seed(seed);
+        let traces = fleet(nodes, steps, seed);
+        let policies = pronto_policies(&traces);
+        let t0 = Instant::now();
+        let report = DiscreteEventEngine::new(scenario, traces, policies).run();
+        let wall = t0.elapsed();
+        table.row(&[
+            name.to_string(),
+            report.jobs_arrived.to_string(),
+            format!("{:.1}", 100.0 * report.acceptance_rate()),
+            format!("{:.1}", 100.0 * report.placement_quality()),
+            format!("{:.1}", 100.0 * report.rejection_precision()),
+            report.node_leaves.to_string(),
+            report.node_joins.to_string(),
+            report.federation_pushes.to_string(),
+            format!("{:.2}", report.mean_push_latency_steps),
+            format!("{:.1}", wall.as_secs_f64() * 1e3),
+        ]);
+    }
+
+    table.print();
+    table.maybe_write_csv("scenarios");
+}

@@ -58,6 +58,12 @@ pub trait StreamingEmbedding {
     fn version(&self) -> Option<u64> {
         None
     }
+
+    /// Absorb a (possibly stale) merged global subspace pulled from the
+    /// federation (§5.2 transient-node seeding). `forget` down-weights the
+    /// global side. Methods without a meaningful way to ingest external
+    /// state ignore the pull — the default is a no-op.
+    fn absorb_estimate(&mut self, _global: &Subspace, _forget: f64) {}
 }
 
 /// The paper's fallback spectrum for methods without singular values:
@@ -92,7 +98,11 @@ impl StreamingEmbedding for FpcaEdge {
     }
 
     fn version(&self) -> Option<u64> {
-        Some(self.blocks_processed() as u64)
+        Some((self.blocks_processed() + self.external_pulls()) as u64)
+    }
+
+    fn absorb_estimate(&mut self, global: &Subspace, forget: f64) {
+        FpcaEdge::pull_global_estimate(self, global, forget);
     }
 }
 

@@ -2,7 +2,9 @@
 //!
 //! ```text
 //! pronto gen-trace  --out DIR [--nodes N] [--steps T] [--seed S]
-//! pronto sim        [--config FILE] [--policy pronto|sp|fd|pm|random|always|oracle]
+//! pronto sim        [--scenario NAME|FILE.toml] [--json] [--config FILE]
+//!                   [--policy pronto|sp|fd|pm|random|always|oracle]
+//! pronto scenarios  — list the built-in scenario catalog
 //! pronto eval       [--config FILE] [--method pronto|sp|fd|pm] [--window W]
 //! pronto federate   [--config FILE] [--nodes N] [--fanout F]
 //! pronto bench-tables [--table 1..3] [--quick]
@@ -18,7 +20,10 @@ use crate::config::ProntoConfig;
 use crate::scheduler::{
     Admission, CpuReadyOracle, NodeScheduler, ProntoPolicy, RandomPolicy,
 };
-use crate::sim::{evaluate_method, DataCenterSim, EvalConfig, FleetEvaluation};
+use crate::sim::{
+    evaluate_method, DataCenterSim, DiscreteEventEngine, EvalConfig, FleetEvaluation,
+    Scenario, SimReport, CATALOG,
+};
 use crate::telemetry::{TraceGenerator, VmTrace, CPU_READY_IDX};
 use anyhow::{bail, Context, Result};
 use std::path::Path;
@@ -31,7 +36,8 @@ USAGE:
 
 COMMANDS:
   gen-trace     generate synthetic VMware-style traces as CSV
-  sim           run the data-center simulator under an admission policy
+  sim           run the cluster simulator (--scenario NAME|FILE.toml, --json)
+  scenarios     list the built-in scenario catalog
   eval          fleet evaluation of rejection-signal quality (Fig 6/7)
   federate      run the concurrent DASM federation
   bench-tables  regenerate the paper tables (see also cargo bench)
@@ -64,6 +70,7 @@ pub fn run(argv: &[String]) -> Result<()> {
     match cmd.as_str() {
         "gen-trace" => cmd_gen_trace(rest),
         "sim" => cmd_sim(rest),
+        "scenarios" => cmd_scenarios(rest),
         "eval" => cmd_eval(rest),
         "federate" => cmd_federate(rest),
         "bench-tables" => cmd_bench_tables(rest),
@@ -117,11 +124,10 @@ fn cmd_gen_trace(raw: &[String]) -> Result<()> {
 
 fn make_policy(
     name: &str,
-    trace: &VmTrace,
+    d: usize,
     idx: usize,
     cfg: &ProntoConfig,
 ) -> Result<Box<dyn Admission>> {
-    let d = trace.dim();
     Ok(match name {
         "pronto" => Box::new(ProntoPolicy::new(NodeScheduler::with_embedding(
             crate::fpca::FpcaEdge::new(d, cfg.fpca),
@@ -147,25 +153,88 @@ fn make_policy(
 }
 
 fn cmd_sim(raw: &[String]) -> Result<()> {
-    let args = Args::parse(raw, &[])?;
-    args.reject_unknown(&["config", "policy", "nodes", "steps", "seed"])?;
+    let args = Args::parse(raw, &["json"])?;
+    args.reject_unknown(&["config", "policy", "nodes", "steps", "seed", "scenario"])?;
     let mut cfg = load_config(&args)?;
     cfg.nodes = args.get_usize("nodes", cfg.nodes)?;
     cfg.steps = args.get_usize("steps", cfg.steps)?;
     cfg.seed = args.get_u64("seed", cfg.seed)?;
     let policy = args.get("policy").unwrap_or("pronto");
+    let json = args.flag("json");
+
+    // --scenario routes through the discrete-event engine with the full
+    // scenario feature set (churn, bursts, federation latency); without
+    // it, the fixed-step façade runs the paper's steady-Poisson setting.
+    // `--scenario none` escapes a config-pinned default back to the
+    // fixed-step facade.
+    let scenario_arg = args
+        .get("scenario")
+        .map(str::to_string)
+        .or_else(|| cfg.scenario.clone())
+        .filter(|s| s != "none");
+    let scenario = match &scenario_arg {
+        Some(spec) => {
+            let mut scenario = Scenario::resolve(spec)?;
+            // Explicit CLI overrides win over the scenario's own sizing;
+            // re-validate because overrides bypass the parser's checks.
+            scenario.nodes = args.get_usize("nodes", scenario.nodes)?;
+            scenario.steps = args.get_usize("steps", scenario.steps)?;
+            scenario.seed = args.get_u64("seed", scenario.seed)?;
+            scenario.validate()?;
+            // Scenario sizing wins over the config file (documented in
+            // SCENARIOS.md); CLI flags override both. Policies that read
+            // the scoring threshold (oracle) must agree with the
+            // scenario's scorer.
+            cfg.nodes = scenario.nodes;
+            cfg.steps = scenario.steps;
+            cfg.seed = scenario.seed;
+            cfg.sim.ready_threshold = scenario.ready_threshold;
+            Some(scenario)
+        }
+        None => {
+            // Keep the facade path reproducible from the printed report:
+            // --seed drives the simulation RNG, not just trace generation.
+            cfg.sim.seed = args.get_u64("seed", cfg.sim.seed)?;
+            None
+        }
+    };
 
     let fleet = gen_fleet(&cfg);
     let policies: Vec<Box<dyn Admission>> = fleet
         .iter()
         .enumerate()
-        .map(|(i, t)| make_policy(policy, t, i, &cfg))
+        .map(|(i, t)| make_policy(policy, t.dim(), i, &cfg))
         .collect::<Result<_>>()?;
-    let report = DataCenterSim::new(cfg.sim.clone(), fleet, policies).run();
 
+    let report = if let Some(scenario) = scenario {
+        let dims: Vec<usize> = fleet.iter().map(|t| t.dim()).collect();
+        let mut engine = DiscreteEventEngine::new(scenario.clone(), fleet, policies);
+        if scenario.churn.is_some() {
+            // Rejoining nodes restart with fresh policy state.
+            let cfg = cfg.clone();
+            let name = policy.to_string();
+            engine = engine.with_policy_factory(Box::new(move |node| {
+                make_policy(&name, dims[node], node, &cfg)
+                    .expect("policy validated at startup")
+            }));
+        }
+        engine.run()
+    } else {
+        DataCenterSim::new(cfg.sim.clone(), fleet, policies).run()
+    };
+
+    if json {
+        println!("{}", report.to_json_string());
+        return Ok(());
+    }
+    print_sim_report(&report, policy);
+    Ok(())
+}
+
+fn print_sim_report(report: &SimReport, policy: &str) {
     println!(
-        "simulation: {} nodes x {} steps, policy = {policy}",
-        report.nodes, report.steps
+        "simulation '{}': {} nodes x {} steps, policy = {policy}, seed = {}",
+        report.scenario, report.nodes, report.steps, report.seed
     );
     println!("  jobs arrived        : {}", report.jobs_arrived);
     println!(
@@ -181,7 +250,63 @@ fn cmd_sim(raw: &[String]) -> Result<()> {
         "  rejection precision : {:.1}%",
         100.0 * report.rejection_precision()
     );
+    println!(
+        "  completed/displaced : {} / {}",
+        report.jobs_completed, report.jobs_displaced
+    );
+    println!("  peak in-flight jobs : {}", report.peak_inflight);
+    if report.node_joins + report.node_leaves > 0 {
+        println!(
+            "  churn               : {} leaves, {} joins",
+            report.node_leaves, report.node_joins
+        );
+    }
+    if report.federation_pushes + report.federation_suppressed + report.federation_late_drops
+        > 0
+    {
+        println!(
+            "  federation          : {} pushes ({} suppressed, {} dropped late), \
+             mean latency {:.2} steps",
+            report.federation_pushes,
+            report.federation_suppressed,
+            report.federation_late_drops,
+            report.mean_push_latency_steps
+        );
+    }
+}
+
+fn cmd_scenarios(raw: &[String]) -> Result<()> {
+    let args = Args::parse(raw, &[])?;
+    args.reject_unknown(&[])?;
+    println!("built-in scenarios (run with `pronto sim --scenario NAME`):");
+    for name in CATALOG {
+        let s = Scenario::named(name).expect("catalog entry");
+        let churn = if s.churn.is_some() { "churn" } else { "stable" };
+        let lat = if s.federation.enabled {
+            if s.federation.latency.is_instant() {
+                "federated/instant"
+            } else {
+                "federated/delayed"
+            }
+        } else {
+            "no federation"
+        };
+        println!(
+            "  {name:<18} {} arrivals, {churn}, {lat}",
+            arrival_kind(&s)
+        );
+    }
+    println!("custom scenarios: `pronto sim --scenario path/to/scenario.toml`");
+    println!("(schema documented in rust/SCENARIOS.md)");
     Ok(())
+}
+
+fn arrival_kind(s: &Scenario) -> &'static str {
+    match s.arrivals {
+        crate::sim::ArrivalPattern::Poisson { .. } => "poisson",
+        crate::sim::ArrivalPattern::Bursty { .. } => "bursty",
+        crate::sim::ArrivalPattern::Diurnal { .. } => "diurnal",
+    }
 }
 
 fn cmd_eval(raw: &[String]) -> Result<()> {
@@ -238,19 +363,37 @@ fn cmd_eval(raw: &[String]) -> Result<()> {
 
 fn cmd_federate(raw: &[String]) -> Result<()> {
     let args = Args::parse(raw, &[])?;
-    args.reject_unknown(&["config", "nodes", "fanout", "steps", "epsilon"])?;
+    args.reject_unknown(&[
+        "config", "nodes", "fanout", "steps", "epsilon", "push-every", "latency-mean",
+    ])?;
     let mut cfg = load_config(&args)?;
     cfg.nodes = args.get_usize("nodes", cfg.nodes)?;
     cfg.fanout = args.get_usize("fanout", cfg.fanout)?;
     cfg.steps = args.get_usize("steps", cfg.steps)?;
     cfg.epsilon = args.get_f64("epsilon", cfg.epsilon)?;
+    cfg.push_every = args.get_usize("push-every", cfg.push_every)?;
+    if cfg.push_every == 0 {
+        bail!("--push-every must be >= 1");
+    }
+    if args.get("latency-mean").is_some() {
+        // Explicit flag always wins over the config — including 0, which
+        // restores instant delivery.
+        let latency_mean = args.get_f64("latency-mean", 0.0)?;
+        cfg.push_latency = if latency_mean > 0.0 {
+            crate::federation::LatencyModel::Exponential { mean_steps: latency_mean }
+        } else {
+            crate::federation::LatencyModel::None
+        };
+    }
 
     let traces = gen_fleet(&cfg);
     let fed = crate::federation::ConcurrentFederation::new(
         crate::federation::TreeTopology::new(cfg.nodes, cfg.fanout),
         cfg.fpca.initial_rank,
         cfg.epsilon,
-    );
+    )
+    .with_push_every(cfg.push_every)
+    .with_latency(cfg.push_latency, cfg.seed);
     let report = fed.run(traces);
     println!(
         "federation: {} leaves, {} steps each",
@@ -259,8 +402,8 @@ fn cmd_federate(raw: &[String]) -> Result<()> {
     println!("  wall          : {:?}", report.wall);
     println!("  throughput    : {:.0} obs/s", report.throughput());
     println!(
-        "  pushes        : {} (suppressed {})",
-        report.pushes, report.suppressed
+        "  pushes        : {} (suppressed {}, dropped late {})",
+        report.pushes, report.suppressed, report.late_drops
     );
     println!("  global rank   : {}", report.global_view.rank());
     Ok(())
@@ -466,5 +609,57 @@ mod tests {
         assert!(
             run(&argv(&["sim", "--policy", "nope", "--nodes", "2", "--steps", "100"])).is_err()
         );
+    }
+
+    #[test]
+    fn scenarios_command_lists_catalog() {
+        assert!(run(&argv(&["scenarios"])).is_ok());
+    }
+
+    #[test]
+    fn sim_scenario_smoke_all_named() {
+        // 6 nodes clears the churn scenarios' min_alive floor of 4, so
+        // the churn path actually runs in this smoke.
+        for name in crate::sim::CATALOG {
+            assert!(
+                run(&argv(&[
+                    "sim", "--scenario", name, "--nodes", "6", "--steps", "200", "--json"
+                ]))
+                .is_ok(),
+                "scenario {name} failed"
+            );
+        }
+    }
+
+    #[test]
+    fn sim_scenario_rejects_min_alive_at_or_above_nodes() {
+        assert!(run(&argv(&["sim", "--scenario", "churn", "--nodes", "4"])).is_err());
+    }
+
+    #[test]
+    fn sim_scenario_none_escapes_config_pinned_default() {
+        let dir = std::env::temp_dir().join("pronto_cli_scn_none");
+        std::fs::create_dir_all(&dir).unwrap();
+        let cfg = dir.join("pronto.toml");
+        std::fs::write(
+            &cfg,
+            "[pronto]\nscenario = \"churn\"\nnodes = 3\nsteps = 150\n",
+        )
+        .unwrap();
+        let cfg_s = cfg.to_string_lossy().to_string();
+        // --scenario none ignores the pinned default and runs the
+        // fixed-step facade with the config's own [pronto]/[sim] sizing
+        // (3 nodes x 150 steps; the pinned churn scenario would use
+        // catalog sizing instead).
+        assert!(run(&argv(&[
+            "sim", "--config", &cfg_s, "--scenario", "none", "--policy", "always"
+        ]))
+        .is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sim_rejects_bad_scenario() {
+        assert!(run(&argv(&["sim", "--scenario", "not-a-scenario"])).is_err());
     }
 }

@@ -10,6 +10,7 @@ mod toml;
 pub use toml::{parse_toml, TomlValue};
 
 use crate::detect::ZScoreConfig;
+use crate::federation::LatencyModel;
 use crate::fpca::FpcaEdgeConfig;
 use crate::scheduler::RejectConfig;
 use crate::sim::SimConfig;
@@ -30,6 +31,14 @@ pub struct ProntoConfig {
     pub epsilon: f64,
     /// Master seed.
     pub seed: u64,
+    /// Default scenario for `pronto sim` (catalog name or TOML path);
+    /// `--scenario` on the command line overrides it.
+    pub scenario: Option<String>,
+    /// Leaves offer their iterate every this many observations
+    /// (federation runtimes).
+    pub push_every: usize,
+    /// Simulated federation push delivery latency.
+    pub push_latency: LatencyModel,
     pub generator: GeneratorConfig,
     pub fpca: FpcaEdgeConfig,
     pub reject: RejectConfig,
@@ -44,6 +53,9 @@ impl Default for ProntoConfig {
             fanout: 8,
             epsilon: 0.5,
             seed: 2021,
+            scenario: None,
+            push_every: 64,
+            push_latency: LatencyModel::None,
             generator: GeneratorConfig::default(),
             fpca: FpcaEdgeConfig::default(),
             reject: RejectConfig::default(),
@@ -88,6 +100,24 @@ impl ProntoConfig {
             ("pronto", "fanout") => self.fanout = uint()?,
             ("pronto", "epsilon") => self.epsilon = num()?,
             ("pronto", "seed") => self.seed = num()? as u64,
+            ("pronto", "scenario") => {
+                self.scenario = Some(
+                    v.as_str()
+                        .ok_or_else(|| anyhow::anyhow!("pronto.scenario: expected string"))?
+                        .to_string(),
+                )
+            }
+
+            // Federation link knobs. The latency keys each fully select a
+            // model (last one wins); the richer matrix lives in scenario
+            // TOML ([federation] there supports uniform bounds too).
+            ("federation", "push_every") => self.push_every = uint()?,
+            ("federation", "latency_constant_steps") => {
+                self.push_latency = LatencyModel::Constant { steps: num()? }
+            }
+            ("federation", "latency_mean_steps") => {
+                self.push_latency = LatencyModel::Exponential { mean_steps: num()? }
+            }
 
             ("generator", "ready_mu_ms") => self.generator.ready_mu = num()?.ln(),
             ("generator", "ready_sigma") => self.generator.ready_sigma = num()?,
@@ -135,6 +165,9 @@ impl ProntoConfig {
         }
         if self.fanout < 2 {
             bail!("fanout must be >= 2");
+        }
+        if self.push_every == 0 {
+            bail!("federation.push_every must be >= 1");
         }
         if !(0.0..=1.0).contains(&self.generator.surprise_rate) {
             bail!("generator.surprise_rate must be in [0, 1]");
@@ -186,12 +219,21 @@ alpha = 3.0
 threshold = 0.8
 signed_flags = true
 
+[federation]
+push_every = 32
+latency_mean_steps = 6.0
+
 [sim]
 arrival_rate_per_step = 0.5
 "#,
         )
         .unwrap();
         assert_eq!(cfg.nodes, 32);
+        assert_eq!(cfg.push_every, 32);
+        assert_eq!(
+            cfg.push_latency,
+            crate::federation::LatencyModel::Exponential { mean_steps: 6.0 }
+        );
         assert_eq!(cfg.fanout, 4);
         assert_eq!(cfg.generator.lead, 4);
         assert_eq!(cfg.fpca.initial_rank, 3);

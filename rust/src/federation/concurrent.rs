@@ -8,8 +8,10 @@
 //! horizontal-scalability bench (§1: "in the absence of communication
 //! latency, it exhibits attractive horizontal scalability").
 
+use super::latency::LatencyModel;
 use super::tree::TreeTopology;
 use crate::fpca::{merge_subspaces, MergeOptions, Subspace};
+use crate::rng::Xoshiro256;
 use crate::scheduler::{NodeScheduler, RejectConfig};
 use crate::telemetry::VmTrace;
 use std::sync::mpsc;
@@ -32,6 +34,9 @@ pub struct FederationReport {
     pub pushes: usize,
     /// Pushes suppressed by the ε gate.
     pub suppressed: usize,
+    /// Pushes whose simulated delivery fell past the end of the run
+    /// (dropped — only nonzero under a latency model).
+    pub late_drops: usize,
     /// Total timesteps with the rejection signal raised, summed over leaves.
     pub rejected_steps: usize,
     /// The merged global view at the root.
@@ -55,6 +60,10 @@ pub struct ConcurrentFederation {
     reject_cfg: RejectConfig,
     /// Push the local iterate every `push_every` observations.
     push_every: usize,
+    /// Simulated push delivery latency (in observation steps).
+    latency: LatencyModel,
+    /// Seed for the per-leaf latency RNG streams.
+    latency_seed: u64,
 }
 
 impl ConcurrentFederation {
@@ -65,12 +74,26 @@ impl ConcurrentFederation {
             epsilon,
             reject_cfg: RejectConfig::default(),
             push_every: 64,
+            latency: LatencyModel::None,
+            latency_seed: 0x1ee7,
         }
     }
 
     pub fn with_push_every(mut self, every: usize) -> Self {
         assert!(every >= 1);
         self.push_every = every;
+        self
+    }
+
+    /// Delay each leaf's pushes by a sampled number of observation steps:
+    /// the leaf holds the **snapshot taken at send time** and delivers it
+    /// once its delivery step passes — aggregators merge stale iterates,
+    /// as they would across a real WAN. Pushes that would deliver after
+    /// the run ends are dropped and counted in
+    /// [`FederationReport::late_drops`].
+    pub fn with_latency(mut self, latency: LatencyModel, seed: u64) -> Self {
+        self.latency = latency;
+        self.latency_seed = seed;
         self
     }
 
@@ -126,13 +149,32 @@ impl ConcurrentFederation {
             let epsilon = self.epsilon;
             let push_every = self.push_every;
             let cfg = self.reject_cfg;
+            let latency = self.latency;
+            let latency_seed = self.latency_seed ^ (leaf as u64).wrapping_mul(0x9E37_79B9);
             leaf_handles.push(thread::spawn(move || {
                 let mut node = NodeScheduler::new(trace.dim(), cfg);
+                let mut lat_rng = Xoshiro256::seed_from_u64(latency_seed);
+                // Pushes awaiting their delivery step: (deliver_at, stale
+                // snapshot taken at send time). Exponential samples are
+                // not monotone, so this is scanned, not a FIFO.
+                let mut pending: Vec<(usize, Subspace)> = Vec::new();
                 let mut last_pushed: Option<Subspace> = None;
                 let mut pushes = 0usize;
                 let mut suppressed = 0usize;
                 for t in 0..steps_per_leaf {
                     node.observe(trace.features(t));
+                    // Deliver everything whose latency has elapsed.
+                    if !pending.is_empty() {
+                        pending.retain(|(deliver_at, snap)| {
+                            if *deliver_at <= t {
+                                let _ = tx.send(Summary { subspace: snap.clone() });
+                                pushes += 1;
+                                false
+                            } else {
+                                true
+                            }
+                        });
+                    }
                     if (t + 1) % push_every == 0 {
                         let est = node.estimate();
                         if est.is_empty() {
@@ -144,14 +186,21 @@ impl ConcurrentFederation {
                         };
                         if moved {
                             last_pushed = Some(est.clone());
-                            let _ = tx.send(Summary { subspace: est });
-                            pushes += 1;
+                            if latency.is_instant() {
+                                let _ = tx.send(Summary { subspace: est });
+                                pushes += 1;
+                            } else {
+                                let delay = latency.sample(&mut lat_rng).round() as usize;
+                                pending.push((t + delay.max(1), est));
+                            }
                         } else {
                             suppressed += 1;
                         }
                     }
                 }
-                (pushes, suppressed, node.stats().rejected_steps)
+                // Whatever is still pending would arrive after the run.
+                let late_drops = pending.len();
+                (pushes, suppressed, late_drops, node.stats().rejected_steps)
             }));
         }
         drop(group_txs);
@@ -171,12 +220,14 @@ impl ConcurrentFederation {
 
         let mut pushes = 0;
         let mut suppressed = 0;
+        let mut late_drops = 0;
         let mut rejected_steps = 0;
         let mut dim = 0;
         for h in leaf_handles {
-            let (p, s, r) = h.join().expect("leaf thread panicked");
+            let (p, s, l, r) = h.join().expect("leaf thread panicked");
             pushes += p;
             suppressed += s;
+            late_drops += l;
             rejected_steps += r;
             dim = dim.max(1);
         }
@@ -193,6 +244,7 @@ impl ConcurrentFederation {
             steps_per_leaf,
             pushes,
             suppressed,
+            late_drops,
             rejected_steps,
             global_view,
             wall: start.elapsed(),
@@ -238,6 +290,29 @@ mod tests {
             loose.pushes
         );
         assert!(gated.suppressed > 0);
+    }
+
+    #[test]
+    fn latency_delays_but_still_converges() {
+        let report = ConcurrentFederation::new(TreeTopology::new(4, 4), 4, 0.0)
+            .with_push_every(32)
+            .with_latency(LatencyModel::Constant { steps: 16.0 }, 7)
+            .run(traces(4, 512, 21));
+        assert!(report.pushes > 0, "delayed pushes never delivered");
+        assert!(!report.global_view.is_empty());
+        // The final push of each leaf (sent at step 511) cannot arrive.
+        assert!(report.late_drops > 0, "expected tail pushes to drop");
+    }
+
+    #[test]
+    fn absurd_latency_drops_everything() {
+        let report = ConcurrentFederation::new(TreeTopology::new(4, 4), 4, 0.0)
+            .with_push_every(64)
+            .with_latency(LatencyModel::Constant { steps: 1e6 }, 7)
+            .run(traces(4, 256, 23));
+        assert_eq!(report.pushes, 0);
+        assert!(report.late_drops > 0);
+        assert!(report.global_view.is_empty());
     }
 
     #[test]

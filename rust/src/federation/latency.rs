@@ -1,0 +1,139 @@
+//! Federation push-latency models.
+//!
+//! The paper scopes communication latency out ("in the absence of
+//! communication latency, it exhibits attractive horizontal scalability");
+//! production federations do not get that luxury. A [`LatencyModel`]
+//! describes how long a leaf's `(U, Σ)` push takes to reach its
+//! aggregator, in telemetry steps (20 s units). Both federation runtimes
+//! consume it: the discrete-event engine schedules delayed
+//! `FederationPush` events against [`super::FederationTree`], and
+//! [`super::ConcurrentFederation`] holds pushes in a per-leaf pending
+//! queue until their delivery step. Sampling is deterministic given the
+//! seed, so latency never perturbs the arrival/churn RNG streams.
+
+use crate::rng::Xoshiro256;
+
+/// Distribution of the push latency, in telemetry steps.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LatencyModel {
+    /// Instant delivery (the paper's setting).
+    None,
+    /// Fixed delay.
+    Constant { steps: f64 },
+    /// Exponential delay with the given mean (heavy WAN tail).
+    Exponential { mean_steps: f64 },
+    /// Uniform delay in `[lo, hi]`.
+    Uniform { lo: f64, hi: f64 },
+}
+
+impl LatencyModel {
+    /// Sample one delay in steps (≥ 0).
+    pub fn sample(&self, rng: &mut Xoshiro256) -> f64 {
+        match *self {
+            LatencyModel::None => 0.0,
+            LatencyModel::Constant { steps } => steps.max(0.0),
+            LatencyModel::Exponential { mean_steps } => {
+                if mean_steps <= 0.0 {
+                    0.0
+                } else {
+                    rng.exponential(1.0 / mean_steps)
+                }
+            }
+            LatencyModel::Uniform { lo, hi } => {
+                let (lo, hi) = (lo.max(0.0), hi.max(0.0));
+                if hi <= lo {
+                    lo
+                } else {
+                    rng.uniform(lo, hi)
+                }
+            }
+        }
+    }
+
+    /// Whether delivery is instantaneous for every sample.
+    pub fn is_instant(&self) -> bool {
+        match *self {
+            LatencyModel::None => true,
+            LatencyModel::Constant { steps } => steps <= 0.0,
+            LatencyModel::Exponential { mean_steps } => mean_steps <= 0.0,
+            LatencyModel::Uniform { lo, hi } => lo <= 0.0 && hi <= 0.0,
+        }
+    }
+
+    /// Mean delay in steps (for reports and sizing heuristics).
+    pub fn mean(&self) -> f64 {
+        match *self {
+            LatencyModel::None => 0.0,
+            LatencyModel::Constant { steps } => steps.max(0.0),
+            LatencyModel::Exponential { mean_steps } => mean_steps.max(0.0),
+            LatencyModel::Uniform { lo, hi } => 0.5 * (lo.max(0.0) + hi.max(0.0)),
+        }
+    }
+}
+
+impl Default for LatencyModel {
+    fn default() -> Self {
+        LatencyModel::None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_instant_and_zero() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        assert!(LatencyModel::None.is_instant());
+        assert_eq!(LatencyModel::None.sample(&mut rng), 0.0);
+        assert_eq!(LatencyModel::None.mean(), 0.0);
+    }
+
+    #[test]
+    fn constant_returns_value() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let m = LatencyModel::Constant { steps: 3.5 };
+        for _ in 0..10 {
+            assert_eq!(m.sample(&mut rng), 3.5);
+        }
+        assert!(!m.is_instant());
+    }
+
+    #[test]
+    fn exponential_mean_close() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let m = LatencyModel::Exponential { mean_steps: 4.0 };
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| m.sample(&mut rng)).sum::<f64>() / n as f64;
+        assert!((mean - 4.0).abs() < 0.15, "mean={mean}");
+    }
+
+    #[test]
+    fn uniform_bounds_hold() {
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let m = LatencyModel::Uniform { lo: 1.0, hi: 2.0 };
+        for _ in 0..1000 {
+            let x = m.sample(&mut rng);
+            assert!((1.0..=2.0).contains(&x));
+        }
+        assert!((m.mean() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_uniform_and_negative_inputs_clamp() {
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        assert_eq!(LatencyModel::Uniform { lo: 2.0, hi: 1.0 }.sample(&mut rng), 2.0);
+        assert_eq!(LatencyModel::Constant { steps: -1.0 }.sample(&mut rng), 0.0);
+        assert!(LatencyModel::Constant { steps: -1.0 }.is_instant());
+    }
+
+    #[test]
+    fn sampling_is_deterministic_per_seed() {
+        let m = LatencyModel::Exponential { mean_steps: 2.0 };
+        let mut a = Xoshiro256::seed_from_u64(9);
+        let mut b = Xoshiro256::seed_from_u64(9);
+        for _ in 0..100 {
+            assert_eq!(m.sample(&mut a).to_bits(), m.sample(&mut b).to_bits());
+        }
+    }
+}

@@ -16,8 +16,17 @@
 //! * [`concurrent`] — a thread-per-leaf actor runtime exercising the same
 //!   merge logic under real parallelism (scalability bench).
 
+//! A third concern joined in the scenario work: [`latency`] models the
+//! push delivery delay the paper scopes out, and both runtimes accept it —
+//! the discrete-event engine schedules delayed merges into
+//! [`FederationTree`], and [`ConcurrentFederation`] holds pushes in
+//! per-leaf pending queues until their delivery step (dropping pushes that
+//! would land after the run — "arrived too late").
+
 mod concurrent;
+mod latency;
 mod tree;
 
 pub use concurrent::{ConcurrentFederation, FederationReport};
+pub use latency::LatencyModel;
 pub use tree::{FederationTree, NodeId, PushOutcome, TreeTopology};

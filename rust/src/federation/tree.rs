@@ -110,6 +110,15 @@ impl FederationTree {
         self.suppressed
     }
 
+    /// Forget the ε-gate baseline for `leaf` (call when the node behind
+    /// the leaf restarts: its first post-rejoin push must not be
+    /// suppressed just because the re-learned iterate resembles the
+    /// pre-restart one).
+    pub fn reset_leaf_gate(&mut self, leaf: NodeId) {
+        assert!(leaf < self.topo.leaves);
+        self.last_push[leaf] = None;
+    }
+
     /// Leaf `leaf` offers its current iterate. Applies the ε gate, then
     /// merges upward through every ancestor to the root (DASM: summaries
     /// travel up once).

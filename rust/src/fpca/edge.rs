@@ -82,6 +82,9 @@ pub struct FpcaEdge {
     buffered: usize,
     /// Blocks processed so far.
     blocks: usize,
+    /// External estimate refreshes (federation pulls) absorbed so far;
+    /// counted into the version so schedulers drop their cached estimate.
+    pulls: usize,
 }
 
 impl FpcaEdge {
@@ -98,6 +101,7 @@ impl FpcaEdge {
             buffer: Mat::zeros(d, cfg.block_size),
             buffered: 0,
             blocks: 0,
+            pulls: 0,
         }
     }
 
@@ -131,6 +135,35 @@ impl FpcaEdge {
         assert_eq!(s.dim(), self.d);
         self.rank = s.rank().clamp(self.cfg.min_rank, self.cfg.max_rank);
         self.estimate = s.truncate(self.rank);
+    }
+
+    /// External estimate refreshes absorbed so far (see
+    /// [`FpcaEdge::pull_global_estimate`]).
+    pub fn external_pulls(&self) -> usize {
+        self.pulls
+    }
+
+    /// Absorb a (possibly stale) merged global view pulled from the
+    /// federation (§5.2). An empty local estimate is simply seeded; an
+    /// established one is merged with `forget` down-weighting the global
+    /// side so local history dominates. Bumps the version so schedulers
+    /// refresh their cached estimate.
+    pub fn pull_global_estimate(&mut self, global: &Subspace, forget: f64) {
+        assert_eq!(global.dim(), self.d);
+        if global.is_empty() {
+            return;
+        }
+        let merged = if self.estimate.is_empty() {
+            global.clone()
+        } else {
+            merge_subspaces(
+                global,
+                &self.estimate,
+                MergeOptions { rank: self.cfg.max_rank, forget, enhance: 1.0 },
+            )
+        };
+        self.set_estimate(merged);
+        self.pulls += 1;
     }
 
     /// Feed one observation. Returns `true` when this observation completed

@@ -6,10 +6,18 @@
 //! All are expressed through the [`Admission`] trait so the simulator can
 //! sweep policies uniformly.
 
+use crate::fpca::Subspace;
 use crate::rng::Xoshiro256;
 
 /// A per-node admission policy: consumes the node's telemetry each timestep
 /// and answers "can this node take a job right now?".
+///
+/// Policies that track a subspace also participate in federation: the
+/// engine pushes [`Admission::iterate`] snapshots up the tree (delivery
+/// may be delayed, so aggregators merge **stale** iterates) and feeds the
+/// merged global view back through [`Admission::absorb`] when a node
+/// (re)joins the pool. Memoryless policies keep the no-op defaults and
+/// simply sit out the federation.
 pub trait Admission {
     /// Observe the metric vector for the current timestep; returns `true`
     /// when a job arriving now would be ACCEPTED.
@@ -17,6 +25,15 @@ pub trait Admission {
 
     /// Policy tag for tables.
     fn name(&self) -> &'static str;
+
+    /// Current local subspace iterate for federation pushes, if any.
+    fn iterate(&self) -> Option<Subspace> {
+        None
+    }
+
+    /// Pull a (possibly stale) merged global view into local state (§5.2
+    /// transient-node seeding). `forget` down-weights the global side.
+    fn absorb(&mut self, _global: &Subspace, _forget: f64) {}
 }
 
 /// PRONTO (or any embedding-backed node) as an [`Admission`] policy.
@@ -41,6 +58,19 @@ impl<E: crate::baselines::StreamingEmbedding> Admission for ProntoPolicy<E> {
 
     fn name(&self) -> &'static str {
         self.node.method()
+    }
+
+    fn iterate(&self) -> Option<Subspace> {
+        let est = self.node.estimate();
+        if est.is_empty() {
+            None
+        } else {
+            Some(est)
+        }
+    }
+
+    fn absorb(&mut self, global: &Subspace, forget: f64) {
+        self.node.embedding_mut().absorb_estimate(global, forget);
     }
 }
 
@@ -146,6 +176,41 @@ mod tests {
         let mut o = CpuReadyOracle::new(0, 500.0);
         assert!(o.observe(&[499.0, 1.0]));
         assert!(!o.observe(&[500.0, 1.0]));
+    }
+
+    #[test]
+    fn memoryless_policies_sit_out_federation() {
+        let mut p = RandomPolicy::always_accept(3);
+        assert!(p.iterate().is_none());
+        // absorb is a no-op and must not panic.
+        p.absorb(&Subspace::empty(8), 0.5);
+        let mut o = CpuReadyOracle::new(0, 500.0);
+        assert!(o.iterate().is_none());
+    }
+
+    #[test]
+    fn pronto_policy_exposes_iterate_and_absorbs_global() {
+        use crate::scheduler::{NodeScheduler, RejectConfig};
+        use crate::telemetry::{GeneratorConfig, TraceGenerator};
+
+        let gen = TraceGenerator::new(GeneratorConfig::default(), 17);
+        let trace = gen.generate_vm(0, 256);
+        let d = trace.dim();
+        let mut warm = ProntoPolicy::new(NodeScheduler::new(d, RejectConfig::default()));
+        assert!(warm.iterate().is_none(), "cold node has no iterate");
+        for t in 0..trace.len() {
+            warm.observe(trace.features(t));
+        }
+        let iterate = warm.iterate().expect("warm node has an iterate");
+        assert_eq!(iterate.dim(), d);
+
+        // A cold node absorbing the warm iterate is seeded immediately —
+        // the §5.2 transient-node path, here under a *stale* iterate.
+        let mut cold = ProntoPolicy::new(NodeScheduler::new(d, RejectConfig::default()));
+        cold.absorb(&iterate, 0.5);
+        let seeded = cold.iterate().expect("absorb seeded the estimate");
+        assert_eq!(seeded.dim(), d);
+        assert!(seeded.rank() > 0);
     }
 
     #[test]

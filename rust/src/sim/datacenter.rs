@@ -1,30 +1,24 @@
-//! Job-level data-center simulator.
+//! Job-level data-center simulator — the fixed-step façade.
 //!
-//! Trace-driven: each node's telemetry comes from the generator (the same
-//! protocol as the paper's evaluation — the admission decision does not
-//! feed back into the recorded trace). Jobs arrive as a Poisson stream;
-//! the dispatcher probes nodes under a [`DispatchPolicy`]; each probed
-//! node answers from its own [`crate::scheduler::Admission`] policy. The
-//! simulator scores decision quality against the ground truth: a *good
-//! accept* lands on a node whose CPU Ready stays calm over the job's first
-//! window; a *bad accept* lands right before/inside a spike episode.
+//! Historically this module held its own `for t in 0..steps` loop; the
+//! simulation now runs on the deterministic discrete-event engine
+//! ([`super::engine`]). [`DataCenterSim`] remains as the simple entry
+//! point used by the CLI, benches, and integration tests: it translates a
+//! [`SimConfig`] into the equivalent steady-Poisson [`Scenario`] (no
+//! churn, instant federation — the paper's setting) and runs the engine.
+//! Trace-driven as before: admission decisions do not feed back into the
+//! recorded telemetry, and decision quality is scored against the CPU
+//! Ready ground truth.
 
-use crate::rng::Xoshiro256;
-use crate::scheduler::{Admission, Job, JobOutcome};
+use super::engine::DiscreteEventEngine;
+use super::scenario::Scenario;
+use crate::scheduler::Admission;
 use crate::telemetry::VmTrace;
 
-/// How the dispatcher picks candidate nodes for an arriving job.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum DispatchPolicy {
-    /// Probe one uniformly random node (Sparrow-style single probe).
-    RandomProbe,
-    /// Probe `k` random nodes, accept the first that says yes.
-    PowerOfK(usize),
-    /// Round-robin over nodes.
-    RoundRobin,
-}
+pub use super::engine::SimReport;
+pub use super::scenario::DispatchPolicy;
 
-/// Simulation parameters.
+/// Simulation parameters (the compact, scenario-free configuration).
 #[derive(Debug, Clone)]
 pub struct SimConfig {
     /// Mean job inter-arrival in timesteps (Poisson process).
@@ -56,47 +50,28 @@ impl Default for SimConfig {
     }
 }
 
-/// Aggregate result of a simulation run.
-#[derive(Debug, Clone, Default)]
-pub struct SimReport {
-    pub steps: usize,
-    pub nodes: usize,
-    pub jobs_arrived: usize,
-    pub jobs_accepted: usize,
-    pub jobs_rejected: usize,
-    /// Accepted jobs whose node stayed calm over the score window.
-    pub good_accepts: usize,
-    /// Accepted jobs whose node hit a CPU Ready spike in the score window.
-    pub bad_accepts: usize,
-    /// Rejections where the node indeed spiked in the score window
-    /// (justified rejections).
-    pub justified_rejections: usize,
-    /// Per-job outcomes (ordered by arrival).
-    pub outcomes: Vec<JobOutcome>,
-}
-
-impl SimReport {
-    /// Fraction of accepted jobs placed on nodes that stayed healthy.
-    pub fn placement_quality(&self) -> f64 {
-        if self.jobs_accepted == 0 {
-            return 1.0;
+impl SimConfig {
+    /// The scenario equivalent of this fixed-step configuration: steady
+    /// Poisson arrivals, full membership, no federation link. Named
+    /// distinctly from the catalog's `baseline-poisson` because its
+    /// parameters come from this config, not the catalog.
+    pub fn to_scenario(&self, nodes: usize, steps: usize) -> Scenario {
+        Scenario {
+            name: "fixed-step-poisson".to_string(),
+            nodes,
+            steps,
+            seed: self.seed,
+            arrivals: super::scenario::ArrivalPattern::Poisson {
+                rate: self.arrival_rate_per_step,
+            },
+            dispatch: self.dispatch,
+            duration_mu: self.duration_mu,
+            duration_sigma: self.duration_sigma,
+            ready_threshold: self.ready_threshold,
+            score_window: self.score_window,
+            churn: None,
+            federation: super::scenario::FederationSpec::default(),
         }
-        self.good_accepts as f64 / self.jobs_accepted as f64
-    }
-
-    pub fn acceptance_rate(&self) -> f64 {
-        if self.jobs_arrived == 0 {
-            return 1.0;
-        }
-        self.jobs_accepted as f64 / self.jobs_arrived as f64
-    }
-
-    /// Fraction of rejections that avoided a real spike.
-    pub fn rejection_precision(&self) -> f64 {
-        if self.jobs_rejected == 0 {
-            return 1.0;
-        }
-        self.justified_rejections as f64 / self.jobs_rejected as f64
     }
 }
 
@@ -116,75 +91,10 @@ impl DataCenterSim {
     }
 
     /// Run over the common trace prefix; returns the report.
-    pub fn run(mut self) -> SimReport {
+    pub fn run(self) -> SimReport {
         let steps = self.traces.iter().map(VmTrace::len).min().unwrap();
-        let n = self.traces.len();
-        let mut rng = Xoshiro256::seed_from_u64(self.cfg.seed);
-        let mut report = SimReport { nodes: n, steps, ..Default::default() };
-        let mut next_job_id = 0u64;
-        let mut rr_cursor = 0usize;
-
-        // Per-node current admission answer for this timestep.
-        let mut can_accept = vec![true; n];
-
-        for t in 0..steps {
-            // 1. Telemetry tick: every node consumes its metric vector.
-            for (i, policy) in self.policies.iter_mut().enumerate() {
-                can_accept[i] = policy.observe(self.traces[i].features(t));
-            }
-
-            // 2. Job arrivals this step.
-            let arrivals = rng.poisson(self.cfg.arrival_rate_per_step) as usize;
-            for _ in 0..arrivals {
-                let duration = rng
-                    .log_normal(self.cfg.duration_mu, self.cfg.duration_sigma)
-                    .round()
-                    .max(1.0) as usize;
-                let job = Job::new(next_job_id, t, duration, 1.0);
-                next_job_id += 1;
-                report.jobs_arrived += 1;
-
-                // 3. Dispatch: probe nodes per policy.
-                let candidates: Vec<usize> = match self.cfg.dispatch {
-                    DispatchPolicy::RandomProbe => vec![rng.gen_range(n)],
-                    DispatchPolicy::PowerOfK(k) => rng.sample_indices(n, k.max(1)),
-                    DispatchPolicy::RoundRobin => {
-                        let c = rr_cursor;
-                        rr_cursor = (rr_cursor + 1) % n;
-                        vec![c]
-                    }
-                };
-                let placed = candidates.iter().copied().find(|&c| can_accept[c]);
-
-                // 4. Score against ground truth over the next window.
-                let spike_ahead = |node: usize| -> bool {
-                    let hi = (t + self.cfg.score_window).min(steps - 1);
-                    (t..=hi).any(|tt| {
-                        self.traces[node].cpu_ready(tt) >= self.cfg.ready_threshold
-                    })
-                };
-                match placed {
-                    Some(node) => {
-                        report.jobs_accepted += 1;
-                        if spike_ahead(node) {
-                            report.bad_accepts += 1;
-                        } else {
-                            report.good_accepts += 1;
-                        }
-                        report.outcomes.push(JobOutcome::Accepted { node, at: t });
-                    }
-                    None => {
-                        report.jobs_rejected += 1;
-                        if candidates.iter().any(|&c| spike_ahead(c)) {
-                            report.justified_rejections += 1;
-                        }
-                        report.outcomes.push(JobOutcome::Rejected { at: t });
-                    }
-                }
-                let _ = job;
-            }
-        }
-        report
+        let scenario = self.cfg.to_scenario(self.traces.len(), steps);
+        DiscreteEventEngine::new(scenario, self.traces, self.policies).run()
     }
 }
 
@@ -257,7 +167,7 @@ mod tests {
         let report = DataCenterSim::new(cfg, tr, pol).run();
         let mut nodes_used = [false; 3];
         for o in &report.outcomes {
-            if let JobOutcome::Accepted { node, .. } = o {
+            if let crate::scheduler::JobOutcome::Accepted { node, .. } = o {
                 nodes_used[*node] = true;
             }
         }
@@ -287,5 +197,33 @@ mod tests {
             pok.acceptance_rate(),
             single.acceptance_rate()
         );
+    }
+
+    #[test]
+    fn to_scenario_maps_every_sim_config_field() {
+        let cfg = SimConfig {
+            arrival_rate_per_step: 0.7,
+            duration_mu: 2.5,
+            duration_sigma: 0.4,
+            dispatch: DispatchPolicy::RoundRobin,
+            ready_threshold: 800.0,
+            score_window: 9,
+            seed: 123,
+        };
+        let s = cfg.to_scenario(5, 777);
+        assert_eq!(s.nodes, 5);
+        assert_eq!(s.steps, 777);
+        assert_eq!(s.seed, 123);
+        assert!(matches!(
+            s.arrivals,
+            crate::sim::ArrivalPattern::Poisson { rate } if rate == 0.7
+        ));
+        assert_eq!(s.dispatch, DispatchPolicy::RoundRobin);
+        assert_eq!(s.duration_mu, 2.5);
+        assert_eq!(s.duration_sigma, 0.4);
+        assert_eq!(s.ready_threshold, 800.0);
+        assert_eq!(s.score_window, 9);
+        assert!(s.churn.is_none(), "facade must not enable churn");
+        assert!(!s.federation.enabled, "facade must not enable federation");
     }
 }

@@ -1,0 +1,702 @@
+//! The deterministic discrete-event cluster engine.
+//!
+//! Replaces the fixed-step simulator loop: the cluster is driven by a
+//! binary-heap event queue ([`super::events`]) over typed events —
+//! telemetry ticks, job arrivals/completions, federation pushes with
+//! delivery latency, and node churn. Determinism guarantees:
+//!
+//! * events order by `(time, seq)` — no hash maps, no wall clock;
+//! * every stochastic component draws from its **own** RNG stream derived
+//!   from the scenario seed (arrivals, durations, dispatch, churn,
+//!   latency), so enabling churn does not shift the arrival sequence;
+//! * the same `(Scenario, traces, policies)` triple therefore produces a
+//!   bit-identical [`SimReport`] — `SimReport::to_json_string` output is
+//!   byte-comparable across runs, which the determinism regression tests
+//!   rely on.
+//!
+//! The hot loop is allocation-free in steady state: events are small
+//! `Copy` values, federation subspace snapshots live in a free-listed
+//! slab referenced by index, probe candidates reuse one buffer, and
+//! per-node state is indexed by dense node id.
+
+use super::events::{
+    latency_to_ticks, step_to_ticks, ticks_to_step, Event, EventQueue, SimTime, TICKS_PER_STEP,
+};
+use super::scenario::{ArrivalPattern, DispatchPolicy, Scenario};
+use crate::federation::{FederationTree, TreeTopology};
+use crate::fpca::Subspace;
+use crate::rng::{SplitMix64, Xoshiro256};
+use crate::scheduler::{Admission, JobOutcome};
+use crate::ser::JsonValue;
+use crate::telemetry::VmTrace;
+use std::collections::BTreeMap;
+
+/// Aggregate result of a simulation run.
+#[derive(Debug, Clone, Default)]
+pub struct SimReport {
+    /// Scenario name the run was driven by.
+    pub scenario: String,
+    pub steps: usize,
+    pub nodes: usize,
+    pub seed: u64,
+    pub jobs_arrived: usize,
+    pub jobs_accepted: usize,
+    pub jobs_rejected: usize,
+    /// Jobs that ran to completion within the horizon.
+    pub jobs_completed: usize,
+    /// Jobs killed because their node left mid-run.
+    pub jobs_displaced: usize,
+    /// Arrivals that found zero alive nodes.
+    pub jobs_unplaceable: usize,
+    /// Accepted jobs whose node stayed calm over the score window.
+    pub good_accepts: usize,
+    /// Accepted jobs whose node hit a CPU Ready spike in the score window.
+    pub bad_accepts: usize,
+    /// Rejections where a probed node indeed spiked in the score window.
+    pub justified_rejections: usize,
+    /// Churn events that actually fired.
+    pub node_joins: usize,
+    pub node_leaves: usize,
+    /// Federation pushes that propagated / were ε-suppressed.
+    pub federation_pushes: usize,
+    pub federation_suppressed: usize,
+    /// Pushes still in flight when the run ended (delivery would have
+    /// landed past the horizon) — parity with
+    /// [`crate::federation::FederationReport::late_drops`].
+    pub federation_late_drops: usize,
+    /// Mean observed push delivery latency in steps (0 when instant or no
+    /// pushes happened).
+    pub mean_push_latency_steps: f64,
+    /// Peak number of concurrently running jobs across the cluster.
+    pub peak_inflight: usize,
+    /// Per-job outcomes (ordered by arrival).
+    pub outcomes: Vec<JobOutcome>,
+}
+
+impl SimReport {
+    /// Fraction of accepted jobs placed on nodes that stayed healthy.
+    pub fn placement_quality(&self) -> f64 {
+        if self.jobs_accepted == 0 {
+            return 1.0;
+        }
+        self.good_accepts as f64 / self.jobs_accepted as f64
+    }
+
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.jobs_arrived == 0 {
+            return 1.0;
+        }
+        self.jobs_accepted as f64 / self.jobs_arrived as f64
+    }
+
+    /// Fraction of rejections that avoided a real spike.
+    pub fn rejection_precision(&self) -> f64 {
+        if self.jobs_rejected == 0 {
+            return 1.0;
+        }
+        self.justified_rejections as f64 / self.jobs_rejected as f64
+    }
+
+    /// Order-sensitive FNV/SplitMix fold over the outcome sequence: two
+    /// runs with identical per-job outcomes (and only those) agree.
+    pub fn outcomes_digest(&self) -> u64 {
+        fn mix(h: u64, v: u64) -> u64 {
+            let mut s = SplitMix64::new(h ^ v.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            s.next_u64()
+        }
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for o in &self.outcomes {
+            h = match *o {
+                JobOutcome::Accepted { node, at } => {
+                    mix(mix(mix(h, 1), node as u64), at as u64)
+                }
+                JobOutcome::Rejected { at } => mix(mix(h, 2), at as u64),
+            };
+        }
+        h
+    }
+
+    /// Canonical JSON rendering (BTreeMap ⇒ sorted keys ⇒ byte-stable for
+    /// identical runs). The outcome list is folded into a digest so the
+    /// document stays small while still witnessing per-job divergence.
+    pub fn to_json(&self) -> JsonValue {
+        let mut m = BTreeMap::new();
+        let num = |x: usize| JsonValue::Number(x as f64);
+        m.insert("scenario".into(), JsonValue::String(self.scenario.clone()));
+        m.insert("steps".into(), num(self.steps));
+        m.insert("nodes".into(), num(self.nodes));
+        // String: a u64 seed above 2^53 would lose precision as a JSON
+        // number, and the seed is the reproduction key.
+        m.insert("seed".into(), JsonValue::String(self.seed.to_string()));
+        m.insert("jobs_arrived".into(), num(self.jobs_arrived));
+        m.insert("jobs_accepted".into(), num(self.jobs_accepted));
+        m.insert("jobs_rejected".into(), num(self.jobs_rejected));
+        m.insert("jobs_completed".into(), num(self.jobs_completed));
+        m.insert("jobs_displaced".into(), num(self.jobs_displaced));
+        m.insert("jobs_unplaceable".into(), num(self.jobs_unplaceable));
+        m.insert("good_accepts".into(), num(self.good_accepts));
+        m.insert("bad_accepts".into(), num(self.bad_accepts));
+        m.insert("justified_rejections".into(), num(self.justified_rejections));
+        m.insert("node_joins".into(), num(self.node_joins));
+        m.insert("node_leaves".into(), num(self.node_leaves));
+        m.insert("federation_pushes".into(), num(self.federation_pushes));
+        m.insert(
+            "federation_suppressed".into(),
+            num(self.federation_suppressed),
+        );
+        m.insert(
+            "federation_late_drops".into(),
+            num(self.federation_late_drops),
+        );
+        m.insert(
+            "mean_push_latency_steps".into(),
+            JsonValue::Number(self.mean_push_latency_steps),
+        );
+        m.insert("peak_inflight".into(), num(self.peak_inflight));
+        m.insert(
+            "acceptance_rate".into(),
+            JsonValue::Number(self.acceptance_rate()),
+        );
+        m.insert(
+            "placement_quality".into(),
+            JsonValue::Number(self.placement_quality()),
+        );
+        m.insert(
+            "rejection_precision".into(),
+            JsonValue::Number(self.rejection_precision()),
+        );
+        m.insert(
+            "outcomes_digest".into(),
+            JsonValue::String(format!("{:016x}", self.outcomes_digest())),
+        );
+        JsonValue::Object(m)
+    }
+
+    /// Canonical JSON string — the byte-comparable determinism artifact.
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string()
+    }
+}
+
+/// Builds a fresh admission policy for a node that rejoins after churn (a
+/// restarted machine loses its in-memory subspace state).
+pub type PolicyFactory = Box<dyn Fn(usize) -> Box<dyn Admission>>;
+
+/// Pooled storage for in-flight federation snapshots: events carry a slab
+/// index instead of the (heap-heavy) subspace itself.
+#[derive(Default)]
+struct SnapshotPool {
+    slots: Vec<Option<Subspace>>,
+    free: Vec<usize>,
+}
+
+impl SnapshotPool {
+    fn put(&mut self, s: Subspace) -> usize {
+        match self.free.pop() {
+            Some(i) => {
+                self.slots[i] = Some(s);
+                i
+            }
+            None => {
+                self.slots.push(Some(s));
+                self.slots.len() - 1
+            }
+        }
+    }
+
+    fn take(&mut self, i: usize) -> Option<Subspace> {
+        let s = self.slots[i].take();
+        if s.is_some() {
+            self.free.push(i);
+        }
+        s
+    }
+}
+
+/// The discrete-event cluster engine.
+pub struct DiscreteEventEngine {
+    scenario: Scenario,
+    traces: Vec<VmTrace>,
+    policies: Vec<Box<dyn Admission>>,
+    factory: Option<PolicyFactory>,
+}
+
+impl DiscreteEventEngine {
+    /// One trace + one policy per node (same order). The scenario's
+    /// `nodes` is overridden by the fleet size.
+    pub fn new(
+        scenario: Scenario,
+        traces: Vec<VmTrace>,
+        policies: Vec<Box<dyn Admission>>,
+    ) -> Self {
+        assert_eq!(traces.len(), policies.len(), "one policy per node");
+        assert!(!traces.is_empty());
+        Self { scenario, traces, policies, factory: None }
+    }
+
+    /// Install a policy factory: nodes that rejoin after churn restart
+    /// with a fresh policy (then optionally pull the federation view).
+    pub fn with_policy_factory(mut self, factory: PolicyFactory) -> Self {
+        self.factory = Some(factory);
+        self
+    }
+
+    /// Run to the horizon; consumes the engine.
+    pub fn run(self) -> SimReport {
+        let Self { scenario, traces, mut policies, factory } = self;
+        let n = traces.len();
+        let d = traces[0].dim();
+        let trace_len = traces.iter().map(VmTrace::len).min().unwrap();
+        let steps = scenario.steps.min(trace_len);
+        let horizon: SimTime = step_to_ticks(steps);
+
+        // Independent, order-insensitive RNG streams.
+        let stream = |tag: u64| {
+            let mut sm = SplitMix64::new(scenario.seed ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            Xoshiro256::seed_from_u64(sm.next_u64())
+        };
+        let mut arrivals_rng = stream(1);
+        let mut duration_rng = stream(2);
+        let mut dispatch_rng = stream(3);
+        let mut churn_rng = stream(4);
+        let mut latency_rng = stream(5);
+
+        let fed = &scenario.federation;
+        let mut tree = if fed.enabled {
+            Some(FederationTree::new(
+                TreeTopology::new(n, fed.fanout.max(2)),
+                d,
+                fed.rank,
+                fed.epsilon,
+            ))
+        } else {
+            None
+        };
+        let mut pool = SnapshotPool::default();
+
+        // Dense per-node state.
+        let mut alive = vec![true; n];
+        let mut epoch = vec![0u32; n];
+        let mut inflight = vec![0u32; n];
+        let mut can_accept = vec![true; n];
+        let mut alive_ids: Vec<usize> = (0..n).collect();
+        let mut rr_cursor = 0usize;
+        let mut burst_on = false;
+
+        let mut report = SimReport {
+            scenario: scenario.name.clone(),
+            nodes: n,
+            steps,
+            seed: scenario.seed,
+            ..Default::default()
+        };
+        let expected_jobs =
+            (scenario.arrivals.mean_rate() * steps as f64).ceil() as usize;
+        report.outcomes.reserve(expected_jobs + 16);
+
+        let mut queue = EventQueue::with_capacity(1024 + expected_jobs / 4);
+        let mut candidates: Vec<usize> = Vec::with_capacity(8);
+        let mut next_job_id = 0u64;
+        let mut total_inflight = 0usize;
+        let mut lat_ticks_sum = 0u64;
+        let mut lat_count = 0u64;
+
+        // Ground truth for scoring: does `node`'s CPU Ready spike within
+        // the score window starting at `step`?
+        let spike_ahead = |node: usize, step: usize| -> bool {
+            let hi = (step + scenario.score_window).min(steps - 1);
+            (step..=hi).any(|tt| traces[node].cpu_ready(tt) >= scenario.ready_threshold)
+        };
+
+        queue.schedule(0, Event::TelemetryTick { step: 0 });
+
+        while let Some(ev) = queue.pop() {
+            if ev.time >= horizon {
+                // Pops are non-decreasing in time: everything left is
+                // also past the run. In-flight federation pushes would
+                // have delivered after the horizon — count them as late
+                // drops (parity with ConcurrentFederation) and stop.
+                let mut late = usize::from(matches!(ev.event, Event::FederationPush { .. }));
+                while let Some(rest) = queue.pop() {
+                    if matches!(rest.event, Event::FederationPush { .. }) {
+                        late += 1;
+                    }
+                }
+                report.federation_late_drops = late;
+                break;
+            }
+            match ev.event {
+                Event::TelemetryTick { step } => {
+                    // 1. Every alive node consumes its metric vector.
+                    for i in 0..n {
+                        if alive[i] {
+                            can_accept[i] = policies[i].observe(traces[i].features(step));
+                        }
+                    }
+
+                    // 2. Churn hazard (respecting the min-alive floor; the
+                    //    provisional counter prevents one tick from
+                    //    scheduling the pool below the floor).
+                    if let Some(churn) = &scenario.churn {
+                        let mut planned_alive = alive_ids.len();
+                        for i in 0..n {
+                            if alive[i]
+                                && planned_alive > churn.min_alive
+                                && churn_rng.bernoulli(churn.leave_hazard)
+                            {
+                                planned_alive -= 1;
+                                queue.schedule(ev.time + 1, Event::NodeLeave { node: i });
+                            }
+                        }
+                    }
+
+                    // 3. Job arrivals for this step (regime update first
+                    //    for the MMPP pattern).
+                    if let ArrivalPattern::Bursty { mean_burst_len, mean_gap_len, .. } =
+                        scenario.arrivals
+                    {
+                        let flip = if burst_on {
+                            1.0 / mean_burst_len.max(1.0)
+                        } else {
+                            1.0 / mean_gap_len.max(1.0)
+                        };
+                        if arrivals_rng.bernoulli(flip.min(1.0)) {
+                            burst_on = !burst_on;
+                        }
+                    }
+                    let lam = scenario.arrivals.rate_at(step, burst_on);
+                    let k = arrivals_rng.poisson(lam) as usize;
+                    for j in 0..k {
+                        let duration_steps = duration_rng
+                            .log_normal(scenario.duration_mu, scenario.duration_sigma)
+                            .round()
+                            .max(1.0) as usize;
+                        let job_id = next_job_id;
+                        next_job_id += 1;
+                        let off = (2 + j as u64).min(TICKS_PER_STEP - 1);
+                        queue.schedule(
+                            ev.time + off,
+                            Event::JobArrival { job_id, duration_steps },
+                        );
+                    }
+
+                    // 4. Federation push boundary: alive leaves offer
+                    //    their iterate; delivery is delayed by the
+                    //    latency model (the merged iterate is stale by
+                    //    construction).
+                    if tree.is_some() && (step + 1) % fed.push_every == 0 {
+                        for &leaf in &alive_ids {
+                            if let Some(iterate) = policies[leaf].iterate() {
+                                let delay = fed.latency.sample(&mut latency_rng);
+                                let dt = latency_to_ticks(delay);
+                                let snapshot = pool.put(iterate);
+                                queue.schedule(
+                                    ev.time + dt,
+                                    Event::FederationPush { leaf, snapshot, sent_at: ev.time },
+                                );
+                            }
+                        }
+                    }
+
+                    // 5. Next tick.
+                    if step + 1 < steps {
+                        queue.schedule(
+                            step_to_ticks(step + 1),
+                            Event::TelemetryTick { step: step + 1 },
+                        );
+                    }
+                }
+
+                Event::JobArrival { job_id, duration_steps } => {
+                    let step = ticks_to_step(ev.time);
+                    report.jobs_arrived += 1;
+                    if alive_ids.is_empty() {
+                        report.jobs_rejected += 1;
+                        report.jobs_unplaceable += 1;
+                        report.outcomes.push(JobOutcome::Rejected { at: step });
+                        continue;
+                    }
+                    let m = alive_ids.len();
+                    candidates.clear();
+                    match scenario.dispatch {
+                        DispatchPolicy::RandomProbe => {
+                            candidates.push(alive_ids[dispatch_rng.gen_range(m)]);
+                        }
+                        DispatchPolicy::PowerOfK(k) => {
+                            let want = k.max(1).min(m);
+                            while candidates.len() < want {
+                                let c = alive_ids[dispatch_rng.gen_range(m)];
+                                if !candidates.contains(&c) {
+                                    candidates.push(c);
+                                }
+                            }
+                        }
+                        DispatchPolicy::RoundRobin => {
+                            let c = alive_ids[rr_cursor % m];
+                            rr_cursor = (rr_cursor + 1) % m;
+                            candidates.push(c);
+                        }
+                    }
+                    let placed = candidates.iter().copied().find(|&c| can_accept[c]);
+                    match placed {
+                        Some(node) => {
+                            report.jobs_accepted += 1;
+                            if spike_ahead(node, step) {
+                                report.bad_accepts += 1;
+                            } else {
+                                report.good_accepts += 1;
+                            }
+                            report.outcomes.push(JobOutcome::Accepted { node, at: step });
+                            inflight[node] += 1;
+                            total_inflight += 1;
+                            report.peak_inflight = report.peak_inflight.max(total_inflight);
+                            queue.schedule(
+                                ev.time + duration_steps as u64 * TICKS_PER_STEP,
+                                Event::JobCompletion { node, job_id, epoch: epoch[node] },
+                            );
+                        }
+                        None => {
+                            report.jobs_rejected += 1;
+                            if candidates.iter().any(|&c| spike_ahead(c, step)) {
+                                report.justified_rejections += 1;
+                            }
+                            report.outcomes.push(JobOutcome::Rejected { at: step });
+                        }
+                    }
+                }
+
+                Event::JobCompletion { node, epoch: job_epoch, .. } => {
+                    if alive[node] && epoch[node] == job_epoch && inflight[node] > 0 {
+                        inflight[node] -= 1;
+                        total_inflight -= 1;
+                        report.jobs_completed += 1;
+                    }
+                }
+
+                Event::FederationPush { leaf, snapshot, sent_at } => {
+                    if let Some(snap) = pool.take(snapshot) {
+                        if let Some(tree) = tree.as_mut() {
+                            tree.push_from_leaf(leaf, &snap);
+                        }
+                        // Instant models still pay the 1-tick scheduling
+                        // floor; don't let that show up as latency.
+                        if !fed.latency.is_instant() {
+                            lat_ticks_sum += ev.time - sent_at;
+                            lat_count += 1;
+                        }
+                    }
+                }
+
+                Event::NodeLeave { node } => {
+                    if !alive[node] {
+                        continue;
+                    }
+                    if let Some(churn) = &scenario.churn {
+                        if alive_ids.len() <= churn.min_alive {
+                            continue; // floor reached since scheduling
+                        }
+                    }
+                    alive[node] = false;
+                    epoch[node] = epoch[node].wrapping_add(1);
+                    report.jobs_displaced += inflight[node] as usize;
+                    total_inflight -= inflight[node] as usize;
+                    inflight[node] = 0;
+                    report.node_leaves += 1;
+                    alive_ids.retain(|&i| i != node);
+                    if let Some(churn) = &scenario.churn {
+                        if churn.rejoin_delay_mean > 0.0 {
+                            let delay =
+                                churn_rng.exponential(1.0 / churn.rejoin_delay_mean);
+                            queue.schedule(
+                                ev.time + latency_to_ticks(delay),
+                                Event::NodeJoin { node },
+                            );
+                        }
+                    }
+                }
+
+                Event::NodeJoin { node } => {
+                    if alive[node] {
+                        continue;
+                    }
+                    alive[node] = true;
+                    report.node_joins += 1;
+                    alive_ids.push(node);
+                    alive_ids.sort_unstable();
+                    // A restarted machine comes back with empty local
+                    // state…
+                    if let Some(f) = &factory {
+                        policies[node] = f(node);
+                        // …so its first post-restart push must clear the
+                        // ε gate even if the re-learned iterate resembles
+                        // the pre-restart one.
+                        if let Some(tree) = tree.as_mut() {
+                            tree.reset_leaf_gate(node);
+                        }
+                    }
+                    // …and (§5.2) seeds it by pulling the merged global
+                    // view — possibly stale, which is the point.
+                    if fed.pull_on_join {
+                        if let Some(tree) = tree.as_ref() {
+                            let global = tree.global_view();
+                            if !global.is_empty() {
+                                policies[node].absorb(global, fed.pull_forget);
+                            }
+                        }
+                    }
+                    // Fresh nodes accept until their first telemetry tick
+                    // says otherwise (cold PRONTO state raises no signal).
+                    can_accept[node] = true;
+                }
+            }
+        }
+
+        if let Some(tree) = &tree {
+            report.federation_pushes = tree.pushes();
+            report.federation_suppressed = tree.suppressed();
+        }
+        if lat_count > 0 {
+            report.mean_push_latency_steps =
+                lat_ticks_sum as f64 / lat_count as f64 / TICKS_PER_STEP as f64;
+        }
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::{NodeScheduler, ProntoPolicy, RandomPolicy, RejectConfig};
+    use crate::sim::scenario::ChurnModel;
+    use crate::telemetry::{GeneratorConfig, TraceGenerator};
+
+    fn traces(n: usize, steps: usize, seed: u64) -> Vec<VmTrace> {
+        let gen = TraceGenerator::new(GeneratorConfig::default(), seed);
+        (0..n).map(|v| gen.generate_vm_in_cluster(0, v, steps)).collect()
+    }
+
+    fn pronto_policies(tr: &[VmTrace]) -> Vec<Box<dyn Admission>> {
+        tr.iter()
+            .map(|t| {
+                Box::new(ProntoPolicy::new(NodeScheduler::new(
+                    t.dim(),
+                    RejectConfig::default(),
+                ))) as Box<dyn Admission>
+            })
+            .collect()
+    }
+
+    fn always_policies(tr: &[VmTrace]) -> Vec<Box<dyn Admission>> {
+        tr.iter()
+            .enumerate()
+            .map(|(i, _)| Box::new(RandomPolicy::always_accept(i as u64)) as Box<dyn Admission>)
+            .collect()
+    }
+
+    #[test]
+    fn conservation_invariants_hold() {
+        let tr = traces(4, 800, 1);
+        let pol = pronto_policies(&tr);
+        let sc = Scenario::default().with_steps(800).with_seed(7);
+        let report = DiscreteEventEngine::new(sc, tr, pol).run();
+        assert_eq!(report.jobs_arrived, report.jobs_accepted + report.jobs_rejected);
+        assert_eq!(report.jobs_accepted, report.good_accepts + report.bad_accepts);
+        assert_eq!(report.outcomes.len(), report.jobs_arrived);
+        assert!(report.jobs_completed + report.jobs_displaced <= report.jobs_accepted);
+    }
+
+    #[test]
+    fn same_seed_bitwise_identical_reports() {
+        for name in ["baseline-poisson", "bursty"] {
+            let sc = Scenario::named(name).unwrap().with_nodes(4).with_steps(600);
+            let tr = traces(4, 600, 3);
+            let a = DiscreteEventEngine::new(sc.clone(), tr.clone(), always_policies(&tr)).run();
+            let b = DiscreteEventEngine::new(sc, tr.clone(), always_policies(&tr)).run();
+            assert_eq!(a.to_json_string(), b.to_json_string(), "{name} diverged");
+            assert_eq!(a.outcomes, b.outcomes);
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let tr = traces(4, 600, 3);
+        let a = DiscreteEventEngine::new(
+            Scenario::default().with_steps(600).with_seed(1),
+            tr.clone(),
+            always_policies(&tr),
+        )
+        .run();
+        let b = DiscreteEventEngine::new(
+            Scenario::default().with_steps(600).with_seed(2),
+            tr.clone(),
+            always_policies(&tr),
+        )
+        .run();
+        assert_ne!(a.outcomes_digest(), b.outcomes_digest());
+    }
+
+    #[test]
+    fn churn_fires_and_pool_recovers() {
+        let sc = Scenario {
+            churn: Some(ChurnModel {
+                leave_hazard: 0.01,
+                rejoin_delay_mean: 30.0,
+                min_alive: 2,
+            }),
+            ..Scenario::named("churn").unwrap()
+        }
+        .with_nodes(6)
+        .with_steps(1000);
+        let tr = traces(6, 1000, 5);
+        let report = DiscreteEventEngine::new(sc, tr.clone(), always_policies(&tr)).run();
+        assert!(report.node_leaves > 0, "no churn happened");
+        assert!(report.node_joins > 0, "nobody rejoined");
+        assert!(report.node_joins <= report.node_leaves);
+        assert_eq!(report.jobs_arrived, report.jobs_accepted + report.jobs_rejected);
+    }
+
+    #[test]
+    fn federation_latency_pushes_are_counted_and_delayed() {
+        let sc = Scenario::named("latency").unwrap().with_nodes(4).with_steps(800);
+        let tr = traces(4, 800, 9);
+        let report = DiscreteEventEngine::new(sc, tr.clone(), pronto_policies(&tr)).run();
+        let total = report.federation_pushes + report.federation_suppressed;
+        assert!(total > 0, "no pushes offered");
+        assert!(report.mean_push_latency_steps > 0.5, "latency not applied");
+    }
+
+    #[test]
+    fn min_alive_floor_is_respected() {
+        let sc = Scenario {
+            churn: Some(ChurnModel {
+                leave_hazard: 0.5, // drain aggressively
+                rejoin_delay_mean: 0.0, // never rejoin
+                min_alive: 3,
+            }),
+            ..Scenario::default()
+        }
+        .with_nodes(5)
+        .with_steps(400);
+        let tr = traces(5, 400, 11);
+        let report = DiscreteEventEngine::new(sc, tr.clone(), always_policies(&tr)).run();
+        assert_eq!(report.node_leaves, 2, "floor violated: {}", report.node_leaves);
+        assert_eq!(report.node_joins, 0);
+    }
+
+    #[test]
+    fn json_report_is_valid_and_roundtrips() {
+        let tr = traces(3, 300, 13);
+        let sc = Scenario::default().with_steps(300);
+        let report = DiscreteEventEngine::new(sc, tr.clone(), always_policies(&tr)).run();
+        let text = report.to_json_string();
+        let parsed = crate::ser::parse_json(&text).expect("valid json");
+        assert_eq!(
+            parsed.get("jobs_arrived").and_then(JsonValue::as_usize),
+            Some(report.jobs_arrived)
+        );
+        assert_eq!(
+            parsed.get("scenario").and_then(JsonValue::as_str),
+            Some("baseline-poisson")
+        );
+    }
+}

@@ -1,0 +1,191 @@
+//! Typed simulation events and the deterministic event queue.
+//!
+//! The queue is a binary min-heap ordered by `(time, seq)`: `time` is a
+//! fixed-point tick count ([`TICKS_PER_STEP`] ticks per 20 s telemetry
+//! step, so sub-step latencies order correctly without floating-point
+//! comparisons) and `seq` is a monotone insertion counter that breaks ties
+//! deterministically — two runs that schedule the same events in the same
+//! order pop them in the same order, which is what makes reports
+//! bit-reproducible. Event payloads are small `Copy` data; anything large
+//! (federation subspace snapshots) lives in a pooled slab on the engine
+//! side and is referenced here by index, keeping the hot loop free of
+//! per-event allocation.
+
+use crate::scheduler::JobId;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Simulation clock: integer ticks.
+pub type SimTime = u64;
+
+/// Ticks per telemetry step (20 s of simulated wall time).
+pub const TICKS_PER_STEP: u64 = 1_000;
+
+/// Convert a step index to its tick timestamp.
+#[inline]
+pub fn step_to_ticks(step: usize) -> SimTime {
+    step as u64 * TICKS_PER_STEP
+}
+
+/// Convert a tick timestamp to the telemetry step it falls in.
+#[inline]
+pub fn ticks_to_step(t: SimTime) -> usize {
+    (t / TICKS_PER_STEP) as usize
+}
+
+/// Convert a latency in (possibly fractional) steps to whole ticks,
+/// always at least one tick so a delayed event never ties its cause.
+#[inline]
+pub fn latency_to_ticks(steps: f64) -> u64 {
+    ((steps.max(0.0) * TICKS_PER_STEP as f64).round() as u64).max(1)
+}
+
+/// Everything that can happen in the cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Event {
+    /// All alive nodes consume their telemetry vector for `step`.
+    TelemetryTick { step: usize },
+    /// A job arrives at the dispatcher.
+    JobArrival { job_id: JobId, duration_steps: usize },
+    /// A previously placed job finishes on `node`. `epoch` is the node's
+    /// churn epoch at placement time; a completion from a previous epoch
+    /// (the node left in between) is ignored.
+    JobCompletion { node: usize, job_id: JobId, epoch: u32 },
+    /// A leaf's iterate snapshot (pooled at `snapshot`) reaches its
+    /// aggregator after the configured push latency.
+    FederationPush { leaf: usize, snapshot: usize, sent_at: SimTime },
+    /// A node joins (or rejoins) the pool.
+    NodeJoin { node: usize },
+    /// A node leaves the pool; its in-flight jobs are displaced.
+    NodeLeave { node: usize },
+}
+
+/// An event bound to a point on the simulation clock.
+#[derive(Debug, Clone, Copy)]
+pub struct Scheduled {
+    pub time: SimTime,
+    seq: u64,
+    pub event: Event,
+}
+
+impl PartialEq for Scheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+
+impl Eq for Scheduled {}
+
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Scheduled {
+    /// Reverse ordering so `BinaryHeap` (a max-heap) pops the earliest
+    /// `(time, seq)` first.
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .time
+            .cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Deterministic event queue.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Scheduled>,
+    next_seq: u64,
+    scheduled_total: usize,
+}
+
+impl EventQueue {
+    /// Queue with pre-reserved capacity (the engine sizes this from the
+    /// scenario so steady-state operation never reallocates).
+    pub fn with_capacity(cap: usize) -> Self {
+        Self { heap: BinaryHeap::with_capacity(cap), next_seq: 0, scheduled_total: 0 }
+    }
+
+    /// Schedule `event` at `time`. Events at equal times fire in
+    /// scheduling order (FIFO) — the insertion counter breaks the tie.
+    pub fn schedule(&mut self, time: SimTime, event: Event) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.scheduled_total += 1;
+        self.heap.push(Scheduled { time, seq, event });
+    }
+
+    /// Pop the earliest event.
+    pub fn pop(&mut self) -> Option<Scheduled> {
+        self.heap.pop()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Total events scheduled over the queue's lifetime.
+    pub fn scheduled_total(&self) -> usize {
+        self.scheduled_total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::with_capacity(8);
+        q.schedule(30, Event::TelemetryTick { step: 3 });
+        q.schedule(10, Event::TelemetryTick { step: 1 });
+        q.schedule(20, Event::TelemetryTick { step: 2 });
+        let times: Vec<SimTime> = std::iter::from_fn(|| q.pop()).map(|s| s.time).collect();
+        assert_eq!(times, vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn equal_times_pop_fifo() {
+        let mut q = EventQueue::with_capacity(8);
+        for node in 0..5 {
+            q.schedule(42, Event::NodeJoin { node });
+        }
+        let order: Vec<usize> = std::iter::from_fn(|| q.pop())
+            .map(|s| match s.event {
+                Event::NodeJoin { node } => node,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(order, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn interleaved_schedule_pop_is_stable() {
+        let mut q = EventQueue::with_capacity(8);
+        q.schedule(5, Event::TelemetryTick { step: 0 });
+        q.schedule(1, Event::NodeLeave { node: 9 });
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop().unwrap().time, 1);
+        q.schedule(2, Event::NodeJoin { node: 9 });
+        assert_eq!(q.pop().unwrap().time, 2);
+        assert_eq!(q.pop().unwrap().time, 5);
+        assert!(q.pop().is_none());
+        assert!(q.is_empty());
+        assert_eq!(q.scheduled_total(), 3);
+    }
+
+    #[test]
+    fn tick_conversions_roundtrip() {
+        assert_eq!(step_to_ticks(7), 7 * TICKS_PER_STEP);
+        assert_eq!(ticks_to_step(step_to_ticks(7) + TICKS_PER_STEP - 1), 7);
+        assert_eq!(latency_to_ticks(0.0), 1);
+        assert_eq!(latency_to_ticks(2.0), 2 * TICKS_PER_STEP);
+        assert_eq!(latency_to_ticks(0.5), TICKS_PER_STEP / 2);
+    }
+}

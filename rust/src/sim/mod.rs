@@ -1,16 +1,31 @@
 //! Data-center simulation and the §7.1 evaluation harness.
 //!
+//! * [`events`] — typed simulation events and the deterministic
+//!   `(time, seq)`-ordered binary-heap event queue.
+//! * [`engine`] — the discrete-event cluster engine: telemetry ticks, job
+//!   arrivals/completions, node churn (join/leave mid-run), and federation
+//!   pushes with configurable delivery latency; bit-reproducible given a
+//!   seed.
+//! * [`scenario`] — composable run descriptions: arrival patterns
+//!   (Poisson, bursty/MMPP, diurnal), churn schedules, federation latency;
+//!   a named catalog plus TOML loading (`pronto sim --scenario …`).
+//! * [`datacenter`] — the fixed-step façade ([`DataCenterSim`]) that maps
+//!   a [`SimConfig`] onto the engine's steady-Poisson scenario.
 //! * [`eval`] — trace-driven evaluation of a rejection-signal method
 //!   against the CPU Ready ground truth: left/right-sided spike counts per
 //!   CPU Ready spike (Figure 6), downtime and contained-spike percentages
 //!   (Figure 7), and per-method aggregation over a fleet of VMs.
-//! * [`datacenter`] — a job-level discrete-event simulator: Poisson
-//!   arrivals, dispatcher probing, per-node admission by any
-//!   [`crate::scheduler::Admission`] policy; used by the end-to-end
-//!   example and the scalability bench.
 
 pub mod datacenter;
+pub mod engine;
 pub mod eval;
+pub mod events;
+pub mod scenario;
 
-pub use datacenter::{DataCenterSim, DispatchPolicy, SimConfig, SimReport};
+pub use datacenter::{DataCenterSim, SimConfig};
+pub use engine::{DiscreteEventEngine, PolicyFactory, SimReport};
 pub use eval::{evaluate_method, EvalConfig, FleetEvaluation, NodeEvaluation};
+pub use events::{Event, EventQueue, SimTime, TICKS_PER_STEP};
+pub use scenario::{
+    ArrivalPattern, ChurnModel, DispatchPolicy, FederationSpec, Scenario, CATALOG,
+};

@@ -1,0 +1,661 @@
+//! Scenario descriptions: what the cluster experiences during a run.
+//!
+//! A [`Scenario`] composes an arrival pattern (Poisson, bursty/MMPP-2,
+//! diurnal), an optional churn model (nodes leaving and rejoining
+//! mid-run, §5.2's transient nodes), and a federation link with a
+//! configurable push-latency distribution. The named catalog makes the
+//! paper's evaluation runs (steady Poisson arrivals, zero latency) just
+//! two points in a much larger space; custom scenarios load from the same
+//! TOML subset the main config uses (`pronto sim --scenario file.toml`).
+
+use crate::config::parse_toml;
+use crate::federation::LatencyModel;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// How the dispatcher picks candidate nodes for an arriving job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchPolicy {
+    /// Probe one uniformly random node (Sparrow-style single probe).
+    RandomProbe,
+    /// Probe `k` random nodes, accept the first that says yes.
+    PowerOfK(usize),
+    /// Round-robin over nodes.
+    RoundRobin,
+}
+
+/// Job arrival process, parameterized per telemetry step.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalPattern {
+    /// Homogeneous Poisson stream.
+    Poisson { rate: f64 },
+    /// Two-state Markov-modulated Poisson process: quiet periods at
+    /// `base_rate` punctuated by bursts at `burst_rate`; both regime
+    /// durations are geometric with the given means (in steps).
+    Bursty {
+        base_rate: f64,
+        burst_rate: f64,
+        mean_burst_len: f64,
+        mean_gap_len: f64,
+    },
+    /// Sinusoidal day/night modulation:
+    /// `rate(t) = base_rate * (1 + amplitude * sin(2πt / period))`,
+    /// clamped at 0.
+    Diurnal {
+        base_rate: f64,
+        amplitude: f64,
+        period_steps: usize,
+    },
+}
+
+impl ArrivalPattern {
+    /// Expected rate at `step` given the current burst regime.
+    pub fn rate_at(&self, step: usize, burst_on: bool) -> f64 {
+        match *self {
+            ArrivalPattern::Poisson { rate } => rate,
+            ArrivalPattern::Bursty { base_rate, burst_rate, .. } => {
+                if burst_on {
+                    burst_rate
+                } else {
+                    base_rate
+                }
+            }
+            ArrivalPattern::Diurnal { base_rate, amplitude, period_steps } => {
+                let phase =
+                    step as f64 / period_steps.max(1) as f64 * std::f64::consts::TAU;
+                (base_rate * (1.0 + amplitude * phase.sin())).max(0.0)
+            }
+        }
+    }
+
+    /// Long-run average rate (used for queue pre-sizing).
+    pub fn mean_rate(&self) -> f64 {
+        match *self {
+            ArrivalPattern::Poisson { rate } => rate,
+            ArrivalPattern::Bursty {
+                base_rate,
+                burst_rate,
+                mean_burst_len,
+                mean_gap_len,
+            } => {
+                let total = (mean_burst_len + mean_gap_len).max(1e-9);
+                (burst_rate * mean_burst_len + base_rate * mean_gap_len) / total
+            }
+            ArrivalPattern::Diurnal { base_rate, .. } => base_rate,
+        }
+    }
+}
+
+/// Node churn: memoryless leave hazard with optional rejoin.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChurnModel {
+    /// Per-node per-step probability of leaving.
+    pub leave_hazard: f64,
+    /// Mean rejoin delay in steps (exponential); `<= 0` means nodes never
+    /// come back.
+    pub rejoin_delay_mean: f64,
+    /// Never drain the pool below this many alive nodes.
+    pub min_alive: usize,
+}
+
+/// The federation link the engine drives during a run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FederationSpec {
+    pub enabled: bool,
+    /// Aggregator fanout.
+    pub fanout: usize,
+    /// Merge rank at aggregators.
+    pub rank: usize,
+    /// ε threshold of the push gate.
+    pub epsilon: f64,
+    /// Leaves offer their iterate every this many steps.
+    pub push_every: usize,
+    /// Push delivery latency distribution.
+    pub latency: LatencyModel,
+    /// Rejoining nodes pull the merged global view to re-seed (§5.2).
+    pub pull_on_join: bool,
+    /// Forgetting factor applied to the global side of a join pull.
+    pub pull_forget: f64,
+}
+
+impl Default for FederationSpec {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            fanout: 8,
+            rank: 4,
+            epsilon: 0.25,
+            push_every: 64,
+            latency: LatencyModel::None,
+            pull_on_join: true,
+            pull_forget: 0.5,
+        }
+    }
+}
+
+/// A complete description of one simulated run.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: String,
+    /// Number of data-center nodes.
+    pub nodes: usize,
+    /// Run length in telemetry steps (clamped to the trace length).
+    pub steps: usize,
+    /// Master seed; all engine RNG streams derive from it.
+    pub seed: u64,
+    pub arrivals: ArrivalPattern,
+    pub dispatch: DispatchPolicy,
+    /// Log-normal job duration parameters (steps).
+    pub duration_mu: f64,
+    pub duration_sigma: f64,
+    /// CPU Ready level marking degraded service for scoring.
+    pub ready_threshold: f64,
+    /// Horizon after acceptance scored for degradation (steps).
+    pub score_window: usize,
+    pub churn: Option<ChurnModel>,
+    pub federation: FederationSpec,
+}
+
+impl Default for Scenario {
+    fn default() -> Self {
+        Self {
+            name: "baseline-poisson".to_string(),
+            nodes: 16,
+            steps: 2_000,
+            seed: 2021,
+            arrivals: ArrivalPattern::Poisson { rate: 0.3 },
+            dispatch: DispatchPolicy::PowerOfK(2),
+            duration_mu: 3.0,
+            duration_sigma: 0.8,
+            ready_threshold: 1000.0,
+            score_window: 5,
+            churn: None,
+            federation: FederationSpec::default(),
+        }
+    }
+}
+
+/// Names in the built-in catalog, in display order.
+pub const CATALOG: &[&str] = &[
+    "baseline-poisson",
+    "bursty",
+    "diurnal",
+    "churn",
+    "latency",
+    "churn-latency",
+];
+
+impl Scenario {
+    /// Look up a named scenario from the built-in catalog.
+    pub fn named(name: &str) -> Option<Scenario> {
+        let base = Scenario::default();
+        let s = match name {
+            // The paper's setting: steady Poisson arrivals, full
+            // membership, instant federation (fig. 1 / fig. 7 conditions).
+            "baseline-poisson" => Scenario { ..base },
+            // Flash-crowd arrivals: long quiet stretches, 10× bursts.
+            "bursty" => Scenario {
+                name: name.into(),
+                arrivals: ArrivalPattern::Bursty {
+                    base_rate: 0.15,
+                    burst_rate: 1.5,
+                    mean_burst_len: 40.0,
+                    mean_gap_len: 200.0,
+                },
+                ..base
+            },
+            // Day/night swing over a compressed 4-hour "day".
+            "diurnal" => Scenario {
+                name: name.into(),
+                arrivals: ArrivalPattern::Diurnal {
+                    base_rate: 0.3,
+                    amplitude: 0.8,
+                    period_steps: 720,
+                },
+                ..base
+            },
+            // Nodes leave and rejoin mid-run; rejoining nodes pull the
+            // global view (arXiv:2101.06139's join/leave regime).
+            "churn" => Scenario {
+                name: name.into(),
+                churn: Some(ChurnModel {
+                    leave_hazard: 0.0008,
+                    rejoin_delay_mean: 120.0,
+                    min_alive: 4,
+                }),
+                federation: FederationSpec { enabled: true, ..Default::default() },
+                ..base
+            },
+            // Federation pushes cross a WAN: exponential delay, mean
+            // 8 steps (~2.7 min) — iterates merge stale.
+            "latency" => Scenario {
+                name: name.into(),
+                federation: FederationSpec {
+                    enabled: true,
+                    latency: LatencyModel::Exponential { mean_steps: 8.0 },
+                    ..Default::default()
+                },
+                ..base
+            },
+            // Both stressors at once.
+            "churn-latency" => Scenario {
+                name: name.into(),
+                churn: Some(ChurnModel {
+                    leave_hazard: 0.0008,
+                    rejoin_delay_mean: 120.0,
+                    min_alive: 4,
+                }),
+                federation: FederationSpec {
+                    enabled: true,
+                    latency: LatencyModel::Exponential { mean_steps: 8.0 },
+                    ..Default::default()
+                },
+                ..base
+            },
+            _ => return None,
+        };
+        Some(s)
+    }
+
+    /// Resolve a CLI `--scenario` argument: a catalog name, or a path to a
+    /// TOML file. (`"none"` is handled by the CLI before resolution — it
+    /// selects the fixed-step facade.)
+    pub fn resolve(spec: &str) -> Result<Scenario> {
+        if let Some(s) = Scenario::named(spec) {
+            return Ok(s);
+        }
+        let path = Path::new(spec);
+        if path.exists() {
+            return Scenario::from_toml_file(path);
+        }
+        bail!(
+            "unknown scenario '{spec}' (catalog: {}; or pass a .toml path)",
+            CATALOG.join(", ")
+        );
+    }
+
+    /// Load from a TOML file.
+    pub fn from_toml_file(path: &Path) -> Result<Scenario> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading scenario {}", path.display()))?;
+        Scenario::from_toml(&text)
+            .with_context(|| format!("parsing scenario {}", path.display()))
+    }
+
+    /// Parse from TOML text. Sections: `[scenario]`, `[arrivals]`,
+    /// `[churn]`, `[federation]`; every key optional, unknown keys
+    /// rejected.
+    pub fn from_toml(text: &str) -> Result<Scenario> {
+        let doc = parse_toml(text).map_err(|e| anyhow::anyhow!("scenario: {e}"))?;
+        let mut s = Scenario { name: "custom".into(), ..Default::default() };
+        // Arrival-pattern fields are collected across keys, then assembled.
+        let mut pattern = "poisson".to_string();
+        let mut rate = 0.3f64;
+        let mut burst_rate = 1.5f64;
+        let mut mean_burst_len = 40.0f64;
+        let mut mean_gap_len = 200.0f64;
+        let mut amplitude = 0.8f64;
+        let mut period_steps = 720usize;
+        // Churn assembled likewise; presence of the section enables it.
+        let mut churn_seen = false;
+        let mut churn = ChurnModel { leave_hazard: 0.001, rejoin_delay_mean: 120.0, min_alive: 1 };
+        // Federation latency fields. Options so a parameter without the
+        // selector (or vice versa) can be detected instead of silently
+        // degenerating to instant delivery.
+        let mut latency_kind: Option<String> = None;
+        let mut latency_mean: Option<f64> = None;
+        let mut latency_lo: Option<f64> = None;
+        let mut latency_hi: Option<f64> = None;
+        let mut probe_k = 2usize;
+        let mut dispatch = "power-of-k".to_string();
+
+        for (section, entries) in &doc {
+            for (key, v) in entries {
+                let num = || -> Result<f64> {
+                    v.as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("{section}.{key}: expected number"))
+                };
+                let uint = || -> Result<usize> { Ok(num()? as usize) };
+                let boolean = || -> Result<bool> {
+                    v.as_bool()
+                        .ok_or_else(|| anyhow::anyhow!("{section}.{key}: expected bool"))
+                };
+                let string = || -> Result<String> {
+                    v.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| anyhow::anyhow!("{section}.{key}: expected string"))
+                };
+                match (section.as_str(), key.as_str()) {
+                    ("scenario", "name") => s.name = string()?,
+                    ("scenario", "nodes") => s.nodes = uint()?,
+                    ("scenario", "steps") => s.steps = uint()?,
+                    ("scenario", "seed") => s.seed = num()? as u64,
+                    ("scenario", "dispatch") => dispatch = string()?,
+                    ("scenario", "probe_k") => probe_k = uint()?,
+                    ("scenario", "duration_mu") => s.duration_mu = num()?,
+                    ("scenario", "duration_sigma") => s.duration_sigma = num()?,
+                    ("scenario", "ready_threshold") => s.ready_threshold = num()?,
+                    ("scenario", "score_window") => s.score_window = uint()?,
+
+                    ("arrivals", "pattern") => pattern = string()?,
+                    ("arrivals", "rate") => rate = num()?,
+                    ("arrivals", "burst_rate") => burst_rate = num()?,
+                    ("arrivals", "mean_burst_len") => mean_burst_len = num()?,
+                    ("arrivals", "mean_gap_len") => mean_gap_len = num()?,
+                    ("arrivals", "amplitude") => amplitude = num()?,
+                    ("arrivals", "period_steps") => period_steps = uint()?,
+
+                    ("churn", "leave_hazard") => {
+                        churn_seen = true;
+                        churn.leave_hazard = num()?;
+                    }
+                    ("churn", "rejoin_delay_mean") => {
+                        churn_seen = true;
+                        churn.rejoin_delay_mean = num()?;
+                    }
+                    ("churn", "min_alive") => {
+                        churn_seen = true;
+                        churn.min_alive = uint()?;
+                    }
+
+                    ("federation", "enabled") => s.federation.enabled = boolean()?,
+                    ("federation", "fanout") => s.federation.fanout = uint()?,
+                    ("federation", "rank") => s.federation.rank = uint()?,
+                    ("federation", "epsilon") => s.federation.epsilon = num()?,
+                    ("federation", "push_every") => s.federation.push_every = uint()?,
+                    ("federation", "latency") => latency_kind = Some(string()?),
+                    ("federation", "latency_mean_steps") => latency_mean = Some(num()?),
+                    ("federation", "latency_lo") => latency_lo = Some(num()?),
+                    ("federation", "latency_hi") => latency_hi = Some(num()?),
+                    ("federation", "pull_on_join") => s.federation.pull_on_join = boolean()?,
+                    ("federation", "pull_forget") => s.federation.pull_forget = num()?,
+
+                    _ => bail!("unknown scenario key [{section}] {key}"),
+                }
+            }
+        }
+
+        s.arrivals = match pattern.as_str() {
+            "poisson" => ArrivalPattern::Poisson { rate },
+            "bursty" => ArrivalPattern::Bursty {
+                base_rate: rate,
+                burst_rate,
+                mean_burst_len,
+                mean_gap_len,
+            },
+            "diurnal" => ArrivalPattern::Diurnal { base_rate: rate, amplitude, period_steps },
+            other => bail!("arrivals.pattern '{other}' (poisson | bursty | diurnal)"),
+        };
+        s.dispatch = match dispatch.as_str() {
+            "random" => DispatchPolicy::RandomProbe,
+            "round-robin" => DispatchPolicy::RoundRobin,
+            "power-of-k" => DispatchPolicy::PowerOfK(probe_k.max(1)),
+            other => bail!("scenario.dispatch '{other}' (random | round-robin | power-of-k)"),
+        };
+        // Selector + parameters must agree; a parameter on its own infers
+        // its model (matching the main config's behaviour) rather than
+        // silently running the zero-latency baseline.
+        let mean = || -> Result<f64> {
+            latency_mean
+                .ok_or_else(|| anyhow::anyhow!("federation.latency_mean_steps required"))
+        };
+        s.federation.latency = match latency_kind.as_deref() {
+            Some("none") => LatencyModel::None,
+            Some("constant") => LatencyModel::Constant { steps: mean()? },
+            Some("exponential") => LatencyModel::Exponential { mean_steps: mean()? },
+            Some("uniform") => LatencyModel::Uniform {
+                lo: latency_lo
+                    .ok_or_else(|| anyhow::anyhow!("federation.latency_lo required"))?,
+                hi: latency_hi
+                    .ok_or_else(|| anyhow::anyhow!("federation.latency_hi required"))?,
+            },
+            Some(other) => bail!(
+                "federation.latency '{other}' (none | constant | exponential | uniform)"
+            ),
+            None => match (latency_mean, latency_lo, latency_hi) {
+                (None, None, None) => LatencyModel::None,
+                (Some(m), None, None) => LatencyModel::Exponential { mean_steps: m },
+                (None, Some(lo), Some(hi)) => LatencyModel::Uniform { lo, hi },
+                _ => bail!(
+                    "federation latency parameters are ambiguous without a \
+                     `latency = \"...\"` selector"
+                ),
+            },
+        };
+        if churn_seen {
+            s.churn = Some(churn);
+        }
+        s.validate()?;
+        Ok(s)
+    }
+
+    /// Sanity-check the composition.
+    pub fn validate(&self) -> Result<()> {
+        if self.nodes == 0 || self.steps == 0 {
+            bail!("scenario: nodes and steps must be positive");
+        }
+        if self.federation.fanout < 2 {
+            bail!("scenario: federation.fanout must be >= 2");
+        }
+        if self.federation.push_every == 0 {
+            bail!("scenario: federation.push_every must be >= 1");
+        }
+        if let Some(c) = &self.churn {
+            if !(0.0..=1.0).contains(&c.leave_hazard) {
+                bail!("scenario: churn.leave_hazard must be in [0, 1]");
+            }
+            if c.min_alive >= self.nodes {
+                bail!(
+                    "scenario: churn.min_alive ({}) must be below nodes ({}) \
+                     or churn can never fire",
+                    c.min_alive,
+                    self.nodes
+                );
+            }
+        }
+        // Each regime's rate must be valid on its own — a healthy mean
+        // can hide a negative burst rate that would panic the Poisson
+        // sampler (debug) or silently zero arrivals (release).
+        let rate_ok = |r: f64| r.is_finite() && r >= 0.0;
+        match self.arrivals {
+            ArrivalPattern::Poisson { rate } => {
+                if !rate_ok(rate) {
+                    bail!("scenario: arrivals.rate must be finite and non-negative");
+                }
+            }
+            ArrivalPattern::Bursty {
+                base_rate,
+                burst_rate,
+                mean_burst_len,
+                mean_gap_len,
+            } => {
+                if !rate_ok(base_rate) || !rate_ok(burst_rate) {
+                    bail!("scenario: bursty rates must be finite and non-negative");
+                }
+                if !(mean_burst_len > 0.0 && mean_gap_len > 0.0) {
+                    bail!("scenario: bursty regime lengths must be positive");
+                }
+            }
+            ArrivalPattern::Diurnal { base_rate, amplitude, period_steps } => {
+                if !rate_ok(base_rate) || !amplitude.is_finite() {
+                    bail!("scenario: diurnal rate/amplitude must be finite (rate >= 0)");
+                }
+                if period_steps == 0 {
+                    bail!("scenario: diurnal period_steps must be >= 1");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Builder-style overrides used by the CLI and benches.
+    pub fn with_nodes(mut self, nodes: usize) -> Self {
+        self.nodes = nodes;
+        self
+    }
+
+    pub fn with_steps(mut self, steps: usize) -> Self {
+        self.steps = steps;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_names_all_resolve() {
+        for name in CATALOG {
+            let s = Scenario::named(name).expect(name);
+            s.validate().expect(name);
+            assert_eq!(&s.name, name);
+        }
+        assert!(Scenario::named("nope").is_none());
+    }
+
+    #[test]
+    fn bursty_rates_follow_regime() {
+        let a = ArrivalPattern::Bursty {
+            base_rate: 0.1,
+            burst_rate: 2.0,
+            mean_burst_len: 10.0,
+            mean_gap_len: 90.0,
+        };
+        assert_eq!(a.rate_at(5, false), 0.1);
+        assert_eq!(a.rate_at(5, true), 2.0);
+        assert!((a.mean_rate() - (2.0 * 10.0 + 0.1 * 90.0) / 100.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn diurnal_rate_oscillates_and_stays_nonnegative() {
+        let a = ArrivalPattern::Diurnal { base_rate: 0.2, amplitude: 1.5, period_steps: 100 };
+        let rates: Vec<f64> = (0..100).map(|t| a.rate_at(t, false)).collect();
+        assert!(rates.iter().all(|&r| r >= 0.0));
+        let max = rates.iter().cloned().fold(0.0, f64::max);
+        let min = rates.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(max > 0.4 && min == 0.0, "max={max} min={min}");
+    }
+
+    #[test]
+    fn toml_scenario_parses_fully() {
+        let s = Scenario::from_toml(
+            r#"
+[scenario]
+name = "wan-storm"
+nodes = 24
+steps = 1500
+seed = 99
+dispatch = "power-of-k"
+probe_k = 3
+score_window = 8
+
+[arrivals]
+pattern = "bursty"
+rate = 0.2
+burst_rate = 2.5
+mean_burst_len = 30
+mean_gap_len = 150
+
+[churn]
+leave_hazard = 0.002
+rejoin_delay_mean = 60
+min_alive = 6
+
+[federation]
+enabled = true
+push_every = 32
+latency = "exponential"
+latency_mean_steps = 5.0
+"#,
+        )
+        .unwrap();
+        assert_eq!(s.name, "wan-storm");
+        assert_eq!(s.nodes, 24);
+        assert_eq!(s.dispatch, DispatchPolicy::PowerOfK(3));
+        assert!(matches!(s.arrivals, ArrivalPattern::Bursty { burst_rate, .. } if burst_rate == 2.5));
+        let churn = s.churn.unwrap();
+        assert_eq!(churn.min_alive, 6);
+        assert!(s.federation.enabled);
+        assert_eq!(s.federation.push_every, 32);
+        assert_eq!(
+            s.federation.latency,
+            LatencyModel::Exponential { mean_steps: 5.0 }
+        );
+    }
+
+    #[test]
+    fn toml_rejects_unknown_keys_and_bad_enums() {
+        assert!(Scenario::from_toml("[scenario]\nnodez = 2\n").is_err());
+        assert!(Scenario::from_toml("[arrivals]\npattern = \"fractal\"\n").is_err());
+        assert!(Scenario::from_toml("[federation]\nlatency = \"psychic\"\n").is_err());
+        assert!(Scenario::from_toml("[scenario]\nnodes = 0\n").is_err());
+    }
+
+    #[test]
+    fn latency_params_infer_model_and_selector_requires_params() {
+        // A bare mean selects the exponential model (as in the main
+        // config) instead of silently running with instant delivery.
+        let s =
+            Scenario::from_toml("[federation]\nlatency_mean_steps = 6.0\n").unwrap();
+        assert_eq!(s.federation.latency, LatencyModel::Exponential { mean_steps: 6.0 });
+        let s = Scenario::from_toml("[federation]\nlatency_lo = 1\nlatency_hi = 3\n")
+            .unwrap();
+        assert_eq!(s.federation.latency, LatencyModel::Uniform { lo: 1.0, hi: 3.0 });
+        // Selector without its parameter is an error, not instant.
+        assert!(Scenario::from_toml("[federation]\nlatency = \"exponential\"\n").is_err());
+        assert!(Scenario::from_toml("[federation]\nlatency = \"uniform\"\n").is_err());
+        // Mixed parameters without a selector are ambiguous.
+        assert!(Scenario::from_toml(
+            "[federation]\nlatency_mean_steps = 2\nlatency_lo = 1\nlatency_hi = 3\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn per_regime_arrival_rates_are_validated() {
+        assert!(Scenario::from_toml(
+            "[arrivals]\npattern = \"bursty\"\nrate = 1.0\nburst_rate = -0.5\n"
+        )
+        .is_err());
+        assert!(Scenario::from_toml("[arrivals]\nrate = -0.1\n").is_err());
+        assert!(Scenario::from_toml(
+            "[arrivals]\npattern = \"diurnal\"\nperiod_steps = 0\n"
+        )
+        .is_err());
+        assert!(Scenario::from_toml(
+            "[arrivals]\npattern = \"bursty\"\nmean_burst_len = 0\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn churn_floor_must_leave_room_to_churn() {
+        assert!(Scenario::from_toml(
+            "[scenario]\nnodes = 4\n[churn]\nmin_alive = 4\n"
+        )
+        .is_err());
+        assert!(Scenario::from_toml(
+            "[scenario]\nnodes = 5\n[churn]\nmin_alive = 4\n"
+        )
+        .is_ok());
+    }
+
+    #[test]
+    fn resolve_prefers_catalog_then_path() {
+        assert!(Scenario::resolve("bursty").is_ok());
+        assert!(Scenario::resolve("no-such-scenario").is_err());
+        let dir = std::env::temp_dir().join("pronto_scenario_resolve");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("s.toml");
+        std::fs::write(&p, "[scenario]\nname = \"from-file\"\nnodes = 4\n").unwrap();
+        let s = Scenario::resolve(&p.to_string_lossy()).unwrap();
+        assert_eq!(s.name, "from-file");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,121 @@
+//! Determinism regressions: the engine must be bit-reproducible given a
+//! seed, and the two federation runtimes must agree on the merged view.
+
+use pronto::federation::{
+    ConcurrentFederation, FederationTree, LatencyModel, TreeTopology,
+};
+use pronto::linalg::subspace_distance;
+use pronto::scheduler::{Admission, NodeScheduler, ProntoPolicy, RejectConfig};
+use pronto::sim::{DiscreteEventEngine, Scenario, CATALOG};
+use pronto::telemetry::{GeneratorConfig, TraceGenerator, VmTrace};
+
+fn fleet(n: usize, steps: usize, seed: u64) -> Vec<VmTrace> {
+    let gen = TraceGenerator::new(GeneratorConfig::default(), seed);
+    (0..n).map(|v| gen.generate_vm_in_cluster(v / 4, v, steps)).collect()
+}
+
+fn pronto_policies(tr: &[VmTrace]) -> Vec<Box<dyn Admission>> {
+    tr.iter()
+        .map(|t| {
+            Box::new(ProntoPolicy::new(NodeScheduler::new(
+                t.dim(),
+                RejectConfig::default(),
+            ))) as Box<dyn Admission>
+        })
+        .collect()
+}
+
+#[test]
+fn same_seed_same_scenario_identical_reports() {
+    // Byte-identical JSON across two fresh engine runs, for every named
+    // scenario — the acceptance criterion of the scenario work.
+    for name in CATALOG {
+        let scenario = Scenario::named(name)
+            .unwrap()
+            .with_nodes(6)
+            .with_steps(1_200)
+            .with_seed(0xDECAF);
+        let tr = fleet(6, 1_200, 17);
+        let a = DiscreteEventEngine::new(scenario.clone(), tr.clone(), pronto_policies(&tr))
+            .run();
+        let b = DiscreteEventEngine::new(scenario, tr.clone(), pronto_policies(&tr)).run();
+        assert_eq!(
+            a.to_json_string(),
+            b.to_json_string(),
+            "scenario '{name}' not reproducible"
+        );
+        assert_eq!(a.outcomes, b.outcomes, "scenario '{name}' outcome drift");
+    }
+}
+
+#[test]
+fn seed_change_changes_outcomes() {
+    let tr = fleet(4, 800, 23);
+    let a = DiscreteEventEngine::new(
+        Scenario::default().with_steps(800).with_seed(1),
+        tr.clone(),
+        pronto_policies(&tr),
+    )
+    .run();
+    let b = DiscreteEventEngine::new(
+        Scenario::default().with_steps(800).with_seed(2),
+        tr.clone(),
+        pronto_policies(&tr),
+    )
+    .run();
+    assert_ne!(a.outcomes_digest(), b.outcomes_digest());
+}
+
+#[test]
+fn tree_and_concurrent_federation_agree_within_tolerance() {
+    // Same traces through the single-threaded tree (manual drive) and the
+    // thread-per-leaf runtime: the merged global views must describe the
+    // same dominant subspace, within merge-order tolerance.
+    let n = 8;
+    let steps = 1_024;
+    let traces = fleet(n, steps, 29);
+    let d = traces[0].dim();
+    let rank = 4;
+
+    let mut tree = FederationTree::new(TreeTopology::new(n, 4), d, rank, 0.0);
+    for (leaf, tr) in traces.iter().enumerate() {
+        let mut node = NodeScheduler::new(d, RejectConfig::default());
+        for t in 0..steps {
+            node.observe(tr.features(t));
+        }
+        tree.push_from_leaf(leaf, &node.estimate());
+    }
+
+    let report = ConcurrentFederation::new(TreeTopology::new(n, 4), rank, 0.0)
+        .with_push_every(steps)
+        .run(traces);
+
+    let g_tree = tree.global_view();
+    let g_conc = &report.global_view;
+    assert_eq!(g_tree.rank(), rank);
+    assert_eq!(g_conc.rank(), rank);
+    // Dominant directions agree.
+    let dist = subspace_distance(&g_tree.truncate(2).u, &g_conc.truncate(2).u);
+    assert!(dist < 0.35, "federation runtimes diverged: distance {dist}");
+    // Energy scales agree.
+    let ratio = g_tree.sigma[0] / g_conc.sigma[0];
+    assert!((0.5..2.0).contains(&ratio), "sigma ratio {ratio}");
+}
+
+#[test]
+fn concurrent_federation_latency_is_deterministic_per_leaf() {
+    // The latency stream must not depend on thread scheduling: two runs
+    // with the same seed drop the same number of late pushes and deliver
+    // the same number of pushes.
+    let run = || {
+        ConcurrentFederation::new(TreeTopology::new(4, 4), 4, 0.0)
+            .with_push_every(32)
+            .with_latency(LatencyModel::Exponential { mean_steps: 24.0 }, 99)
+            .run(fleet(4, 512, 37))
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.pushes, b.pushes);
+    assert_eq!(a.suppressed, b.suppressed);
+    assert_eq!(a.late_drops, b.late_drops);
+}

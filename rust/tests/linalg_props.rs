@@ -1,0 +1,165 @@
+//! Property-based tests for the linear-algebra substrate, using the
+//! in-crate `pronto::proptest` harness (seeded, replayable via
+//! `PRONTO_PROP_SEED` / `PRONTO_PROP_CASES`).
+
+use pronto::linalg::{
+    frob_diff, householder_qr, jacobi_svd, orthonormality_error, subspace_distance,
+    svd_truncated, thin_qr, Mat,
+};
+use pronto::proptest::{forall, gen_low_rank, gen_mat, gen_orthonormal, gen_spectrum};
+
+#[test]
+fn qr_q_is_orthonormal_and_reconstructs() {
+    forall("QR: QᵀQ = I and QR = A", |rng| {
+        let m = 4 + rng.gen_range(24);
+        let n = 1 + rng.gen_range(m.min(10));
+        let a = gen_mat(rng, m, n);
+        let (q, r) = householder_qr(&a);
+        let ortho = orthonormality_error(&q);
+        if ortho > 1e-9 {
+            return Err(format!("Q not orthonormal: {ortho}"));
+        }
+        let recon = q.matmul(&r);
+        let err = frob_diff(&recon, &a) / a.frob_norm().max(1e-12);
+        if err > 1e-9 {
+            return Err(format!("QR reconstruction error {err}"));
+        }
+        // R upper-triangular.
+        for i in 0..r.rows() {
+            for j in 0..i.min(r.cols()) {
+                if r.get(i, j).abs() > 1e-9 {
+                    return Err(format!("R not triangular at ({i},{j}): {}", r.get(i, j)));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn thin_qr_matches_householder_subspace() {
+    forall("thin QR spans the same space", |rng| {
+        let m = 6 + rng.gen_range(20);
+        let n = 1 + rng.gen_range(6);
+        let a = gen_mat(rng, m, n);
+        let (q1, _) = householder_qr(&a);
+        let (q2, r2) = thin_qr(&a);
+        if orthonormality_error(&q2) > 1e-8 {
+            return Err("thin Q not orthonormal".into());
+        }
+        let recon = q2.matmul(&r2);
+        let err = frob_diff(&recon, &a) / a.frob_norm().max(1e-12);
+        if err > 1e-8 {
+            return Err(format!("thin QR reconstruction error {err}"));
+        }
+        let dist = subspace_distance(&q1, &q2);
+        if dist > 1e-7 {
+            return Err(format!("QR variants span different spaces: {dist}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn svd_reconstructs_low_rank_matrices() {
+    forall("SVD: UΣVᵀ ≈ A for low-rank A", |rng| {
+        let m = 8 + rng.gen_range(16);
+        let n = 8 + rng.gen_range(16);
+        let r = 1 + rng.gen_range(4);
+        let a = gen_low_rank(rng, m, n, r, 0.0);
+        let svd = svd_truncated(&a, r);
+        if svd.sigma.windows(2).any(|w| w[0] < w[1]) {
+            return Err(format!("sigma not descending: {:?}", svd.sigma));
+        }
+        if orthonormality_error(&svd.u) > 1e-7 {
+            return Err("U not orthonormal".into());
+        }
+        let recon = svd.u.mul_diag(&svd.sigma).matmul(&svd.v.transpose());
+        let err = frob_diff(&recon, &a) / a.frob_norm().max(1e-12);
+        if err > 1e-6 {
+            return Err(format!("reconstruction error {err} at rank {r}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn full_jacobi_svd_reconstructs_general_matrices() {
+    forall("Jacobi SVD reconstructs dense A", |rng| {
+        let n = 3 + rng.gen_range(10);
+        let m = n + rng.gen_range(8); // square-or-tall
+        let a = gen_mat(rng, m, n);
+        let svd = jacobi_svd(&a);
+        let recon = svd.u.mul_diag(&svd.sigma).matmul(&svd.v.transpose());
+        let err = frob_diff(&recon, &a) / a.frob_norm().max(1e-12);
+        if err > 1e-8 {
+            return Err(format!("reconstruction error {err}"));
+        }
+        if svd.sigma.iter().any(|&s| s < -1e-12) {
+            return Err("negative singular value".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn subspace_distance_is_a_bounded_symmetric_pseudometric() {
+    forall("subspace_distance: symmetry, bounds, identity", |rng| {
+        let d = 6 + rng.gen_range(24);
+        let r1 = 1 + rng.gen_range(4);
+        let r2 = 1 + rng.gen_range(4);
+        let u1 = gen_orthonormal(rng, d, r1);
+        let u2 = gen_orthonormal(rng, d, r2);
+        let d12 = subspace_distance(&u1, &u2);
+        let d21 = subspace_distance(&u2, &u1);
+        if (d12 - d21).abs() > 1e-9 {
+            return Err(format!("asymmetric: {d12} vs {d21}"));
+        }
+        if !(0.0..=1.0 + 1e-12).contains(&d12) {
+            return Err(format!("out of [0,1]: {d12}"));
+        }
+        let d11 = subspace_distance(&u1, &u1);
+        if d11 > 1e-7 {
+            return Err(format!("self-distance {d11}"));
+        }
+        // Invariance to column sign flips.
+        let mut flipped = u1.clone();
+        for x in flipped.col_mut(0) {
+            *x = -*x;
+        }
+        let dflip = subspace_distance(&u1, &flipped);
+        if dflip > 1e-7 {
+            return Err(format!("sign flip moved the subspace: {dflip}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn subspace_distance_detects_orthogonal_complements() {
+    // Deterministic sanity anchor: span(e1) vs span(e2) is maximally far.
+    let mut u1 = Mat::zeros(4, 1);
+    u1.set(0, 0, 1.0);
+    let mut u2 = Mat::zeros(4, 1);
+    u2.set(1, 0, 1.0);
+    let d = subspace_distance(&u1, &u2);
+    assert!((d - 1.0).abs() < 1e-12, "orthogonal spans should be at distance 1: {d}");
+}
+
+#[test]
+fn spectrum_generator_feeds_valid_subspaces() {
+    forall("generated spectra are descending and non-negative", |rng| {
+        let r = 1 + rng.gen_range(8);
+        let s = gen_spectrum(rng, r);
+        if s.len() != r {
+            return Err("wrong length".into());
+        }
+        if s.iter().any(|&x| x < 0.0) {
+            return Err("negative sigma".into());
+        }
+        if s.windows(2).any(|w| w[0] < w[1]) {
+            return Err(format!("not descending: {s:?}"));
+        }
+        Ok(())
+    });
+}

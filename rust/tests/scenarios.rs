@@ -1,0 +1,203 @@
+//! Integration tests for the scenario layer: churn keeps decision quality,
+//! push latency degrades gracefully, and every catalog entry runs clean.
+
+use pronto::scheduler::{Admission, NodeScheduler, ProntoPolicy, RandomPolicy, RejectConfig};
+use pronto::sim::{ChurnModel, DiscreteEventEngine, PolicyFactory, Scenario, CATALOG};
+use pronto::telemetry::{GeneratorConfig, TraceGenerator, VmTrace};
+
+fn fleet(n: usize, steps: usize, seed: u64) -> Vec<VmTrace> {
+    let gen = TraceGenerator::new(GeneratorConfig::default(), seed);
+    (0..n).map(|v| gen.generate_vm_in_cluster(v / 4, v, steps)).collect()
+}
+
+fn pronto_policies(tr: &[VmTrace]) -> Vec<Box<dyn Admission>> {
+    tr.iter()
+        .map(|t| {
+            Box::new(ProntoPolicy::new(NodeScheduler::new(
+                t.dim(),
+                RejectConfig::default(),
+            ))) as Box<dyn Admission>
+        })
+        .collect()
+}
+
+fn always_policies(tr: &[VmTrace]) -> Vec<Box<dyn Admission>> {
+    tr.iter()
+        .enumerate()
+        .map(|(i, _)| Box::new(RandomPolicy::always_accept(i as u64)) as Box<dyn Admission>)
+        .collect()
+}
+
+fn pronto_factory(d: usize) -> PolicyFactory {
+    Box::new(move |_node| {
+        Box::new(ProntoPolicy::new(NodeScheduler::new(d, RejectConfig::default())))
+            as Box<dyn Admission>
+    })
+}
+
+fn assert_conservation(report: &pronto::sim::SimReport) {
+    assert_eq!(
+        report.jobs_arrived,
+        report.jobs_accepted + report.jobs_rejected
+    );
+    assert_eq!(
+        report.jobs_accepted,
+        report.good_accepts + report.bad_accepts
+    );
+    assert_eq!(report.outcomes.len(), report.jobs_arrived);
+    assert!(report.jobs_completed + report.jobs_displaced <= report.jobs_accepted);
+    assert!(report.mean_push_latency_steps.is_finite());
+}
+
+#[test]
+fn every_named_scenario_runs_clean() {
+    for name in CATALOG {
+        let scenario = Scenario::named(name)
+            .unwrap()
+            .with_nodes(6)
+            .with_steps(1_000);
+        let tr = fleet(6, 1_000, 31);
+        let report =
+            DiscreteEventEngine::new(scenario, tr.clone(), pronto_policies(&tr)).run();
+        assert_conservation(&report);
+        assert!(report.jobs_arrived > 0, "{name}: no jobs arrived");
+    }
+}
+
+#[test]
+fn churn_scenario_pronto_keeps_placement_edge() {
+    // Under churn, PRONTO's informed rejections must not fall behind
+    // blind always-accept placement; churn machinery itself must engage.
+    let steps = 4_000;
+    let nodes = 8;
+    let mk_scenario = || {
+        Scenario {
+            churn: Some(ChurnModel {
+                leave_hazard: 0.002,
+                rejoin_delay_mean: 80.0,
+                min_alive: 3,
+            }),
+            ..Scenario::named("churn").unwrap()
+        }
+        .with_nodes(nodes)
+        .with_steps(steps)
+        .with_seed(77)
+    };
+    let tr = fleet(nodes, steps, 41);
+    let d = tr[0].dim();
+
+    let r_pronto = DiscreteEventEngine::new(mk_scenario(), tr.clone(), pronto_policies(&tr))
+        .with_policy_factory(pronto_factory(d))
+        .run();
+    let r_always =
+        DiscreteEventEngine::new(mk_scenario(), tr.clone(), always_policies(&tr)).run();
+
+    assert_conservation(&r_pronto);
+    assert!(r_pronto.node_leaves > 0, "churn never fired");
+    assert!(r_pronto.node_joins > 0, "no node ever rejoined");
+    // Same arrival stream (separate RNG streams ⇒ identical arrivals).
+    assert_eq!(r_pronto.jobs_arrived, r_always.jobs_arrived);
+    assert!(
+        r_pronto.placement_quality() + 0.02 >= r_always.placement_quality(),
+        "pronto {:.3} fell behind always-accept {:.3} under churn",
+        r_pronto.placement_quality(),
+        r_always.placement_quality()
+    );
+}
+
+#[test]
+fn latency_scenario_degrades_gracefully() {
+    // Nonzero push latency: stale merges, but the cluster keeps making
+    // decisions — no panic, sane rates, pushes delivered late.
+    let steps = 3_000;
+    let nodes = 8;
+    let tr = fleet(nodes, steps, 51);
+
+    let instant = Scenario::named("baseline-poisson")
+        .unwrap()
+        .with_nodes(nodes)
+        .with_steps(steps)
+        .with_seed(9);
+    let mut delayed = Scenario::named("latency")
+        .unwrap()
+        .with_nodes(nodes)
+        .with_steps(steps)
+        .with_seed(9);
+    delayed.federation.latency =
+        pronto::federation::LatencyModel::Exponential { mean_steps: 20.0 };
+
+    let r_instant =
+        DiscreteEventEngine::new(instant, tr.clone(), pronto_policies(&tr)).run();
+    let r_delayed =
+        DiscreteEventEngine::new(delayed, tr.clone(), pronto_policies(&tr)).run();
+
+    assert_conservation(&r_instant);
+    assert_conservation(&r_delayed);
+    assert!(r_delayed.mean_push_latency_steps > 5.0, "latency not applied");
+    assert!(
+        r_delayed.federation_pushes + r_delayed.federation_suppressed > 0,
+        "no pushes offered under latency"
+    );
+    // Local admission decisions are unchanged by federation staleness
+    // (decisions are local in PRONTO) — acceptance must stay in family.
+    assert!(
+        (r_delayed.acceptance_rate() - r_instant.acceptance_rate()).abs() < 0.2,
+        "latency warped acceptance: {:.3} vs {:.3}",
+        r_delayed.acceptance_rate(),
+        r_instant.acceptance_rate()
+    );
+    assert!(r_delayed.acceptance_rate() > 0.3);
+}
+
+#[test]
+fn custom_toml_scenario_runs() {
+    let text = r#"
+[scenario]
+name = "it-custom"
+nodes = 5
+steps = 800
+seed = 13
+
+[arrivals]
+pattern = "bursty"
+rate = 0.1
+burst_rate = 1.0
+mean_burst_len = 20
+mean_gap_len = 100
+
+[federation]
+enabled = true
+push_every = 32
+latency = "constant"
+latency_mean_steps = 4.0
+"#;
+    let scenario = Scenario::from_toml(text).unwrap();
+    assert_eq!(scenario.name, "it-custom");
+    let tr = fleet(5, 800, 61);
+    let report = DiscreteEventEngine::new(scenario, tr.clone(), pronto_policies(&tr)).run();
+    assert_conservation(&report);
+    assert_eq!(report.scenario, "it-custom");
+    assert!(report.mean_push_latency_steps > 3.0);
+}
+
+#[test]
+fn unplaceable_jobs_counted_when_pool_drains() {
+    // Hazard 1.0, never rejoin, floor 0: the pool empties almost
+    // immediately and later arrivals must be counted, not crash.
+    let scenario = Scenario {
+        churn: Some(ChurnModel {
+            leave_hazard: 1.0,
+            rejoin_delay_mean: 0.0,
+            min_alive: 0,
+        }),
+        ..Scenario::default()
+    }
+    .with_nodes(3)
+    .with_steps(600);
+    let tr = fleet(3, 600, 71);
+    let report = DiscreteEventEngine::new(scenario, tr.clone(), always_policies(&tr)).run();
+    assert_conservation(&report);
+    assert_eq!(report.node_leaves, 3);
+    assert!(report.jobs_unplaceable > 0, "expected orphaned arrivals");
+    assert!(report.jobs_rejected >= report.jobs_unplaceable);
+}

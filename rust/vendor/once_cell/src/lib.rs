@@ -1,0 +1,67 @@
+//! Minimal offline subset of the `once_cell` crate: `sync::Lazy` built on
+//! `std::sync::OnceLock`. Only the API PRONTO uses.
+
+pub mod sync {
+    use std::cell::Cell;
+    use std::ops::Deref;
+    use std::sync::OnceLock;
+
+    /// A value initialized on first access, safe for `static` use.
+    pub struct Lazy<T, F = fn() -> T> {
+        cell: OnceLock<T>,
+        init: Cell<Option<F>>,
+    }
+
+    impl<T, F> Lazy<T, F> {
+        pub const fn new(init: F) -> Self {
+            Self { cell: OnceLock::new(), init: Cell::new(Some(init)) }
+        }
+    }
+
+    impl<T, F: FnOnce() -> T> Lazy<T, F> {
+        /// Force evaluation and return a reference to the value.
+        pub fn force(this: &Self) -> &T {
+            this.cell.get_or_init(|| match this.init.take() {
+                Some(f) => f(),
+                None => panic!("Lazy instance poisoned during initialization"),
+            })
+        }
+    }
+
+    impl<T, F: FnOnce() -> T> Deref for Lazy<T, F> {
+        type Target = T;
+
+        fn deref(&self) -> &T {
+            Self::force(self)
+        }
+    }
+
+    // SAFETY: mirrors once_cell — initialization is serialized by OnceLock;
+    // the Cell<Option<F>> is only taken inside that critical section.
+    unsafe impl<T: Send + Sync, F: Send> Sync for Lazy<T, F> {}
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        static GLOBAL: Lazy<Vec<u32>> = Lazy::new(|| vec![1, 2, 3]);
+
+        #[test]
+        fn initializes_once_and_derefs() {
+            assert_eq!(GLOBAL.len(), 3);
+            assert_eq!(*GLOBAL, vec![1, 2, 3]);
+        }
+
+        #[test]
+        fn lazy_with_closure() {
+            let calls = std::sync::atomic::AtomicU32::new(0);
+            let l = Lazy::new(|| {
+                calls.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                42u32
+            });
+            assert_eq!(*l, 42);
+            assert_eq!(*l, 42);
+            assert_eq!(calls.load(std::sync::atomic::Ordering::SeqCst), 1);
+        }
+    }
+}

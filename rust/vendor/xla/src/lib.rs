@@ -1,0 +1,128 @@
+//! Compile-time **stub** of the XLA/PJRT Rust binding.
+//!
+//! The offline build environment has neither the real `xla` crate nor the
+//! shared libraries it links against. This stub mirrors the API surface
+//! `pronto::runtime` consumes so the crate compiles everywhere;
+//! [`PjRtClient::cpu`] returns an error, so every runtime path degrades to
+//! the native Rust FPCA implementation exactly as it does when the AOT
+//! artifacts have not been built (`pronto::runtime::shared_runtime()`
+//! returns `None`). Replace the `xla` path dependency in `Cargo.toml` with
+//! the real binding to enable the AOT execution path; no source changes
+//! are needed.
+
+/// Error type matching the binding's `Debug`-formatted errors.
+#[derive(Debug)]
+pub enum Error {
+    /// The stub cannot execute anything.
+    Unavailable(&'static str),
+}
+
+const UNAVAILABLE: Error =
+    Error::Unavailable("xla stub: PJRT unavailable in this build (offline vendored stub)");
+
+/// Marker trait for element types crossing the literal boundary.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+
+/// Host-side literal (stub: holds nothing).
+#[derive(Debug, Clone)]
+pub struct Literal(());
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        Literal(())
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        Err(UNAVAILABLE)
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        Err(UNAVAILABLE)
+    }
+
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>, Error> {
+        Err(UNAVAILABLE)
+    }
+}
+
+/// Parsed HLO module (stub: never constructed successfully).
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        Err(UNAVAILABLE)
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// Device buffer handle (stub: never constructed).
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(UNAVAILABLE)
+    }
+}
+
+/// Compiled executable (stub: never constructed).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(UNAVAILABLE)
+    }
+}
+
+/// PJRT client (stub: construction always fails).
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(UNAVAILABLE)
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(UNAVAILABLE)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_construction_fails_cleanly() {
+        let err = PjRtClient::cpu().unwrap_err();
+        let msg = format!("{err:?}");
+        assert!(msg.contains("stub"));
+    }
+
+    #[test]
+    fn literal_surface_typechecks() {
+        let mut lit = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(lit.reshape(&[2]).is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+        assert!(lit.decompose_tuple().is_err());
+    }
+}
