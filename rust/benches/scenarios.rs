@@ -3,8 +3,10 @@
 //!
 //! The paper's fig-1/fig-7 conditions are the `baseline-poisson` row; the
 //! rest are the production regimes the paper scopes out (bursty and
-//! diurnal arrivals, node churn, WAN push latency). Emits decision
-//! quality, churn/federation counters, and wall time per scenario; set
+//! diurnal arrivals, node churn, WAN push latency, finite host capacity
+//! with preemption/migration, trace-driven replay). Emits decision
+//! quality, churn/federation/queueing counters, and wall time per
+//! scenario; set
 //! `PRONTO_BENCH_CSV_DIR` to capture the CSV. `PRONTO_BENCH_QUICK=1`
 //! shrinks the fleet for smoke runs.
 
@@ -44,7 +46,8 @@ fn main() {
         &format!("Scenario sweep ({nodes} nodes x {steps} steps, PRONTO policy)"),
         &[
             "scenario", "jobs", "accept%", "quality%", "precision%", "leaves", "joins",
-            "pushes", "lat(steps)", "wall(ms)",
+            "pushes", "lat(steps)", "queued", "qwait", "drop", "preempt", "migr", "util%",
+            "wall(ms)",
         ],
     );
 
@@ -69,6 +72,12 @@ fn main() {
             report.node_joins.to_string(),
             report.federation_pushes.to_string(),
             format!("{:.2}", report.mean_push_latency_steps),
+            report.jobs_queued.to_string(),
+            format!("{:.2}", report.mean_queue_delay_steps),
+            report.jobs_dropped.to_string(),
+            report.jobs_preempted.to_string(),
+            report.jobs_migrated.to_string(),
+            format!("{:.1}", 100.0 * report.mean_utilization),
             format!("{:.1}", wall.as_secs_f64() * 1e3),
         ]);
     }

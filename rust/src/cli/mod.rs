@@ -4,6 +4,7 @@
 //! pronto gen-trace  --out DIR [--nodes N] [--steps T] [--seed S]
 //! pronto sim        [--scenario NAME|FILE.toml] [--json] [--config FILE]
 //!                   [--policy pronto|sp|fd|pm|random|always|oracle]
+//!                   [--replay CSV|DIR] [--replay-metric NAME]
 //! pronto scenarios  — list the built-in scenario catalog
 //! pronto eval       [--config FILE] [--method pronto|sp|fd|pm] [--window W]
 //! pronto federate   [--config FILE] [--nodes N] [--fanout F]
@@ -21,8 +22,8 @@ use crate::scheduler::{
     Admission, CpuReadyOracle, NodeScheduler, ProntoPolicy, RandomPolicy,
 };
 use crate::sim::{
-    evaluate_method, DataCenterSim, DiscreteEventEngine, EvalConfig, FleetEvaluation,
-    Scenario, SimReport, CATALOG,
+    evaluate_method, ArrivalPattern, DataCenterSim, DiscreteEventEngine, EvalConfig,
+    FleetEvaluation, ReplaySchedule, Scenario, SimReport, CATALOG,
 };
 use crate::telemetry::{TraceGenerator, VmTrace, CPU_READY_IDX};
 use anyhow::{bail, Context, Result};
@@ -36,7 +37,8 @@ USAGE:
 
 COMMANDS:
   gen-trace     generate synthetic VMware-style traces as CSV
-  sim           run the cluster simulator (--scenario NAME|FILE.toml, --json)
+  sim           run the cluster simulator (--scenario NAME|FILE.toml, --json,
+                --replay CSV|DIR for trace-driven arrivals)
   scenarios     list the built-in scenario catalog
   eval          fleet evaluation of rejection-signal quality (Fig 6/7)
   federate      run the concurrent DASM federation
@@ -154,7 +156,12 @@ fn make_policy(
 
 fn cmd_sim(raw: &[String]) -> Result<()> {
     let args = Args::parse(raw, &["json"])?;
-    args.reject_unknown(&["config", "policy", "nodes", "steps", "seed", "scenario"])?;
+    args.reject_unknown(&[
+        "config", "policy", "nodes", "steps", "seed", "scenario", "replay", "replay-metric",
+    ])?;
+    if args.get("replay-metric").is_some() && args.get("replay").is_none() {
+        bail!("--replay-metric requires --replay");
+    }
     let mut cfg = load_config(&args)?;
     cfg.nodes = args.get_usize("nodes", cfg.nodes)?;
     cfg.steps = args.get_usize("steps", cfg.steps)?;
@@ -166,12 +173,14 @@ fn cmd_sim(raw: &[String]) -> Result<()> {
     // scenario feature set (churn, bursts, federation latency); without
     // it, the fixed-step façade runs the paper's steady-Poisson setting.
     // `--scenario none` escapes a config-pinned default back to the
-    // fixed-step facade.
+    // fixed-step facade. `--replay CSV` without a scenario implies the
+    // `replay` catalog entry (whose demo schedule the CSV then replaces).
     let scenario_arg = args
         .get("scenario")
         .map(str::to_string)
         .or_else(|| cfg.scenario.clone())
-        .filter(|s| s != "none");
+        .filter(|s| s != "none")
+        .or_else(|| args.get("replay").map(|_| "replay".to_string()));
     let scenario = match &scenario_arg {
         Some(spec) => {
             let mut scenario = Scenario::resolve(spec)?;
@@ -180,6 +189,16 @@ fn cmd_sim(raw: &[String]) -> Result<()> {
             scenario.nodes = args.get_usize("nodes", scenario.nodes)?;
             scenario.steps = args.get_usize("steps", scenario.steps)?;
             scenario.seed = args.get_u64("seed", scenario.seed)?;
+            // --replay swaps the arrival pattern for a trace-driven
+            // schedule (a CSV file or a directory of per-VM CSVs).
+            if let Some(csv) = args.get("replay") {
+                scenario.arrivals = ArrivalPattern::Replay {
+                    schedule: std::sync::Arc::new(ReplaySchedule::from_path(
+                        Path::new(csv),
+                        args.get("replay-metric"),
+                    )?),
+                };
+            }
             scenario.validate()?;
             // Scenario sizing wins over the config file (documented in
             // SCENARIOS.md); CLI flags override both. Policies that read
@@ -255,6 +274,26 @@ fn print_sim_report(report: &SimReport, policy: &str) {
         report.jobs_completed, report.jobs_displaced
     );
     println!("  peak in-flight jobs : {}", report.peak_inflight);
+    if report.jobs_queued + report.jobs_dropped + report.jobs_preempted > 0 {
+        println!(
+            "  queueing            : {} parked (peak depth {}), mean wait {:.2} steps, \
+             {} dropped",
+            report.jobs_queued,
+            report.peak_queue_len,
+            report.mean_queue_delay_steps,
+            report.jobs_dropped
+        );
+        println!(
+            "  preemption          : {} preempted, {} migrated, {} lost",
+            report.jobs_preempted, report.jobs_migrated, report.jobs_displaced
+        );
+        println!(
+            "  utilization         : {:.1}% ({} queued / {} running at end)",
+            100.0 * report.mean_utilization,
+            report.jobs_still_queued,
+            report.jobs_still_running
+        );
+    }
     if report.node_joins + report.node_leaves > 0 {
         println!(
             "  churn               : {} leaves, {} joins",
@@ -282,6 +321,11 @@ fn cmd_scenarios(raw: &[String]) -> Result<()> {
     for name in CATALOG {
         let s = Scenario::named(name).expect("catalog entry");
         let churn = if s.churn.is_some() { "churn" } else { "stable" };
+        let cap = match &s.capacity {
+            Some(c) if c.contended_slots < c.slots_per_node => ", finite+preempting",
+            Some(_) => ", finite slots",
+            None => "",
+        };
         let lat = if s.federation.enabled {
             if s.federation.latency.is_instant() {
                 "federated/instant"
@@ -292,20 +336,22 @@ fn cmd_scenarios(raw: &[String]) -> Result<()> {
             "no federation"
         };
         println!(
-            "  {name:<18} {} arrivals, {churn}, {lat}",
+            "  {name:<18} {} arrivals, {churn}, {lat}{cap}",
             arrival_kind(&s)
         );
     }
     println!("custom scenarios: `pronto sim --scenario path/to/scenario.toml`");
+    println!("trace replay:     `pronto sim --replay traces/ [--replay-metric NAME]`");
     println!("(schema documented in rust/SCENARIOS.md)");
     Ok(())
 }
 
 fn arrival_kind(s: &Scenario) -> &'static str {
     match s.arrivals {
-        crate::sim::ArrivalPattern::Poisson { .. } => "poisson",
-        crate::sim::ArrivalPattern::Bursty { .. } => "bursty",
-        crate::sim::ArrivalPattern::Diurnal { .. } => "diurnal",
+        ArrivalPattern::Poisson { .. } => "poisson",
+        ArrivalPattern::Bursty { .. } => "bursty",
+        ArrivalPattern::Diurnal { .. } => "diurnal",
+        ArrivalPattern::Replay { .. } => "replay",
     }
 }
 
@@ -661,5 +707,35 @@ mod tests {
     #[test]
     fn sim_rejects_bad_scenario() {
         assert!(run(&argv(&["sim", "--scenario", "not-a-scenario"])).is_err());
+    }
+
+    #[test]
+    fn sim_replay_flag_drives_arrivals_from_csv() {
+        let dir = std::env::temp_dir().join("pronto_cli_replay");
+        std::fs::create_dir_all(&dir).unwrap();
+        let csv = dir.join("arrivals.csv");
+        let mut text = String::from("timestep,arrivals\n");
+        for t in 0..60 {
+            text.push_str(&format!("{t},{}\n", if t % 10 == 0 { 2 } else { 0 }));
+        }
+        std::fs::write(&csv, text).unwrap();
+        let csv_s = csv.to_string_lossy().to_string();
+        // --replay alone implies the `replay` scenario with the CSV's
+        // schedule in place of the built-in demo.
+        assert!(run(&argv(&[
+            "sim", "--replay", &csv_s, "--nodes", "3", "--steps", "60", "--policy", "always",
+            "--json"
+        ]))
+        .is_ok());
+        // An explicit scenario composes with --replay too.
+        assert!(run(&argv(&[
+            "sim", "--scenario", "capacity", "--replay", &csv_s, "--nodes", "3", "--steps",
+            "60", "--policy", "always", "--json"
+        ]))
+        .is_ok());
+        // Missing file fails loudly, as does a metric without a trace.
+        assert!(run(&argv(&["sim", "--replay", "/no/such/file.csv"])).is_err());
+        assert!(run(&argv(&["sim", "--replay-metric", "jobs"])).is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -1,5 +1,7 @@
 //! Job/task model (the paper uses the terms interchangeably, §4).
 
+use crate::rng::Xoshiro256;
+
 /// Unique job identifier.
 pub type JobId = u64;
 
@@ -13,13 +15,52 @@ pub struct Job {
     pub duration: usize,
     /// Relative CPU demand (1.0 = one nominal slot).
     pub cpu_demand: f64,
+    /// Whole scheduling slots the job occupies on its host while running.
+    /// The discrete-event engine keeps its own compact per-job record
+    /// (`sim::engine`) for the hot loop; its `demand` field must mean the
+    /// same thing as this one.
+    pub slots: u32,
 }
 
 impl Job {
     pub fn new(id: JobId, arrival: usize, duration: usize, cpu_demand: f64) -> Self {
         assert!(duration >= 1);
         assert!(cpu_demand > 0.0);
-        Self { id, arrival, duration, cpu_demand }
+        Self { id, arrival, duration, cpu_demand, slots: 1 }
+    }
+
+    /// Builder-style slot demand override.
+    pub fn with_slots(mut self, slots: u32) -> Self {
+        assert!(slots >= 1);
+        self.slots = slots;
+        self
+    }
+}
+
+/// Log-normal service-time distribution in whole telemetry steps — the
+/// job-length model every scenario draws from (heavy right tail: most jobs
+/// are short, a few run for a long time).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServiceTimeModel {
+    /// Mean of the underlying normal.
+    pub mu: f64,
+    /// Standard deviation of the underlying normal.
+    pub sigma: f64,
+}
+
+impl ServiceTimeModel {
+    pub fn log_normal(mu: f64, sigma: f64) -> Self {
+        Self { mu, sigma }
+    }
+
+    /// Draw a whole-step duration, always at least one step.
+    pub fn sample(&self, rng: &mut Xoshiro256) -> usize {
+        rng.log_normal(self.mu, self.sigma).round().max(1.0) as usize
+    }
+
+    /// Expected duration in steps (log-normal mean).
+    pub fn mean_steps(&self) -> f64 {
+        (self.mu + 0.5 * self.sigma * self.sigma).exp()
     }
 }
 
@@ -40,11 +81,41 @@ mod tests {
     fn job_construction() {
         let j = Job::new(1, 0, 10, 1.5);
         assert_eq!(j.duration, 10);
+        assert_eq!(j.slots, 1);
+        assert_eq!(j.with_slots(3).slots, 3);
     }
 
     #[test]
     #[should_panic]
     fn zero_duration_rejected() {
         let _ = Job::new(1, 0, 0, 1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_slots_rejected() {
+        let _ = Job::new(1, 0, 5, 1.0).with_slots(0);
+    }
+
+    #[test]
+    fn service_time_samples_are_positive_and_deterministic() {
+        let model = ServiceTimeModel::log_normal(3.0, 0.8);
+        let mut a = Xoshiro256::seed_from_u64(7);
+        let mut b = Xoshiro256::seed_from_u64(7);
+        for _ in 0..500 {
+            let da = model.sample(&mut a);
+            assert!(da >= 1);
+            assert_eq!(da, model.sample(&mut b));
+        }
+        // Sample mean tracks the analytic log-normal mean.
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        let n = 20_000;
+        let mean: f64 =
+            (0..n).map(|_| model.sample(&mut rng) as f64).sum::<f64>() / n as f64;
+        assert!(
+            (mean - model.mean_steps()).abs() / model.mean_steps() < 0.1,
+            "mean={mean} expected≈{}",
+            model.mean_steps()
+        );
     }
 }

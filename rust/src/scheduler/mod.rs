@@ -7,7 +7,11 @@
 //! * [`node`] — [`NodeScheduler`]: one node's full admission pipeline
 //!   (embedding tracker + Reject-Job + rejection-signal window), generic
 //!   over any [`crate::baselines::StreamingEmbedding`].
-//! * [`job`] — the job/task model (paper treats "job" ≡ "task").
+//! * [`job`] — the job/task model (paper treats "job" ≡ "task"): slot
+//!   demand plus the log-normal service-time distribution.
+//!   [`HostCapacity`] (in [`node`]) adds the mechanical side: a slot
+//!   budget, the running set, and a bounded FIFO/smallest-first wait
+//!   queue the simulator's capacity scenarios drive.
 //! * [`policy`] — admission policies for the simulator: PRONTO, always-
 //!   accept, random, and CPU-Ready-oracle (upper bound).
 
@@ -17,8 +21,8 @@ mod policy;
 mod reject;
 mod standardize;
 
-pub use job::{Job, JobId, JobOutcome};
-pub use node::{NodeScheduler, NodeStats};
+pub use job::{Job, JobId, JobOutcome, ServiceTimeModel};
+pub use node::{HostCapacity, NodeScheduler, NodeStats, QueuePolicy, QueuedJob};
 pub use policy::{Admission, CpuReadyOracle, ProntoPolicy, RandomPolicy, ThresholdPolicy};
 pub use reject::{RejectConfig, RejectJob};
 pub use standardize::OnlineStandardizer;

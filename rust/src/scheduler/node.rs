@@ -5,9 +5,10 @@
 //! embedding tracker (block-wise) and flows through Reject-Job to produce
 //! the admission decision for that timestep — no communication involved.
 
-use super::{OnlineStandardizer, RejectConfig, RejectJob};
+use super::{JobId, OnlineStandardizer, RejectConfig, RejectJob};
 use crate::baselines::StreamingEmbedding;
 use crate::fpca::{FpcaEdge, FpcaEdgeConfig, Subspace};
+use std::collections::VecDeque;
 
 /// Rolling statistics of one node's admission behaviour.
 #[derive(Debug, Clone, Copy, Default)]
@@ -39,6 +40,160 @@ impl NodeStats {
         } else {
             self.jobs_accepted as f64 / self.jobs_offered as f64
         }
+    }
+}
+
+/// How a host picks the next waiting job when slots free up.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueuePolicy {
+    /// Strict arrival order; an oversized head blocks everything behind it.
+    Fifo,
+    /// Smallest slot demand that fits first (trades fairness for less
+    /// head-of-line blocking).
+    SmallestFirst,
+}
+
+/// A job parked in a host's wait queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QueuedJob {
+    pub job_id: JobId,
+    /// Slot demand.
+    pub demand: u32,
+    /// Simulation tick the job entered the queue (for queue-delay metrics).
+    pub enqueued_at: u64,
+}
+
+/// Host-level capacity: a slot budget, the set of running jobs, and a
+/// bounded wait queue. Purely mechanical bookkeeping — admission (should
+/// the host take work at all?) stays with the [`super::Admission`] policy;
+/// this type answers the orthogonal question "does the work *fit* right
+/// now, and if not, may it wait?".
+#[derive(Debug, Clone)]
+pub struct HostCapacity {
+    slots: u32,
+    used: u32,
+    queue_cap: usize,
+    policy: QueuePolicy,
+    queue: VecDeque<QueuedJob>,
+    /// Running jobs in start order (newest last) with their slot demands.
+    running: Vec<(JobId, u32)>,
+}
+
+impl HostCapacity {
+    pub fn new(slots: u32, queue_cap: usize, policy: QueuePolicy) -> Self {
+        assert!(slots >= 1);
+        Self {
+            slots,
+            used: 0,
+            queue_cap,
+            policy,
+            queue: VecDeque::new(),
+            running: Vec::new(),
+        }
+    }
+
+    /// Effectively infinite capacity with no queue — the legacy
+    /// "admission-only" host for scenarios without a capacity model.
+    pub fn unbounded() -> Self {
+        Self::new(u32::MAX, 0, QueuePolicy::Fifo)
+    }
+
+    pub fn slots(&self) -> u32 {
+        self.slots
+    }
+
+    pub fn used(&self) -> u32 {
+        self.used
+    }
+
+    pub fn free(&self) -> u32 {
+        self.slots - self.used
+    }
+
+    /// Can `demand` slots start immediately against the full budget?
+    pub fn can_start(&self, demand: u32) -> bool {
+        demand <= self.slots - self.used
+    }
+
+    /// Can `demand` slots start against an externally shrunk budget
+    /// (pressure preemption uses a tighter budget while contended)?
+    pub fn fits_budget(&self, demand: u32, budget: u32) -> bool {
+        self.used <= budget && demand <= budget - self.used
+    }
+
+    /// Consume slots for a starting job.
+    pub fn start(&mut self, job_id: JobId, demand: u32) {
+        debug_assert!(self.can_start(demand), "over-committed start");
+        self.used += demand;
+        self.running.push((job_id, demand));
+    }
+
+    /// Release a finished (or displaced) job's slots; returns its demand.
+    pub fn finish(&mut self, job_id: JobId) -> Option<u32> {
+        let pos = self.running.iter().position(|&(id, _)| id == job_id)?;
+        let (_, demand) = self.running.remove(pos);
+        self.used -= demand;
+        Some(demand)
+    }
+
+    /// Running jobs in start order (newest last).
+    pub fn running(&self) -> &[(JobId, u32)] {
+        &self.running
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn queue_has_room(&self) -> bool {
+        self.queue.len() < self.queue_cap
+    }
+
+    /// Park a job; `false` when the bounded queue is full.
+    pub fn try_enqueue(&mut self, job_id: JobId, demand: u32, now: u64) -> bool {
+        if !self.queue_has_room() {
+            return false;
+        }
+        self.queue.push_back(QueuedJob { job_id, demand, enqueued_at: now });
+        true
+    }
+
+    /// Remove and return the next waiting job that fits within `budget`
+    /// slots, per the queue policy. FIFO only ever offers the head;
+    /// smallest-first scans for the least demanding fit (earliest wins
+    /// ties), which keeps draining deterministic.
+    pub fn pop_startable(&mut self, budget: u32) -> Option<QueuedJob> {
+        match self.policy {
+            QueuePolicy::Fifo => {
+                let head = *self.queue.front()?;
+                if self.fits_budget(head.demand, budget) {
+                    self.queue.pop_front()
+                } else {
+                    None
+                }
+            }
+            QueuePolicy::SmallestFirst => {
+                let mut best: Option<(usize, u32)> = None;
+                for (i, qj) in self.queue.iter().enumerate() {
+                    if self.fits_budget(qj.demand, budget)
+                        && best.map(|(_, d)| qj.demand < d).unwrap_or(true)
+                    {
+                        best = Some((i, qj.demand));
+                    }
+                }
+                best.and_then(|(i, _)| self.queue.remove(i))
+            }
+        }
+    }
+
+    /// Evacuate the host (node departure): returns the running set (start
+    /// order) and the flushed wait queue, leaving the host empty.
+    pub fn evacuate(&mut self) -> (Vec<(JobId, u32)>, Vec<QueuedJob>) {
+        self.used = 0;
+        (
+            std::mem::take(&mut self.running),
+            self.queue.drain(..).collect(),
+        )
     }
 }
 
@@ -226,6 +381,67 @@ mod tests {
         }
         assert_eq!(node.stats().jobs_offered, offered);
         assert!(node.stats().jobs_accepted <= offered);
+    }
+
+    #[test]
+    fn host_capacity_tracks_slots_and_queue() {
+        let mut h = HostCapacity::new(4, 2, QueuePolicy::Fifo);
+        assert!(h.can_start(4));
+        h.start(1, 3);
+        assert_eq!(h.used(), 3);
+        assert_eq!(h.free(), 1);
+        assert!(!h.can_start(2));
+        assert!(h.try_enqueue(2, 2, 10));
+        assert!(h.try_enqueue(3, 1, 11));
+        assert!(!h.try_enqueue(4, 1, 12), "queue bound ignored");
+        // FIFO head needs 2 slots; only 1 free → head-of-line blocks.
+        assert!(h.pop_startable(h.slots()).is_none());
+        assert_eq!(h.finish(1), Some(3));
+        let qj = h.pop_startable(h.slots()).unwrap();
+        assert_eq!((qj.job_id, qj.demand, qj.enqueued_at), (2, 2, 10));
+        h.start(qj.job_id, qj.demand);
+        assert_eq!(h.running().len(), 1);
+    }
+
+    #[test]
+    fn host_capacity_smallest_first_skips_blocked_head() {
+        let mut h = HostCapacity::new(4, 4, QueuePolicy::SmallestFirst);
+        h.start(1, 3);
+        assert!(h.try_enqueue(2, 3, 0));
+        assert!(h.try_enqueue(3, 1, 1));
+        assert!(h.try_enqueue(4, 1, 2));
+        // 1 slot free: the 3-slot head is skipped, earliest 1-slot job wins.
+        let qj = h.pop_startable(h.slots()).unwrap();
+        assert_eq!(qj.job_id, 3);
+        // Shrunk budget (pressure): nothing fits below current usage.
+        assert!(h.pop_startable(2).is_none());
+    }
+
+    #[test]
+    fn host_capacity_evacuates_cleanly() {
+        let mut h = HostCapacity::new(4, 2, QueuePolicy::Fifo);
+        h.start(7, 2);
+        h.start(8, 1);
+        assert!(h.try_enqueue(9, 1, 5));
+        let (running, queued) = h.evacuate();
+        assert_eq!(running, vec![(7, 2), (8, 1)]);
+        assert_eq!(queued.len(), 1);
+        assert_eq!(queued[0].job_id, 9);
+        assert_eq!(h.used(), 0);
+        assert_eq!(h.queue_len(), 0);
+        assert!(h.running().is_empty());
+    }
+
+    #[test]
+    fn unbounded_host_never_blocks() {
+        let mut h = HostCapacity::unbounded();
+        for id in 0..1_000u64 {
+            assert!(h.can_start(5));
+            h.start(id, 5);
+        }
+        assert!(!h.queue_has_room(), "legacy host has no queue");
+        assert_eq!(h.finish(500), Some(5));
+        assert_eq!(h.finish(500), None);
     }
 
     #[test]

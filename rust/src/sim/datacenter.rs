@@ -71,6 +71,7 @@ impl SimConfig {
             score_window: self.score_window,
             churn: None,
             federation: super::scenario::FederationSpec::default(),
+            capacity: None,
         }
     }
 }

@@ -2,17 +2,35 @@
 //!
 //! Replaces the fixed-step simulator loop: the cluster is driven by a
 //! binary-heap event queue ([`super::events`]) over typed events —
-//! telemetry ticks, job arrivals/completions, federation pushes with
+//! telemetry ticks, job arrivals/starts/completions, host-level queueing,
+//! preemption and migration of displaced jobs, federation pushes with
 //! delivery latency, and node churn. Determinism guarantees:
 //!
 //! * events order by `(time, seq)` — no hash maps, no wall clock;
 //! * every stochastic component draws from its **own** RNG stream derived
 //!   from the scenario seed (arrivals, durations, dispatch, churn,
-//!   latency), so enabling churn does not shift the arrival sequence;
+//!   latency, slot demands, migration probes), so enabling churn does not
+//!   shift the arrival sequence and enabling capacity does not shift the
+//!   churn sequence;
 //! * the same `(Scenario, traces, policies)` triple therefore produces a
 //!   bit-identical [`SimReport`] — `SimReport::to_json_string` output is
 //!   byte-comparable across runs, which the determinism regression tests
 //!   rely on.
+//!
+//! # Capacity, preemption, migration
+//!
+//! With a [`CapacityModel`] on the scenario, every node carries a
+//! [`HostCapacity`]: a slot budget, the running set, and a bounded wait
+//! queue. An admitted job starts if it fits, parks if the queue has room,
+//! and is dropped otherwise. Jobs are displaced two ways: a **departing**
+//! node evacuates its running set and wait queue, and an
+//! **over-committed** node — rejection signal raised while usage exceeds
+//! `contended_slots` — sheds its newest jobs at the telemetry tick. A
+//! displaced job with migration budget left is re-offered to peers,
+//! picking the target via each peer's admission signal (the paper's
+//! rejection signal closing the loop); otherwise it is lost
+//! (`jobs_displaced`). Without a capacity model the engine behaves as
+//! before: accepted jobs consume nothing and never queue.
 //!
 //! The hot loop is allocation-free in steady state: events are small
 //! `Copy` values, federation subspace snapshots live in a free-listed
@@ -22,14 +40,17 @@
 use super::events::{
     latency_to_ticks, step_to_ticks, ticks_to_step, Event, EventQueue, SimTime, TICKS_PER_STEP,
 };
-use super::scenario::{ArrivalPattern, DispatchPolicy, Scenario};
+use super::scenario::{ArrivalPattern, CapacityModel, DispatchPolicy, Scenario};
 use crate::federation::{FederationTree, TreeTopology};
 use crate::fpca::Subspace;
 use crate::rng::{SplitMix64, Xoshiro256};
-use crate::scheduler::{Admission, JobOutcome};
+use crate::scheduler::{Admission, HostCapacity, JobId, JobOutcome, ServiceTimeModel};
 use crate::ser::JsonValue;
 use crate::telemetry::VmTrace;
 use std::collections::BTreeMap;
+
+/// Peers probed when re-placing a displaced job.
+const MIGRATION_PROBES: usize = 3;
 
 /// Aggregate result of a simulation run.
 #[derive(Debug, Clone, Default)]
@@ -44,10 +65,24 @@ pub struct SimReport {
     pub jobs_rejected: usize,
     /// Jobs that ran to completion within the horizon.
     pub jobs_completed: usize,
-    /// Jobs killed because their node left mid-run.
+    /// Jobs lost after admission: killed by a departing node with no
+    /// migration budget left, or whose re-placement probe found no taker.
     pub jobs_displaced: usize,
     /// Arrivals that found zero alive nodes.
     pub jobs_unplaceable: usize,
+    /// Admitted jobs dropped because the target's wait queue was full.
+    pub jobs_dropped: usize,
+    /// Preemption events — a job preempted from two nodes counts twice.
+    pub jobs_preempted: usize,
+    /// Successful re-placements of displaced jobs onto a peer.
+    pub jobs_migrated: usize,
+    /// Wait-queue parks (a migrated job that parks again counts again).
+    pub jobs_queued: usize,
+    /// Jobs waiting — parked or awaiting re-placement — when the run
+    /// ended.
+    pub jobs_still_queued: usize,
+    /// Jobs still running when the run ended.
+    pub jobs_still_running: usize,
     /// Accepted jobs whose node stayed calm over the score window.
     pub good_accepts: usize,
     /// Accepted jobs whose node hit a CPU Ready spike in the score window.
@@ -67,6 +102,14 @@ pub struct SimReport {
     /// Mean observed push delivery latency in steps (0 when instant or no
     /// pushes happened).
     pub mean_push_latency_steps: f64,
+    /// Mean wait between entering a queue and starting service, in steps,
+    /// over jobs that did start (0 when nothing queued).
+    pub mean_queue_delay_steps: f64,
+    /// Deepest wait queue observed on any node.
+    pub peak_queue_len: usize,
+    /// Time-averaged slot utilization over alive nodes (0 when the
+    /// scenario has no capacity model).
+    pub mean_utilization: f64,
     /// Peak number of concurrently running jobs across the cluster.
     pub peak_inflight: usize,
     /// Per-job outcomes (ordered by arrival).
@@ -134,6 +177,12 @@ impl SimReport {
         m.insert("jobs_completed".into(), num(self.jobs_completed));
         m.insert("jobs_displaced".into(), num(self.jobs_displaced));
         m.insert("jobs_unplaceable".into(), num(self.jobs_unplaceable));
+        m.insert("jobs_dropped".into(), num(self.jobs_dropped));
+        m.insert("jobs_preempted".into(), num(self.jobs_preempted));
+        m.insert("jobs_migrated".into(), num(self.jobs_migrated));
+        m.insert("jobs_queued".into(), num(self.jobs_queued));
+        m.insert("jobs_still_queued".into(), num(self.jobs_still_queued));
+        m.insert("jobs_still_running".into(), num(self.jobs_still_running));
         m.insert("good_accepts".into(), num(self.good_accepts));
         m.insert("bad_accepts".into(), num(self.bad_accepts));
         m.insert("justified_rejections".into(), num(self.justified_rejections));
@@ -151,6 +200,15 @@ impl SimReport {
         m.insert(
             "mean_push_latency_steps".into(),
             JsonValue::Number(self.mean_push_latency_steps),
+        );
+        m.insert(
+            "mean_queue_delay_steps".into(),
+            JsonValue::Number(self.mean_queue_delay_steps),
+        );
+        m.insert("peak_queue_len".into(), num(self.peak_queue_len));
+        m.insert(
+            "mean_utilization".into(),
+            JsonValue::Number(self.mean_utilization),
         );
         m.insert("peak_inflight".into(), num(self.peak_inflight));
         m.insert(
@@ -213,6 +271,66 @@ impl SnapshotPool {
     }
 }
 
+/// Where a job is in its lifecycle. Terminal states are `Completed`,
+/// `Rejected`, `Dropped`, and `Displaced`; everything else is still in
+/// the system when the run ends.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum JobState {
+    /// Created, admission or a hand-off event pending.
+    Dispatching,
+    /// Parked in `node`'s wait queue.
+    Queued { node: usize },
+    /// Holding slots on `node`.
+    Running { node: usize },
+    /// Displaced, re-placement probe pending.
+    Migrating,
+    Completed,
+    /// Admission said no (or no alive node existed).
+    Rejected,
+    /// Admitted but the wait queue was full.
+    Dropped,
+    /// Lost: departing node or failed migration.
+    Displaced,
+}
+
+/// Engine-side job record; events carry only the job id and the placement
+/// generation (`gen`), which is bumped on every displacement so stale
+/// lifecycle events become no-ops. `demand`/`duration_steps` are the
+/// compact hot-loop mirror of [`crate::scheduler::Job`]'s `slots` and
+/// `duration` — keep their semantics in sync.
+#[derive(Debug, Clone, Copy)]
+struct JobRec {
+    demand: u32,
+    duration_steps: usize,
+    gen: u32,
+    migrations_left: u32,
+    state: JobState,
+    /// Tick the job last entered a wait queue (for the delay metric).
+    enqueued_at: Option<SimTime>,
+}
+
+/// Start every waiting job on `node` that fits within `budget` slots.
+fn drain_queue(
+    node: usize,
+    budget: u32,
+    hosts: &mut [HostCapacity],
+    jobs: &mut [JobRec],
+    queue: &mut EventQueue,
+    now: SimTime,
+    total_inflight: &mut usize,
+    report: &mut SimReport,
+) {
+    while let Some(qj) = hosts[node].pop_startable(budget) {
+        let rec = &mut jobs[qj.job_id as usize];
+        debug_assert_eq!(rec.state, JobState::Queued { node });
+        hosts[node].start(qj.job_id, qj.demand);
+        rec.state = JobState::Running { node };
+        *total_inflight += 1;
+        report.peak_inflight = report.peak_inflight.max(*total_inflight);
+        queue.schedule(now, Event::JobStart { node, job_id: qj.job_id, gen: rec.gen });
+    }
+}
+
 /// The discrete-event cluster engine.
 pub struct DiscreteEventEngine {
     scenario: Scenario,
@@ -260,6 +378,8 @@ impl DiscreteEventEngine {
         let mut dispatch_rng = stream(3);
         let mut churn_rng = stream(4);
         let mut latency_rng = stream(5);
+        let mut demand_rng = stream(6);
+        let mut migrate_rng = stream(7);
 
         let fed = &scenario.federation;
         let mut tree = if fed.enabled {
@@ -274,11 +394,19 @@ impl DiscreteEventEngine {
         };
         let mut pool = SnapshotPool::default();
 
+        let cap: Option<CapacityModel> = scenario.capacity;
+        let initial_migrations = cap.map_or(0, |c| c.migration_limit);
+        let service = ServiceTimeModel::log_normal(scenario.duration_mu, scenario.duration_sigma);
+
         // Dense per-node state.
         let mut alive = vec![true; n];
-        let mut epoch = vec![0u32; n];
-        let mut inflight = vec![0u32; n];
         let mut can_accept = vec![true; n];
+        let mut hosts: Vec<HostCapacity> = (0..n)
+            .map(|_| match &cap {
+                Some(c) => HostCapacity::new(c.slots_per_node, c.queue_capacity, c.queue_policy),
+                None => HostCapacity::unbounded(),
+            })
+            .collect();
         let mut alive_ids: Vec<usize> = (0..n).collect();
         let mut rr_cursor = 0usize;
         let mut burst_on = false;
@@ -296,10 +424,14 @@ impl DiscreteEventEngine {
 
         let mut queue = EventQueue::with_capacity(1024 + expected_jobs / 4);
         let mut candidates: Vec<usize> = Vec::with_capacity(8);
-        let mut next_job_id = 0u64;
+        let mut jobs: Vec<JobRec> = Vec::with_capacity(expected_jobs + 16);
         let mut total_inflight = 0usize;
         let mut lat_ticks_sum = 0u64;
         let mut lat_count = 0u64;
+        let mut qdelay_ticks_sum = 0u64;
+        let mut qdelay_count = 0u64;
+        let mut util_used = 0u64;
+        let mut util_cap = 0u64;
 
         // Ground truth for scoring: does `node`'s CPU Ready spike within
         // the score window starting at `step`?
@@ -334,6 +466,39 @@ impl DiscreteEventEngine {
                         }
                     }
 
+                    // 1b. Capacity accounting + progress: accumulate slot
+                    //     utilization, and let idle slots pick up queued
+                    //     work (completions drain too, but a queue built
+                    //     while the node was contended must not wait for
+                    //     the next completion once the signal clears).
+                    if let Some(c) = &cap {
+                        let mut used_sum = 0u64;
+                        for &i in &alive_ids {
+                            used_sum += hosts[i].used() as u64;
+                        }
+                        util_used += used_sum;
+                        util_cap += alive_ids.len() as u64 * c.slots_per_node as u64;
+                        for i in 0..n {
+                            if alive[i] && hosts[i].queue_len() > 0 {
+                                let budget = if can_accept[i] {
+                                    c.slots_per_node
+                                } else {
+                                    c.contended_slots
+                                };
+                                drain_queue(
+                                    i,
+                                    budget,
+                                    &mut hosts,
+                                    &mut jobs,
+                                    &mut queue,
+                                    ev.time,
+                                    &mut total_inflight,
+                                    &mut report,
+                                );
+                            }
+                        }
+                    }
+
                     // 2. Churn hazard (respecting the min-alive floor; the
                     //    provisional counter prevents one tick from
                     //    scheduling the pool below the floor).
@@ -350,8 +515,42 @@ impl DiscreteEventEngine {
                         }
                     }
 
+                    // 2b. Pressure preemption: a node whose rejection
+                    //     signal is raised sheds its newest running jobs
+                    //     down to the contended budget. Scheduled after
+                    //     the churn leaves so a departing node's own
+                    //     evacuation wins (stale preempts no-op on the
+                    //     generation check).
+                    if let Some(c) = &cap {
+                        if c.contended_slots < c.slots_per_node {
+                            for i in 0..n {
+                                if alive[i]
+                                    && !can_accept[i]
+                                    && hosts[i].used() > c.contended_slots
+                                {
+                                    let mut over = hosts[i].used() - c.contended_slots;
+                                    for &(job_id, demand) in hosts[i].running().iter().rev() {
+                                        if over == 0 {
+                                            break;
+                                        }
+                                        queue.schedule(
+                                            ev.time + 1,
+                                            Event::JobPreempt {
+                                                node: i,
+                                                job_id,
+                                                gen: jobs[job_id as usize].gen,
+                                            },
+                                        );
+                                        over = over.saturating_sub(demand);
+                                    }
+                                }
+                            }
+                        }
+                    }
+
                     // 3. Job arrivals for this step (regime update first
-                    //    for the MMPP pattern).
+                    //    for the MMPP pattern; replay injects exact
+                    //    counts and consumes no randomness).
                     if let ArrivalPattern::Bursty { mean_burst_len, mean_gap_len, .. } =
                         scenario.arrivals
                     {
@@ -364,20 +563,30 @@ impl DiscreteEventEngine {
                             burst_on = !burst_on;
                         }
                     }
-                    let lam = scenario.arrivals.rate_at(step, burst_on);
-                    let k = arrivals_rng.poisson(lam) as usize;
+                    let k = match &scenario.arrivals {
+                        ArrivalPattern::Replay { schedule } => schedule.count_at(step) as usize,
+                        pattern => {
+                            let lam = pattern.rate_at(step, burst_on);
+                            arrivals_rng.poisson(lam) as usize
+                        }
+                    };
                     for j in 0..k {
-                        let duration_steps = duration_rng
-                            .log_normal(scenario.duration_mu, scenario.duration_sigma)
-                            .round()
-                            .max(1.0) as usize;
-                        let job_id = next_job_id;
-                        next_job_id += 1;
+                        let duration_steps = service.sample(&mut duration_rng);
+                        let demand = match &cap {
+                            Some(c) => 1 + demand_rng.gen_range(c.max_job_slots as usize) as u32,
+                            None => 1,
+                        };
+                        let job_id = jobs.len() as JobId;
+                        jobs.push(JobRec {
+                            demand,
+                            duration_steps,
+                            gen: 0,
+                            migrations_left: initial_migrations,
+                            state: JobState::Dispatching,
+                            enqueued_at: None,
+                        });
                         let off = (2 + j as u64).min(TICKS_PER_STEP - 1);
-                        queue.schedule(
-                            ev.time + off,
-                            Event::JobArrival { job_id, duration_steps },
-                        );
+                        queue.schedule(ev.time + off, Event::JobArrival { job_id });
                     }
 
                     // 4. Federation push boundary: alive leaves offer
@@ -407,13 +616,14 @@ impl DiscreteEventEngine {
                     }
                 }
 
-                Event::JobArrival { job_id, duration_steps } => {
+                Event::JobArrival { job_id } => {
                     let step = ticks_to_step(ev.time);
                     report.jobs_arrived += 1;
                     if alive_ids.is_empty() {
                         report.jobs_rejected += 1;
                         report.jobs_unplaceable += 1;
                         report.outcomes.push(JobOutcome::Rejected { at: step });
+                        jobs[job_id as usize].state = JobState::Rejected;
                         continue;
                     }
                     let m = alive_ids.len();
@@ -447,13 +657,9 @@ impl DiscreteEventEngine {
                                 report.good_accepts += 1;
                             }
                             report.outcomes.push(JobOutcome::Accepted { node, at: step });
-                            inflight[node] += 1;
-                            total_inflight += 1;
-                            report.peak_inflight = report.peak_inflight.max(total_inflight);
-                            queue.schedule(
-                                ev.time + duration_steps as u64 * TICKS_PER_STEP,
-                                Event::JobCompletion { node, job_id, epoch: epoch[node] },
-                            );
+                            // Hand the job to the host: it starts, parks,
+                            // or drops in the JobEnqueue handler.
+                            queue.schedule(ev.time, Event::JobEnqueue { node, job_id });
                         }
                         None => {
                             report.jobs_rejected += 1;
@@ -461,15 +667,149 @@ impl DiscreteEventEngine {
                                 report.justified_rejections += 1;
                             }
                             report.outcomes.push(JobOutcome::Rejected { at: step });
+                            jobs[job_id as usize].state = JobState::Rejected;
                         }
                     }
                 }
 
-                Event::JobCompletion { node, epoch: job_epoch, .. } => {
-                    if alive[node] && epoch[node] == job_epoch && inflight[node] > 0 {
-                        inflight[node] -= 1;
-                        total_inflight -= 1;
-                        report.jobs_completed += 1;
+                Event::JobEnqueue { node, job_id } => {
+                    let rec = &mut jobs[job_id as usize];
+                    if rec.state != JobState::Dispatching {
+                        continue;
+                    }
+                    if !alive[node] {
+                        // Defensive: the target vanished between admission
+                        // and hand-off (cannot happen with the current
+                        // event timing, but the ledger must never leak).
+                        rec.state = JobState::Displaced;
+                        report.jobs_displaced += 1;
+                        continue;
+                    }
+                    let demand = rec.demand;
+                    if hosts[node].queue_len() == 0 && hosts[node].can_start(demand) {
+                        hosts[node].start(job_id, demand);
+                        rec.state = JobState::Running { node };
+                        total_inflight += 1;
+                        report.peak_inflight = report.peak_inflight.max(total_inflight);
+                        queue.schedule(
+                            ev.time,
+                            Event::JobStart { node, job_id, gen: rec.gen },
+                        );
+                    } else if hosts[node].try_enqueue(job_id, demand, ev.time) {
+                        rec.state = JobState::Queued { node };
+                        rec.enqueued_at = Some(ev.time);
+                        report.jobs_queued += 1;
+                        report.peak_queue_len =
+                            report.peak_queue_len.max(hosts[node].queue_len());
+                    } else {
+                        rec.state = JobState::Dropped;
+                        report.jobs_dropped += 1;
+                    }
+                }
+
+                Event::JobStart { node, job_id, gen } => {
+                    let rec = &mut jobs[job_id as usize];
+                    if rec.gen != gen || rec.state != (JobState::Running { node }) {
+                        continue;
+                    }
+                    if let Some(t0) = rec.enqueued_at.take() {
+                        qdelay_ticks_sum += ev.time - t0;
+                        qdelay_count += 1;
+                    }
+                    queue.schedule(
+                        ev.time + rec.duration_steps as u64 * TICKS_PER_STEP,
+                        Event::JobCompletion { node, job_id, gen },
+                    );
+                }
+
+                Event::JobCompletion { node, job_id, gen } => {
+                    let rec = &mut jobs[job_id as usize];
+                    if rec.gen != gen || rec.state != (JobState::Running { node }) {
+                        continue;
+                    }
+                    hosts[node].finish(job_id);
+                    rec.state = JobState::Completed;
+                    report.jobs_completed += 1;
+                    total_inflight -= 1;
+                    if let Some(c) = &cap {
+                        let budget = if can_accept[node] {
+                            c.slots_per_node
+                        } else {
+                            c.contended_slots
+                        };
+                        drain_queue(
+                            node,
+                            budget,
+                            &mut hosts,
+                            &mut jobs,
+                            &mut queue,
+                            ev.time,
+                            &mut total_inflight,
+                            &mut report,
+                        );
+                    }
+                }
+
+                Event::JobPreempt { node, job_id, gen } => {
+                    let rec = &mut jobs[job_id as usize];
+                    if rec.gen != gen || rec.state != (JobState::Running { node }) {
+                        continue; // completed or already displaced — stale
+                    }
+                    hosts[node].finish(job_id);
+                    rec.gen = rec.gen.wrapping_add(1);
+                    total_inflight -= 1;
+                    report.jobs_preempted += 1;
+                    if rec.migrations_left > 0 {
+                        rec.migrations_left -= 1;
+                        rec.state = JobState::Migrating;
+                        queue.schedule(ev.time + 1, Event::JobMigrate { job_id, from: node });
+                    } else {
+                        rec.state = JobState::Displaced;
+                        report.jobs_displaced += 1;
+                    }
+                    // No queue drain here: the node is contended — the
+                    // freed slots stay free until the signal clears (the
+                    // telemetry tick drains) or a completion fires.
+                }
+
+                Event::JobMigrate { job_id, from } => {
+                    let rec = &jobs[job_id as usize];
+                    if rec.state != JobState::Migrating {
+                        continue;
+                    }
+                    let demand = rec.demand;
+                    // Probe a few distinct alive peers (excluding the
+                    // node that shed the job); the first whose admission
+                    // signal is clear *and* that can hold the job wins.
+                    let avail = alive_ids.iter().filter(|&&c| c != from).count();
+                    let target = if avail == 0 {
+                        None
+                    } else {
+                        let m = alive_ids.len();
+                        candidates.clear();
+                        let want = MIGRATION_PROBES.min(avail);
+                        while candidates.len() < want {
+                            let c = alive_ids[migrate_rng.gen_range(m)];
+                            if c != from && !candidates.contains(&c) {
+                                candidates.push(c);
+                            }
+                        }
+                        candidates.iter().copied().find(|&c| {
+                            can_accept[c]
+                                && (hosts[c].can_start(demand) || hosts[c].queue_has_room())
+                        })
+                    };
+                    let rec = &mut jobs[job_id as usize];
+                    match target {
+                        Some(node) => {
+                            rec.state = JobState::Dispatching;
+                            report.jobs_migrated += 1;
+                            queue.schedule(ev.time, Event::JobEnqueue { node, job_id });
+                        }
+                        None => {
+                            rec.state = JobState::Displaced;
+                            report.jobs_displaced += 1;
+                        }
                     }
                 }
 
@@ -497,12 +837,48 @@ impl DiscreteEventEngine {
                         }
                     }
                     alive[node] = false;
-                    epoch[node] = epoch[node].wrapping_add(1);
-                    report.jobs_displaced += inflight[node] as usize;
-                    total_inflight -= inflight[node] as usize;
-                    inflight[node] = 0;
                     report.node_leaves += 1;
                     alive_ids.retain(|&i| i != node);
+                    // Evacuate the host: running jobs are preempted and —
+                    // with migration budget — re-offered to peers; the
+                    // flushed wait queue gets the same treatment (minus
+                    // the preemption count: those jobs never held slots).
+                    let (running, queued) = hosts[node].evacuate();
+                    for (job_id, _demand) in running {
+                        let rec = &mut jobs[job_id as usize];
+                        rec.gen = rec.gen.wrapping_add(1);
+                        total_inflight -= 1;
+                        if cap.is_some() {
+                            report.jobs_preempted += 1;
+                        }
+                        if rec.migrations_left > 0 {
+                            rec.migrations_left -= 1;
+                            rec.state = JobState::Migrating;
+                            queue.schedule(
+                                ev.time + 1,
+                                Event::JobMigrate { job_id, from: node },
+                            );
+                        } else {
+                            rec.state = JobState::Displaced;
+                            report.jobs_displaced += 1;
+                        }
+                    }
+                    for qj in queued {
+                        let rec = &mut jobs[qj.job_id as usize];
+                        rec.gen = rec.gen.wrapping_add(1);
+                        rec.enqueued_at = None;
+                        if rec.migrations_left > 0 {
+                            rec.migrations_left -= 1;
+                            rec.state = JobState::Migrating;
+                            queue.schedule(
+                                ev.time + 1,
+                                Event::JobMigrate { job_id: qj.job_id, from: node },
+                            );
+                        } else {
+                            rec.state = JobState::Displaced;
+                            report.jobs_displaced += 1;
+                        }
+                    }
                     if let Some(churn) = &scenario.churn {
                         if churn.rejoin_delay_mean > 0.0 {
                             let delay =
@@ -559,6 +935,24 @@ impl DiscreteEventEngine {
             report.mean_push_latency_steps =
                 lat_ticks_sum as f64 / lat_count as f64 / TICKS_PER_STEP as f64;
         }
+        if qdelay_count > 0 {
+            report.mean_queue_delay_steps =
+                qdelay_ticks_sum as f64 / qdelay_count as f64 / TICKS_PER_STEP as f64;
+        }
+        if util_cap > 0 {
+            report.mean_utilization = util_used as f64 / util_cap as f64;
+        }
+        // Close the ledger: everything not in a terminal state is still
+        // waiting or running at the horizon.
+        for rec in &jobs {
+            match rec.state {
+                JobState::Queued { .. } | JobState::Migrating | JobState::Dispatching => {
+                    report.jobs_still_queued += 1;
+                }
+                JobState::Running { .. } => report.jobs_still_running += 1,
+                _ => {}
+            }
+        }
         report
     }
 }
@@ -566,7 +960,9 @@ impl DiscreteEventEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::scheduler::{NodeScheduler, ProntoPolicy, RandomPolicy, RejectConfig};
+    use crate::scheduler::{
+        NodeScheduler, ProntoPolicy, QueuePolicy, RandomPolicy, RejectConfig,
+    };
     use crate::sim::scenario::ChurnModel;
     use crate::telemetry::{GeneratorConfig, TraceGenerator};
 
@@ -593,6 +989,19 @@ mod tests {
             .collect()
     }
 
+    fn assert_ledger(report: &SimReport) {
+        assert_eq!(
+            report.jobs_arrived,
+            report.jobs_rejected
+                + report.jobs_completed
+                + report.jobs_dropped
+                + report.jobs_displaced
+                + report.jobs_still_queued
+                + report.jobs_still_running,
+            "job ledger leaked"
+        );
+    }
+
     #[test]
     fn conservation_invariants_hold() {
         let tr = traces(4, 800, 1);
@@ -603,6 +1012,7 @@ mod tests {
         assert_eq!(report.jobs_accepted, report.good_accepts + report.bad_accepts);
         assert_eq!(report.outcomes.len(), report.jobs_arrived);
         assert!(report.jobs_completed + report.jobs_displaced <= report.jobs_accepted);
+        assert_ledger(&report);
     }
 
     #[test]
@@ -653,6 +1063,7 @@ mod tests {
         assert!(report.node_joins > 0, "nobody rejoined");
         assert!(report.node_joins <= report.node_leaves);
         assert_eq!(report.jobs_arrived, report.jobs_accepted + report.jobs_rejected);
+        assert_ledger(&report);
     }
 
     #[test]
@@ -695,8 +1106,102 @@ mod tests {
             Some(report.jobs_arrived)
         );
         assert_eq!(
+            parsed.get("jobs_preempted").and_then(JsonValue::as_usize),
+            Some(report.jobs_preempted)
+        );
+        assert_eq!(
             parsed.get("scenario").and_then(JsonValue::as_str),
             Some("baseline-poisson")
         );
+    }
+
+    #[test]
+    fn capacity_queues_and_drops_under_overload() {
+        // 6 nodes × 2 slots vs ~36 slot-steps/step of offered load: the
+        // bounded queues must fill, delay jobs, and drop the excess.
+        let sc = Scenario::named("capacity").unwrap().with_nodes(6).with_steps(1200);
+        let tr = traces(6, 1200, 21);
+        let report = DiscreteEventEngine::new(sc, tr.clone(), always_policies(&tr)).run();
+        assert!(report.jobs_queued > 0, "nothing ever queued");
+        assert!(report.peak_queue_len > 0);
+        assert!(report.mean_queue_delay_steps > 0.0, "zero queueing delay");
+        assert!(report.jobs_dropped > 0, "bounded queue never dropped");
+        assert!(report.mean_utilization > 0.5, "overloaded cluster mostly idle?");
+        assert!(report.mean_utilization <= 1.0 + 1e-12);
+        assert_ledger(&report);
+    }
+
+    #[test]
+    fn departing_node_preempts_and_migrates_jobs() {
+        let sc = Scenario {
+            capacity: Some(CapacityModel {
+                slots_per_node: 4,
+                contended_slots: 4, // leave-driven preemption only
+                queue_capacity: 8,
+                max_job_slots: 1,
+                queue_policy: QueuePolicy::Fifo,
+                migration_limit: 2,
+            }),
+            churn: Some(ChurnModel {
+                leave_hazard: 0.004,
+                rejoin_delay_mean: 60.0,
+                min_alive: 2,
+            }),
+            arrivals: ArrivalPattern::Poisson { rate: 0.8 },
+            ..Scenario::default()
+        }
+        .with_nodes(6)
+        .with_steps(1500);
+        let tr = traces(6, 1500, 33);
+        let report = DiscreteEventEngine::new(sc, tr.clone(), always_policies(&tr)).run();
+        assert!(report.node_leaves > 0, "churn never fired");
+        assert!(report.jobs_preempted > 0, "departures preempted nothing");
+        assert!(report.jobs_migrated > 0, "no displaced job found a peer");
+        assert_ledger(&report);
+    }
+
+    #[test]
+    fn pressure_preemption_sheds_contended_nodes() {
+        // Random policies raise the signal ~30% of ticks; a full node
+        // (4 used) over the contended budget (1) must shed jobs.
+        let sc = Scenario {
+            capacity: Some(CapacityModel {
+                slots_per_node: 4,
+                contended_slots: 1,
+                queue_capacity: 4,
+                max_job_slots: 1,
+                queue_policy: QueuePolicy::Fifo,
+                migration_limit: 1,
+            }),
+            arrivals: ArrivalPattern::Poisson { rate: 1.0 },
+            ..Scenario::default()
+        }
+        .with_nodes(4)
+        .with_steps(800);
+        let tr = traces(4, 800, 41);
+        let pol: Vec<Box<dyn Admission>> = tr
+            .iter()
+            .enumerate()
+            .map(|(i, _)| Box::new(RandomPolicy::new(0.3, i as u64)) as Box<dyn Admission>)
+            .collect();
+        let report = DiscreteEventEngine::new(sc, tr, pol).run();
+        assert!(report.jobs_preempted > 0, "pressure preemption never fired");
+        assert_ledger(&report);
+    }
+
+    #[test]
+    fn capacity_off_keeps_legacy_behaviour() {
+        // Without a capacity model nothing queues, drops, or preempts —
+        // the admission-only semantics of the original engine.
+        let tr = traces(4, 1000, 51);
+        let sc = Scenario::default().with_nodes(4).with_steps(1000);
+        let report = DiscreteEventEngine::new(sc, tr.clone(), always_policies(&tr)).run();
+        assert_eq!(report.jobs_queued, 0);
+        assert_eq!(report.jobs_dropped, 0);
+        assert_eq!(report.jobs_preempted, 0);
+        assert_eq!(report.jobs_migrated, 0);
+        assert_eq!(report.jobs_still_queued, 0);
+        assert_eq!(report.mean_utilization, 0.0);
+        assert_ledger(&report);
     }
 }

@@ -41,16 +41,36 @@ pub fn latency_to_ticks(steps: f64) -> u64 {
 }
 
 /// Everything that can happen in the cluster.
+///
+/// Job lifecycle events carry `gen` — the job's *placement generation*,
+/// bumped every time the job is displaced or re-placed. A handler ignores
+/// an event whose generation no longer matches the job's, which makes
+/// stale events (a completion for a job that was preempted in between, a
+/// preemption for a job that already finished) safe no-ops instead of
+/// double bookkeeping.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Event {
     /// All alive nodes consume their telemetry vector for `step`.
     TelemetryTick { step: usize },
-    /// A job arrives at the dispatcher.
-    JobArrival { job_id: JobId, duration_steps: usize },
-    /// A previously placed job finishes on `node`. `epoch` is the node's
-    /// churn epoch at placement time; a completion from a previous epoch
-    /// (the node left in between) is ignored.
-    JobCompletion { node: usize, job_id: JobId, epoch: u32 },
+    /// A job arrives at the dispatcher (demand/duration live in the
+    /// engine's job table).
+    JobArrival { job_id: JobId },
+    /// A job admitted by `node` is handed to the host: it either starts,
+    /// parks in the bounded wait queue, or is dropped when the queue is
+    /// full.
+    JobEnqueue { node: usize, job_id: JobId },
+    /// A job begins service on `node` (slots were reserved when the start
+    /// was scheduled).
+    JobStart { node: usize, job_id: JobId, gen: u32 },
+    /// A previously started job finishes on `node`.
+    JobCompletion { node: usize, job_id: JobId, gen: u32 },
+    /// An over-committed node sheds a running job (pressure preemption:
+    /// the rejection signal is raised and usage exceeds the contended
+    /// budget).
+    JobPreempt { node: usize, job_id: JobId, gen: u32 },
+    /// A displaced job is re-offered to peers; `from` (the node that shed
+    /// it) is excluded from the probe.
+    JobMigrate { job_id: JobId, from: usize },
     /// A leaf's iterate snapshot (pooled at `snapshot`) reaches its
     /// aggregator after the configured push latency.
     FederationPush { leaf: usize, snapshot: usize, sent_at: SimTime },

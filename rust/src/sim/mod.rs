@@ -3,12 +3,14 @@
 //! * [`events`] — typed simulation events and the deterministic
 //!   `(time, seq)`-ordered binary-heap event queue.
 //! * [`engine`] — the discrete-event cluster engine: telemetry ticks, job
-//!   arrivals/completions, node churn (join/leave mid-run), and federation
-//!   pushes with configurable delivery latency; bit-reproducible given a
-//!   seed.
+//!   arrivals/starts/completions, host-level capacity (slot budgets,
+//!   bounded wait queues, preemption and migration of displaced jobs),
+//!   node churn (join/leave mid-run), and federation pushes with
+//!   configurable delivery latency; bit-reproducible given a seed.
 //! * [`scenario`] — composable run descriptions: arrival patterns
-//!   (Poisson, bursty/MMPP, diurnal), churn schedules, federation latency;
-//!   a named catalog plus TOML loading (`pronto sim --scenario …`).
+//!   (Poisson, bursty/MMPP, diurnal, trace replay), capacity models,
+//!   churn schedules, federation latency; a named catalog plus TOML
+//!   loading (`pronto sim --scenario …`).
 //! * [`datacenter`] — the fixed-step façade ([`DataCenterSim`]) that maps
 //!   a [`SimConfig`] onto the engine's steady-Poisson scenario.
 //! * [`eval`] — trace-driven evaluation of a rejection-signal method
@@ -25,7 +27,11 @@ pub mod scenario;
 pub use datacenter::{DataCenterSim, SimConfig};
 pub use engine::{DiscreteEventEngine, PolicyFactory, SimReport};
 pub use eval::{evaluate_method, EvalConfig, FleetEvaluation, NodeEvaluation};
-pub use events::{Event, EventQueue, SimTime, TICKS_PER_STEP};
+pub use events::{
+    latency_to_ticks, step_to_ticks, ticks_to_step, Event, EventQueue, Scheduled, SimTime,
+    TICKS_PER_STEP,
+};
 pub use scenario::{
-    ArrivalPattern, ChurnModel, DispatchPolicy, FederationSpec, Scenario, CATALOG,
+    ArrivalPattern, CapacityModel, ChurnModel, DispatchPolicy, FederationSpec, ReplaySchedule,
+    Scenario, CATALOG,
 };

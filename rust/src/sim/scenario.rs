@@ -10,8 +10,11 @@
 
 use crate::config::parse_toml;
 use crate::federation::LatencyModel;
+use crate::scheduler::QueuePolicy;
+use crate::telemetry::VmTrace;
 use anyhow::{bail, Context, Result};
 use std::path::Path;
+use std::sync::Arc;
 
 /// How the dispatcher picks candidate nodes for an arriving job.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -24,8 +27,116 @@ pub enum DispatchPolicy {
     RoundRobin,
 }
 
+/// A trace-driven arrival sequence: exact per-step job counts, typically
+/// read back from a [`VmTrace`]-format CSV (`timestep,<metric...>`; the
+/// column named `arrivals` — or the first column — holds the counts).
+/// Multiple per-VM CSVs in a directory merge by summing counts per step,
+/// so a fleet's arrival sequences replay as one cluster-level stream.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplaySchedule {
+    counts: Vec<u32>,
+    source: String,
+}
+
+impl ReplaySchedule {
+    /// Schedule from explicit per-step counts.
+    pub fn from_counts(counts: Vec<u32>, source: impl Into<String>) -> Self {
+        Self { counts, source: source.into() }
+    }
+
+    /// Extract per-step arrival counts from a trace: the metric named
+    /// `metric` if given, else the `arrivals` column, else column 0.
+    /// Values are rounded and clamped at zero.
+    pub fn from_vm_trace(tr: &VmTrace, metric: Option<&str>) -> Result<Self> {
+        let idx = match metric {
+            Some(name) => tr
+                .metric_index(name)
+                .ok_or_else(|| anyhow::anyhow!("replay trace has no metric '{name}'"))?,
+            None => tr.metric_index("arrivals").unwrap_or(0),
+        };
+        let counts = (0..tr.len())
+            .map(|t| tr.features(t)[idx].round().max(0.0) as u32)
+            .collect();
+        Ok(Self { counts, source: format!("vm{}", tr.vm_id) })
+    }
+
+    /// Load from a CSV file, or merge every `*.csv` in a directory
+    /// (per-VM arrival sequences summed per step).
+    pub fn from_path(path: &Path, metric: Option<&str>) -> Result<Self> {
+        if path.is_dir() {
+            let mut files: Vec<std::path::PathBuf> = std::fs::read_dir(path)
+                .with_context(|| format!("reading {}", path.display()))?
+                .filter_map(|e| e.ok().map(|e| e.path()))
+                .filter(|p| p.extension().map(|x| x == "csv").unwrap_or(false))
+                .collect();
+            files.sort();
+            if files.is_empty() {
+                bail!("no .csv traces in {}", path.display());
+            }
+            let mut counts: Vec<u32> = Vec::new();
+            for (i, f) in files.iter().enumerate() {
+                let tr = VmTrace::read_csv(f, i, 0)?;
+                let one = Self::from_vm_trace(&tr, metric)?;
+                if one.counts.len() > counts.len() {
+                    counts.resize(one.counts.len(), 0);
+                }
+                for (acc, c) in counts.iter_mut().zip(&one.counts) {
+                    *acc += c;
+                }
+            }
+            Ok(Self { counts, source: path.display().to_string() })
+        } else {
+            let tr = VmTrace::read_csv(path, 0, 0)
+                .with_context(|| format!("reading replay trace {}", path.display()))?;
+            let mut s = Self::from_vm_trace(&tr, metric)?;
+            s.source = path.display().to_string();
+            Ok(s)
+        }
+    }
+
+    /// Built-in deterministic demo schedule for the `replay` catalog entry
+    /// (no external file needed): a sparse base stream with periodic
+    /// 3-job batches, long-run rate ≈ 0.2/step.
+    pub fn demo(steps: usize) -> Self {
+        let counts = (0..steps)
+            .map(|t| {
+                if t % 50 == 0 {
+                    3
+                } else if t % 7 == 0 {
+                    1
+                } else {
+                    0
+                }
+            })
+            .collect();
+        Self { counts, source: "demo".into() }
+    }
+
+    /// Arrival count at `step` (0 past the end of the schedule).
+    pub fn count_at(&self, step: usize) -> u32 {
+        self.counts.get(step).copied().unwrap_or(0)
+    }
+
+    pub fn len(&self) -> usize {
+        self.counts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counts.is_empty()
+    }
+
+    /// Total jobs in the schedule.
+    pub fn total(&self) -> usize {
+        self.counts.iter().map(|&c| c as usize).sum()
+    }
+
+    pub fn source(&self) -> &str {
+        &self.source
+    }
+}
+
 /// Job arrival process, parameterized per telemetry step.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum ArrivalPattern {
     /// Homogeneous Poisson stream.
     Poisson { rate: f64 },
@@ -46,18 +157,21 @@ pub enum ArrivalPattern {
         amplitude: f64,
         period_steps: usize,
     },
+    /// Trace-driven replay: the engine injects *exactly*
+    /// `schedule.count_at(step)` jobs at each step — no randomness.
+    Replay { schedule: Arc<ReplaySchedule> },
 }
 
 impl ArrivalPattern {
     /// Expected rate at `step` given the current burst regime.
     pub fn rate_at(&self, step: usize, burst_on: bool) -> f64 {
-        match *self {
-            ArrivalPattern::Poisson { rate } => rate,
+        match self {
+            ArrivalPattern::Poisson { rate } => *rate,
             ArrivalPattern::Bursty { base_rate, burst_rate, .. } => {
                 if burst_on {
-                    burst_rate
+                    *burst_rate
                 } else {
-                    base_rate
+                    *base_rate
                 }
             }
             ArrivalPattern::Diurnal { base_rate, amplitude, period_steps } => {
@@ -65,13 +179,14 @@ impl ArrivalPattern {
                     step as f64 / period_steps.max(1) as f64 * std::f64::consts::TAU;
                 (base_rate * (1.0 + amplitude * phase.sin())).max(0.0)
             }
+            ArrivalPattern::Replay { schedule } => schedule.count_at(step) as f64,
         }
     }
 
     /// Long-run average rate (used for queue pre-sizing).
     pub fn mean_rate(&self) -> f64 {
-        match *self {
-            ArrivalPattern::Poisson { rate } => rate,
+        match self {
+            ArrivalPattern::Poisson { rate } => *rate,
             ArrivalPattern::Bursty {
                 base_rate,
                 burst_rate,
@@ -81,7 +196,10 @@ impl ArrivalPattern {
                 let total = (mean_burst_len + mean_gap_len).max(1e-9);
                 (burst_rate * mean_burst_len + base_rate * mean_gap_len) / total
             }
-            ArrivalPattern::Diurnal { base_rate, .. } => base_rate,
+            ArrivalPattern::Diurnal { base_rate, .. } => *base_rate,
+            ArrivalPattern::Replay { schedule } => {
+                schedule.total() as f64 / schedule.len().max(1) as f64
+            }
         }
     }
 }
@@ -96,6 +214,43 @@ pub struct ChurnModel {
     pub rejoin_delay_mean: f64,
     /// Never drain the pool below this many alive nodes.
     pub min_alive: usize,
+}
+
+/// Host-level capacity: finite slots per node, a bounded wait queue, and
+/// the preemption/migration behaviour of displaced jobs. Absent (`None`
+/// on the scenario), the engine runs the legacy admission-only model —
+/// accepted jobs are free and nothing ever queues.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CapacityModel {
+    /// Slot budget per node.
+    pub slots_per_node: u32,
+    /// Effective budget while the node's rejection signal is raised:
+    /// running jobs above it are preempted at the telemetry tick (newest
+    /// first) and re-offered to peers. Set equal to `slots_per_node` to
+    /// disable pressure preemption.
+    pub contended_slots: u32,
+    /// Bounded wait-queue length per node (0 = no queue: start-or-drop).
+    pub queue_capacity: usize,
+    /// Per-job slot demand is uniform on `{1, …, max_job_slots}`.
+    pub max_job_slots: u32,
+    /// How the wait queue drains when slots free up.
+    pub queue_policy: QueuePolicy,
+    /// Re-placement attempts a displaced job gets before it counts as
+    /// lost (`jobs_displaced`); 0 = preemption always loses the job.
+    pub migration_limit: u32,
+}
+
+impl Default for CapacityModel {
+    fn default() -> Self {
+        Self {
+            slots_per_node: 4,
+            contended_slots: 4,
+            queue_capacity: 8,
+            max_job_slots: 1,
+            queue_policy: QueuePolicy::Fifo,
+            migration_limit: 1,
+        }
+    }
 }
 
 /// The federation link the engine drives during a run.
@@ -154,6 +309,8 @@ pub struct Scenario {
     pub score_window: usize,
     pub churn: Option<ChurnModel>,
     pub federation: FederationSpec,
+    /// Host capacity model; `None` = legacy admission-only simulation.
+    pub capacity: Option<CapacityModel>,
 }
 
 impl Default for Scenario {
@@ -171,6 +328,7 @@ impl Default for Scenario {
             score_window: 5,
             churn: None,
             federation: FederationSpec::default(),
+            capacity: None,
         }
     }
 }
@@ -183,6 +341,9 @@ pub const CATALOG: &[&str] = &[
     "churn",
     "latency",
     "churn-latency",
+    "capacity",
+    "preemption",
+    "replay",
 ];
 
 impl Scenario {
@@ -237,6 +398,55 @@ impl Scenario {
                 },
                 ..base
             },
+            // Finite hosts under sustained overload: 1.3 jobs/step of
+            // ~20-step jobs against 16×2 slots (~1.1× oversubscribed) —
+            // queues build, the bounded queue drops the excess.
+            "capacity" => Scenario {
+                name: name.into(),
+                arrivals: ArrivalPattern::Poisson { rate: 1.3 },
+                capacity: Some(CapacityModel {
+                    slots_per_node: 2,
+                    contended_slots: 2,
+                    queue_capacity: 4,
+                    max_job_slots: 1,
+                    queue_policy: QueuePolicy::Fifo,
+                    migration_limit: 0,
+                }),
+                ..base
+            },
+            // Displacement in both flavours: departing nodes evacuate
+            // their jobs, and contended nodes (rejection signal raised)
+            // shed down to one slot; displaced jobs migrate to peers via
+            // each peer's admission signal (up to 2 hops).
+            "preemption" => Scenario {
+                name: name.into(),
+                arrivals: ArrivalPattern::Poisson { rate: 0.5 },
+                capacity: Some(CapacityModel {
+                    slots_per_node: 4,
+                    contended_slots: 1,
+                    queue_capacity: 8,
+                    max_job_slots: 2,
+                    queue_policy: QueuePolicy::SmallestFirst,
+                    migration_limit: 2,
+                }),
+                churn: Some(ChurnModel {
+                    leave_hazard: 0.002,
+                    rejoin_delay_mean: 100.0,
+                    min_alive: 4,
+                }),
+                federation: FederationSpec { enabled: true, ..Default::default() },
+                ..base
+            },
+            // Trace-driven arrivals: the built-in demo schedule (periodic
+            // 3-job batches over a sparse base stream); real traces load
+            // with `--replay <csv>` or `[arrivals] pattern = "replay"`.
+            "replay" => Scenario {
+                name: name.into(),
+                arrivals: ArrivalPattern::Replay {
+                    schedule: Arc::new(ReplaySchedule::demo(base.steps)),
+                },
+                ..base
+            },
             // Both stressors at once.
             "churn-latency" => Scenario {
                 name: name.into(),
@@ -283,8 +493,8 @@ impl Scenario {
     }
 
     /// Parse from TOML text. Sections: `[scenario]`, `[arrivals]`,
-    /// `[churn]`, `[federation]`; every key optional, unknown keys
-    /// rejected.
+    /// `[capacity]`, `[churn]`, `[federation]`; every key optional,
+    /// unknown keys rejected.
     pub fn from_toml(text: &str) -> Result<Scenario> {
         let doc = parse_toml(text).map_err(|e| anyhow::anyhow!("scenario: {e}"))?;
         let mut s = Scenario { name: "custom".into(), ..Default::default() };
@@ -296,9 +506,19 @@ impl Scenario {
         let mut mean_gap_len = 200.0f64;
         let mut amplitude = 0.8f64;
         let mut period_steps = 720usize;
+        // Replay arrivals: path + optional metric column.
+        let mut replay_path: Option<String> = None;
+        let mut replay_metric: Option<String> = None;
         // Churn assembled likewise; presence of the section enables it.
         let mut churn_seen = false;
         let mut churn = ChurnModel { leave_hazard: 0.001, rejoin_delay_mean: 120.0, min_alive: 1 };
+        // Capacity assembled likewise; presence of the section enables it.
+        // `contended_slots` defaults to the slot budget (no pressure
+        // preemption) unless set explicitly.
+        let mut capacity_seen = false;
+        let mut capacity = CapacityModel::default();
+        let mut contended_set = false;
+        let mut queue_policy = "fifo".to_string();
         // Federation latency fields. Options so a parameter without the
         // selector (or vice versa) can be detected instead of silently
         // degenerating to instant delivery.
@@ -344,6 +564,34 @@ impl Scenario {
                     ("arrivals", "mean_gap_len") => mean_gap_len = num()?,
                     ("arrivals", "amplitude") => amplitude = num()?,
                     ("arrivals", "period_steps") => period_steps = uint()?,
+                    ("arrivals", "replay") => replay_path = Some(string()?),
+                    ("arrivals", "replay_metric") => replay_metric = Some(string()?),
+
+                    ("capacity", "slots_per_node") => {
+                        capacity_seen = true;
+                        capacity.slots_per_node = uint()? as u32;
+                    }
+                    ("capacity", "contended_slots") => {
+                        capacity_seen = true;
+                        contended_set = true;
+                        capacity.contended_slots = uint()? as u32;
+                    }
+                    ("capacity", "queue_capacity") => {
+                        capacity_seen = true;
+                        capacity.queue_capacity = uint()?;
+                    }
+                    ("capacity", "max_job_slots") => {
+                        capacity_seen = true;
+                        capacity.max_job_slots = uint()? as u32;
+                    }
+                    ("capacity", "queue_policy") => {
+                        capacity_seen = true;
+                        queue_policy = string()?;
+                    }
+                    ("capacity", "migration_limit") => {
+                        capacity_seen = true;
+                        capacity.migration_limit = uint()? as u32;
+                    }
 
                     ("churn", "leave_hazard") => {
                         churn_seen = true;
@@ -384,8 +632,35 @@ impl Scenario {
                 mean_gap_len,
             },
             "diurnal" => ArrivalPattern::Diurnal { base_rate: rate, amplitude, period_steps },
-            other => bail!("arrivals.pattern '{other}' (poisson | bursty | diurnal)"),
+            "replay" => {
+                let path = replay_path.as_deref().ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "arrivals.replay (a csv path) is required for pattern = \"replay\""
+                    )
+                })?;
+                ArrivalPattern::Replay {
+                    schedule: Arc::new(ReplaySchedule::from_path(
+                        Path::new(path),
+                        replay_metric.as_deref(),
+                    )?),
+                }
+            }
+            other => bail!("arrivals.pattern '{other}' (poisson | bursty | diurnal | replay)"),
         };
+        if (replay_path.is_some() || replay_metric.is_some()) && pattern != "replay" {
+            bail!("arrivals.replay/replay_metric require pattern = \"replay\"");
+        }
+        if capacity_seen {
+            capacity.queue_policy = match queue_policy.as_str() {
+                "fifo" => QueuePolicy::Fifo,
+                "smallest-first" => QueuePolicy::SmallestFirst,
+                other => bail!("capacity.queue_policy '{other}' (fifo | smallest-first)"),
+            };
+            if !contended_set {
+                capacity.contended_slots = capacity.slots_per_node;
+            }
+            s.capacity = Some(capacity);
+        }
         s.dispatch = match dispatch.as_str() {
             "random" => DispatchPolicy::RandomProbe,
             "round-robin" => DispatchPolicy::RoundRobin,
@@ -453,13 +728,34 @@ impl Scenario {
                 );
             }
         }
+        if let Some(c) = &self.capacity {
+            if c.slots_per_node == 0 {
+                bail!("scenario: capacity.slots_per_node must be >= 1");
+            }
+            if c.max_job_slots == 0 || c.max_job_slots > c.slots_per_node {
+                bail!(
+                    "scenario: capacity.max_job_slots ({}) must be in \
+                     [1, slots_per_node = {}] or some jobs can never start",
+                    c.max_job_slots,
+                    c.slots_per_node
+                );
+            }
+            if c.contended_slots > c.slots_per_node {
+                bail!(
+                    "scenario: capacity.contended_slots ({}) must not exceed \
+                     slots_per_node ({})",
+                    c.contended_slots,
+                    c.slots_per_node
+                );
+            }
+        }
         // Each regime's rate must be valid on its own — a healthy mean
         // can hide a negative burst rate that would panic the Poisson
         // sampler (debug) or silently zero arrivals (release).
         let rate_ok = |r: f64| r.is_finite() && r >= 0.0;
-        match self.arrivals {
+        match &self.arrivals {
             ArrivalPattern::Poisson { rate } => {
-                if !rate_ok(rate) {
+                if !rate_ok(*rate) {
                     bail!("scenario: arrivals.rate must be finite and non-negative");
                 }
             }
@@ -469,19 +765,24 @@ impl Scenario {
                 mean_burst_len,
                 mean_gap_len,
             } => {
-                if !rate_ok(base_rate) || !rate_ok(burst_rate) {
+                if !rate_ok(*base_rate) || !rate_ok(*burst_rate) {
                     bail!("scenario: bursty rates must be finite and non-negative");
                 }
-                if !(mean_burst_len > 0.0 && mean_gap_len > 0.0) {
+                if !(*mean_burst_len > 0.0 && *mean_gap_len > 0.0) {
                     bail!("scenario: bursty regime lengths must be positive");
                 }
             }
             ArrivalPattern::Diurnal { base_rate, amplitude, period_steps } => {
-                if !rate_ok(base_rate) || !amplitude.is_finite() {
+                if !rate_ok(*base_rate) || !amplitude.is_finite() {
                     bail!("scenario: diurnal rate/amplitude must be finite (rate >= 0)");
                 }
-                if period_steps == 0 {
+                if *period_steps == 0 {
                     bail!("scenario: diurnal period_steps must be >= 1");
+                }
+            }
+            ArrivalPattern::Replay { schedule } => {
+                if schedule.is_empty() {
+                    bail!("scenario: replay schedule has no steps");
                 }
             }
         }
@@ -644,6 +945,119 @@ latency_mean_steps = 5.0
             "[scenario]\nnodes = 5\n[churn]\nmin_alive = 4\n"
         )
         .is_ok());
+    }
+
+    #[test]
+    fn capacity_toml_section_enables_and_validates() {
+        let s = Scenario::from_toml(
+            r#"
+[capacity]
+slots_per_node = 8
+queue_capacity = 16
+max_job_slots = 2
+queue_policy = "smallest-first"
+migration_limit = 3
+"#,
+        )
+        .unwrap();
+        let c = s.capacity.unwrap();
+        assert_eq!(c.slots_per_node, 8);
+        // Unset contended budget defaults to the full budget.
+        assert_eq!(c.contended_slots, 8);
+        assert_eq!(c.queue_policy, QueuePolicy::SmallestFirst);
+        assert_eq!(c.migration_limit, 3);
+
+        let s = Scenario::from_toml("[capacity]\nslots_per_node = 4\ncontended_slots = 1\n")
+            .unwrap();
+        assert_eq!(s.capacity.unwrap().contended_slots, 1);
+
+        // Invalid compositions fail loudly.
+        assert!(Scenario::from_toml("[capacity]\nslots_per_node = 0\n").is_err());
+        assert!(
+            Scenario::from_toml("[capacity]\nslots_per_node = 2\nmax_job_slots = 3\n").is_err()
+        );
+        assert!(Scenario::from_toml(
+            "[capacity]\nslots_per_node = 2\ncontended_slots = 5\n"
+        )
+        .is_err());
+        assert!(Scenario::from_toml("[capacity]\nqueue_policy = \"lifo\"\n").is_err());
+    }
+
+    #[test]
+    fn replay_pattern_requires_and_loads_csv() {
+        // Missing path is an error, not a silent empty schedule.
+        assert!(Scenario::from_toml("[arrivals]\npattern = \"replay\"\n").is_err());
+        // A replay path or metric with a non-replay pattern is a likely typo.
+        assert!(Scenario::from_toml("[arrivals]\nreplay = \"x.csv\"\n").is_err());
+        assert!(Scenario::from_toml("[arrivals]\nreplay_metric = \"jobs\"\n").is_err());
+
+        let dir = std::env::temp_dir().join("pronto_scenario_replay_toml");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("arrivals.csv");
+        std::fs::write(&p, "timestep,arrivals\n0,2\n1,0\n2,1\n").unwrap();
+        let text = format!(
+            "[arrivals]\npattern = \"replay\"\nreplay = \"{}\"\n",
+            p.display()
+        );
+        let s = Scenario::from_toml(&text).unwrap();
+        match &s.arrivals {
+            ArrivalPattern::Replay { schedule } => {
+                assert_eq!(schedule.len(), 3);
+                assert_eq!(schedule.total(), 3);
+                assert_eq!(schedule.count_at(0), 2);
+                assert_eq!(schedule.count_at(2), 1);
+                assert_eq!(schedule.count_at(99), 0);
+            }
+            other => panic!("expected replay pattern, got {other:?}"),
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn replay_directory_merges_per_vm_sequences() {
+        let dir = std::env::temp_dir().join("pronto_scenario_replay_dir");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("vm0.csv"), "timestep,arrivals\n0,1\n1,0\n2,2\n").unwrap();
+        std::fs::write(dir.join("vm1.csv"), "timestep,arrivals\n0,0\n1,3\n").unwrap();
+        let sched = ReplaySchedule::from_path(&dir, None).unwrap();
+        // Per-step sums over both VMs, padded to the longest sequence.
+        assert_eq!(sched.len(), 3);
+        assert_eq!(sched.count_at(0), 1);
+        assert_eq!(sched.count_at(1), 3);
+        assert_eq!(sched.count_at(2), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn demo_replay_schedule_is_deterministic() {
+        let a = ReplaySchedule::demo(500);
+        let b = ReplaySchedule::demo(500);
+        assert_eq!(a, b);
+        assert!(a.total() > 0);
+        assert_eq!(a.count_at(0), 3);
+        let mean = a.total() as f64 / a.len() as f64;
+        assert!(mean > 0.1 && mean < 0.4, "demo rate {mean} out of family");
+    }
+
+    #[test]
+    fn new_catalog_entries_compose_as_documented() {
+        let cap = Scenario::named("capacity").unwrap();
+        let c = cap.capacity.unwrap();
+        assert_eq!(c.migration_limit, 0);
+        assert!(cap.churn.is_none());
+        // Offered load exceeds the fleet's slot budget — the point.
+        let offered = cap.arrivals.mean_rate()
+            * (cap.duration_mu + 0.5 * cap.duration_sigma * cap.duration_sigma).exp();
+        assert!(offered > (cap.nodes as u32 * c.slots_per_node) as f64);
+
+        let pre = Scenario::named("preemption").unwrap();
+        let c = pre.capacity.unwrap();
+        assert!(c.contended_slots < c.slots_per_node, "pressure preemption off");
+        assert!(c.migration_limit > 0);
+        assert!(pre.churn.is_some());
+
+        let rep = Scenario::named("replay").unwrap();
+        assert!(matches!(rep.arrivals, ArrivalPattern::Replay { .. }));
     }
 
     #[test]

@@ -81,6 +81,11 @@ impl VmTrace {
         &self.metric_names
     }
 
+    /// Index of the metric named `name`, if present.
+    pub fn metric_index(&self, name: &str) -> Option<usize> {
+        self.metric_names.iter().position(|m| m == name)
+    }
+
     /// Sub-trace covering timesteps `[start, end)`.
     pub fn slice(&self, start: usize, end: usize) -> VmTrace {
         assert!(start <= end && end <= self.len());
@@ -202,6 +207,13 @@ mod tests {
             }
         }
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn metric_index_finds_named_columns() {
+        let tr = tiny_trace();
+        assert_eq!(tr.metric_index(&tr.metric_names()[3].clone()), Some(3));
+        assert_eq!(tr.metric_index("no.such.metric"), None);
     }
 
     #[test]

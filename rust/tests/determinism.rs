@@ -49,6 +49,53 @@ fn same_seed_same_scenario_identical_reports() {
 }
 
 #[test]
+fn capacity_preemption_replay_are_byte_identical_per_seed() {
+    // The new event machinery (enqueue/start/preempt/migrate, trace
+    // replay) must be exactly as reproducible as the original engine:
+    // same seed ⇒ identical outcome digest and byte-identical JSON.
+    for name in ["capacity", "preemption", "replay"] {
+        let scenario = Scenario::named(name)
+            .unwrap()
+            .with_nodes(6)
+            .with_steps(1_500)
+            .with_seed(0xBEEF);
+        let tr = fleet(6, 1_500, 19);
+        let d = tr[0].dim();
+        let run = || {
+            let mut engine = DiscreteEventEngine::new(
+                scenario.clone(),
+                tr.clone(),
+                pronto_policies(&tr),
+            );
+            if scenario.churn.is_some() {
+                engine = engine.with_policy_factory(Box::new(move |_| {
+                    Box::new(ProntoPolicy::new(NodeScheduler::new(
+                        d,
+                        RejectConfig::default(),
+                    ))) as Box<dyn Admission>
+                }));
+            }
+            engine.run()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(
+            a.outcomes_digest(),
+            b.outcomes_digest(),
+            "scenario '{name}' outcome digest drifted"
+        );
+        assert_eq!(
+            a.to_json_string(),
+            b.to_json_string(),
+            "scenario '{name}' JSON not byte-identical"
+        );
+        assert_eq!(a.jobs_preempted, b.jobs_preempted);
+        assert_eq!(a.jobs_migrated, b.jobs_migrated);
+        assert_eq!(a.jobs_queued, b.jobs_queued);
+    }
+}
+
+#[test]
 fn seed_change_changes_outcomes() {
     let tr = fleet(4, 800, 23);
     let a = DiscreteEventEngine::new(

@@ -1,0 +1,191 @@
+//! Property-based tests for the deterministic event queue, in the style
+//! of `linalg_props.rs`: seeded, replayable via `PRONTO_PROP_SEED` /
+//! `PRONTO_PROP_CASES`.
+//!
+//! The invariants under test are exactly what the engine's
+//! bit-reproducibility rests on: pops are globally ordered by
+//! `(time, seq)`, same-time events preserve schedule order (FIFO), and
+//! the step/tick conversions round-trip.
+
+use pronto::proptest::forall;
+use pronto::sim::{
+    latency_to_ticks, step_to_ticks, ticks_to_step, Event, EventQueue, SimTime, TICKS_PER_STEP,
+};
+
+/// Tag each scheduled event with its insertion index so the pop sequence
+/// can be compared against a reference model.
+fn tagged(node: usize) -> Event {
+    Event::NodeJoin { node }
+}
+
+fn untag(e: Event) -> usize {
+    match e {
+        Event::NodeJoin { node } => node,
+        other => panic!("unexpected event {other:?}"),
+    }
+}
+
+#[test]
+fn pops_match_a_stable_sort_by_time_then_schedule_order() {
+    forall("EventQueue ≡ stable sort by (time, insertion)", |rng| {
+        let n = 1 + rng.gen_range(300);
+        let mut q = EventQueue::with_capacity(n);
+        let mut model: Vec<(SimTime, usize)> = Vec::with_capacity(n);
+        for i in 0..n {
+            // Small time range forces plenty of ties.
+            let t = rng.gen_range(40) as SimTime;
+            q.schedule(t, tagged(i));
+            model.push((t, i));
+        }
+        // Reference: stable sort by time keeps insertion order on ties;
+        // sorting the (time, index) pairs is the same thing.
+        model.sort();
+        let mut popped = Vec::with_capacity(n);
+        while let Some(s) = q.pop() {
+            let idx = untag(s.event);
+            if s.time != model.iter().find(|&&(_, i)| i == idx).unwrap().0 {
+                return Err(format!("event {idx} popped with a mutated time {}", s.time));
+            }
+            popped.push((s.time, idx));
+        }
+        if popped.len() != n {
+            return Err(format!("popped {} of {n} events", popped.len()));
+        }
+        if popped != model {
+            return Err("pop order diverged from stable (time, seq) sort".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn pops_are_globally_ordered_under_interleaved_scheduling() {
+    forall("interleaved schedule/pop keeps (time, seq) order", |rng| {
+        let mut q = EventQueue::with_capacity(64);
+        let rounds = 1 + rng.gen_range(20);
+        let mut next_tag = 0usize;
+        let mut tag_time: Vec<SimTime> = Vec::new();
+        let mut last: Option<(SimTime, usize)> = None;
+        let mut popped = 0usize;
+        // Clock floor: new events may never be scheduled before the last
+        // pop (the engine only schedules at or after `now`), otherwise
+        // global pop ordering is unachievable by construction.
+        let mut floor: SimTime = 0;
+        for _ in 0..rounds {
+            for _ in 0..(1 + rng.gen_range(10)) {
+                let t = floor + rng.gen_range(30) as SimTime;
+                q.schedule(t, tagged(next_tag));
+                tag_time.push(t);
+                next_tag += 1;
+            }
+            for _ in 0..rng.gen_range(8) {
+                let Some(s) = q.pop() else { break };
+                popped += 1;
+                let idx = untag(s.event);
+                if s.time != tag_time[idx] {
+                    return Err(format!("tag {idx}: time {} != scheduled {}", s.time, tag_time[idx]));
+                }
+                if let Some((lt, lidx)) = last {
+                    if s.time < lt {
+                        return Err(format!("time went backwards: {} after {lt}", s.time));
+                    }
+                    if s.time == lt && idx < lidx {
+                        return Err(format!(
+                            "same-time FIFO violated: tag {idx} after {lidx} at t={lt}"
+                        ));
+                    }
+                }
+                floor = s.time;
+                last = Some((s.time, idx));
+            }
+        }
+        // Drain the rest; the invariant must hold to the end.
+        while let Some(s) = q.pop() {
+            popped += 1;
+            let idx = untag(s.event);
+            if let Some((lt, lidx)) = last {
+                if s.time < lt || (s.time == lt && idx < lidx) {
+                    return Err(format!("drain violated order at tag {idx}"));
+                }
+            }
+            last = Some((s.time, idx));
+        }
+        if popped != next_tag {
+            return Err(format!("lost events: {popped} of {next_tag}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn same_time_events_pop_in_schedule_order_exactly() {
+    forall("equal timestamps drain FIFO", |rng| {
+        let mut q = EventQueue::with_capacity(64);
+        let t = rng.gen_range(1_000) as SimTime;
+        let n = 2 + rng.gen_range(100);
+        for i in 0..n {
+            q.schedule(t, tagged(i));
+        }
+        for want in 0..n {
+            let s = q.pop().ok_or("queue drained early")?;
+            if s.time != t {
+                return Err(format!("time changed: {}", s.time));
+            }
+            let got = untag(s.event);
+            if got != want {
+                return Err(format!("FIFO broken: got {got}, want {want}"));
+            }
+        }
+        if !q.is_empty() {
+            return Err("queue not empty after draining".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn step_tick_conversions_roundtrip_for_arbitrary_steps() {
+    forall("step↔tick round-trip", |rng| {
+        // Any step a realistic run could reach (u64 ticks cap the step
+        // space at 2^64 / TICKS_PER_STEP; stay well inside).
+        let step = rng.gen_range(1 << 40);
+        let base = step_to_ticks(step);
+        if ticks_to_step(base) != step {
+            return Err(format!("step {step}: base tick maps to {}", ticks_to_step(base)));
+        }
+        // Every tick within the step maps back to it…
+        let off = rng.gen_range(TICKS_PER_STEP as usize) as SimTime;
+        if ticks_to_step(base + off) != step {
+            return Err(format!("step {step} + {off} ticks leaked to another step"));
+        }
+        // …and the first tick past it does not.
+        if ticks_to_step(base + TICKS_PER_STEP) != step + 1 {
+            return Err("step boundary off by one".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn latency_to_ticks_is_monotone_and_never_zero() {
+    forall("latency_to_ticks: floor 1, monotone, exact on whole steps", |rng| {
+        let a = rng.next_f64() * 50.0;
+        let b = rng.next_f64() * 50.0;
+        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        let (tl, th) = (latency_to_ticks(lo), latency_to_ticks(hi));
+        if tl == 0 || th == 0 {
+            return Err("a delayed event may never tie its cause (zero ticks)".into());
+        }
+        if tl > th {
+            return Err(format!("monotonicity broken: {lo}->{tl}, {hi}->{th}"));
+        }
+        let k = 1 + rng.gen_range(100) as u64;
+        if latency_to_ticks(k as f64) != k * TICKS_PER_STEP {
+            return Err(format!("whole-step latency {k} not exact"));
+        }
+        if latency_to_ticks(-1.0) != 1 {
+            return Err("negative latency must clamp to the 1-tick floor".into());
+        }
+        Ok(())
+    });
+}

@@ -45,8 +45,28 @@ fn assert_conservation(report: &pronto::sim::SimReport) {
         report.good_accepts + report.bad_accepts
     );
     assert_eq!(report.outcomes.len(), report.jobs_arrived);
+    // Full ledger: every arrival lands in exactly one bucket — rejected
+    // at admission, completed, dropped at a full queue, lost to a
+    // departure/failed migration, or still waiting/running (in flight) at
+    // the horizon. Nothing leaks, nothing double-counts.
+    assert_eq!(
+        report.jobs_arrived,
+        report.jobs_rejected
+            + report.jobs_completed
+            + report.jobs_dropped
+            + report.jobs_displaced
+            + report.jobs_still_queued
+            + report.jobs_still_running,
+        "job ledger leaked in scenario '{}'",
+        report.scenario
+    );
     assert!(report.jobs_completed + report.jobs_displaced <= report.jobs_accepted);
+    // Migrations re-place displaced jobs; each needs a preemption or a
+    // queue flush first, so they never exceed total displacement events.
+    assert!(report.jobs_migrated <= report.jobs_preempted + report.jobs_queued);
     assert!(report.mean_push_latency_steps.is_finite());
+    assert!(report.mean_queue_delay_steps.is_finite());
+    assert!((0.0..=1.0).contains(&report.mean_utilization));
 }
 
 #[test]
@@ -147,6 +167,76 @@ fn latency_scenario_degrades_gracefully() {
         r_instant.acceptance_rate()
     );
     assert!(r_delayed.acceptance_rate() > 0.3);
+}
+
+#[test]
+fn capacity_scenario_reports_nonzero_queueing() {
+    // The catalog `capacity` entry oversubscribes the fleet (~1.1× with
+    // admission always open): queues must build, delay jobs, and drop
+    // the excess once the bounded queues fill.
+    let scenario = Scenario::named("capacity").unwrap().with_nodes(8).with_steps(2_000);
+    let tr = fleet(8, 2_000, 91);
+    let report =
+        DiscreteEventEngine::new(scenario, tr.clone(), always_policies(&tr)).run();
+    assert_conservation(&report);
+    assert!(report.jobs_queued > 0, "no job ever waited");
+    assert!(report.mean_queue_delay_steps > 0.0, "queueing delay is zero");
+    assert!(report.peak_queue_len > 0);
+    assert!(report.jobs_dropped > 0, "bounded queues never overflowed");
+    assert!(report.mean_utilization > 0.5, "oversubscribed fleet mostly idle");
+    // Capacity does not bend admission accounting.
+    assert_eq!(report.jobs_accepted, report.good_accepts + report.bad_accepts);
+}
+
+#[test]
+fn preemption_scenario_preempts_and_migrates() {
+    // Churn evacuates hosts and contended nodes shed load; with a
+    // migration budget, displaced jobs find peers via their admission
+    // signals.
+    let nodes = 8;
+    let steps = 3_000;
+    let scenario = Scenario::named("preemption").unwrap().with_nodes(nodes).with_steps(steps);
+    let tr = fleet(nodes, steps, 93);
+    let d = tr[0].dim();
+    let report = DiscreteEventEngine::new(scenario, tr.clone(), pronto_policies(&tr))
+        .with_policy_factory(pronto_factory(d))
+        .run();
+    assert_conservation(&report);
+    assert!(report.node_leaves > 0, "churn never fired");
+    assert!(report.jobs_preempted > 0, "nothing was ever preempted");
+    assert!(report.jobs_migrated > 0, "no displaced job was re-placed");
+    // Migration keeps most displaced work alive: outright losses stay
+    // below preemption events.
+    assert!(report.jobs_displaced <= report.jobs_preempted + report.jobs_queued);
+}
+
+#[test]
+fn custom_toml_capacity_scenario_runs() {
+    let text = r#"
+[scenario]
+name = "it-capacity"
+nodes = 6
+steps = 1000
+seed = 19
+
+[arrivals]
+pattern = "poisson"
+rate = 1.0
+
+[capacity]
+slots_per_node = 2
+queue_capacity = 3
+max_job_slots = 1
+queue_policy = "smallest-first"
+migration_limit = 1
+"#;
+    let scenario = Scenario::from_toml(text).unwrap();
+    let tr = fleet(6, 1_000, 95);
+    let report =
+        DiscreteEventEngine::new(scenario, tr.clone(), always_policies(&tr)).run();
+    assert_conservation(&report);
+    assert_eq!(report.scenario, "it-capacity");
+    assert!(report.jobs_queued > 0);
 }
 
 #[test]
