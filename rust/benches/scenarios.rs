@@ -47,7 +47,7 @@ fn main() {
         &[
             "scenario", "jobs", "accept%", "quality%", "precision%", "leaves", "joins",
             "pushes", "lat(steps)", "queued", "qwait", "drop", "preempt", "migr", "util%",
-            "wall(ms)",
+            "slo%", "wall(ms)",
         ],
     );
 
@@ -78,6 +78,11 @@ fn main() {
             report.jobs_preempted.to_string(),
             report.jobs_migrated.to_string(),
             format!("{:.1}", 100.0 * report.mean_utilization),
+            if report.slo_total > 0 {
+                format!("{:.1}", 100.0 * report.slo_attainment())
+            } else {
+                "-".to_string()
+            },
             format!("{:.1}", wall.as_secs_f64() * 1e3),
         ]);
     }

@@ -227,7 +227,9 @@ fn cmd_sim(raw: &[String]) -> Result<()> {
 
     let report = if let Some(scenario) = scenario {
         let dims: Vec<usize> = fleet.iter().map(|t| t.dim()).collect();
-        let mut engine = DiscreteEventEngine::new(scenario.clone(), fleet, policies);
+        // try_new: a malformed fleet (empty replay directory, header-only
+        // CSVs) is a typed error on stderr, not an index panic.
+        let mut engine = DiscreteEventEngine::try_new(scenario.clone(), fleet, policies)?;
         if scenario.churn.is_some() {
             // Rejoining nodes restart with fresh policy state.
             let cfg = cfg.clone();
@@ -294,6 +296,23 @@ fn print_sim_report(report: &SimReport, policy: &str) {
             report.jobs_still_running
         );
     }
+    if !report.mean_queue_delay_by_priority.is_empty() {
+        let per: Vec<String> = report
+            .mean_queue_delay_by_priority
+            .iter()
+            .enumerate()
+            .map(|(p, d)| format!("p{p}={d:.2}"))
+            .collect();
+        println!("  queue delay by prio : {} steps (higher class serves first)", per.join(", "));
+    }
+    if report.slo_total > 0 {
+        println!(
+            "  SLO attainment      : {:.1}% ({} of {} deadlines met)",
+            100.0 * report.slo_attainment(),
+            report.slo_attained,
+            report.slo_total
+        );
+    }
     if report.node_joins + report.node_leaves > 0 {
         println!(
             "  churn               : {} leaves, {} joins",
@@ -322,9 +341,29 @@ fn cmd_scenarios(raw: &[String]) -> Result<()> {
         let s = Scenario::named(name).expect("catalog entry");
         let churn = if s.churn.is_some() { "churn" } else { "stable" };
         let cap = match &s.capacity {
-            Some(c) if c.contended_slots < c.slots_per_node => ", finite+preempting",
-            Some(_) => ", finite slots",
-            None => "",
+            Some(c) => {
+                let mut tag = String::from(if c.pressure_enabled() {
+                    ", finite+preempting"
+                } else {
+                    ", finite slots"
+                });
+                if !c.host_classes.is_empty() {
+                    tag.push_str("/hetero");
+                }
+                if c.priority_levels > 1 {
+                    tag.push_str("/priorities");
+                }
+                if c.slo_steps.is_some() {
+                    tag.push_str("/slo");
+                }
+                match s.dispatch {
+                    crate::sim::DispatchPolicy::SignalOnly => {}
+                    crate::sim::DispatchPolicy::QueueAware => tag.push_str(", queue-aware"),
+                    crate::sim::DispatchPolicy::LeastLoaded => tag.push_str(", least-loaded"),
+                }
+                tag
+            }
+            None => String::new(),
         };
         let lat = if s.federation.enabled {
             if s.federation.latency.is_instant() {

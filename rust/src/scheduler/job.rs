@@ -5,6 +5,13 @@ use crate::rng::Xoshiro256;
 /// Unique job identifier.
 pub type JobId = u64;
 
+/// Scheduling priority: higher values are served first. Wait queues order
+/// strictly by priority (FIFO or smallest-first *within* a priority class)
+/// and pressure preemption sheds the lowest priority first, so `0` is the
+/// most preemptible class and `u8::MAX` the most protected. The default
+/// single-class fleets put every job at `0`.
+pub type Priority = u8;
+
 /// A schedulable unit of work arriving at the data center.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Job {
@@ -20,19 +27,27 @@ pub struct Job {
     /// (`sim::engine`) for the hot loop; its `demand` field must mean the
     /// same thing as this one.
     pub slots: u32,
+    /// Scheduling class (see [`Priority`]); default 0.
+    pub priority: Priority,
 }
 
 impl Job {
     pub fn new(id: JobId, arrival: usize, duration: usize, cpu_demand: f64) -> Self {
         assert!(duration >= 1);
         assert!(cpu_demand > 0.0);
-        Self { id, arrival, duration, cpu_demand, slots: 1 }
+        Self { id, arrival, duration, cpu_demand, slots: 1, priority: 0 }
     }
 
     /// Builder-style slot demand override.
     pub fn with_slots(mut self, slots: u32) -> Self {
         assert!(slots >= 1);
         self.slots = slots;
+        self
+    }
+
+    /// Builder-style priority override.
+    pub fn with_priority(mut self, priority: Priority) -> Self {
+        self.priority = priority;
         self
     }
 }
@@ -82,7 +97,10 @@ mod tests {
         let j = Job::new(1, 0, 10, 1.5);
         assert_eq!(j.duration, 10);
         assert_eq!(j.slots, 1);
-        assert_eq!(j.with_slots(3).slots, 3);
+        assert_eq!(j.priority, 0);
+        let j = j.with_slots(3).with_priority(2);
+        assert_eq!(j.slots, 3);
+        assert_eq!(j.priority, 2);
     }
 
     #[test]

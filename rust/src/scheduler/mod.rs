@@ -21,8 +21,10 @@ mod policy;
 mod reject;
 mod standardize;
 
-pub use job::{Job, JobId, JobOutcome, ServiceTimeModel};
-pub use node::{HostCapacity, NodeScheduler, NodeStats, QueuePolicy, QueuedJob};
+pub use job::{Job, JobId, JobOutcome, Priority, ServiceTimeModel};
+pub use node::{
+    AdmissionProbe, HostCapacity, NodeScheduler, NodeStats, QueuePolicy, QueuedJob,
+};
 pub use policy::{Admission, CpuReadyOracle, ProntoPolicy, RandomPolicy, ThresholdPolicy};
 pub use reject::{RejectConfig, RejectJob};
 pub use standardize::OnlineStandardizer;

@@ -5,10 +5,14 @@
 //! embedding tracker (block-wise) and flows through Reject-Job to produce
 //! the admission decision for that timestep — no communication involved.
 
-use super::{JobId, OnlineStandardizer, RejectConfig, RejectJob};
+use super::{JobId, OnlineStandardizer, Priority, RejectConfig, RejectJob};
 use crate::baselines::StreamingEmbedding;
 use crate::fpca::{FpcaEdge, FpcaEdgeConfig, Subspace};
 use std::collections::VecDeque;
+
+/// Smoothing factor of the per-host queue-delay EWMA exposed through
+/// [`AdmissionProbe`].
+const QUEUE_DELAY_EWMA_ALPHA: f64 = 0.2;
 
 /// Rolling statistics of one node's admission behaviour.
 #[derive(Debug, Clone, Copy, Default)]
@@ -59,8 +63,30 @@ pub struct QueuedJob {
     pub job_id: JobId,
     /// Slot demand.
     pub demand: u32,
+    /// Scheduling class: higher pops first; order within a class follows
+    /// the queue policy (FIFO / smallest-first).
+    pub priority: Priority,
     /// Simulation tick the job entered the queue (for queue-delay metrics).
     pub enqueued_at: u64,
+}
+
+/// What an admission offer to a host reports back: the scalar rejection
+/// signal the paper dispatches on, plus the host-local congestion state a
+/// queue-aware dispatcher scores. A node with a clear signal and a deep
+/// queue is *not* equivalent to an idle one — this is the structured view
+/// that lets `DispatchPolicy::QueueAware` / `LeastLoaded` tell them apart.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdmissionProbe {
+    /// The node's rejection signal at the latest telemetry step.
+    pub signal_raised: bool,
+    /// Slots free right now (0 when the budget is fully committed —
+    /// saturating, so a shrunk budget never reports phantom capacity).
+    pub free_slots: u32,
+    /// Jobs parked in the wait queue.
+    pub queue_depth: usize,
+    /// Exponentially weighted average of observed queue delays, in ticks
+    /// (0 until the first queued job starts).
+    pub queue_delay_ewma: f64,
 }
 
 /// Host-level capacity: a slot budget, the set of running jobs, and a
@@ -77,6 +103,9 @@ pub struct HostCapacity {
     queue: VecDeque<QueuedJob>,
     /// Running jobs in start order (newest last) with their slot demands.
     running: Vec<(JobId, u32)>,
+    /// EWMA of observed queue delays in ticks (see [`AdmissionProbe`]).
+    delay_ewma: f64,
+    delay_samples: u64,
 }
 
 impl HostCapacity {
@@ -89,6 +118,8 @@ impl HostCapacity {
             policy,
             queue: VecDeque::new(),
             running: Vec::new(),
+            delay_ewma: 0.0,
+            delay_samples: 0,
         }
     }
 
@@ -106,19 +137,32 @@ impl HostCapacity {
         self.used
     }
 
+    /// Slots free right now. Saturating: a budget that shrank below
+    /// current usage (heterogeneous re-targeting, pressure budgets)
+    /// reports 0 free, not a wrapped-around near-2³² figure.
     pub fn free(&self) -> u32 {
-        self.slots - self.used
+        self.slots.saturating_sub(self.used)
     }
 
     /// Can `demand` slots start immediately against the full budget?
     pub fn can_start(&self, demand: u32) -> bool {
-        demand <= self.slots - self.used
+        demand <= self.slots.saturating_sub(self.used)
     }
 
     /// Can `demand` slots start against an externally shrunk budget
     /// (pressure preemption uses a tighter budget while contended)?
+    /// Saturating for the same reason as [`HostCapacity::free`].
     pub fn fits_budget(&self, demand: u32, budget: u32) -> bool {
-        self.used <= budget && demand <= budget - self.used
+        demand <= budget.saturating_sub(self.used)
+    }
+
+    /// Re-target the slot budget. The new budget may be *below* current
+    /// usage: running jobs keep their slots and finish normally, while
+    /// `free()`/`can_start()` saturate at zero until usage drains back
+    /// under the new budget.
+    pub fn set_slots(&mut self, slots: u32) {
+        assert!(slots >= 1);
+        self.slots = slots;
     }
 
     /// Consume slots for a starting job.
@@ -149,22 +193,41 @@ impl HostCapacity {
         self.queue.len() < self.queue_cap
     }
 
-    /// Park a job; `false` when the bounded queue is full.
-    pub fn try_enqueue(&mut self, job_id: JobId, demand: u32, now: u64) -> bool {
+    /// Park a job; `false` when the bounded queue is full. The queue is
+    /// kept ordered by (priority desc, arrival order): the insertion
+    /// point is found from the back, which is O(1) on single-class
+    /// fleets and keeps within-class order stable by construction.
+    pub fn try_enqueue(
+        &mut self,
+        job_id: JobId,
+        demand: u32,
+        priority: Priority,
+        now: u64,
+    ) -> bool {
         if !self.queue_has_room() {
             return false;
         }
-        self.queue.push_back(QueuedJob { job_id, demand, enqueued_at: now });
+        let mut i = self.queue.len();
+        while i > 0 && self.queue[i - 1].priority < priority {
+            i -= 1;
+        }
+        self.queue.insert(i, QueuedJob { job_id, demand, priority, enqueued_at: now });
         true
     }
 
     /// Remove and return the next waiting job that fits within `budget`
-    /// slots, per the queue policy. FIFO only ever offers the head;
-    /// smallest-first scans for the least demanding fit (earliest wins
-    /// ties), which keeps draining deterministic.
+    /// slots. Priorities are strict: only the highest priority class with
+    /// a waiting job is considered. Within that class the queue policy
+    /// applies — FIFO offers the class's earliest job (an oversized one
+    /// blocks the class), smallest-first scans for the least demanding fit
+    /// (earliest wins ties). Single-class queues behave exactly as the
+    /// pre-priority implementation did, including the O(1) FIFO head pop
+    /// (the queue is priority-ordered at enqueue).
     pub fn pop_startable(&mut self, budget: u32) -> Option<QueuedJob> {
         match self.policy {
             QueuePolicy::Fifo => {
+                // The front is the earliest job of the highest waiting
+                // class, by the enqueue ordering invariant.
                 let head = *self.queue.front()?;
                 if self.fits_budget(head.demand, budget) {
                     self.queue.pop_front()
@@ -173,16 +236,52 @@ impl HostCapacity {
                 }
             }
             QueuePolicy::SmallestFirst => {
-                let mut best: Option<(usize, u32)> = None;
+                let mut best: Option<(usize, Priority, u32)> = None;
                 for (i, qj) in self.queue.iter().enumerate() {
-                    if self.fits_budget(qj.demand, budget)
-                        && best.map(|(_, d)| qj.demand < d).unwrap_or(true)
-                    {
-                        best = Some((i, qj.demand));
+                    // Priority-ordered queue: once a fit exists, nothing
+                    // in a lower class can beat it — stop scanning there.
+                    if let Some((_, bp, bd)) = best {
+                        if qj.priority < bp {
+                            break;
+                        }
+                        if qj.demand < bd && self.fits_budget(qj.demand, budget) {
+                            best = Some((i, qj.priority, qj.demand));
+                        }
+                    } else if self.fits_budget(qj.demand, budget) {
+                        best = Some((i, qj.priority, qj.demand));
                     }
                 }
-                best.and_then(|(i, _)| self.queue.remove(i))
+                best.and_then(|(i, _, _)| self.queue.remove(i))
             }
+        }
+    }
+
+    /// Fold an observed queue delay (ticks between enqueue and start)
+    /// into the host's EWMA. The first sample seeds the average.
+    pub fn note_queue_delay(&mut self, delay_ticks: u64) {
+        self.delay_ewma = if self.delay_samples == 0 {
+            delay_ticks as f64
+        } else {
+            QUEUE_DELAY_EWMA_ALPHA * delay_ticks as f64
+                + (1.0 - QUEUE_DELAY_EWMA_ALPHA) * self.delay_ewma
+        };
+        self.delay_samples += 1;
+    }
+
+    /// Current queue-delay EWMA in ticks (0 before any sample).
+    pub fn queue_delay_ewma(&self) -> f64 {
+        self.delay_ewma
+    }
+
+    /// Answer an admission offer with the structured congestion view
+    /// (`signal_raised` is the admission policy's verdict — this type
+    /// only knows the mechanical side).
+    pub fn probe(&self, signal_raised: bool) -> AdmissionProbe {
+        AdmissionProbe {
+            signal_raised,
+            free_slots: self.free(),
+            queue_depth: self.queue.len(),
+            queue_delay_ewma: self.delay_ewma,
         }
     }
 
@@ -391,9 +490,9 @@ mod tests {
         assert_eq!(h.used(), 3);
         assert_eq!(h.free(), 1);
         assert!(!h.can_start(2));
-        assert!(h.try_enqueue(2, 2, 10));
-        assert!(h.try_enqueue(3, 1, 11));
-        assert!(!h.try_enqueue(4, 1, 12), "queue bound ignored");
+        assert!(h.try_enqueue(2, 2, 0, 10));
+        assert!(h.try_enqueue(3, 1, 0, 11));
+        assert!(!h.try_enqueue(4, 1, 0, 12), "queue bound ignored");
         // FIFO head needs 2 slots; only 1 free → head-of-line blocks.
         assert!(h.pop_startable(h.slots()).is_none());
         assert_eq!(h.finish(1), Some(3));
@@ -407,9 +506,9 @@ mod tests {
     fn host_capacity_smallest_first_skips_blocked_head() {
         let mut h = HostCapacity::new(4, 4, QueuePolicy::SmallestFirst);
         h.start(1, 3);
-        assert!(h.try_enqueue(2, 3, 0));
-        assert!(h.try_enqueue(3, 1, 1));
-        assert!(h.try_enqueue(4, 1, 2));
+        assert!(h.try_enqueue(2, 3, 0, 0));
+        assert!(h.try_enqueue(3, 1, 0, 1));
+        assert!(h.try_enqueue(4, 1, 0, 2));
         // 1 slot free: the 3-slot head is skipped, earliest 1-slot job wins.
         let qj = h.pop_startable(h.slots()).unwrap();
         assert_eq!(qj.job_id, 3);
@@ -422,7 +521,7 @@ mod tests {
         let mut h = HostCapacity::new(4, 2, QueuePolicy::Fifo);
         h.start(7, 2);
         h.start(8, 1);
-        assert!(h.try_enqueue(9, 1, 5));
+        assert!(h.try_enqueue(9, 1, 0, 5));
         let (running, queued) = h.evacuate();
         assert_eq!(running, vec![(7, 2), (8, 1)]);
         assert_eq!(queued.len(), 1);
@@ -430,6 +529,86 @@ mod tests {
         assert_eq!(h.used(), 0);
         assert_eq!(h.queue_len(), 0);
         assert!(h.running().is_empty());
+    }
+
+    #[test]
+    fn shrunk_budget_saturates_instead_of_underflowing() {
+        // Regression: free()/can_start() computed `slots - used`, which
+        // underflowed in debug builds once a budget dropped below current
+        // usage (heterogeneous re-targeting / pressure budgets).
+        let mut h = HostCapacity::new(4, 2, QueuePolicy::Fifo);
+        h.start(1, 4);
+        h.set_slots(2); // budget now below usage
+        assert_eq!(h.free(), 0);
+        assert!(!h.can_start(1));
+        assert!(!h.fits_budget(1, 2));
+        // Draining below the new budget restores capacity.
+        assert_eq!(h.finish(1), Some(4));
+        assert_eq!(h.free(), 2);
+        assert!(h.can_start(2));
+        assert!(!h.can_start(3));
+    }
+
+    #[test]
+    fn fifo_queue_is_priority_strict_within_class_fifo() {
+        let mut h = HostCapacity::new(2, 8, QueuePolicy::Fifo);
+        h.start(0, 2); // fill the host so everything parks
+        assert!(h.try_enqueue(1, 1, 0, 10));
+        assert!(h.try_enqueue(2, 1, 2, 11));
+        assert!(h.try_enqueue(3, 1, 2, 12));
+        assert!(h.try_enqueue(4, 1, 1, 13));
+        h.finish(0);
+        // Highest class first, FIFO within the class, lowest class last.
+        let order: Vec<JobId> = std::iter::from_fn(|| h.pop_startable(h.slots()))
+            .map(|qj| qj.job_id)
+            .collect();
+        assert_eq!(order, vec![2, 3, 4, 1]);
+    }
+
+    #[test]
+    fn fifo_priority_head_blocks_only_its_class_pop() {
+        // The highest class's earliest job is the only candidate; if it
+        // does not fit, the pop blocks (no silent skip to lower classes).
+        let mut h = HostCapacity::new(4, 8, QueuePolicy::Fifo);
+        h.start(0, 3);
+        assert!(h.try_enqueue(1, 2, 1, 0)); // high class, needs 2 (blocked)
+        assert!(h.try_enqueue(2, 1, 0, 1)); // low class, would fit
+        assert!(h.pop_startable(h.slots()).is_none());
+    }
+
+    #[test]
+    fn smallest_first_orders_by_priority_then_demand() {
+        let mut h = HostCapacity::new(4, 8, QueuePolicy::SmallestFirst);
+        h.start(0, 4);
+        assert!(h.try_enqueue(1, 3, 0, 0));
+        assert!(h.try_enqueue(2, 1, 0, 1));
+        assert!(h.try_enqueue(3, 2, 1, 2));
+        assert!(h.try_enqueue(4, 1, 1, 3));
+        h.finish(0);
+        let order: Vec<JobId> = std::iter::from_fn(|| h.pop_startable(h.slots()))
+            .map(|qj| qj.job_id)
+            .collect();
+        // Class 1 by demand (4 then 3), then class 0 by demand (2 then 1).
+        assert_eq!(order, vec![4, 3, 2, 1]);
+    }
+
+    #[test]
+    fn probe_reports_congestion_and_delay_ewma() {
+        let mut h = HostCapacity::new(4, 4, QueuePolicy::Fifo);
+        let p = h.probe(false);
+        assert_eq!((p.signal_raised, p.free_slots, p.queue_depth), (false, 4, 0));
+        assert_eq!(p.queue_delay_ewma, 0.0);
+        h.start(1, 3);
+        assert!(h.try_enqueue(2, 2, 0, 5));
+        let p = h.probe(true);
+        assert!(p.signal_raised);
+        assert_eq!(p.free_slots, 1);
+        assert_eq!(p.queue_depth, 1);
+        // First delay sample seeds the EWMA; later samples smooth it.
+        h.note_queue_delay(100);
+        assert_eq!(h.queue_delay_ewma(), 100.0);
+        h.note_queue_delay(0);
+        assert!(h.queue_delay_ewma() < 100.0 && h.queue_delay_ewma() > 0.0);
     }
 
     #[test]

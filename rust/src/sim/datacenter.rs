@@ -16,7 +16,7 @@ use crate::scheduler::Admission;
 use crate::telemetry::VmTrace;
 
 pub use super::engine::SimReport;
-pub use super::scenario::DispatchPolicy;
+pub use super::scenario::{DispatchPolicy, ProbePolicy};
 
 /// Simulation parameters (the compact, scenario-free configuration).
 #[derive(Debug, Clone)]
@@ -26,8 +26,9 @@ pub struct SimConfig {
     /// Log-normal job duration parameters (in timesteps).
     pub duration_mu: f64,
     pub duration_sigma: f64,
-    /// Dispatcher policy.
-    pub dispatch: DispatchPolicy,
+    /// Candidate selection for arriving jobs (the facade always scores
+    /// signal-only, the paper's dispatch).
+    pub probe: ProbePolicy,
     /// CPU Ready level marking degraded service for scoring.
     pub ready_threshold: f64,
     /// Horizon after acceptance scored for degradation (timesteps).
@@ -42,7 +43,7 @@ impl Default for SimConfig {
             arrival_rate_per_step: 0.3,
             duration_mu: 3.0,   // e^3 ≈ 20 steps ≈ 7 min
             duration_sigma: 0.8,
-            dispatch: DispatchPolicy::PowerOfK(2),
+            probe: ProbePolicy::PowerOfK(2),
             ready_threshold: 1000.0,
             score_window: 5,
             seed: 7,
@@ -64,7 +65,8 @@ impl SimConfig {
             arrivals: super::scenario::ArrivalPattern::Poisson {
                 rate: self.arrival_rate_per_step,
             },
-            dispatch: self.dispatch,
+            probe: self.probe,
+            dispatch: DispatchPolicy::SignalOnly,
             duration_mu: self.duration_mu,
             duration_sigma: self.duration_sigma,
             ready_threshold: self.ready_threshold,
@@ -164,7 +166,7 @@ mod tests {
             .iter()
             .map(|_| Box::new(RandomPolicy::always_accept(2)) as Box<dyn Admission>)
             .collect();
-        let cfg = SimConfig { dispatch: DispatchPolicy::RoundRobin, ..Default::default() };
+        let cfg = SimConfig { probe: ProbePolicy::RoundRobin, ..Default::default() };
         let report = DataCenterSim::new(cfg, tr, pol).run();
         let mut nodes_used = [false; 3];
         for o in &report.outcomes {
@@ -181,13 +183,13 @@ mod tests {
         let tr = traces(8, steps, 11);
         let mk = |tr: &[VmTrace]| pronto_policies(tr);
         let single = DataCenterSim::new(
-            SimConfig { dispatch: DispatchPolicy::RandomProbe, ..Default::default() },
+            SimConfig { probe: ProbePolicy::RandomProbe, ..Default::default() },
             tr.clone(),
             mk(&tr),
         )
         .run();
         let pok = DataCenterSim::new(
-            SimConfig { dispatch: DispatchPolicy::PowerOfK(3), ..Default::default() },
+            SimConfig { probe: ProbePolicy::PowerOfK(3), ..Default::default() },
             tr.clone(),
             mk(&tr),
         )
@@ -206,7 +208,7 @@ mod tests {
             arrival_rate_per_step: 0.7,
             duration_mu: 2.5,
             duration_sigma: 0.4,
-            dispatch: DispatchPolicy::RoundRobin,
+            probe: ProbePolicy::RoundRobin,
             ready_threshold: 800.0,
             score_window: 9,
             seed: 123,
@@ -219,7 +221,8 @@ mod tests {
             s.arrivals,
             crate::sim::ArrivalPattern::Poisson { rate } if rate == 0.7
         ));
-        assert_eq!(s.dispatch, DispatchPolicy::RoundRobin);
+        assert_eq!(s.probe, ProbePolicy::RoundRobin);
+        assert_eq!(s.dispatch, DispatchPolicy::SignalOnly, "facade stays signal-only");
         assert_eq!(s.duration_mu, 2.5);
         assert_eq!(s.duration_sigma, 0.4);
         assert_eq!(s.ready_threshold, 800.0);

@@ -9,13 +9,27 @@
 //! * events order by `(time, seq)` — no hash maps, no wall clock;
 //! * every stochastic component draws from its **own** RNG stream derived
 //!   from the scenario seed (arrivals, durations, dispatch, churn,
-//!   latency, slot demands, migration probes), so enabling churn does not
-//!   shift the arrival sequence and enabling capacity does not shift the
-//!   churn sequence;
+//!   latency, slot demands, migration probes, job priorities, host-class
+//!   assignment), so enabling churn does not shift the arrival sequence
+//!   and enabling capacity, priorities, or heterogeneity does not shift
+//!   anything else;
 //! * the same `(Scenario, traces, policies)` triple therefore produces a
 //!   bit-identical [`SimReport`] — `SimReport::to_json_string` output is
 //!   byte-comparable across runs, which the determinism regression tests
 //!   rely on.
+//!
+//! # Dispatch
+//!
+//! Candidate selection ([`ProbePolicy`]: random / power-of-k /
+//! round-robin) is separate from candidate scoring
+//! ([`DispatchPolicy`]): each probed host answers with a structured
+//! [`AdmissionProbe`] — rejection signal, free slots, queue depth,
+//! queue-delay EWMA — and the dispatcher either takes the first
+//! signal-clear candidate (`signal-only`, the paper's rule and the
+//! byte-identical legacy behaviour) or the least congested / least
+//! loaded one. Migration peer selection scores the same way. Scoring is
+//! a pure function of deterministic state, so switching policies never
+//! shifts any RNG stream.
 //!
 //! # Capacity, preemption, migration
 //!
@@ -40,17 +54,58 @@
 use super::events::{
     latency_to_ticks, step_to_ticks, ticks_to_step, Event, EventQueue, SimTime, TICKS_PER_STEP,
 };
-use super::scenario::{ArrivalPattern, CapacityModel, DispatchPolicy, Scenario};
+use super::scenario::{ArrivalPattern, CapacityModel, DispatchPolicy, ProbePolicy, Scenario};
 use crate::federation::{FederationTree, TreeTopology};
 use crate::fpca::Subspace;
 use crate::rng::{SplitMix64, Xoshiro256};
-use crate::scheduler::{Admission, HostCapacity, JobId, JobOutcome, ServiceTimeModel};
+use crate::scheduler::{
+    Admission, AdmissionProbe, HostCapacity, JobId, JobOutcome, Priority, ServiceTimeModel,
+};
 use crate::ser::JsonValue;
 use crate::telemetry::VmTrace;
 use std::collections::BTreeMap;
+use std::fmt;
 
 /// Peers probed when re-placing a displaced job.
 const MIGRATION_PROBES: usize = 3;
+
+/// Why a [`DiscreteEventEngine`] could not be constructed. Surfaced as a
+/// typed error (instead of the historical index panic) so the CLI can
+/// report a malformed fleet — e.g. an empty `--replay` directory or a
+/// zero-column trace CSV — as a normal error message.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineError {
+    /// No traces at all: the engine needs at least one node.
+    EmptyFleet,
+    /// A node's trace has zero timesteps.
+    EmptyTrace { node: usize },
+    /// A node's trace has zero metric columns.
+    ZeroDim { node: usize },
+    /// The traces and policies differ in length.
+    PolicyCountMismatch { traces: usize, policies: usize },
+}
+
+impl fmt::Display for EngineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EngineError::EmptyFleet => {
+                write!(f, "simulation fleet is empty (no traces; nothing to drive)")
+            }
+            EngineError::EmptyTrace { node } => {
+                write!(f, "trace for node {node} has zero timesteps")
+            }
+            EngineError::ZeroDim { node } => {
+                write!(f, "trace for node {node} has zero metric columns")
+            }
+            EngineError::PolicyCountMismatch { traces, policies } => write!(
+                f,
+                "one admission policy per node required ({traces} traces, {policies} policies)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
 
 /// Aggregate result of a simulation run.
 #[derive(Debug, Clone, Default)]
@@ -105,10 +160,23 @@ pub struct SimReport {
     /// Mean wait between entering a queue and starting service, in steps,
     /// over jobs that did start (0 when nothing queued).
     pub mean_queue_delay_steps: f64,
+    /// Mean queue delay per priority class, in steps, indexed by priority
+    /// (0 = lowest). Empty on single-class fleets (`priority_levels` 1),
+    /// which keeps legacy reports byte-identical.
+    pub mean_queue_delay_by_priority: Vec<f64>,
+    /// Jobs that arrived carrying a completion deadline (0 when the
+    /// scenario sets no SLO).
+    pub slo_total: usize,
+    /// Deadline-carrying jobs that completed on time. Everything else —
+    /// rejected, dropped, lost, late, or still in flight at the horizon —
+    /// counts against attainment.
+    pub slo_attained: usize,
     /// Deepest wait queue observed on any node.
     pub peak_queue_len: usize,
-    /// Time-averaged slot utilization over alive nodes (0 when the
-    /// scenario has no capacity model).
+    /// Time-averaged slot utilization over alive nodes — slot-ticks used
+    /// divided by slot-ticks available, integrated event-by-event so
+    /// mid-step churn and placements are accounted exactly (0 when the
+    /// scenario has no capacity model). Never exceeds 1.
     pub mean_utilization: f64,
     /// Peak number of concurrently running jobs across the cluster.
     pub peak_inflight: usize,
@@ -138,6 +206,15 @@ impl SimReport {
             return 1.0;
         }
         self.justified_rejections as f64 / self.jobs_rejected as f64
+    }
+
+    /// Fraction of deadline-carrying jobs that completed on time (1.0
+    /// when the scenario sets no SLO).
+    pub fn slo_attainment(&self) -> f64 {
+        if self.slo_total == 0 {
+            return 1.0;
+        }
+        self.slo_attained as f64 / self.slo_total as f64
     }
 
     /// Order-sensitive FNV/SplitMix fold over the outcome sequence: two
@@ -205,6 +282,19 @@ impl SimReport {
             "mean_queue_delay_steps".into(),
             JsonValue::Number(self.mean_queue_delay_steps),
         );
+        // Priority/SLO keys appear only when the feature is active, so a
+        // scenario that predates them renders byte-identical JSON.
+        for (p, d) in self.mean_queue_delay_by_priority.iter().enumerate() {
+            m.insert(format!("queue_delay_p{p}"), JsonValue::Number(*d));
+        }
+        if self.slo_total > 0 {
+            m.insert("slo_total".into(), num(self.slo_total));
+            m.insert("slo_attained".into(), num(self.slo_attained));
+            m.insert(
+                "slo_attainment".into(),
+                JsonValue::Number(self.slo_attainment()),
+            );
+        }
         m.insert("peak_queue_len".into(), num(self.peak_queue_len));
         m.insert(
             "mean_utilization".into(),
@@ -297,19 +387,149 @@ enum JobState {
 /// generation (`gen`), which is bumped on every displacement so stale
 /// lifecycle events become no-ops. `demand`/`duration_steps` are the
 /// compact hot-loop mirror of [`crate::scheduler::Job`]'s `slots` and
-/// `duration` — keep their semantics in sync.
+/// `duration` — keep their semantics in sync. `demand` is the drawn
+/// demand; the slots actually held on a host are clamped to that host's
+/// budget at hand-off (the host records the clamped figure).
 #[derive(Debug, Clone, Copy)]
 struct JobRec {
     demand: u32,
     duration_steps: usize,
     gen: u32,
     migrations_left: u32,
+    priority: Priority,
     state: JobState,
     /// Tick the job last entered a wait queue (for the delay metric).
     enqueued_at: Option<SimTime>,
+    /// Completion deadline (SLO), set at arrival when the scenario
+    /// configures one.
+    deadline: Option<SimTime>,
+}
+
+/// Event-driven slot-utilization integral: slot-ticks in use and
+/// slot-ticks available, advanced at every event that changes either.
+/// Replaces the tick-sampled accounting, whose denominator only saw the
+/// fleet at telemetry boundaries and so over/under-counted capacity
+/// around mid-step churn. Inactive (all no-ops) without a capacity model.
+struct UtilMeter {
+    active: bool,
+    used: u64,
+    cap: u64,
+    used_ticks: u128,
+    cap_ticks: u128,
+    last: SimTime,
+}
+
+impl UtilMeter {
+    fn new(active: bool, initial_cap: u64) -> Self {
+        Self { active, used: 0, cap: initial_cap, used_ticks: 0, cap_ticks: 0, last: 0 }
+    }
+
+    /// Integrate up to `now` (events pop in non-decreasing time order).
+    fn advance(&mut self, now: SimTime) {
+        if !self.active {
+            return;
+        }
+        let dt = (now - self.last) as u128;
+        self.used_ticks += self.used as u128 * dt;
+        self.cap_ticks += self.cap as u128 * dt;
+        self.last = now;
+    }
+
+    fn job_started(&mut self, now: SimTime, demand: u32) {
+        if self.active {
+            self.advance(now);
+            self.used += demand as u64;
+        }
+    }
+
+    fn job_finished(&mut self, now: SimTime, demand: u32) {
+        if self.active {
+            self.advance(now);
+            self.used -= demand as u64;
+        }
+    }
+
+    fn node_left(&mut self, now: SimTime, slots: u32) {
+        if self.active {
+            self.advance(now);
+            self.cap -= slots as u64;
+        }
+    }
+
+    fn node_joined(&mut self, now: SimTime, slots: u32) {
+        if self.active {
+            self.advance(now);
+            self.cap += slots as u64;
+        }
+    }
+
+    /// Time-averaged utilization over the integrated interval. Usage
+    /// never exceeds the budgets it runs under, so this is ≤ 1.
+    fn mean(&self) -> f64 {
+        if self.cap_ticks == 0 {
+            0.0
+        } else {
+            self.used_ticks as f64 / self.cap_ticks as f64
+        }
+    }
+}
+
+/// Does probe `a` strictly beat the incumbent `b` under `policy`? Ties
+/// keep the incumbent (the earlier-probed candidate), which is what makes
+/// scored dispatch deterministic. `SignalOnly` never prefers a later
+/// candidate — the signal-clear filter upstream already decided.
+fn probe_beats(policy: DispatchPolicy, a: &AdmissionProbe, b: &AdmissionProbe) -> bool {
+    match policy {
+        DispatchPolicy::SignalOnly => false,
+        DispatchPolicy::QueueAware => {
+            if a.queue_depth != b.queue_depth {
+                return a.queue_depth < b.queue_depth;
+            }
+            if a.queue_delay_ewma != b.queue_delay_ewma {
+                return a.queue_delay_ewma < b.queue_delay_ewma;
+            }
+            a.free_slots > b.free_slots
+        }
+        DispatchPolicy::LeastLoaded => {
+            if a.free_slots != b.free_slots {
+                return a.free_slots > b.free_slots;
+            }
+            a.queue_depth < b.queue_depth
+        }
+    }
+}
+
+/// Pick the winning candidate: each probed host answers with its full
+/// [`AdmissionProbe`] (the admission policy's signal included); raised
+/// signals and `eligible` failures are filtered out, the rest scored by
+/// [`probe_beats`]. Under `SignalOnly` this reduces exactly to "first
+/// eligible signal-clear candidate" — the pre-probe dispatch.
+fn pick_candidate(
+    candidates: &[usize],
+    policy: DispatchPolicy,
+    can_accept: &[bool],
+    hosts: &[HostCapacity],
+    mut eligible: impl FnMut(usize) -> bool,
+) -> Option<usize> {
+    let mut best: Option<(usize, AdmissionProbe)> = None;
+    for &c in candidates {
+        let p = hosts[c].probe(!can_accept[c]);
+        if p.signal_raised || !eligible(c) {
+            continue;
+        }
+        let better = match &best {
+            None => true,
+            Some((_, b)) => probe_beats(policy, &p, b),
+        };
+        if better {
+            best = Some((c, p));
+        }
+    }
+    best.map(|(c, _)| c)
 }
 
 /// Start every waiting job on `node` that fits within `budget` slots.
+#[allow(clippy::too_many_arguments)]
 fn drain_queue(
     node: usize,
     budget: u32,
@@ -318,12 +538,14 @@ fn drain_queue(
     queue: &mut EventQueue,
     now: SimTime,
     total_inflight: &mut usize,
+    util: &mut UtilMeter,
     report: &mut SimReport,
 ) {
     while let Some(qj) = hosts[node].pop_startable(budget) {
         let rec = &mut jobs[qj.job_id as usize];
         debug_assert_eq!(rec.state, JobState::Queued { node });
         hosts[node].start(qj.job_id, qj.demand);
+        util.job_started(now, qj.demand);
         rec.state = JobState::Running { node };
         *total_inflight += 1;
         report.peak_inflight = report.peak_inflight.max(*total_inflight);
@@ -341,15 +563,46 @@ pub struct DiscreteEventEngine {
 
 impl DiscreteEventEngine {
     /// One trace + one policy per node (same order). The scenario's
-    /// `nodes` is overridden by the fleet size.
+    /// `nodes` is overridden by the fleet size. Panics on a malformed
+    /// fleet; use [`DiscreteEventEngine::try_new`] to get a typed error
+    /// instead (the CLI does).
     pub fn new(
         scenario: Scenario,
         traces: Vec<VmTrace>,
         policies: Vec<Box<dyn Admission>>,
     ) -> Self {
-        assert_eq!(traces.len(), policies.len(), "one policy per node");
-        assert!(!traces.is_empty());
-        Self { scenario, traces, policies, factory: None }
+        Self::try_new(scenario, traces, policies)
+            .unwrap_or_else(|e| panic!("invalid engine inputs: {e}"))
+    }
+
+    /// Fallible constructor: validates that the fleet is non-empty, every
+    /// trace has at least one timestep and one metric column, and the
+    /// policy list matches. A zero-length or zero-dim trace set — easy to
+    /// hit via an empty or header-only `--replay` directory — previously
+    /// panicked on `traces[0]` inside `run`.
+    pub fn try_new(
+        scenario: Scenario,
+        traces: Vec<VmTrace>,
+        policies: Vec<Box<dyn Admission>>,
+    ) -> Result<Self, EngineError> {
+        if traces.is_empty() {
+            return Err(EngineError::EmptyFleet);
+        }
+        if traces.len() != policies.len() {
+            return Err(EngineError::PolicyCountMismatch {
+                traces: traces.len(),
+                policies: policies.len(),
+            });
+        }
+        for (node, t) in traces.iter().enumerate() {
+            if t.is_empty() {
+                return Err(EngineError::EmptyTrace { node });
+            }
+            if t.dim() == 0 {
+                return Err(EngineError::ZeroDim { node });
+            }
+        }
+        Ok(Self { scenario, traces, policies, factory: None })
     }
 
     /// Install a policy factory: nodes that rejoin after churn restart
@@ -380,6 +633,8 @@ impl DiscreteEventEngine {
         let mut latency_rng = stream(5);
         let mut demand_rng = stream(6);
         let mut migrate_rng = stream(7);
+        let mut priority_rng = stream(8);
+        let mut hetero_rng = stream(9);
 
         let fed = &scenario.federation;
         let mut tree = if fed.enabled {
@@ -394,19 +649,32 @@ impl DiscreteEventEngine {
         };
         let mut pool = SnapshotPool::default();
 
-        let cap: Option<CapacityModel> = scenario.capacity;
-        let initial_migrations = cap.map_or(0, |c| c.migration_limit);
+        let cap: Option<CapacityModel> = scenario.capacity.clone();
+        let initial_migrations = cap.as_ref().map_or(0, |c| c.migration_limit);
+        let priority_levels = cap.as_ref().map_or(1, |c| c.priority_levels);
         let service = ServiceTimeModel::log_normal(scenario.duration_mu, scenario.duration_sigma);
 
-        // Dense per-node state.
+        // Dense per-node state. Heterogeneous fleets draw each node's slot
+        // budget from the class distribution (dedicated stream, so turning
+        // hetero on shifts nothing else).
         let mut alive = vec![true; n];
         let mut can_accept = vec![true; n];
         let mut hosts: Vec<HostCapacity> = (0..n)
             .map(|_| match &cap {
-                Some(c) => HostCapacity::new(c.slots_per_node, c.queue_capacity, c.queue_policy),
+                Some(c) => HostCapacity::new(
+                    c.draw_slots(&mut hetero_rng),
+                    c.queue_capacity,
+                    c.queue_policy,
+                ),
                 None => HostCapacity::unbounded(),
             })
             .collect();
+        let initial_cap: u64 = if cap.is_some() {
+            hosts.iter().map(|h| h.slots() as u64).sum()
+        } else {
+            0
+        };
+        let mut util = UtilMeter::new(cap.is_some(), initial_cap);
         let mut alive_ids: Vec<usize> = (0..n).collect();
         let mut rr_cursor = 0usize;
         let mut burst_on = false;
@@ -430,8 +698,8 @@ impl DiscreteEventEngine {
         let mut lat_count = 0u64;
         let mut qdelay_ticks_sum = 0u64;
         let mut qdelay_count = 0u64;
-        let mut util_used = 0u64;
-        let mut util_cap = 0u64;
+        let mut qdelay_p_sum = vec![0u64; priority_levels as usize];
+        let mut qdelay_p_count = vec![0u64; priority_levels as usize];
 
         // Ground truth for scoring: does `node`'s CPU Ready spike within
         // the score window starting at `step`?
@@ -466,24 +734,19 @@ impl DiscreteEventEngine {
                         }
                     }
 
-                    // 1b. Capacity accounting + progress: accumulate slot
-                    //     utilization, and let idle slots pick up queued
+                    // 1b. Capacity progress: let idle slots pick up queued
                     //     work (completions drain too, but a queue built
                     //     while the node was contended must not wait for
                     //     the next completion once the signal clears).
+                    //     Utilization needs no sampling here — the meter
+                    //     integrates event-by-event.
                     if let Some(c) = &cap {
-                        let mut used_sum = 0u64;
-                        for &i in &alive_ids {
-                            used_sum += hosts[i].used() as u64;
-                        }
-                        util_used += used_sum;
-                        util_cap += alive_ids.len() as u64 * c.slots_per_node as u64;
                         for i in 0..n {
                             if alive[i] && hosts[i].queue_len() > 0 {
                                 let budget = if can_accept[i] {
-                                    c.slots_per_node
+                                    hosts[i].slots()
                                 } else {
-                                    c.contended_slots
+                                    c.contended_budget(hosts[i].slots())
                                 };
                                 drain_queue(
                                     i,
@@ -493,6 +756,7 @@ impl DiscreteEventEngine {
                                     &mut queue,
                                     ev.time,
                                     &mut total_inflight,
+                                    &mut util,
                                     &mut report,
                                 );
                             }
@@ -516,32 +780,41 @@ impl DiscreteEventEngine {
                     }
 
                     // 2b. Pressure preemption: a node whose rejection
-                    //     signal is raised sheds its newest running jobs
-                    //     down to the contended budget. Scheduled after
+                    //     signal is raised sheds running jobs down to the
+                    //     contended budget — lowest priority class first,
+                    //     newest first within a class. Scheduled after
                     //     the churn leaves so a departing node's own
                     //     evacuation wins (stale preempts no-op on the
                     //     generation check).
                     if let Some(c) = &cap {
-                        if c.contended_slots < c.slots_per_node {
+                        if c.pressure_enabled() {
                             for i in 0..n {
+                                let contended = c.contended_budget(hosts[i].slots());
                                 if alive[i]
                                     && !can_accept[i]
-                                    && hosts[i].used() > c.contended_slots
+                                    && hosts[i].used() > contended
                                 {
-                                    let mut over = hosts[i].used() - c.contended_slots;
-                                    for &(job_id, demand) in hosts[i].running().iter().rev() {
-                                        if over == 0 {
-                                            break;
+                                    let mut over = hosts[i].used() - contended;
+                                    'shed: for p in 0..priority_levels {
+                                        for &(job_id, demand) in
+                                            hosts[i].running().iter().rev()
+                                        {
+                                            if jobs[job_id as usize].priority != p {
+                                                continue;
+                                            }
+                                            if over == 0 {
+                                                break 'shed;
+                                            }
+                                            queue.schedule(
+                                                ev.time + 1,
+                                                Event::JobPreempt {
+                                                    node: i,
+                                                    job_id,
+                                                    gen: jobs[job_id as usize].gen,
+                                                },
+                                            );
+                                            over = over.saturating_sub(demand);
                                         }
-                                        queue.schedule(
-                                            ev.time + 1,
-                                            Event::JobPreempt {
-                                                node: i,
-                                                job_id,
-                                                gen: jobs[job_id as usize].gen,
-                                            },
-                                        );
-                                        over = over.saturating_sub(demand);
                                     }
                                 }
                             }
@@ -576,14 +849,24 @@ impl DiscreteEventEngine {
                             Some(c) => 1 + demand_rng.gen_range(c.max_job_slots as usize) as u32,
                             None => 1,
                         };
+                        // Priority draws use their own stream, and only
+                        // when classes exist — single-class fleets stay
+                        // byte-identical to the pre-priority engine.
+                        let priority: Priority = if priority_levels > 1 {
+                            priority_rng.gen_range(priority_levels as usize) as Priority
+                        } else {
+                            0
+                        };
                         let job_id = jobs.len() as JobId;
                         jobs.push(JobRec {
                             demand,
                             duration_steps,
                             gen: 0,
                             migrations_left: initial_migrations,
+                            priority,
                             state: JobState::Dispatching,
                             enqueued_at: None,
+                            deadline: None,
                         });
                         let off = (2 + j as u64).min(TICKS_PER_STEP - 1);
                         queue.schedule(ev.time + off, Event::JobArrival { job_id });
@@ -619,6 +902,13 @@ impl DiscreteEventEngine {
                 Event::JobArrival { job_id } => {
                     let step = ticks_to_step(ev.time);
                     report.jobs_arrived += 1;
+                    // SLO clock starts at arrival, whatever happens next:
+                    // rejected/dropped/lost jobs count against attainment.
+                    if let Some(slo) = cap.as_ref().and_then(|c| c.slo_steps) {
+                        jobs[job_id as usize].deadline =
+                            Some(ev.time + slo as u64 * TICKS_PER_STEP);
+                        report.slo_total += 1;
+                    }
                     if alive_ids.is_empty() {
                         report.jobs_rejected += 1;
                         report.jobs_unplaceable += 1;
@@ -628,11 +918,11 @@ impl DiscreteEventEngine {
                     }
                     let m = alive_ids.len();
                     candidates.clear();
-                    match scenario.dispatch {
-                        DispatchPolicy::RandomProbe => {
+                    match scenario.probe {
+                        ProbePolicy::RandomProbe => {
                             candidates.push(alive_ids[dispatch_rng.gen_range(m)]);
                         }
-                        DispatchPolicy::PowerOfK(k) => {
+                        ProbePolicy::PowerOfK(k) => {
                             let want = k.max(1).min(m);
                             while candidates.len() < want {
                                 let c = alive_ids[dispatch_rng.gen_range(m)];
@@ -641,13 +931,23 @@ impl DiscreteEventEngine {
                                 }
                             }
                         }
-                        DispatchPolicy::RoundRobin => {
+                        ProbePolicy::RoundRobin => {
                             let c = alive_ids[rr_cursor % m];
                             rr_cursor = (rr_cursor + 1) % m;
                             candidates.push(c);
                         }
                     }
-                    let placed = candidates.iter().copied().find(|&c| can_accept[c]);
+                    // Score the probe answers: SignalOnly reduces to "first
+                    // signal-clear candidate" (byte-identical to the
+                    // pre-probe dispatch); the scored policies compare
+                    // congestion among signal-clear candidates.
+                    let placed = pick_candidate(
+                        &candidates,
+                        scenario.dispatch,
+                        &can_accept,
+                        &hosts,
+                        |_| true,
+                    );
                     match placed {
                         Some(node) => {
                             report.jobs_accepted += 1;
@@ -685,9 +985,16 @@ impl DiscreteEventEngine {
                         report.jobs_displaced += 1;
                         continue;
                     }
-                    let demand = rec.demand;
+                    // Clamp to the placed host's budget: on heterogeneous
+                    // fleets (or an unvalidated scenario with
+                    // max_job_slots > slots_per_node) an oversized draw
+                    // would otherwise park a job that can never start and,
+                    // under FIFO, wedge the whole queue behind it for the
+                    // rest of the run.
+                    let demand = rec.demand.min(hosts[node].slots());
                     if hosts[node].queue_len() == 0 && hosts[node].can_start(demand) {
                         hosts[node].start(job_id, demand);
+                        util.job_started(ev.time, demand);
                         rec.state = JobState::Running { node };
                         total_inflight += 1;
                         report.peak_inflight = report.peak_inflight.max(total_inflight);
@@ -695,7 +1002,7 @@ impl DiscreteEventEngine {
                             ev.time,
                             Event::JobStart { node, job_id, gen: rec.gen },
                         );
-                    } else if hosts[node].try_enqueue(job_id, demand, ev.time) {
+                    } else if hosts[node].try_enqueue(job_id, demand, rec.priority, ev.time) {
                         rec.state = JobState::Queued { node };
                         rec.enqueued_at = Some(ev.time);
                         report.jobs_queued += 1;
@@ -713,8 +1020,12 @@ impl DiscreteEventEngine {
                         continue;
                     }
                     if let Some(t0) = rec.enqueued_at.take() {
-                        qdelay_ticks_sum += ev.time - t0;
+                        let waited = ev.time - t0;
+                        qdelay_ticks_sum += waited;
                         qdelay_count += 1;
+                        qdelay_p_sum[rec.priority as usize] += waited;
+                        qdelay_p_count[rec.priority as usize] += 1;
+                        hosts[node].note_queue_delay(waited);
                     }
                     queue.schedule(
                         ev.time + rec.duration_steps as u64 * TICKS_PER_STEP,
@@ -727,15 +1038,21 @@ impl DiscreteEventEngine {
                     if rec.gen != gen || rec.state != (JobState::Running { node }) {
                         continue;
                     }
-                    hosts[node].finish(job_id);
+                    let freed = hosts[node].finish(job_id).unwrap_or(0);
+                    util.job_finished(ev.time, freed);
                     rec.state = JobState::Completed;
                     report.jobs_completed += 1;
+                    if let Some(deadline) = rec.deadline {
+                        if ev.time <= deadline {
+                            report.slo_attained += 1;
+                        }
+                    }
                     total_inflight -= 1;
                     if let Some(c) = &cap {
                         let budget = if can_accept[node] {
-                            c.slots_per_node
+                            hosts[node].slots()
                         } else {
-                            c.contended_slots
+                            c.contended_budget(hosts[node].slots())
                         };
                         drain_queue(
                             node,
@@ -745,6 +1062,7 @@ impl DiscreteEventEngine {
                             &mut queue,
                             ev.time,
                             &mut total_inflight,
+                            &mut util,
                             &mut report,
                         );
                     }
@@ -755,7 +1073,8 @@ impl DiscreteEventEngine {
                     if rec.gen != gen || rec.state != (JobState::Running { node }) {
                         continue; // completed or already displaced — stale
                     }
-                    hosts[node].finish(job_id);
+                    let freed = hosts[node].finish(job_id).unwrap_or(0);
+                    util.job_finished(ev.time, freed);
                     rec.gen = rec.gen.wrapping_add(1);
                     total_inflight -= 1;
                     report.jobs_preempted += 1;
@@ -778,9 +1097,12 @@ impl DiscreteEventEngine {
                         continue;
                     }
                     let demand = rec.demand;
-                    // Probe a few distinct alive peers (excluding the
-                    // node that shed the job); the first whose admission
-                    // signal is clear *and* that can hold the job wins.
+                    // Probe a few distinct alive peers (excluding the node
+                    // that shed the job). Peer selection mirrors arrival
+                    // dispatch: a peer is eligible when its admission
+                    // signal is clear *and* it can hold the job (clamped
+                    // to its own budget); SignalOnly takes the first such
+                    // peer, the scored policies compare congestion.
                     let avail = alive_ids.iter().filter(|&&c| c != from).count();
                     let target = if avail == 0 {
                         None
@@ -794,10 +1116,16 @@ impl DiscreteEventEngine {
                                 candidates.push(c);
                             }
                         }
-                        candidates.iter().copied().find(|&c| {
-                            can_accept[c]
-                                && (hosts[c].can_start(demand) || hosts[c].queue_has_room())
-                        })
+                        pick_candidate(
+                            &candidates,
+                            scenario.dispatch,
+                            &can_accept,
+                            &hosts,
+                            |c| {
+                                hosts[c].can_start(demand.min(hosts[c].slots()))
+                                    || hosts[c].queue_has_room()
+                            },
+                        )
                     };
                     let rec = &mut jobs[job_id as usize];
                     match target {
@@ -844,7 +1172,9 @@ impl DiscreteEventEngine {
                     // flushed wait queue gets the same treatment (minus
                     // the preemption count: those jobs never held slots).
                     let (running, queued) = hosts[node].evacuate();
-                    for (job_id, _demand) in running {
+                    util.node_left(ev.time, hosts[node].slots());
+                    for (job_id, demand) in running {
+                        util.job_finished(ev.time, demand);
                         let rec = &mut jobs[job_id as usize];
                         rec.gen = rec.gen.wrapping_add(1);
                         total_inflight -= 1;
@@ -897,6 +1227,7 @@ impl DiscreteEventEngine {
                     }
                     alive[node] = true;
                     report.node_joins += 1;
+                    util.node_joined(ev.time, hosts[node].slots());
                     alive_ids.push(node);
                     alive_ids.sort_unstable();
                     // A restarted machine comes back with empty local
@@ -939,9 +1270,23 @@ impl DiscreteEventEngine {
             report.mean_queue_delay_steps =
                 qdelay_ticks_sum as f64 / qdelay_count as f64 / TICKS_PER_STEP as f64;
         }
-        if util_cap > 0 {
-            report.mean_utilization = util_used as f64 / util_cap as f64;
+        if priority_levels > 1 {
+            report.mean_queue_delay_by_priority = (0..priority_levels as usize)
+                .map(|p| {
+                    if qdelay_p_count[p] > 0 {
+                        qdelay_p_sum[p] as f64
+                            / qdelay_p_count[p] as f64
+                            / TICKS_PER_STEP as f64
+                    } else {
+                        0.0
+                    }
+                })
+                .collect();
         }
+        // Close the utilization integral at the horizon (jobs still
+        // running and capacity still online count up to the run's end).
+        util.advance(horizon);
+        report.mean_utilization = util.mean();
         // Close the ledger: everything not in a terminal state is still
         // waiting or running at the horizon.
         for rec in &jobs {
@@ -1141,6 +1486,7 @@ mod tests {
                 max_job_slots: 1,
                 queue_policy: QueuePolicy::Fifo,
                 migration_limit: 2,
+                ..CapacityModel::default()
             }),
             churn: Some(ChurnModel {
                 leave_hazard: 0.004,
@@ -1172,6 +1518,7 @@ mod tests {
                 max_job_slots: 1,
                 queue_policy: QueuePolicy::Fifo,
                 migration_limit: 1,
+                ..CapacityModel::default()
             }),
             arrivals: ArrivalPattern::Poisson { rate: 1.0 },
             ..Scenario::default()
@@ -1186,6 +1533,112 @@ mod tests {
             .collect();
         let report = DiscreteEventEngine::new(sc, tr, pol).run();
         assert!(report.jobs_preempted > 0, "pressure preemption never fired");
+        assert_ledger(&report);
+    }
+
+    #[test]
+    fn try_new_returns_typed_errors_instead_of_panicking() {
+        fn expect_err(
+            r: Result<DiscreteEventEngine, EngineError>,
+        ) -> EngineError {
+            match r {
+                Ok(_) => panic!("malformed fleet must not construct"),
+                Err(e) => e,
+            }
+        }
+        // Empty fleet (the empty `--replay` directory shape).
+        let sc = Scenario::default();
+        let err = expect_err(DiscreteEventEngine::try_new(sc.clone(), Vec::new(), Vec::new()));
+        assert_eq!(err, EngineError::EmptyFleet);
+        assert!(err.to_string().contains("empty"));
+
+        // Policy count mismatch.
+        let tr = traces(2, 100, 1);
+        let err = expect_err(DiscreteEventEngine::try_new(
+            sc.clone(),
+            tr.clone(),
+            always_policies(&tr[..1]),
+        ));
+        assert_eq!(err, EngineError::PolicyCountMismatch { traces: 2, policies: 1 });
+
+        // A zero-length trace (header-only CSV) is caught per node.
+        let mut tr = traces(2, 100, 1);
+        tr[1] = tr[1].slice(0, 0);
+        let pol = always_policies(&tr);
+        let err = expect_err(DiscreteEventEngine::try_new(sc, tr, pol));
+        assert_eq!(err, EngineError::EmptyTrace { node: 1 });
+    }
+
+    #[test]
+    fn oversized_demand_is_clamped_not_deadlocked() {
+        // Regression: a scenario with max_job_slots > slots_per_node
+        // (reachable by constructing the scenario in code, bypassing TOML
+        // validation) drew jobs that could never start; under FIFO the
+        // first such job wedged the queue head for the rest of the run.
+        // The hand-off clamp caps demand at the host budget instead.
+        let sc = Scenario {
+            capacity: Some(CapacityModel {
+                slots_per_node: 2,
+                contended_slots: 2,
+                queue_capacity: 8,
+                max_job_slots: 4, // > slots_per_node: every host too small
+                queue_policy: QueuePolicy::Fifo,
+                migration_limit: 0,
+                ..CapacityModel::default()
+            }),
+            arrivals: ArrivalPattern::Poisson { rate: 0.1 },
+            duration_mu: 1.0,
+            duration_sigma: 0.3,
+            ..Scenario::default()
+        }
+        .with_nodes(4)
+        .with_steps(2_000);
+        let tr = traces(4, 2_000, 61);
+        let report = DiscreteEventEngine::new(sc, tr.clone(), always_policies(&tr)).run();
+        assert!(report.jobs_arrived > 50, "load too thin to mean anything");
+        // Before the clamp the first oversized job froze its queue:
+        // almost nothing completed and the backlog never drained.
+        assert!(
+            report.jobs_completed * 2 > report.jobs_arrived,
+            "queues wedged: {} of {} completed",
+            report.jobs_completed,
+            report.jobs_arrived
+        );
+        assert_ledger(&report);
+    }
+
+    #[test]
+    fn hetero_fleet_draws_distinct_budgets_and_runs_clean() {
+        let sc = Scenario::named("hetero").unwrap().with_nodes(12).with_steps(1_200);
+        let tr = traces(12, 1_200, 71);
+        let report = DiscreteEventEngine::new(sc, tr.clone(), always_policies(&tr)).run();
+        assert!(report.jobs_completed > 0);
+        assert!(report.mean_utilization > 0.0 && report.mean_utilization <= 1.0);
+        assert_ledger(&report);
+    }
+
+    #[test]
+    fn priority_scenario_scores_slo_and_per_class_delay() {
+        let sc = Scenario::named("priority").unwrap().with_nodes(6).with_steps(1_500);
+        let tr = traces(6, 1_500, 81);
+        let report = DiscreteEventEngine::new(sc, tr.clone(), always_policies(&tr)).run();
+        assert_eq!(report.slo_total, report.jobs_arrived);
+        assert!(report.slo_attained > 0, "nothing ever met its deadline");
+        assert!(report.slo_attained <= report.slo_total);
+        assert_eq!(report.mean_queue_delay_by_priority.len(), 3);
+        // The JSON gains the SLO/priority keys only when active.
+        let text = report.to_json_string();
+        assert!(text.contains("\"slo_attainment\""));
+        assert!(text.contains("\"queue_delay_p2\""));
+        let legacy = {
+            let sc = Scenario::named("capacity").unwrap().with_nodes(4).with_steps(300);
+            let tr = traces(4, 300, 82);
+            DiscreteEventEngine::new(sc, tr.clone(), always_policies(&tr))
+                .run()
+                .to_json_string()
+        };
+        assert!(!legacy.contains("slo_"), "legacy report grew SLO keys");
+        assert!(!legacy.contains("queue_delay_p"), "legacy report grew priority keys");
         assert_ledger(&report);
     }
 

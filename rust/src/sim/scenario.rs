@@ -8,23 +8,47 @@
 //! two points in a much larger space; custom scenarios load from the same
 //! TOML subset the main config uses (`pronto sim --scenario file.toml`).
 
-use crate::config::parse_toml;
+use crate::config::{parse_toml, TomlValue};
 use crate::federation::LatencyModel;
+use crate::rng::Xoshiro256;
 use crate::scheduler::QueuePolicy;
 use crate::telemetry::VmTrace;
 use anyhow::{bail, Context, Result};
 use std::path::Path;
 use std::sync::Arc;
 
-/// How the dispatcher picks candidate nodes for an arriving job.
+/// How the dispatcher picks the *candidate set* of nodes an arriving job
+/// probes (how many offers go out and to whom). What happens with the
+/// probe answers is the orthogonal [`DispatchPolicy`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum DispatchPolicy {
+pub enum ProbePolicy {
     /// Probe one uniformly random node (Sparrow-style single probe).
     RandomProbe,
-    /// Probe `k` random nodes, accept the first that says yes.
+    /// Probe `k` distinct random nodes.
     PowerOfK(usize),
     /// Round-robin over nodes.
     RoundRobin,
+}
+
+/// How the dispatcher scores the probed candidates. Every admission offer
+/// returns a structured [`crate::scheduler::AdmissionProbe`] (signal,
+/// free slots, queue depth, queue-delay EWMA); the policy decides how much
+/// of it to look at.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchPolicy {
+    /// The paper's dispatch: take the first probed node whose rejection
+    /// signal is clear, ignoring congestion. Preserves the pre-probe
+    /// engine behaviour bit-for-bit.
+    SignalOnly,
+    /// Among signal-clear candidates, pick the least congested: shallowest
+    /// wait queue, then shortest queue-delay EWMA, then most free slots
+    /// (first probed wins remaining ties). The FedQueue-style fix for the
+    /// "clear signal, deep queue" blind spot.
+    QueueAware,
+    /// Among signal-clear candidates, pick the one with the most free
+    /// slots (then the shallowest queue) — classic least-loaded-of-k,
+    /// the natural choice on heterogeneous fleets.
+    LeastLoaded,
 }
 
 /// A trace-driven arrival sequence: exact per-step job counts, typically
@@ -216,28 +240,54 @@ pub struct ChurnModel {
     pub min_alive: usize,
 }
 
+/// One class of hosts in a heterogeneous fleet: a slot budget and the
+/// relative weight with which nodes are assigned to the class.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HostClass {
+    /// Slot budget of hosts in this class.
+    pub slots: u32,
+    /// Relative assignment weight (need not sum to 1 across classes).
+    pub weight: f64,
+}
+
 /// Host-level capacity: finite slots per node, a bounded wait queue, and
 /// the preemption/migration behaviour of displaced jobs. Absent (`None`
 /// on the scenario), the engine runs the legacy admission-only model —
 /// accepted jobs are free and nothing ever queues.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct CapacityModel {
-    /// Slot budget per node.
+    /// Base slot budget per node (the budget of every node when
+    /// `host_classes` is empty).
     pub slots_per_node: u32,
     /// Effective budget while the node's rejection signal is raised:
-    /// running jobs above it are preempted at the telemetry tick (newest
-    /// first) and re-offered to peers. Set equal to `slots_per_node` to
-    /// disable pressure preemption.
+    /// running jobs above it are preempted at the telemetry tick (lowest
+    /// priority first, newest first within a class) and re-offered to
+    /// peers. Set equal to `slots_per_node` to disable pressure
+    /// preemption fleet-wide; on heterogeneous fleets the budget is
+    /// clamped to each node's own slots.
     pub contended_slots: u32,
     /// Bounded wait-queue length per node (0 = no queue: start-or-drop).
     pub queue_capacity: usize,
-    /// Per-job slot demand is uniform on `{1, …, max_job_slots}`.
+    /// Per-job slot demand is uniform on `{1, …, max_job_slots}` (clamped
+    /// at hand-off to the placed host's budget so a small host can always
+    /// eventually start the job).
     pub max_job_slots: u32,
     /// How the wait queue drains when slots free up.
     pub queue_policy: QueuePolicy,
     /// Re-placement attempts a displaced job gets before it counts as
     /// lost (`jobs_displaced`); 0 = preemption always loses the job.
     pub migration_limit: u32,
+    /// Scheduling classes: each job draws a priority uniform on
+    /// `{0, …, priority_levels-1}` (higher serves first). 1 = the legacy
+    /// single-class fleet.
+    pub priority_levels: u8,
+    /// Per-job completion deadline in steps after arrival; `None`
+    /// disables SLO accounting.
+    pub slo_steps: Option<u32>,
+    /// Heterogeneous fleet: nodes draw their budget from these classes
+    /// (weighted, from a dedicated RNG stream). Empty = homogeneous at
+    /// `slots_per_node`.
+    pub host_classes: Vec<HostClass>,
 }
 
 impl Default for CapacityModel {
@@ -249,6 +299,53 @@ impl Default for CapacityModel {
             max_job_slots: 1,
             queue_policy: QueuePolicy::Fifo,
             migration_limit: 1,
+            priority_levels: 1,
+            slo_steps: None,
+            host_classes: Vec::new(),
+        }
+    }
+}
+
+impl CapacityModel {
+    /// Slot budget for one node: a weighted class draw on heterogeneous
+    /// fleets, the homogeneous base otherwise (no randomness consumed).
+    pub fn draw_slots(&self, rng: &mut Xoshiro256) -> u32 {
+        if self.host_classes.is_empty() {
+            return self.slots_per_node;
+        }
+        let total: f64 = self.host_classes.iter().map(|c| c.weight).sum();
+        let mut x = rng.next_f64() * total;
+        for c in &self.host_classes {
+            if x < c.weight {
+                return c.slots;
+            }
+            x -= c.weight;
+        }
+        // Floating-point edge: the draw landed exactly on the total.
+        self.host_classes[self.host_classes.len() - 1].slots
+    }
+
+    /// Largest budget any node can be assigned.
+    pub fn max_host_slots(&self) -> u32 {
+        self.host_classes
+            .iter()
+            .map(|c| c.slots)
+            .max()
+            .unwrap_or(self.slots_per_node)
+    }
+
+    /// Is pressure preemption configured at all?
+    pub fn pressure_enabled(&self) -> bool {
+        self.contended_slots < self.slots_per_node
+    }
+
+    /// Effective budget of a `host_slots`-sized node while its rejection
+    /// signal is raised.
+    pub fn contended_budget(&self, host_slots: u32) -> u32 {
+        if self.pressure_enabled() {
+            self.contended_slots.min(host_slots)
+        } else {
+            host_slots
         }
     }
 }
@@ -299,6 +396,9 @@ pub struct Scenario {
     /// Master seed; all engine RNG streams derive from it.
     pub seed: u64,
     pub arrivals: ArrivalPattern,
+    /// Candidate selection: how many nodes an arriving job probes.
+    pub probe: ProbePolicy,
+    /// Candidate scoring: what the dispatcher does with the probe answers.
     pub dispatch: DispatchPolicy,
     /// Log-normal job duration parameters (steps).
     pub duration_mu: f64,
@@ -321,7 +421,8 @@ impl Default for Scenario {
             steps: 2_000,
             seed: 2021,
             arrivals: ArrivalPattern::Poisson { rate: 0.3 },
-            dispatch: DispatchPolicy::PowerOfK(2),
+            probe: ProbePolicy::PowerOfK(2),
+            dispatch: DispatchPolicy::SignalOnly,
             duration_mu: 3.0,
             duration_sigma: 0.8,
             ready_threshold: 1000.0,
@@ -344,6 +445,9 @@ pub const CATALOG: &[&str] = &[
     "capacity",
     "preemption",
     "replay",
+    "queue-aware",
+    "priority",
+    "hetero",
 ];
 
 impl Scenario {
@@ -411,6 +515,70 @@ impl Scenario {
                     max_job_slots: 1,
                     queue_policy: QueuePolicy::Fifo,
                     migration_limit: 0,
+                    ..CapacityModel::default()
+                }),
+                ..base
+            },
+            // The `capacity` overload with probe-scored placement: the
+            // dispatcher joins the shallower queue of its two probes
+            // instead of the first signal-clear one (power-of-two-choices
+            // over the structured AdmissionProbe).
+            "queue-aware" => Scenario {
+                name: name.into(),
+                arrivals: ArrivalPattern::Poisson { rate: 1.3 },
+                dispatch: DispatchPolicy::QueueAware,
+                capacity: Some(CapacityModel {
+                    slots_per_node: 2,
+                    contended_slots: 2,
+                    queue_capacity: 4,
+                    max_job_slots: 1,
+                    queue_policy: QueuePolicy::Fifo,
+                    migration_limit: 0,
+                    ..CapacityModel::default()
+                }),
+                ..base
+            },
+            // Three scheduling classes under sustained load with a
+            // completion SLO: queues serve strictly by priority, pressure
+            // sheds the lowest class first, and the report scores SLO
+            // attainment plus per-class queue delay.
+            "priority" => Scenario {
+                name: name.into(),
+                arrivals: ArrivalPattern::Poisson { rate: 1.0 },
+                dispatch: DispatchPolicy::QueueAware,
+                capacity: Some(CapacityModel {
+                    slots_per_node: 2,
+                    contended_slots: 2,
+                    queue_capacity: 8,
+                    max_job_slots: 1,
+                    queue_policy: QueuePolicy::Fifo,
+                    migration_limit: 0,
+                    priority_levels: 3,
+                    slo_steps: Some(30),
+                    ..CapacityModel::default()
+                }),
+                ..base
+            },
+            // Heterogeneous fleet: small/medium/large hosts (1/2/4 slots,
+            // mean 2.25), least-loaded placement, smallest-first queues.
+            // Oversized draws clamp to the placed host's budget.
+            "hetero" => Scenario {
+                name: name.into(),
+                arrivals: ArrivalPattern::Poisson { rate: 1.3 },
+                dispatch: DispatchPolicy::LeastLoaded,
+                capacity: Some(CapacityModel {
+                    slots_per_node: 2,
+                    contended_slots: 2,
+                    queue_capacity: 4,
+                    max_job_slots: 2,
+                    queue_policy: QueuePolicy::SmallestFirst,
+                    migration_limit: 0,
+                    host_classes: vec![
+                        HostClass { slots: 1, weight: 0.25 },
+                        HostClass { slots: 2, weight: 0.5 },
+                        HostClass { slots: 4, weight: 0.25 },
+                    ],
+                    ..CapacityModel::default()
                 }),
                 ..base
             },
@@ -428,6 +596,7 @@ impl Scenario {
                     max_job_slots: 2,
                     queue_policy: QueuePolicy::SmallestFirst,
                     migration_limit: 2,
+                    ..CapacityModel::default()
                 }),
                 churn: Some(ChurnModel {
                     leave_hazard: 0.002,
@@ -519,6 +688,10 @@ impl Scenario {
         let mut capacity = CapacityModel::default();
         let mut contended_set = false;
         let mut queue_policy = "fifo".to_string();
+        // Heterogeneous classes arrive as parallel arrays (the TOML subset
+        // has no table arrays): slots are required, weights default equal.
+        let mut host_class_slots: Option<Vec<f64>> = None;
+        let mut host_class_weights: Option<Vec<f64>> = None;
         // Federation latency fields. Options so a parameter without the
         // selector (or vice versa) can be detected instead of silently
         // degenerating to instant delivery.
@@ -527,7 +700,9 @@ impl Scenario {
         let mut latency_lo: Option<f64> = None;
         let mut latency_hi: Option<f64> = None;
         let mut probe_k = 2usize;
-        let mut dispatch = "power-of-k".to_string();
+        let mut probe = "power-of-k".to_string();
+        let mut probe_set = false;
+        let mut dispatch = "signal-only".to_string();
 
         for (section, entries) in &doc {
             for (key, v) in entries {
@@ -545,11 +720,28 @@ impl Scenario {
                         .map(str::to_string)
                         .ok_or_else(|| anyhow::anyhow!("{section}.{key}: expected string"))
                 };
+                let num_array = || -> Result<Vec<f64>> {
+                    match v {
+                        TomlValue::Array(items) => items
+                            .iter()
+                            .map(|x| {
+                                x.as_f64().ok_or_else(|| {
+                                    anyhow::anyhow!("{section}.{key}: expected numbers")
+                                })
+                            })
+                            .collect(),
+                        _ => bail!("{section}.{key}: expected an array of numbers"),
+                    }
+                };
                 match (section.as_str(), key.as_str()) {
                     ("scenario", "name") => s.name = string()?,
                     ("scenario", "nodes") => s.nodes = uint()?,
                     ("scenario", "steps") => s.steps = uint()?,
                     ("scenario", "seed") => s.seed = num()? as u64,
+                    ("scenario", "probe") => {
+                        probe_set = true;
+                        probe = string()?;
+                    }
                     ("scenario", "dispatch") => dispatch = string()?,
                     ("scenario", "probe_k") => probe_k = uint()?,
                     ("scenario", "duration_mu") => s.duration_mu = num()?,
@@ -591,6 +783,28 @@ impl Scenario {
                     ("capacity", "migration_limit") => {
                         capacity_seen = true;
                         capacity.migration_limit = uint()? as u32;
+                    }
+                    ("capacity", "priority_levels") => {
+                        capacity_seen = true;
+                        // Bound before narrowing: `as u8` would wrap 257
+                        // into the valid range and silently disable
+                        // priorities instead of rejecting the config.
+                        capacity.priority_levels =
+                            u8::try_from(uint()?).map_err(|_| {
+                                anyhow::anyhow!("capacity.priority_levels out of range")
+                            })?;
+                    }
+                    ("capacity", "slo_steps") => {
+                        capacity_seen = true;
+                        capacity.slo_steps = Some(uint()? as u32);
+                    }
+                    ("capacity", "host_class_slots") => {
+                        capacity_seen = true;
+                        host_class_slots = Some(num_array()?);
+                    }
+                    ("capacity", "host_class_weights") => {
+                        capacity_seen = true;
+                        host_class_weights = Some(num_array()?);
                     }
 
                     ("churn", "leave_hazard") => {
@@ -659,13 +873,70 @@ impl Scenario {
             if !contended_set {
                 capacity.contended_slots = capacity.slots_per_node;
             }
+            match (host_class_slots, host_class_weights) {
+                (None, None) => {}
+                (None, Some(_)) => {
+                    bail!("capacity.host_class_weights requires host_class_slots")
+                }
+                (Some(slots), weights) => {
+                    let weights = match weights {
+                        Some(w) => {
+                            if w.len() != slots.len() {
+                                bail!(
+                                    "capacity.host_class_weights ({}) and \
+                                     host_class_slots ({}) must have the same length",
+                                    w.len(),
+                                    slots.len()
+                                );
+                            }
+                            w
+                        }
+                        None => vec![1.0; slots.len()],
+                    };
+                    capacity.host_classes = slots
+                        .iter()
+                        .zip(&weights)
+                        .map(|(&s, &w)| {
+                            if s < 0.0 || s.fract() != 0.0 || s > u32::MAX as f64 {
+                                bail!(
+                                    "capacity.host_class_slots entries must be \
+                                     non-negative integers (got {s})"
+                                );
+                            }
+                            Ok(HostClass { slots: s as u32, weight: w })
+                        })
+                        .collect::<Result<_>>()?;
+                }
+            }
             s.capacity = Some(capacity);
         }
-        s.dispatch = match dispatch.as_str() {
-            "random" => DispatchPolicy::RandomProbe,
-            "round-robin" => DispatchPolicy::RoundRobin,
-            "power-of-k" => DispatchPolicy::PowerOfK(probe_k.max(1)),
-            other => bail!("scenario.dispatch '{other}' (random | round-robin | power-of-k)"),
+        // `dispatch` historically selected the candidate set; those values
+        // still route to the probe policy so old scenario files keep
+        // working. The scoring policies are the new first-class values.
+        match dispatch.as_str() {
+            "signal-only" => s.dispatch = DispatchPolicy::SignalOnly,
+            "queue-aware" => s.dispatch = DispatchPolicy::QueueAware,
+            "least-loaded" => s.dispatch = DispatchPolicy::LeastLoaded,
+            "random" | "round-robin" | "power-of-k" => {
+                if probe_set {
+                    bail!(
+                        "scenario.dispatch '{dispatch}' is a legacy probe value and \
+                         conflicts with the explicit scenario.probe '{probe}'"
+                    );
+                }
+                probe = dispatch.clone();
+                s.dispatch = DispatchPolicy::SignalOnly;
+            }
+            other => bail!(
+                "scenario.dispatch '{other}' (signal-only | queue-aware | least-loaded; \
+                 legacy probe values random | round-robin | power-of-k also accepted)"
+            ),
+        }
+        s.probe = match probe.as_str() {
+            "random" => ProbePolicy::RandomProbe,
+            "round-robin" => ProbePolicy::RoundRobin,
+            "power-of-k" => ProbePolicy::PowerOfK(probe_k.max(1)),
+            other => bail!("scenario.probe '{other}' (random | round-robin | power-of-k)"),
         };
         // Selector + parameters must agree; a parameter on its own infers
         // its model (matching the main config's behaviour) rather than
@@ -732,12 +1003,23 @@ impl Scenario {
             if c.slots_per_node == 0 {
                 bail!("scenario: capacity.slots_per_node must be >= 1");
             }
-            if c.max_job_slots == 0 || c.max_job_slots > c.slots_per_node {
+            for hc in &c.host_classes {
+                if hc.slots == 0 {
+                    bail!("scenario: capacity host class slots must be >= 1");
+                }
+                if !(hc.weight.is_finite() && hc.weight > 0.0) {
+                    bail!("scenario: capacity host class weights must be positive");
+                }
+            }
+            // Demand is clamped to the placed host's budget at hand-off,
+            // so only the *largest* host class must fit the biggest draw —
+            // otherwise some jobs could never start anywhere.
+            if c.max_job_slots == 0 || c.max_job_slots > c.max_host_slots() {
                 bail!(
                     "scenario: capacity.max_job_slots ({}) must be in \
-                     [1, slots_per_node = {}] or some jobs can never start",
+                     [1, largest host budget = {}] or some jobs can never start",
                     c.max_job_slots,
-                    c.slots_per_node
+                    c.max_host_slots()
                 );
             }
             if c.contended_slots > c.slots_per_node {
@@ -747,6 +1029,15 @@ impl Scenario {
                     c.contended_slots,
                     c.slots_per_node
                 );
+            }
+            if c.priority_levels == 0 || c.priority_levels > 8 {
+                bail!(
+                    "scenario: capacity.priority_levels ({}) must be in [1, 8]",
+                    c.priority_levels
+                );
+            }
+            if c.slo_steps == Some(0) {
+                bail!("scenario: capacity.slo_steps must be >= 1");
             }
         }
         // Each regime's rate must be valid on its own — a healthy mean
@@ -878,7 +1169,9 @@ latency_mean_steps = 5.0
         .unwrap();
         assert_eq!(s.name, "wan-storm");
         assert_eq!(s.nodes, 24);
-        assert_eq!(s.dispatch, DispatchPolicy::PowerOfK(3));
+        // Legacy `dispatch = "power-of-k"` routes to the probe policy.
+        assert_eq!(s.probe, ProbePolicy::PowerOfK(3));
+        assert_eq!(s.dispatch, DispatchPolicy::SignalOnly);
         assert!(matches!(s.arrivals, ArrivalPattern::Bursty { burst_rate, .. } if burst_rate == 2.5));
         let churn = s.churn.unwrap();
         assert_eq!(churn.min_alive, 6);
@@ -896,6 +1189,121 @@ latency_mean_steps = 5.0
         assert!(Scenario::from_toml("[arrivals]\npattern = \"fractal\"\n").is_err());
         assert!(Scenario::from_toml("[federation]\nlatency = \"psychic\"\n").is_err());
         assert!(Scenario::from_toml("[scenario]\nnodes = 0\n").is_err());
+        assert!(Scenario::from_toml("[scenario]\ndispatch = \"psychic\"\n").is_err());
+        assert!(Scenario::from_toml("[scenario]\nprobe = \"signal-only\"\n").is_err());
+    }
+
+    #[test]
+    fn dispatch_and_probe_parse_independently() {
+        let s = Scenario::from_toml(
+            "[scenario]\ndispatch = \"queue-aware\"\nprobe = \"round-robin\"\n",
+        )
+        .unwrap();
+        assert_eq!(s.dispatch, DispatchPolicy::QueueAware);
+        assert_eq!(s.probe, ProbePolicy::RoundRobin);
+        let s = Scenario::from_toml("[scenario]\ndispatch = \"least-loaded\"\n").unwrap();
+        assert_eq!(s.dispatch, DispatchPolicy::LeastLoaded);
+        assert_eq!(s.probe, ProbePolicy::PowerOfK(2), "default probe");
+        // Defaults preserve the paper's behaviour.
+        let s = Scenario::from_toml("[scenario]\nnodes = 4\n").unwrap();
+        assert_eq!(s.dispatch, DispatchPolicy::SignalOnly);
+        // A legacy dispatch value may not silently clobber an explicit
+        // probe key — that contradiction is an error.
+        assert!(Scenario::from_toml(
+            "[scenario]\nprobe = \"round-robin\"\ndispatch = \"power-of-k\"\n"
+        )
+        .is_err());
+        // Legacy routing alone still works.
+        let s = Scenario::from_toml("[scenario]\ndispatch = \"random\"\n").unwrap();
+        assert_eq!(s.probe, ProbePolicy::RandomProbe);
+        assert_eq!(s.dispatch, DispatchPolicy::SignalOnly);
+    }
+
+    #[test]
+    fn priorities_slo_and_host_classes_parse_and_validate() {
+        let s = Scenario::from_toml(
+            r#"
+[capacity]
+slots_per_node = 2
+max_job_slots = 2
+priority_levels = 3
+slo_steps = 25
+host_class_slots = [1, 2, 4]
+host_class_weights = [0.25, 0.5, 0.25]
+"#,
+        )
+        .unwrap();
+        let c = s.capacity.unwrap();
+        assert_eq!(c.priority_levels, 3);
+        assert_eq!(c.slo_steps, Some(25));
+        assert_eq!(c.host_classes.len(), 3);
+        assert_eq!(c.host_classes[2], HostClass { slots: 4, weight: 0.25 });
+        assert_eq!(c.max_host_slots(), 4);
+
+        // Weights default equal when only slots are given.
+        let s = Scenario::from_toml("[capacity]\nhost_class_slots = [2, 6]\n").unwrap();
+        let c = s.capacity.unwrap();
+        assert_eq!(c.host_classes.len(), 2);
+        assert_eq!(c.host_classes[0].weight, c.host_classes[1].weight);
+
+        // Invalid compositions fail loudly.
+        assert!(
+            Scenario::from_toml("[capacity]\nhost_class_weights = [1.0]\n").is_err(),
+            "weights without slots"
+        );
+        assert!(Scenario::from_toml(
+            "[capacity]\nhost_class_slots = [1, 2]\nhost_class_weights = [1.0]\n"
+        )
+        .is_err());
+        assert!(Scenario::from_toml("[capacity]\nhost_class_slots = [0, 2]\n").is_err());
+        assert!(
+            Scenario::from_toml("[capacity]\nhost_class_slots = [1.5, 2]\n").is_err(),
+            "fractional budgets must not truncate silently"
+        );
+        assert!(Scenario::from_toml("[capacity]\npriority_levels = 0\n").is_err());
+        assert!(Scenario::from_toml("[capacity]\npriority_levels = 9\n").is_err());
+        assert!(
+            Scenario::from_toml("[capacity]\npriority_levels = 257\n").is_err(),
+            "u8 wrap-around must not sneak back into range"
+        );
+        assert!(Scenario::from_toml("[capacity]\nslo_steps = 0\n").is_err());
+        // max_job_slots is checked against the *largest* class.
+        assert!(Scenario::from_toml(
+            "[capacity]\nhost_class_slots = [1, 2]\nmax_job_slots = 4\n"
+        )
+        .is_err());
+        assert!(Scenario::from_toml(
+            "[capacity]\nslots_per_node = 1\nhost_class_slots = [1, 4]\nmax_job_slots = 3\n"
+        )
+        .is_ok());
+    }
+
+    #[test]
+    fn host_class_draws_are_deterministic_and_weighted() {
+        let c = CapacityModel {
+            host_classes: vec![
+                HostClass { slots: 1, weight: 0.25 },
+                HostClass { slots: 2, weight: 0.5 },
+                HostClass { slots: 4, weight: 0.25 },
+            ],
+            ..CapacityModel::default()
+        };
+        let draw_fleet = |seed: u64| -> Vec<u32> {
+            let mut rng = Xoshiro256::seed_from_u64(seed);
+            (0..200).map(|_| c.draw_slots(&mut rng)).collect()
+        };
+        let a = draw_fleet(9);
+        assert_eq!(a, draw_fleet(9), "class assignment not deterministic");
+        for slots in [1u32, 2, 4] {
+            assert!(a.contains(&slots), "class {slots} never drawn");
+        }
+        let twos = a.iter().filter(|&&s| s == 2).count();
+        assert!((60..=140).contains(&twos), "weights ignored: {twos}/200 twos");
+        // Homogeneous model consumes no randomness and returns the base.
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let before = rng.clone().next_u64();
+        assert_eq!(CapacityModel::default().draw_slots(&mut rng), 4);
+        assert_eq!(rng.next_u64(), before, "homogeneous draw consumed RNG");
     }
 
     #[test]
@@ -1058,6 +1466,29 @@ migration_limit = 3
 
         let rep = Scenario::named("replay").unwrap();
         assert!(matches!(rep.arrivals, ArrivalPattern::Replay { .. }));
+
+        // `queue-aware` is the `capacity` overload with scored placement.
+        let qa = Scenario::named("queue-aware").unwrap();
+        assert_eq!(qa.dispatch, DispatchPolicy::QueueAware);
+        assert_eq!(qa.capacity, cap_model_of("capacity"));
+
+        let pri = Scenario::named("priority").unwrap();
+        let c = pri.capacity.unwrap();
+        assert_eq!(c.priority_levels, 3);
+        assert_eq!(c.slo_steps, Some(30));
+
+        let het = Scenario::named("hetero").unwrap();
+        assert_eq!(het.dispatch, DispatchPolicy::LeastLoaded);
+        let c = het.capacity.unwrap();
+        assert_eq!(c.host_classes.len(), 3);
+        // max_job_slots exceeds the smallest class: the clamp path is
+        // exercised by design, and the largest class covers the draw.
+        assert!(c.max_job_slots > c.host_classes[0].slots);
+        assert!(c.max_job_slots <= c.max_host_slots());
+    }
+
+    fn cap_model_of(name: &str) -> Option<CapacityModel> {
+        Scenario::named(name).unwrap().capacity
     }
 
     #[test]

@@ -55,7 +55,7 @@ fn pronto_beats_random_rejection_on_placement() {
         .collect();
     // Single-probe dispatch so each node's admission decision is decisive.
     let cfg = SimConfig {
-        dispatch: pronto::sim::DispatchPolicy::RandomProbe,
+        probe: pronto::sim::ProbePolicy::RandomProbe,
         ..Default::default()
     };
     let rp = DataCenterSim::new(cfg.clone(), traces.clone(), pronto).run();

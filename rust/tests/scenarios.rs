@@ -66,7 +66,13 @@ fn assert_conservation(report: &pronto::sim::SimReport) {
     assert!(report.jobs_migrated <= report.jobs_preempted + report.jobs_queued);
     assert!(report.mean_push_latency_steps.is_finite());
     assert!(report.mean_queue_delay_steps.is_finite());
+    // The event-driven capacity integral can never report phantom usage:
+    // utilization is a true time average and stays within [0, 1].
     assert!((0.0..=1.0).contains(&report.mean_utilization));
+    assert!(report.slo_attained <= report.slo_total);
+    for d in &report.mean_queue_delay_by_priority {
+        assert!(d.is_finite() && *d >= 0.0);
+    }
 }
 
 #[test]
@@ -208,6 +214,60 @@ fn preemption_scenario_preempts_and_migrates() {
     // Migration keeps most displaced work alive: outright losses stay
     // below preemption events.
     assert!(report.jobs_displaced <= report.jobs_preempted + report.jobs_queued);
+}
+
+#[test]
+fn queue_aware_priority_and_hetero_catalog_entries_run_clean() {
+    // The three new entries exercise probe-scored dispatch, scheduling
+    // classes with SLOs, and per-node heterogeneous budgets end to end.
+    for (name, nodes) in [("queue-aware", 8), ("priority", 8), ("hetero", 12)] {
+        let scenario = Scenario::named(name).unwrap().with_nodes(nodes).with_steps(1_500);
+        let tr = fleet(nodes, 1_500, 97);
+        let report =
+            DiscreteEventEngine::new(scenario, tr.clone(), always_policies(&tr)).run();
+        assert_conservation(&report);
+        assert!(report.jobs_queued > 0, "{name}: nothing ever queued");
+        assert!(report.jobs_completed > 0, "{name}: nothing completed");
+    }
+    let scenario = Scenario::named("priority").unwrap().with_nodes(8).with_steps(1_500);
+    let tr = fleet(8, 1_500, 97);
+    let report = DiscreteEventEngine::new(scenario, tr.clone(), always_policies(&tr)).run();
+    assert!(report.slo_total > 0, "priority scenario set no deadlines");
+    assert_eq!(report.mean_queue_delay_by_priority.len(), 3);
+}
+
+#[test]
+fn custom_toml_hetero_priority_scenario_runs() {
+    let text = r#"
+[scenario]
+name = "it-hetero"
+nodes = 9
+steps = 1200
+seed = 23
+dispatch = "least-loaded"
+
+[arrivals]
+pattern = "poisson"
+rate = 1.0
+
+[capacity]
+slots_per_node = 2
+queue_capacity = 4
+max_job_slots = 2
+queue_policy = "smallest-first"
+priority_levels = 2
+slo_steps = 40
+host_class_slots = [1, 2, 4]
+host_class_weights = [1, 2, 1]
+"#;
+    let scenario = Scenario::from_toml(text).unwrap();
+    let tr = fleet(9, 1_200, 99);
+    let report =
+        DiscreteEventEngine::new(scenario, tr.clone(), always_policies(&tr)).run();
+    assert_conservation(&report);
+    assert_eq!(report.scenario, "it-hetero");
+    assert!(report.slo_total > 0);
+    assert_eq!(report.mean_queue_delay_by_priority.len(), 2);
 }
 
 #[test]
