@@ -1,0 +1,46 @@
+//! Fleet-scale engine benchmark target: the `pronto bench engine` sweep
+//! as a `cargo bench` binary (same driver, same JSON artifact schema).
+//!
+//! `PRONTO_BENCH_QUICK=1` shrinks the ladder for smoke runs;
+//! `PRONTO_BENCH_JSON=path` additionally writes `BENCH_engine.json`.
+
+use pronto::bench::{bench_engine, bench_engine_report, EngineBenchConfig, Table};
+
+fn main() {
+    let cfg = EngineBenchConfig::from_env();
+    let runs = match bench_engine(&cfg) {
+        Ok(runs) => runs,
+        Err(e) => {
+            eprintln!("engine bench failed: {e:#}");
+            std::process::exit(1);
+        }
+    };
+
+    let mut table = Table::new(
+        &format!(
+            "Engine scale sweep (streaming source, always policy, {} steps)",
+            cfg.steps
+        ),
+        &["scenario", "nodes", "events", "wall(ms)", "events/s", "peakq", "jobs"],
+    );
+    for r in &runs {
+        table.row(&[
+            r.scenario.clone(),
+            r.nodes.to_string(),
+            r.events.to_string(),
+            format!("{:.1}", r.wall_ms),
+            format!("{:.0}", r.events_per_sec),
+            r.peak_queue_len.to_string(),
+            r.jobs_arrived.to_string(),
+        ]);
+    }
+    table.print();
+    table.maybe_write_csv("engine_scale");
+
+    if let Ok(path) = std::env::var("PRONTO_BENCH_JSON") {
+        let doc = bench_engine_report(&cfg, &runs);
+        if let Err(e) = std::fs::write(&path, format!("{doc}\n")) {
+            eprintln!("warn: could not write {path}: {e}");
+        }
+    }
+}

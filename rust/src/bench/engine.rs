@@ -1,0 +1,245 @@
+//! Fleet-scale engine benchmark: catalog scenarios swept over fleet
+//! sizes through the **streaming** trace source, timed end to end.
+//!
+//! This is the perf-trajectory artifact behind `pronto bench engine` (and
+//! the `engine_scale` bench target): each run drives one scenario at one
+//! fleet size with cost-free `always` admission policies, so the measured
+//! wall time is the engine + telemetry-generation hot path, not FPCA.
+//! Results serialize to `BENCH_engine.json` — machine-readable so
+//! successive PRs can diff events/s.
+//!
+//! ```text
+//! pronto bench engine                      # 100/1k/5k nodes, default set
+//! pronto bench engine --quick              # CI smoke sizing
+//! pronto bench engine --sizes 5000 --steps 10000 --scenarios large-fleet
+//! ```
+
+use crate::scheduler::{Admission, RandomPolicy};
+use crate::ser::JsonValue;
+use crate::sim::{DiscreteEventEngine, Scenario};
+use crate::telemetry::{fleet_members, GeneratorConfig, TraceGenerator, TraceSource};
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Cluster grouping for generated fleets (matches the scenario bench).
+const BENCH_FANOUT: usize = 8;
+
+/// Scenarios the default sweep covers: the paper's baseline, the two
+/// capacity overloads, and the two scale entries.
+pub const DEFAULT_BENCH_SCENARIOS: &[&str] =
+    &["baseline-poisson", "capacity", "queue-aware", "large-fleet", "flash-crowd"];
+
+/// One sweep configuration.
+#[derive(Debug, Clone)]
+pub struct EngineBenchConfig {
+    /// Fleet sizes to sweep (each scenario's own `nodes` is overridden).
+    pub sizes: Vec<usize>,
+    /// Steps per run.
+    pub steps: usize,
+    pub seed: u64,
+    /// Catalog names to run.
+    pub scenarios: Vec<String>,
+    /// Quick sizing (CI smoke) — recorded in the artifact.
+    pub quick: bool,
+}
+
+impl EngineBenchConfig {
+    /// Full sizing: the 100 / 1 000 / 5 000-node ladder.
+    pub fn full() -> Self {
+        Self {
+            sizes: vec![100, 1_000, 5_000],
+            steps: 1_000,
+            seed: 2021,
+            scenarios: DEFAULT_BENCH_SCENARIOS.iter().map(|s| s.to_string()).collect(),
+            quick: false,
+        }
+    }
+
+    /// Quick sizing for smoke runs.
+    pub fn quick() -> Self {
+        Self {
+            sizes: vec![50, 200],
+            steps: 200,
+            seed: 2021,
+            scenarios: DEFAULT_BENCH_SCENARIOS.iter().map(|s| s.to_string()).collect(),
+            quick: true,
+        }
+    }
+
+    /// Honour `PRONTO_BENCH_QUICK=1`.
+    pub fn from_env() -> Self {
+        if std::env::var("PRONTO_BENCH_QUICK").map(|v| v == "1").unwrap_or(false) {
+            Self::quick()
+        } else {
+            Self::full()
+        }
+    }
+}
+
+/// One timed run.
+#[derive(Debug, Clone)]
+pub struct EngineBenchRun {
+    pub scenario: String,
+    pub nodes: usize,
+    pub steps: usize,
+    pub seed: u64,
+    pub wall_ms: f64,
+    /// Events the engine dispatched (`SimReport::events_processed`).
+    pub events: usize,
+    pub events_per_sec: f64,
+    pub jobs_arrived: usize,
+    pub jobs_completed: usize,
+    pub peak_queue_len: usize,
+    pub peak_inflight: usize,
+}
+
+impl EngineBenchRun {
+    pub fn to_json(&self) -> JsonValue {
+        let mut m = BTreeMap::new();
+        let num = |x: usize| JsonValue::Number(x as f64);
+        m.insert("scenario".into(), JsonValue::String(self.scenario.clone()));
+        m.insert("nodes".into(), num(self.nodes));
+        m.insert("steps".into(), num(self.steps));
+        m.insert("seed".into(), JsonValue::String(self.seed.to_string()));
+        m.insert("wall_ms".into(), JsonValue::Number(self.wall_ms));
+        m.insert("events".into(), num(self.events));
+        m.insert("events_per_sec".into(), JsonValue::Number(self.events_per_sec));
+        m.insert("jobs_arrived".into(), num(self.jobs_arrived));
+        m.insert("jobs_completed".into(), num(self.jobs_completed));
+        m.insert("peak_queue_len".into(), num(self.peak_queue_len));
+        m.insert("peak_inflight".into(), num(self.peak_inflight));
+        JsonValue::Object(m)
+    }
+}
+
+/// Run one scenario at one fleet size through the streaming source with
+/// `always`-accept policies, timed end to end.
+pub fn bench_engine_run(
+    name: &str,
+    nodes: usize,
+    steps: usize,
+    seed: u64,
+) -> Result<EngineBenchRun> {
+    let scenario = Scenario::named(name)
+        .ok_or_else(|| anyhow!("unknown bench scenario '{name}'"))?
+        .with_nodes(nodes)
+        .with_steps(steps)
+        .with_seed(seed);
+    scenario.validate()?;
+    let gen = TraceGenerator::new(GeneratorConfig::default(), seed);
+    let members = fleet_members(nodes, BENCH_FANOUT);
+    let source = TraceSource::streaming(&gen, &members, steps, scenario.score_window);
+    let policies: Vec<Box<dyn Admission>> = (0..nodes)
+        .map(|i| {
+            Box::new(RandomPolicy::always_accept(seed ^ i as u64)) as Box<dyn Admission>
+        })
+        .collect();
+    let engine = DiscreteEventEngine::try_from_source(scenario, source, policies)?;
+    let t0 = Instant::now();
+    let report = engine.run();
+    let wall = t0.elapsed();
+    let wall_ms = wall.as_secs_f64() * 1e3;
+    Ok(EngineBenchRun {
+        scenario: name.to_string(),
+        nodes,
+        steps,
+        seed,
+        wall_ms,
+        events: report.events_processed,
+        events_per_sec: report.events_processed as f64 / wall.as_secs_f64().max(1e-9),
+        jobs_arrived: report.jobs_arrived,
+        jobs_completed: report.jobs_completed,
+        peak_queue_len: report.peak_queue_len,
+        peak_inflight: report.peak_inflight,
+    })
+}
+
+/// Run the full sweep, logging one line per run to stderr.
+pub fn bench_engine(cfg: &EngineBenchConfig) -> Result<Vec<EngineBenchRun>> {
+    let mut runs = Vec::with_capacity(cfg.sizes.len() * cfg.scenarios.len());
+    for &nodes in &cfg.sizes {
+        for name in &cfg.scenarios {
+            let run = bench_engine_run(name, nodes, cfg.steps, cfg.seed)?;
+            eprintln!(
+                "bench engine: {name:<18} {nodes:>5} nodes x {} steps — \
+                 {:>10.1} ms, {:>12.0} events/s, peak queue {}",
+                run.steps, run.wall_ms, run.events_per_sec, run.peak_queue_len
+            );
+            runs.push(run);
+        }
+    }
+    Ok(runs)
+}
+
+/// The `BENCH_engine.json` document (schema documented in the README):
+/// sweep metadata plus one entry per run.
+pub fn bench_engine_report(cfg: &EngineBenchConfig, runs: &[EngineBenchRun]) -> JsonValue {
+    let mut m = BTreeMap::new();
+    m.insert("bench".into(), JsonValue::String("engine".into()));
+    m.insert("schema_version".into(), JsonValue::Number(1.0));
+    m.insert("quick".into(), JsonValue::Bool(cfg.quick));
+    m.insert("policy".into(), JsonValue::String("always".into()));
+    m.insert("trace_source".into(), JsonValue::String("streaming".into()));
+    m.insert("steps".into(), JsonValue::Number(cfg.steps as f64));
+    m.insert("seed".into(), JsonValue::String(cfg.seed.to_string()));
+    m.insert(
+        "sizes".into(),
+        JsonValue::Array(cfg.sizes.iter().map(|&s| JsonValue::Number(s as f64)).collect()),
+    );
+    m.insert(
+        "runs".into(),
+        JsonValue::Array(runs.iter().map(EngineBenchRun::to_json).collect()),
+    );
+    JsonValue::Object(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_run_produces_sane_numbers() {
+        let run = bench_engine_run("large-fleet", 40, 120, 7).unwrap();
+        assert_eq!(run.nodes, 40);
+        assert_eq!(run.steps, 120);
+        assert!(run.events > 120, "fewer events than ticks: {}", run.events);
+        assert!(run.wall_ms > 0.0);
+        assert!(run.events_per_sec > 0.0);
+        assert!(run.jobs_arrived > 0);
+    }
+
+    #[test]
+    fn unknown_scenario_is_an_error() {
+        assert!(bench_engine_run("no-such-scenario", 4, 50, 1).is_err());
+    }
+
+    #[test]
+    fn report_document_is_valid_json_with_runs() {
+        let cfg = EngineBenchConfig {
+            sizes: vec![8],
+            steps: 60,
+            seed: 3,
+            scenarios: vec!["baseline-poisson".into(), "flash-crowd".into()],
+            quick: true,
+        };
+        let runs = bench_engine(&cfg).unwrap();
+        assert_eq!(runs.len(), 2);
+        let doc = bench_engine_report(&cfg, &runs);
+        let text = doc.to_string();
+        let parsed = crate::ser::parse_json(&text).expect("valid json");
+        assert_eq!(
+            parsed.get("bench").and_then(JsonValue::as_str),
+            Some("engine")
+        );
+        let runs_v = parsed.get("runs").expect("runs key");
+        match runs_v {
+            JsonValue::Array(a) => {
+                assert_eq!(a.len(), 2);
+                assert!(a[0].get("events_per_sec").is_some());
+                assert!(a[0].get("peak_queue_len").is_some());
+            }
+            other => panic!("runs must be an array, got {other:?}"),
+        }
+    }
+}

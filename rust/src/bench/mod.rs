@@ -5,7 +5,13 @@
 //! statistics (median + p10/p90), and plain-text table output matching the
 //! paper's rows so EXPERIMENTS.md can diff paper-vs-measured directly.
 
+pub mod engine;
 pub mod experiments;
+
+pub use engine::{
+    bench_engine, bench_engine_report, bench_engine_run, EngineBenchConfig, EngineBenchRun,
+    DEFAULT_BENCH_SCENARIOS,
+};
 
 use std::time::{Duration, Instant};
 

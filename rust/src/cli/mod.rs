@@ -5,9 +5,12 @@
 //! pronto sim        [--scenario NAME|FILE.toml] [--json] [--config FILE]
 //!                   [--policy pronto|sp|fd|pm|random|always|oracle]
 //!                   [--replay CSV|DIR] [--replay-metric NAME]
+//!                   [--trace-source auto|stream|materialized]
 //! pronto scenarios  — list the built-in scenario catalog
 //! pronto eval       [--config FILE] [--method pronto|sp|fd|pm] [--window W]
 //! pronto federate   [--config FILE] [--nodes N] [--fanout F]
+//! pronto bench engine [--quick] [--out FILE] [--sizes 100,1000,5000]
+//!                   [--steps N] [--seed S] [--scenarios a,b,c]
 //! pronto bench-tables [--table 1..3] [--quick]
 //! pronto inspect    [--compile] — artifact manifest + compile check
 //! ```
@@ -17,6 +20,7 @@ mod args;
 pub use args::Args;
 
 use crate::baselines::*;
+use crate::bench::{bench_engine, bench_engine_report, EngineBenchConfig};
 use crate::config::ProntoConfig;
 use crate::scheduler::{
     Admission, CpuReadyOracle, NodeScheduler, ProntoPolicy, RandomPolicy,
@@ -25,8 +29,8 @@ use crate::sim::{
     evaluate_method, ArrivalPattern, DataCenterSim, DiscreteEventEngine, EvalConfig,
     FleetEvaluation, ReplaySchedule, Scenario, SimReport, CATALOG,
 };
-use crate::telemetry::{TraceGenerator, VmTrace, CPU_READY_IDX};
-use anyhow::{bail, Context, Result};
+use crate::telemetry::{fleet_members, TraceGenerator, TraceSource, VmTrace, CPU_READY_IDX};
+use anyhow::{anyhow, bail, Context, Result};
 use std::path::Path;
 
 const USAGE: &str = "\
@@ -38,10 +42,13 @@ USAGE:
 COMMANDS:
   gen-trace     generate synthetic VMware-style traces as CSV
   sim           run the cluster simulator (--scenario NAME|FILE.toml, --json,
-                --replay CSV|DIR for trace-driven arrivals)
+                --replay CSV|DIR for trace-driven arrivals, --trace-source
+                auto|stream|materialized for large fleets)
   scenarios     list the built-in scenario catalog
   eval          fleet evaluation of rejection-signal quality (Fig 6/7)
   federate      run the concurrent DASM federation
+  bench         fleet-scale engine benchmark (`bench engine` writes
+                BENCH_engine.json: events/s, wall time, peak queue depth)
   bench-tables  regenerate the paper tables (see also cargo bench)
   serve         stream trace CSVs through node pipelines, emit decisions
   inspect       show the AOT artifact manifest and compile status
@@ -75,6 +82,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "scenarios" => cmd_scenarios(rest),
         "eval" => cmd_eval(rest),
         "federate" => cmd_federate(rest),
+        "bench" => cmd_bench(rest),
         "bench-tables" => cmd_bench_tables(rest),
         "serve" => cmd_serve(rest),
         "inspect" => cmd_inspect(rest),
@@ -95,8 +103,11 @@ fn load_config(args: &Args) -> Result<ProntoConfig> {
 
 fn gen_fleet(cfg: &ProntoConfig) -> Vec<VmTrace> {
     let gen = TraceGenerator::new(cfg.generator.clone(), cfg.seed);
-    (0..cfg.nodes)
-        .map(|v| gen.generate_vm_in_cluster(v / cfg.fanout, v, cfg.steps))
+    // Same membership rule as the streaming path (fleet_members), which
+    // is what keeps the two trace sources byte-identical.
+    fleet_members(cfg.nodes, cfg.fanout)
+        .into_iter()
+        .map(|(c, v)| gen.generate_vm_in_cluster(c, v, cfg.steps))
         .collect()
 }
 
@@ -158,6 +169,7 @@ fn cmd_sim(raw: &[String]) -> Result<()> {
     let args = Args::parse(raw, &["json"])?;
     args.reject_unknown(&[
         "config", "policy", "nodes", "steps", "seed", "scenario", "replay", "replay-metric",
+        "trace-source",
     ])?;
     if args.get("replay-metric").is_some() && args.get("replay").is_none() {
         bail!("--replay-metric requires --replay");
@@ -168,6 +180,12 @@ fn cmd_sim(raw: &[String]) -> Result<()> {
     cfg.seed = args.get_u64("seed", cfg.seed)?;
     let policy = args.get("policy").unwrap_or("pronto");
     let json = args.flag("json");
+    // Validate up front so a typo'd value fails loudly on every path —
+    // the facade ignores the flag's *effect* but not its spelling.
+    let trace_source = args.get("trace-source").unwrap_or("auto");
+    if !matches!(trace_source, "auto" | "stream" | "materialized") {
+        bail!("--trace-source '{trace_source}' (auto | stream | materialized)");
+    }
 
     // --scenario routes through the discrete-event engine with the full
     // scenario feature set (churn, bursts, federation latency); without
@@ -218,18 +236,39 @@ fn cmd_sim(raw: &[String]) -> Result<()> {
         }
     };
 
-    let fleet = gen_fleet(&cfg);
-    let policies: Vec<Box<dyn Admission>> = fleet
-        .iter()
-        .enumerate()
-        .map(|(i, t)| make_policy(policy, t.dim(), i, &cfg))
-        .collect::<Result<_>>()?;
-
     let report = if let Some(scenario) = scenario {
-        let dims: Vec<usize> = fleet.iter().map(|t| t.dim()).collect();
-        // try_new: a malformed fleet (empty replay directory, header-only
-        // CSVs) is a typed error on stderr, not an index panic.
-        let mut engine = DiscreteEventEngine::try_new(scenario.clone(), fleet, policies)?;
+        // Telemetry backing: `auto` streams large fleets (the two paths
+        // are byte-identical per seed, so this only changes memory and
+        // startup latency, never the report).
+        let stream = match trace_source {
+            "stream" => true,
+            "materialized" => false,
+            _ => {
+                scenario.nodes >= 512
+                    || scenario.nodes.saturating_mul(scenario.steps) >= 1_000_000
+            }
+        };
+        let (source, dims) = if stream {
+            let gen = TraceGenerator::new(cfg.generator.clone(), cfg.seed);
+            let members = fleet_members(cfg.nodes, cfg.fanout);
+            let source =
+                TraceSource::streaming(&gen, &members, cfg.steps, scenario.score_window);
+            (source, vec![cfg.generator.dim; cfg.nodes])
+        } else {
+            let fleet = gen_fleet(&cfg);
+            let dims: Vec<usize> = fleet.iter().map(|t| t.dim()).collect();
+            (TraceSource::materialized(fleet), dims)
+        };
+        let policies: Vec<Box<dyn Admission>> = dims
+            .iter()
+            .enumerate()
+            .map(|(i, &d)| make_policy(policy, d, i, &cfg))
+            .collect::<Result<_>>()?;
+        // try_from_source: a malformed fleet (empty replay directory,
+        // header-only CSVs) is a typed error on stderr, not an index
+        // panic.
+        let mut engine =
+            DiscreteEventEngine::try_from_source(scenario.clone(), source, policies)?;
         if scenario.churn.is_some() {
             // Rejoining nodes restart with fresh policy state.
             let cfg = cfg.clone();
@@ -241,6 +280,15 @@ fn cmd_sim(raw: &[String]) -> Result<()> {
         }
         engine.run()
     } else {
+        if trace_source == "stream" {
+            bail!("--trace-source stream requires --scenario (the facade materializes)");
+        }
+        let fleet = gen_fleet(&cfg);
+        let policies: Vec<Box<dyn Admission>> = fleet
+            .iter()
+            .enumerate()
+            .map(|(i, t)| make_policy(policy, t.dim(), i, &cfg))
+            .collect::<Result<_>>()?;
         DataCenterSim::new(cfg.sim.clone(), fleet, policies).run()
     };
 
@@ -491,6 +539,59 @@ fn cmd_federate(raw: &[String]) -> Result<()> {
         report.pushes, report.suppressed, report.late_drops
     );
     println!("  global rank   : {}", report.global_view.rank());
+    Ok(())
+}
+
+/// `pronto bench engine`: sweep catalog scenarios over fleet sizes
+/// through the streaming trace source and write the machine-readable
+/// `BENCH_engine.json` perf artifact (events/s, wall time, peak queue
+/// depth per run).
+fn cmd_bench(raw: &[String]) -> Result<()> {
+    let args = Args::parse(raw, &["quick"])?;
+    args.reject_unknown(&["out", "sizes", "steps", "seed", "scenarios"])?;
+    let sub = args.positional().first().map(String::as_str);
+    if sub != Some("engine") {
+        bail!(
+            "usage: pronto bench engine [--quick] [--out FILE] \
+             [--sizes 100,1000,5000] [--steps N] [--seed S] [--scenarios a,b,c]"
+        );
+    }
+    let mut cfg = if args.flag("quick") {
+        EngineBenchConfig::quick()
+    } else {
+        // PRONTO_BENCH_QUICK=1 selects quick sizing too (CI smoke).
+        EngineBenchConfig::from_env()
+    };
+    if let Some(sizes) = args.get("sizes") {
+        cfg.sizes = sizes
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<usize>()
+                    .map_err(|_| anyhow!("--sizes: bad integer '{s}'"))
+            })
+            .collect::<Result<_>>()?;
+        if cfg.sizes.is_empty() || cfg.sizes.contains(&0) {
+            bail!("--sizes: need at least one positive fleet size");
+        }
+    }
+    cfg.steps = args.get_usize("steps", cfg.steps)?;
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+    if let Some(list) = args.get("scenarios") {
+        cfg.scenarios = list
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+        if cfg.scenarios.is_empty() {
+            bail!("--scenarios: empty list");
+        }
+    }
+    let runs = bench_engine(&cfg)?;
+    let doc = bench_engine_report(&cfg, &runs);
+    let out = args.get("out").unwrap_or("BENCH_engine.json");
+    std::fs::write(out, format!("{doc}\n")).with_context(|| format!("writing {out}"))?;
+    println!("wrote {} engine bench runs to {out}", runs.len());
     Ok(())
 }
 
@@ -746,6 +847,69 @@ mod tests {
     #[test]
     fn sim_rejects_bad_scenario() {
         assert!(run(&argv(&["sim", "--scenario", "not-a-scenario"])).is_err());
+    }
+
+    #[test]
+    fn sim_trace_source_modes_run_and_garbage_is_rejected() {
+        for mode in ["auto", "stream", "materialized"] {
+            assert!(
+                run(&argv(&[
+                    "sim", "--scenario", "capacity", "--nodes", "4", "--steps", "120",
+                    "--policy", "always", "--trace-source", mode, "--json",
+                ]))
+                .is_ok(),
+                "mode {mode} failed"
+            );
+        }
+        assert!(run(&argv(&[
+            "sim", "--scenario", "capacity", "--trace-source", "psychic"
+        ]))
+        .is_err());
+        // The facade path validates the spelling too, not just "stream".
+        assert!(run(&argv(&[
+            "sim", "--scenario", "none", "--trace-source", "psychic", "--nodes", "3",
+            "--steps", "100"
+        ]))
+        .is_err());
+        // The fixed-step facade has no streaming path.
+        assert!(run(&argv(&[
+            "sim", "--scenario", "none", "--trace-source", "stream", "--nodes", "3",
+            "--steps", "100"
+        ]))
+        .is_err());
+    }
+
+    #[test]
+    fn bench_engine_quick_writes_artifact() {
+        let dir = std::env::temp_dir().join("pronto_cli_bench");
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("BENCH_engine.json");
+        let out_s = out.to_string_lossy().to_string();
+        assert!(run(&argv(&[
+            "bench", "engine", "--quick", "--sizes", "12", "--steps", "80",
+            "--scenarios", "large-fleet,flash-crowd", "--out", &out_s,
+        ]))
+        .is_ok());
+        let text = std::fs::read_to_string(&out).unwrap();
+        let doc = crate::ser::parse_json(&text).expect("valid BENCH_engine.json");
+        assert_eq!(
+            doc.get("bench").and_then(crate::ser::JsonValue::as_str),
+            Some("engine")
+        );
+        // One size x two scenarios = two runs.
+        assert!(matches!(
+            doc.get("runs"),
+            Some(crate::ser::JsonValue::Array(a)) if a.len() == 2
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bench_requires_the_engine_subcommand() {
+        assert!(run(&argv(&["bench"])).is_err());
+        assert!(run(&argv(&["bench", "nope"])).is_err());
+        assert!(run(&argv(&["bench", "engine", "--sizes", "0"])).is_err());
+        assert!(run(&argv(&["bench", "engine", "--scenarios", "nope", "--sizes", "2"])).is_err());
     }
 
     #[test]

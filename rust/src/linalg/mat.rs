@@ -192,8 +192,18 @@ impl Mat {
 
     /// Matrix–vector product `self * v`.
     pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
-        assert_eq!(self.cols, v.len(), "matvec dim mismatch");
         let mut out = vec![0.0; self.rows];
+        self.matvec_into(v, &mut out);
+        out
+    }
+
+    /// Matrix–vector product `self * v` into a caller-owned buffer
+    /// (allocation-free; same accumulation order as [`Mat::matvec`], so
+    /// results are bit-identical).
+    pub fn matvec_into(&self, v: &[f64], out: &mut [f64]) {
+        assert_eq!(self.cols, v.len(), "matvec dim mismatch");
+        assert_eq!(self.rows, out.len(), "matvec out dim mismatch");
+        out.fill(0.0);
         for (j, &x) in v.iter().enumerate() {
             if x == 0.0 {
                 continue;
@@ -203,7 +213,6 @@ impl Mat {
                 out[i] += c[i] * x;
             }
         }
-        out
     }
 
     /// `selfᵀ * v` — projections of v onto each column.

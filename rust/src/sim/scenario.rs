@@ -448,6 +448,8 @@ pub const CATALOG: &[&str] = &[
     "queue-aware",
     "priority",
     "hetero",
+    "large-fleet",
+    "flash-crowd",
 ];
 
 impl Scenario {
@@ -578,6 +580,51 @@ impl Scenario {
                         HostClass { slots: 2, weight: 0.5 },
                         HostClass { slots: 4, weight: 0.25 },
                     ],
+                    ..CapacityModel::default()
+                }),
+                ..base
+            },
+            // The horizontal-scalability regime: a 2 000-node fleet under
+            // steady Poisson load at ~70 % slot utilization. Sized for the
+            // streaming trace source (`pronto sim` auto-streams at this
+            // fleet size; `pronto bench engine` sweeps it at 100/1k/5k
+            // nodes).
+            "large-fleet" => Scenario {
+                name: name.into(),
+                nodes: 2_000,
+                arrivals: ArrivalPattern::Poisson { rate: 100.0 },
+                capacity: Some(CapacityModel {
+                    slots_per_node: 2,
+                    contended_slots: 2,
+                    queue_capacity: 4,
+                    max_job_slots: 1,
+                    queue_policy: QueuePolicy::Fifo,
+                    migration_limit: 0,
+                    ..CapacityModel::default()
+                }),
+                ..base
+            },
+            // A 1 000-node fleet hit by MMPP burst storms: ~28 % baseline
+            // load punctuated by ~25-step storms whose offered load far
+            // exceeds the whole fleet — queues flood, bounded queues drop,
+            // queue-aware dispatch spreads the blast.
+            "flash-crowd" => Scenario {
+                name: name.into(),
+                nodes: 1_000,
+                arrivals: ArrivalPattern::Bursty {
+                    base_rate: 20.0,
+                    burst_rate: 400.0,
+                    mean_burst_len: 25.0,
+                    mean_gap_len: 250.0,
+                },
+                dispatch: DispatchPolicy::QueueAware,
+                capacity: Some(CapacityModel {
+                    slots_per_node: 2,
+                    contended_slots: 2,
+                    queue_capacity: 4,
+                    max_job_slots: 1,
+                    queue_policy: QueuePolicy::Fifo,
+                    migration_limit: 0,
                     ..CapacityModel::default()
                 }),
                 ..base
@@ -1485,6 +1532,37 @@ migration_limit = 3
         // exercised by design, and the largest class covers the draw.
         assert!(c.max_job_slots > c.host_classes[0].slots);
         assert!(c.max_job_slots <= c.max_host_slots());
+
+        // The scale entries: steady load inside the fleet budget for
+        // `large-fleet`, storms far beyond it for `flash-crowd`.
+        let mean_duration = |s: &Scenario| {
+            (s.duration_mu + 0.5 * s.duration_sigma * s.duration_sigma).exp()
+        };
+        let lf = Scenario::named("large-fleet").unwrap();
+        assert_eq!(lf.nodes, 2_000);
+        let c = lf.capacity.as_ref().unwrap();
+        let budget = (lf.nodes as u32 * c.slots_per_node) as f64;
+        let offered = lf.arrivals.mean_rate() * mean_duration(&lf);
+        assert!(
+            offered > 0.4 * budget && offered < budget,
+            "large-fleet load {offered:.0} out of family for budget {budget:.0}"
+        );
+
+        let fc = Scenario::named("flash-crowd").unwrap();
+        assert_eq!(fc.nodes, 1_000);
+        assert_eq!(fc.dispatch, DispatchPolicy::QueueAware);
+        let c = fc.capacity.as_ref().unwrap();
+        let budget = (fc.nodes as u32 * c.slots_per_node) as f64;
+        match &fc.arrivals {
+            ArrivalPattern::Bursty { base_rate, burst_rate, .. } => {
+                assert!(base_rate * mean_duration(&fc) < 0.5 * budget, "baseline too hot");
+                assert!(
+                    burst_rate * mean_duration(&fc) > 2.0 * budget,
+                    "storms must flood the fleet"
+                );
+            }
+            other => panic!("flash-crowd must be bursty, got {other:?}"),
+        }
     }
 
     fn cap_model_of(name: &str) -> Option<CapacityModel> {

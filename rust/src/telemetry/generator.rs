@@ -162,6 +162,43 @@ impl TraceGenerator {
         self.generate_vm_in_cluster(0, vm_id, steps)
     }
 
+    /// Open an incremental column stream for one VM of a cluster: the
+    /// exact sample sequence of [`TraceGenerator::generate_vm_in_cluster`]
+    /// produced one step at a time with O(d) state — no full-horizon
+    /// materialization. Both paths run the same per-step code, so a
+    /// streamed column `t` is bit-identical to column `t` of the
+    /// materialized trace.
+    pub fn stream_vm_in_cluster(&self, cluster_id: usize, vm_id: usize) -> VmTraceStream {
+        let cfg = self.cfg.clone();
+        // Independent streams: cluster weather, VM structure, VM noise.
+        let cluster_rng = self.derive_rng(&[1, cluster_id as u64]);
+        let mut vm_rng = self.derive_rng(&[2, cluster_id as u64, vm_id as u64]);
+
+        let archetype = vm_rng.gen_range(N_ARCHETYPES);
+        let loading = self.loading_matrix(archetype, &mut vm_rng);
+        let phase = vm_rng.next_f64() * STEPS_PER_DAY as f64;
+        let sigma = (1.0 - cfg.ar_rho * cfg.ar_rho).sqrt();
+
+        VmTraceStream {
+            cfg,
+            vm_id,
+            cluster_id,
+            archetype,
+            loading,
+            phase,
+            sigma,
+            cluster_rng,
+            vm_rng,
+            weather: 0.0,
+            x: [0.0; LATENT_K],
+            precursor_left: 0,
+            spike_in: None,
+            spike_left: 0,
+            spike_scale: 0.0,
+            t: 0,
+        }
+    }
+
     /// Generate one VM belonging to a cluster (shares cluster weather).
     pub fn generate_vm_in_cluster(
         &self,
@@ -169,126 +206,18 @@ impl TraceGenerator {
         vm_id: usize,
         steps: usize,
     ) -> VmTrace {
-        let cfg = &self.cfg;
-        let d = cfg.dim;
-        // Independent streams: cluster weather, VM structure, VM noise.
-        let mut cluster_rng = self.derive_rng(&[1, cluster_id as u64]);
-        let mut vm_rng = self.derive_rng(&[2, cluster_id as u64, vm_id as u64]);
-
-        let archetype = vm_rng.gen_range(N_ARCHETYPES);
-        let loading = self.loading_matrix(archetype, &mut vm_rng);
-        let phase = vm_rng.next_f64() * STEPS_PER_DAY as f64;
-
-        // Cluster weather: slow multiplicative load level shared by all VMs
-        // of the cluster (regenerated identically per VM from cluster_rng).
-        let mut weather = vec![0.0f64; steps];
-        {
-            let mut w = 0.0;
-            for slot in weather.iter_mut() {
-                w = 0.995 * w + 0.05 * cluster_rng.normal();
-                *slot = w;
-            }
-        }
-
+        let d = self.cfg.dim;
+        let mut stream = self.stream_vm_in_cluster(cluster_id, vm_id);
         let mut data = Mat::zeros(d, steps);
+        for t in 0..steps {
+            stream.next_into(data.col_mut(t));
+        }
         let names: Vec<String> = if d == VM_DIM {
             vm_metric_names().iter().map(|s| s.to_string()).collect()
         } else {
             (0..d).map(|i| format!("metric.{i}")).collect()
         };
-
-        // Latent factor state (AR(1) around seasonal mean).
-        let mut x = [0.0f64; LATENT_K];
-        // Precursor bump remaining per factor, and pending/active episodes.
-        let mut precursor_left = 0usize;
-        let mut spike_in: Option<usize> = None; // countdown to spike start
-        let mut spike_left = 0usize;
-        let mut spike_scale = 0.0f64;
-
-        let sigma = (1.0 - cfg.ar_rho * cfg.ar_rho).sqrt();
-        for t in 0..steps {
-            // Seasonality: diurnal + weekly modulation.
-            let day_pos = (t as f64 + phase) / STEPS_PER_DAY as f64 * std::f64::consts::TAU;
-            let week_pos = day_pos / 7.0;
-            let season = 0.8 * day_pos.sin() + 0.2 * week_pos.sin();
-
-            // Factor dynamics (idiosyncratic AR(1) around the seasonal mean).
-            for (k, xk) in x.iter_mut().enumerate() {
-                let drive = if k == 0 { season } else { 0.5 * season };
-                *xk = cfg.ar_rho * *xk + sigma * vm_rng.normal() + 0.05 * drive;
-            }
-            // Effective factors: idiosyncratic state + seasonal swing +
-            // cluster weather (the shared component that makes same-cluster
-            // VMs informative about each other, Tables 1–3).
-            let mut xe = x;
-            xe[0] += 0.6 * season + 1.2 * weather[t];
-            xe[1] += 0.4 * weather[t];
-            xe[2] += 0.3 * season + 0.4 * weather[t];
-            xe[3] += 0.4 * season + 0.6 * weather[t];
-
-            // Effective CPU pressure in [0, ~1].
-            let pressure = sigmoid(xe[0]);
-
-            // Episode machinery.
-            if spike_in.is_none() && spike_left == 0 {
-                let hazard = cfg.episode_hazard * (1.0 + cfg.hazard_load_gain * pressure);
-                if vm_rng.bernoulli(hazard) {
-                    let surprise = vm_rng.bernoulli(cfg.surprise_rate);
-                    let lead = if surprise { 0 } else { 1 + vm_rng.gen_range(cfg.lead) };
-                    spike_in = Some(lead);
-                    precursor_left = if surprise { 0 } else { lead };
-                    spike_scale = 1.0 + vm_rng.exponential(1.2);
-                }
-            }
-
-            // Precursor: inject a strong common shift into the latent
-            // factors for the lead interval before the spike.
-            let mut xe = xe;
-            if precursor_left > 0 {
-                xe[0] += cfg.precursor_gain * sigma;
-                xe[2] += 0.5 * cfg.precursor_gain * sigma;
-                precursor_left -= 1;
-            }
-            if let Some(cd) = spike_in {
-                if cd == 0 {
-                    spike_in = None;
-                    // Geometric duration with the configured mean.
-                    spike_left = 1 + sample_geometric(&mut vm_rng, 1.0 / cfg.mean_episode_len);
-                } else {
-                    spike_in = Some(cd - 1);
-                }
-            }
-
-            // Metric vector: loading * factors, group-scaled, plus noise.
-            let mut y = loading.matvec(&xe);
-            for (g, &(lo, hi)) in GROUPS.iter().enumerate() {
-                // Scale groups to plausible counter magnitudes.
-                let scale = match g {
-                    0 => 40.0,  // cpu %
-                    1 => 55.0,  // mem %
-                    2 => 30.0,  // disk rates
-                    3 => 25.0,  // net rates
-                    _ => 10.0,  // sys
-                };
-                for item in y.iter_mut().take(hi.min(d)).skip(lo) {
-                    let noisy = *item + cfg.obs_noise * vm_rng.normal();
-                    *item = (scale * (1.0 + 0.5 * noisy)).max(0.0);
-                }
-            }
-
-            // CPU Ready: log-normal floor plus episode spikes, clamped to
-            // the sampling period.
-            let mut ready = vm_rng.log_normal(cfg.ready_mu, cfg.ready_sigma);
-            if spike_left > 0 {
-                ready += 450.0 * spike_scale * (1.0 + 0.15 * vm_rng.normal().abs());
-                spike_left -= 1;
-            }
-            y[CPU_READY_IDX] = ready.clamp(0.0, SAMPLE_PERIOD_MS);
-
-            data.col_mut(t).copy_from_slice(&y);
-        }
-
-        VmTrace::new(vm_id, cluster_id, archetype, data, names)
+        VmTrace::new(vm_id, cluster_id, stream.archetype, data, names)
     }
 
     /// Generate a whole cluster of `n_vms` VMs with shared weather.
@@ -307,6 +236,160 @@ impl TraceGenerator {
             acc = h2.next_u64();
         }
         Xoshiro256::seed_from_u64(acc)
+    }
+}
+
+/// Incremental generator state for one VM: yields the columns of
+/// [`TraceGenerator::generate_vm_in_cluster`] one step at a time.
+///
+/// The whole state is O(d): the loading matrix, two RNGs, the AR(1)
+/// latent factors, the scalar cluster-weather level, and the episode
+/// machinery. Streaming a 5 000-node fleet therefore costs a few KB per
+/// node instead of `steps × d` doubles per node — the memory-limited
+/// regime the paper's horizontal-scalability claim lives in. Columns are
+/// bit-identical to the materialized trace (both paths run this code).
+#[derive(Debug, Clone)]
+pub struct VmTraceStream {
+    cfg: GeneratorConfig,
+    vm_id: usize,
+    cluster_id: usize,
+    archetype: usize,
+    /// Archetype/VM loading matrix L ∈ ℝ^{d×k}.
+    loading: Mat,
+    phase: f64,
+    /// AR(1) innovation scale √(1 − ρ²).
+    sigma: f64,
+    cluster_rng: Xoshiro256,
+    vm_rng: Xoshiro256,
+    /// Cluster weather level (AR(1), shared by construction: every VM of
+    /// the cluster replays the same `cluster_rng` sequence).
+    weather: f64,
+    /// Latent factor state.
+    x: [f64; LATENT_K],
+    precursor_left: usize,
+    /// Countdown to spike start.
+    spike_in: Option<usize>,
+    spike_left: usize,
+    spike_scale: f64,
+    /// Next step to generate.
+    t: usize,
+}
+
+impl VmTraceStream {
+    pub fn vm_id(&self) -> usize {
+        self.vm_id
+    }
+
+    pub fn cluster_id(&self) -> usize {
+        self.cluster_id
+    }
+
+    pub fn archetype(&self) -> usize {
+        self.archetype
+    }
+
+    /// Feature dimension d of the generated columns.
+    pub fn dim(&self) -> usize {
+        self.cfg.dim
+    }
+
+    /// The next step this stream will generate.
+    pub fn step(&self) -> usize {
+        self.t
+    }
+
+    /// Generate the metric vector for the next step into `out`
+    /// (`out.len() == dim()`), allocation-free.
+    pub fn next_into(&mut self, out: &mut [f64]) {
+        let cfg = &self.cfg;
+        let d = cfg.dim;
+        debug_assert_eq!(out.len(), d);
+        let t = self.t;
+        self.t += 1;
+
+        // Cluster weather advances exactly one AR(1) step per column.
+        self.weather = 0.995 * self.weather + 0.05 * self.cluster_rng.normal();
+        let weather = self.weather;
+
+        // Seasonality: diurnal + weekly modulation.
+        let day_pos = (t as f64 + self.phase) / STEPS_PER_DAY as f64 * std::f64::consts::TAU;
+        let week_pos = day_pos / 7.0;
+        let season = 0.8 * day_pos.sin() + 0.2 * week_pos.sin();
+
+        // Factor dynamics (idiosyncratic AR(1) around the seasonal mean).
+        let sigma = self.sigma;
+        for (k, xk) in self.x.iter_mut().enumerate() {
+            let drive = if k == 0 { season } else { 0.5 * season };
+            *xk = cfg.ar_rho * *xk + sigma * self.vm_rng.normal() + 0.05 * drive;
+        }
+        // Effective factors: idiosyncratic state + seasonal swing +
+        // cluster weather (the shared component that makes same-cluster
+        // VMs informative about each other, Tables 1–3).
+        let mut xe = self.x;
+        xe[0] += 0.6 * season + 1.2 * weather;
+        xe[1] += 0.4 * weather;
+        xe[2] += 0.3 * season + 0.4 * weather;
+        xe[3] += 0.4 * season + 0.6 * weather;
+
+        // Effective CPU pressure in [0, ~1].
+        let pressure = sigmoid(xe[0]);
+
+        // Episode machinery.
+        if self.spike_in.is_none() && self.spike_left == 0 {
+            let hazard = cfg.episode_hazard * (1.0 + cfg.hazard_load_gain * pressure);
+            if self.vm_rng.bernoulli(hazard) {
+                let surprise = self.vm_rng.bernoulli(cfg.surprise_rate);
+                let lead = if surprise { 0 } else { 1 + self.vm_rng.gen_range(cfg.lead) };
+                self.spike_in = Some(lead);
+                self.precursor_left = if surprise { 0 } else { lead };
+                self.spike_scale = 1.0 + self.vm_rng.exponential(1.2);
+            }
+        }
+
+        // Precursor: inject a strong common shift into the latent
+        // factors for the lead interval before the spike.
+        let mut xe = xe;
+        if self.precursor_left > 0 {
+            xe[0] += cfg.precursor_gain * sigma;
+            xe[2] += 0.5 * cfg.precursor_gain * sigma;
+            self.precursor_left -= 1;
+        }
+        if let Some(cd) = self.spike_in {
+            if cd == 0 {
+                self.spike_in = None;
+                // Geometric duration with the configured mean.
+                self.spike_left =
+                    1 + sample_geometric(&mut self.vm_rng, 1.0 / cfg.mean_episode_len);
+            } else {
+                self.spike_in = Some(cd - 1);
+            }
+        }
+
+        // Metric vector: loading * factors, group-scaled, plus noise.
+        self.loading.matvec_into(&xe, out);
+        for (g, &(lo, hi)) in GROUPS.iter().enumerate() {
+            // Scale groups to plausible counter magnitudes.
+            let scale = match g {
+                0 => 40.0,  // cpu %
+                1 => 55.0,  // mem %
+                2 => 30.0,  // disk rates
+                3 => 25.0,  // net rates
+                _ => 10.0,  // sys
+            };
+            for item in out.iter_mut().take(hi.min(d)).skip(lo) {
+                let noisy = *item + cfg.obs_noise * self.vm_rng.normal();
+                *item = (scale * (1.0 + 0.5 * noisy)).max(0.0);
+            }
+        }
+
+        // CPU Ready: log-normal floor plus episode spikes, clamped to
+        // the sampling period.
+        let mut ready = self.vm_rng.log_normal(cfg.ready_mu, cfg.ready_sigma);
+        if self.spike_left > 0 {
+            ready += 450.0 * self.spike_scale * (1.0 + 0.15 * self.vm_rng.normal().abs());
+            self.spike_left -= 1;
+        }
+        out[CPU_READY_IDX] = ready.clamp(0.0, SAMPLE_PERIOD_MS);
     }
 }
 
@@ -337,6 +420,25 @@ mod tests {
         for t in 0..500 {
             assert_eq!(a.features(t), b.features(t));
         }
+    }
+
+    #[test]
+    fn stream_yields_bit_identical_columns() {
+        // The streaming path must be indistinguishable from materializing:
+        // exact f64 equality, column by column.
+        let g = gen();
+        let tr = g.generate_vm_in_cluster(2, 3, 400);
+        let mut s = g.stream_vm_in_cluster(2, 3);
+        assert_eq!(s.dim(), tr.dim());
+        assert_eq!(s.vm_id(), 3);
+        assert_eq!(s.cluster_id(), 2);
+        let mut col = vec![0.0; tr.dim()];
+        for t in 0..400 {
+            assert_eq!(s.step(), t);
+            s.next_into(&mut col);
+            assert_eq!(&col[..], tr.features(t), "column {t} diverged");
+        }
+        assert_eq!(s.archetype(), tr.archetype);
     }
 
     #[test]

@@ -12,12 +12,17 @@
 //!   factors drive many correlated counters), CPU Ready is near zero except
 //!   for *contention episodes*, and episodes are preceded by precursor drift
 //!   in the latent factors a few samples ahead;
-//! * [`trace`] — in-memory trace containers with CSV round-trip.
+//! * [`trace`] — in-memory trace containers with CSV round-trip;
+//! * [`source`] — fleet-level [`TraceSource`]: the engine's telemetry
+//!   input, either fully materialized traces or windowed per-node
+//!   streaming with O(nodes + window) memory.
 
 pub mod catalog;
 pub mod generator;
+pub mod source;
 pub mod trace;
 
 pub use catalog::{host_metric_names, vm_metric_names, CPU_READY_IDX, VM_DIM};
-pub use generator::{ClusterTrace, GeneratorConfig, TraceGenerator};
+pub use generator::{ClusterTrace, GeneratorConfig, TraceGenerator, VmTraceStream};
+pub use source::{fleet_members, StreamingFleet, TraceSource};
 pub use trace::VmTrace;

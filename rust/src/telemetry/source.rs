@@ -1,0 +1,309 @@
+//! Fleet-level trace sources: materialized replay or windowed streaming.
+//!
+//! The discrete-event engine consumes telemetry through a [`TraceSource`]
+//! rather than owning a `Vec<VmTrace>` directly. Two backings exist:
+//!
+//! * [`TraceSource::Materialized`] — the legacy path: every node's full
+//!   trace in memory (`O(nodes × steps × dims)`), exactly what CSV replay
+//!   and the existing tests construct.
+//! * [`TraceSource::Streaming`] — per-node [`VmTraceStream`] generators
+//!   plus a small ring buffer per node (`O(nodes × (window + state))`
+//!   memory, independent of the horizon). The engine's access pattern —
+//!   monotone per-step consumption with a bounded look-ahead for spike
+//!   scoring — fits a sliding window, so multi-thousand-node ×
+//!   multi-thousand-step fleets run without materializing full-horizon
+//!   traces.
+//!
+//! Both backings produce **bit-identical** metric vectors for the same
+//! generator config/seed/membership, which is what makes `--json` reports
+//! byte-comparable across the two paths (regression-tested per catalog
+//! scenario).
+
+use crate::telemetry::catalog::CPU_READY_IDX;
+use crate::telemetry::generator::{TraceGenerator, VmTraceStream};
+use crate::telemetry::trace::VmTrace;
+
+/// Cluster membership of a generated fleet: node `v` lives in cluster
+/// `v / fanout`. One definition shared by the CLI (both trace-source
+/// modes) and the benches, because streaming-vs-materialized byte parity
+/// depends on every caller agreeing on this mapping.
+pub fn fleet_members(nodes: usize, fanout: usize) -> Vec<(usize, usize)> {
+    let fanout = fanout.max(1);
+    (0..nodes).map(|v| (v / fanout, v)).collect()
+}
+
+/// A fleet of per-node telemetry streams the engine can drive.
+pub enum TraceSource {
+    /// Full traces in memory (legacy path; CSV replay, tests).
+    Materialized(Vec<VmTrace>),
+    /// On-demand generation with a sliding window per node.
+    Streaming(StreamingFleet),
+}
+
+impl TraceSource {
+    /// Wrap pre-materialized traces (the historical engine input).
+    pub fn materialized(traces: Vec<VmTrace>) -> Self {
+        TraceSource::Materialized(traces)
+    }
+
+    /// Open one generator stream per `(cluster_id, vm_id)` membership,
+    /// with `horizon` total steps and reads allowed up to `lookahead`
+    /// steps past the newest step previously read (the engine passes its
+    /// scoring window).
+    pub fn streaming(
+        gen: &TraceGenerator,
+        members: &[(usize, usize)],
+        horizon: usize,
+        lookahead: usize,
+    ) -> Self {
+        TraceSource::Streaming(StreamingFleet::new(gen, members, horizon, lookahead))
+    }
+
+    /// Number of nodes in the fleet.
+    pub fn nodes(&self) -> usize {
+        match self {
+            TraceSource::Materialized(tr) => tr.len(),
+            TraceSource::Streaming(s) => s.streams.len(),
+        }
+    }
+
+    /// Feature dimension (of node 0; the engine validates non-emptiness).
+    pub fn dim(&self) -> usize {
+        match self {
+            TraceSource::Materialized(tr) => tr.first().map_or(0, VmTrace::dim),
+            TraceSource::Streaming(s) => s.dim,
+        }
+    }
+
+    /// Steps available to drive: the shortest trace (materialized) or the
+    /// construction horizon (streaming).
+    pub fn len(&self) -> usize {
+        match self {
+            TraceSource::Materialized(tr) => {
+                tr.iter().map(VmTrace::len).min().unwrap_or(0)
+            }
+            TraceSource::Streaming(s) => s.horizon,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Is this the windowed streaming backing?
+    pub fn is_streaming(&self) -> bool {
+        matches!(self, TraceSource::Streaming(_))
+    }
+
+    /// Metric vector of `node` at `step`. Streaming: `step` must lie
+    /// within the sliding window (never more than `lookahead` past the
+    /// newest step read so far, never behind the window's tail).
+    #[inline]
+    pub fn features(&mut self, node: usize, step: usize) -> &[f64] {
+        match self {
+            TraceSource::Materialized(tr) => tr[node].features(step),
+            TraceSource::Streaming(s) => s.column(node, step),
+        }
+    }
+
+    /// CPU Ready value of `node` at `step` (same window rules).
+    #[inline]
+    pub fn cpu_ready(&mut self, node: usize, step: usize) -> f64 {
+        match self {
+            TraceSource::Materialized(tr) => tr[node].cpu_ready(step),
+            TraceSource::Streaming(s) => s.column(node, step)[CPU_READY_IDX],
+        }
+    }
+
+    /// Does `node`'s CPU Ready reach `threshold` anywhere in `lo..=hi`?
+    /// (The engine's ground-truth spike scorer.)
+    pub fn spike_within(&mut self, node: usize, lo: usize, hi: usize, threshold: f64) -> bool {
+        (lo..=hi).any(|t| self.cpu_ready(node, t) >= threshold)
+    }
+}
+
+/// Per-node generator streams with a flat ring of the last `window`
+/// columns each. Total memory is `nodes × window × dim` doubles plus the
+/// O(dim) stream states — no dependence on the horizon.
+pub struct StreamingFleet {
+    streams: Vec<VmTraceStream>,
+    /// Ring storage, laid out `[node][slot][dim]`.
+    ring: Vec<f64>,
+    /// Per node: next step the stream will generate (steps
+    /// `frontier - window .. frontier` are buffered).
+    frontier: Vec<usize>,
+    window: usize,
+    dim: usize,
+    horizon: usize,
+}
+
+impl StreamingFleet {
+    fn new(
+        gen: &TraceGenerator,
+        members: &[(usize, usize)],
+        horizon: usize,
+        lookahead: usize,
+    ) -> Self {
+        let streams: Vec<VmTraceStream> = members
+            .iter()
+            .map(|&(cluster, vm)| gen.stream_vm_in_cluster(cluster, vm))
+            .collect();
+        let dim = gen.config().dim;
+        // The engine reads step s for every node after peeking at most
+        // `lookahead` steps past s on some node; +2 keeps the current and
+        // next step resident alongside the full look-ahead span.
+        let window = lookahead + 2;
+        Self {
+            ring: vec![0.0; streams.len() * window * dim],
+            frontier: vec![0; streams.len()],
+            streams,
+            window,
+            dim,
+            horizon,
+        }
+    }
+
+    /// Buffered doubles (diagnostics: memory is window-, not
+    /// horizon-proportional).
+    pub fn buffered_len(&self) -> usize {
+        self.ring.len()
+    }
+
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    #[inline]
+    fn slot(&self, node: usize, step: usize) -> usize {
+        (node * self.window + step % self.window) * self.dim
+    }
+
+    /// The column of `node` at `step`, advancing the node's stream as
+    /// needed. Panics when `step` has already slid out of the window —
+    /// that is an engine access-pattern bug, not a recoverable condition.
+    fn column(&mut self, node: usize, step: usize) -> &[f64] {
+        assert!(step < self.horizon, "streaming read past the horizon");
+        let dim = self.dim;
+        while self.frontier[node] <= step {
+            let t = self.frontier[node];
+            let at = self.slot(node, t);
+            self.streams[node].next_into(&mut self.ring[at..at + dim]);
+            self.frontier[node] = t + 1;
+        }
+        assert!(
+            step + self.window >= self.frontier[node],
+            "streaming read of step {step} on node {node} fell out of the \
+             window (frontier {}, window {})",
+            self.frontier[node],
+            self.window
+        );
+        let at = self.slot(node, step);
+        &self.ring[at..at + dim]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::GeneratorConfig;
+
+    fn generator() -> TraceGenerator {
+        TraceGenerator::new(GeneratorConfig::default(), 4321)
+    }
+
+    fn members(n: usize) -> Vec<(usize, usize)> {
+        (0..n).map(|v| (v / 4, v)).collect()
+    }
+
+    #[test]
+    fn streaming_matches_materialized_under_engine_access_pattern() {
+        let g = generator();
+        let n = 3;
+        let steps = 200;
+        let lookahead = 5;
+        let traces: Vec<VmTrace> = members(n)
+            .iter()
+            .map(|&(c, v)| g.generate_vm_in_cluster(c, v, steps))
+            .collect();
+        let mut src = TraceSource::streaming(&g, &members(n), steps, lookahead);
+        assert!(src.is_streaming());
+        assert_eq!(src.nodes(), n);
+        assert_eq!(src.dim(), traces[0].dim());
+        assert_eq!(src.len(), steps);
+        for step in 0..steps {
+            for (node, tr) in traces.iter().enumerate() {
+                assert_eq!(src.features(node, step), tr.features(step));
+            }
+            // Interleave look-aheads like the engine's spike scorer does.
+            let hi = (step + lookahead).min(steps - 1);
+            for node in 0..n {
+                assert_eq!(src.cpu_ready(node, hi), traces[node].cpu_ready(hi));
+                assert_eq!(
+                    src.spike_within(node, step, hi, 1000.0),
+                    (step..=hi).any(|t| traces[node].cpu_ready(t) >= 1000.0)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_memory_is_window_bounded() {
+        let g = generator();
+        let src = TraceSource::streaming(&g, &members(4), 1_000_000, 5);
+        let TraceSource::Streaming(fleet) = &src else { panic!("not streaming") };
+        // 4 nodes × (5 + 2) window slots × 52 dims — horizon-independent.
+        assert_eq!(fleet.window(), 7);
+        assert_eq!(fleet.buffered_len(), 4 * 7 * 52);
+    }
+
+    #[test]
+    fn lagging_nodes_catch_up_after_idle_gaps() {
+        // A node that is not read for a while (dead during churn) must
+        // resume with the same columns as the materialized trace.
+        let g = generator();
+        let steps = 300;
+        let tr = g.generate_vm_in_cluster(0, 1, steps);
+        let mut src = TraceSource::streaming(&g, &members(2), steps, 5);
+        assert_eq!(src.features(1, 0), tr.features(0));
+        // Node 0 advances far ahead; node 1 stays untouched.
+        for step in 1..250 {
+            src.features(0, step);
+        }
+        assert_eq!(src.features(1, 249), tr.features(249));
+    }
+
+    #[test]
+    #[should_panic(expected = "fell out of the window")]
+    fn reads_behind_the_window_panic() {
+        let g = generator();
+        let mut src = TraceSource::streaming(&g, &members(1), 500, 3);
+        src.features(0, 400);
+        src.features(0, 10);
+    }
+
+    #[test]
+    fn fleet_members_is_the_shared_membership_rule() {
+        assert_eq!(
+            fleet_members(5, 2),
+            vec![(0, 0), (0, 1), (1, 2), (1, 3), (2, 4)]
+        );
+        assert!(fleet_members(0, 4).is_empty());
+        // A degenerate fanout clamps to 1 instead of dividing by zero.
+        assert_eq!(fleet_members(2, 0), vec![(0, 0), (1, 1)]);
+    }
+
+    #[test]
+    fn materialized_source_wraps_traces() {
+        let g = generator();
+        let traces: Vec<VmTrace> = members(2)
+            .iter()
+            .map(|&(c, v)| g.generate_vm_in_cluster(c, v, 50))
+            .collect();
+        let expect = traces[1].cpu_ready(7);
+        let mut src = TraceSource::materialized(traces);
+        assert!(!src.is_streaming());
+        assert_eq!(src.nodes(), 2);
+        assert_eq!(src.len(), 50);
+        assert_eq!(src.cpu_ready(1, 7), expect);
+    }
+}

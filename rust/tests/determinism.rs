@@ -96,6 +96,36 @@ fn capacity_preemption_replay_are_byte_identical_per_seed() {
 }
 
 #[test]
+fn round_robin_probe_on_churn_scenario_is_byte_identical() {
+    // Satellite regression for the identity-tracked round-robin cursor:
+    // the `churn` catalog entry with `probe = round-robin` must stay
+    // bit-reproducible across runs (the cursor advances by node id, so
+    // leaves/joins shift nothing that isn't supposed to shift).
+    let mut scenario = Scenario::named("churn")
+        .unwrap()
+        .with_nodes(6)
+        .with_steps(1_500)
+        .with_seed(0xC0FFEE);
+    scenario.probe = pronto::sim::ProbePolicy::RoundRobin;
+    let tr = fleet(6, 1_500, 13);
+    let d = tr[0].dim();
+    let run = || {
+        DiscreteEventEngine::new(scenario.clone(), tr.clone(), pronto_policies(&tr))
+            .with_policy_factory(Box::new(move |_| {
+                Box::new(ProntoPolicy::new(NodeScheduler::new(
+                    d,
+                    RejectConfig::default(),
+                ))) as Box<dyn Admission>
+            }))
+            .run()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.to_json_string(), b.to_json_string());
+    assert_eq!(a.outcomes, b.outcomes);
+}
+
+#[test]
 fn seed_change_changes_outcomes() {
     let tr = fleet(4, 800, 23);
     let a = DiscreteEventEngine::new(

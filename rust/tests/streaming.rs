@@ -1,0 +1,199 @@
+//! Streaming trace-source regressions: the windowed streaming path must
+//! be byte-indistinguishable from materialized replay on every catalog
+//! scenario, and report documents must never contain non-finite values —
+//! even on degenerate runs (everything rejected, nothing arriving, no
+//! federation pushes).
+
+use pronto::scheduler::{Admission, NodeScheduler, ProntoPolicy, RandomPolicy, RejectConfig};
+use pronto::ser::JsonValue;
+use pronto::sim::{ArrivalPattern, DiscreteEventEngine, Scenario, CATALOG};
+use pronto::telemetry::{GeneratorConfig, TraceGenerator, TraceSource, VmTrace};
+
+fn members(n: usize) -> Vec<(usize, usize)> {
+    (0..n).map(|v| (v / 4, v)).collect()
+}
+
+fn fleet(gen: &TraceGenerator, n: usize, steps: usize) -> Vec<VmTrace> {
+    members(n)
+        .iter()
+        .map(|&(c, v)| gen.generate_vm_in_cluster(c, v, steps))
+        .collect()
+}
+
+fn always_policies(n: usize) -> Vec<Box<dyn Admission>> {
+    (0..n)
+        .map(|i| Box::new(RandomPolicy::always_accept(i as u64)) as Box<dyn Admission>)
+        .collect()
+}
+
+fn pronto_policies(n: usize, d: usize) -> Vec<Box<dyn Admission>> {
+    (0..n)
+        .map(|_| {
+            Box::new(ProntoPolicy::new(NodeScheduler::new(d, RejectConfig::default())))
+                as Box<dyn Admission>
+        })
+        .collect()
+}
+
+#[test]
+fn streaming_reports_match_materialized_on_every_catalog_scenario() {
+    // The acceptance criterion of the streaming work: same scenario, same
+    // seed, same generator → byte-identical `--json` documents whether
+    // telemetry is materialized up front or streamed through the window.
+    let n = 6;
+    let steps = 600;
+    for name in CATALOG {
+        let scenario = Scenario::named(name)
+            .unwrap()
+            .with_nodes(n)
+            .with_steps(steps)
+            .with_seed(0xFEED);
+        let gen = TraceGenerator::new(GeneratorConfig::default(), 1717);
+        let mat = DiscreteEventEngine::try_from_source(
+            scenario.clone(),
+            TraceSource::materialized(fleet(&gen, n, steps)),
+            always_policies(n),
+        )
+        .unwrap()
+        .run();
+        let stream = DiscreteEventEngine::try_from_source(
+            scenario.clone(),
+            TraceSource::streaming(&gen, &members(n), steps, scenario.score_window),
+            always_policies(n),
+        )
+        .unwrap()
+        .run();
+        assert_eq!(
+            mat.to_json_string(),
+            stream.to_json_string(),
+            "scenario '{name}': streaming diverged from materialized"
+        );
+        assert_eq!(mat.outcomes, stream.outcomes, "scenario '{name}': outcome drift");
+        assert_eq!(mat.events_processed, stream.events_processed);
+    }
+}
+
+#[test]
+fn streaming_parity_holds_with_pronto_policies_under_churn() {
+    // `churn` is the hard case for a sliding window: dead nodes stop
+    // consuming telemetry, then must resume on the exact column when they
+    // rejoin (plus federation pulls through the policy factory).
+    let n = 6;
+    let steps = 800;
+    let d = GeneratorConfig::default().dim;
+    let scenario = Scenario::named("churn")
+        .unwrap()
+        .with_nodes(n)
+        .with_steps(steps)
+        .with_seed(42);
+    let gen = TraceGenerator::new(GeneratorConfig::default(), 55);
+    let run = |source: TraceSource| {
+        DiscreteEventEngine::try_from_source(scenario.clone(), source, pronto_policies(n, d))
+            .unwrap()
+            .with_policy_factory(Box::new(move |_| {
+                Box::new(ProntoPolicy::new(NodeScheduler::new(d, RejectConfig::default())))
+                    as Box<dyn Admission>
+            }))
+            .run()
+    };
+    let mat = run(TraceSource::materialized(fleet(&gen, n, steps)));
+    let stream = run(TraceSource::streaming(
+        &gen,
+        &members(n),
+        steps,
+        scenario.score_window,
+    ));
+    assert!(mat.node_leaves > 0, "churn never fired");
+    assert_eq!(
+        mat.to_json_string(),
+        stream.to_json_string(),
+        "streaming diverged under churn + pronto policies"
+    );
+}
+
+/// Every float-valued report field must parse back as a finite number;
+/// the named keys must be exactly zero.
+fn assert_zeroed_and_finite(text: &str, zero_keys: &[&str]) {
+    let lower = text.to_ascii_lowercase();
+    assert!(
+        !lower.contains("nan") && !lower.contains("inf"),
+        "non-finite value leaked into JSON: {text}"
+    );
+    let doc = pronto::ser::parse_json(text).expect("report must stay valid JSON");
+    for key in zero_keys {
+        let v = doc
+            .get(key)
+            .and_then(JsonValue::as_f64)
+            .unwrap_or_else(|| panic!("missing or non-numeric key '{key}': {text}"));
+        assert_eq!(v, 0.0, "'{key}' must be 0.0, got {v}");
+    }
+}
+
+#[test]
+fn all_rejected_run_reports_zeros_not_nans() {
+    // RandomPolicy with reject probability 1.0 refuses every offer. With
+    // the SLO-bearing `priority` scenario, every mean_*/attainment field
+    // divides by a count that is now zero — the report must emit 0.0.
+    let n = 4;
+    let steps = 400;
+    let scenario = Scenario::named("priority").unwrap().with_nodes(n).with_steps(steps);
+    let gen = TraceGenerator::new(GeneratorConfig::default(), 7);
+    let reject_all: Vec<Box<dyn Admission>> = (0..n)
+        .map(|i| Box::new(RandomPolicy::new(1.0, i as u64)) as Box<dyn Admission>)
+        .collect();
+    let report = DiscreteEventEngine::try_from_source(
+        scenario,
+        TraceSource::materialized(fleet(&gen, n, steps)),
+        reject_all,
+    )
+    .unwrap()
+    .run();
+    assert!(report.jobs_arrived > 0, "load too thin to mean anything");
+    assert_eq!(report.jobs_accepted, 0);
+    assert_eq!(report.jobs_rejected, report.jobs_arrived);
+    assert_eq!(report.slo_total, report.jobs_arrived);
+    assert_eq!(report.slo_attained, 0);
+    assert_zeroed_and_finite(
+        &report.to_json_string(),
+        &[
+            "mean_push_latency_steps",
+            "mean_queue_delay_steps",
+            "mean_utilization",
+            "slo_attainment",
+            "queue_delay_p0",
+            "queue_delay_p1",
+            "queue_delay_p2",
+            "acceptance_rate",
+        ],
+    );
+}
+
+#[test]
+fn zero_arrival_zero_push_run_reports_zeros_not_nans() {
+    // No arrivals and no federation: every rate/mean denominator is zero.
+    let scenario = Scenario {
+        arrivals: ArrivalPattern::Poisson { rate: 0.0 },
+        ..Scenario::named("capacity").unwrap()
+    }
+    .with_nodes(3)
+    .with_steps(300);
+    let gen = TraceGenerator::new(GeneratorConfig::default(), 9);
+    let report = DiscreteEventEngine::try_from_source(
+        scenario,
+        TraceSource::materialized(fleet(&gen, 3, 300)),
+        always_policies(3),
+    )
+    .unwrap()
+    .run();
+    assert_eq!(report.jobs_arrived, 0);
+    assert_eq!(report.federation_pushes, 0);
+    assert_zeroed_and_finite(
+        &report.to_json_string(),
+        &[
+            "mean_push_latency_steps",
+            "mean_queue_delay_steps",
+            "mean_utilization",
+            "jobs_arrived",
+        ],
+    );
+}
