@@ -1,0 +1,257 @@
+//! `pronto bench diff OLD.json NEW.json [--max-regress PCT]` — the perf
+//! regression gate over two `BENCH_engine.json` artifacts.
+//!
+//! Rows are joined by `(scenario, nodes, threads)` (fleet size and
+//! observe-loop width are part of a measurement's identity; `threads`
+//! defaults to 1 when absent so schema-v1 artifacts still diff) and the
+//! per-row `events_per_sec` figures are compared. A row whose throughput
+//! dropped by more than the threshold is a **regression**; the CLI exits
+//! non-zero when any exists, which is what lets CI (and local
+//! pre-submit) gate a PR on the engine's perf trajectory:
+//!
+//! ```text
+//! pronto bench engine --out BENCH_new.json
+//! pronto bench diff BENCH_baseline.json BENCH_new.json --max-regress 10
+//! ```
+//!
+//! Rows present on only one side are reported but never fail the gate —
+//! sweeps legitimately grow and shrink across PRs. Wall-clock noise is
+//! the caller's problem: compare artifacts from the same machine and
+//! pick a threshold wide enough for its variance (the README documents
+//! the workflow).
+
+use crate::ser::{parse_json, JsonValue};
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// Identity of one bench row: the join key of the diff.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct RowKey {
+    pub scenario: String,
+    pub nodes: usize,
+    pub threads: usize,
+}
+
+impl std::fmt::Display for RowKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} @ {} nodes x {} threads", self.scenario, self.nodes, self.threads)
+    }
+}
+
+/// One joined row: old and new throughput plus the relative change.
+#[derive(Debug, Clone)]
+pub struct RowDiff {
+    pub key: RowKey,
+    pub old_events_per_sec: f64,
+    pub new_events_per_sec: f64,
+    /// `(new − old) / old × 100`; negative = slower.
+    pub delta_pct: f64,
+}
+
+/// The full comparison of two artifacts.
+#[derive(Debug, Clone, Default)]
+pub struct BenchDiff {
+    /// Joined rows, in key order.
+    pub rows: Vec<RowDiff>,
+    /// Rows only the old artifact has (dropped from the sweep).
+    pub only_old: Vec<RowKey>,
+    /// Rows only the new artifact has (new sweep entries).
+    pub only_new: Vec<RowKey>,
+}
+
+impl BenchDiff {
+    /// Joined rows slower by more than `max_regress_pct` percent.
+    pub fn regressions_beyond(&self, max_regress_pct: f64) -> Vec<&RowDiff> {
+        self.rows.iter().filter(|r| r.delta_pct < -max_regress_pct).collect()
+    }
+
+    /// Largest throughput drop across joined rows, as a positive percent
+    /// (0 when nothing got slower).
+    pub fn worst_regression_pct(&self) -> f64 {
+        self.rows.iter().map(|r| -r.delta_pct).fold(0.0, f64::max)
+    }
+
+    /// Human-readable table (one line per joined row, then the
+    /// unmatched-row notes).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<44} {:>14} {:>14} {:>9}\n",
+            "row (scenario @ nodes x threads)", "old ev/s", "new ev/s", "delta"
+        ));
+        for r in &self.rows {
+            // Pre-render the key: width/fill specs only apply to `&str`
+            // (a custom `Display` ignores the padding).
+            let key = r.key.to_string();
+            out.push_str(&format!(
+                "{key:<44} {:>14.0} {:>14.0} {:>+8.1}%\n",
+                r.old_events_per_sec, r.new_events_per_sec, r.delta_pct
+            ));
+        }
+        for k in &self.only_old {
+            let key = k.to_string();
+            out.push_str(&format!("{key:<44} dropped from the new sweep\n"));
+        }
+        for k in &self.only_new {
+            let key = k.to_string();
+            out.push_str(&format!("{key:<44} new in this sweep (no baseline)\n"));
+        }
+        out
+    }
+}
+
+/// Extract `(key → events_per_sec)` from one `BENCH_engine.json`
+/// document. Validates the artifact kind and rejects duplicate keys —
+/// a doubled row means the join would silently compare the wrong pair.
+pub fn parse_bench_rows(text: &str, label: &str) -> Result<BTreeMap<RowKey, f64>> {
+    let doc = parse_json(text).map_err(|e| anyhow!("{label}: invalid JSON: {e}"))?;
+    match doc.get("bench").and_then(JsonValue::as_str) {
+        Some("engine") => {}
+        other => bail!("{label}: not a BENCH_engine.json artifact (bench = {other:?})"),
+    }
+    let runs = doc
+        .get("runs")
+        .and_then(JsonValue::as_array)
+        .ok_or_else(|| anyhow!("{label}: missing runs array"))?;
+    let mut rows = BTreeMap::new();
+    for (i, run) in runs.iter().enumerate() {
+        let scenario = run
+            .get("scenario")
+            .and_then(JsonValue::as_str)
+            .ok_or_else(|| anyhow!("{label}: run {i} missing scenario"))?
+            .to_string();
+        let nodes = run
+            .get("nodes")
+            .and_then(JsonValue::as_usize)
+            .ok_or_else(|| anyhow!("{label}: run {i} missing nodes"))?;
+        // Absent on schema-v1 artifacts, which were all sequential.
+        let threads = run.get("threads").and_then(JsonValue::as_usize).unwrap_or(1);
+        let eps = run
+            .get("events_per_sec")
+            .and_then(JsonValue::as_f64)
+            .ok_or_else(|| anyhow!("{label}: run {i} missing events_per_sec"))?;
+        if !(eps.is_finite() && eps > 0.0) {
+            bail!("{label}: run {i} has a non-positive events_per_sec ({eps})");
+        }
+        let key = RowKey { scenario, nodes, threads };
+        if rows.insert(key.clone(), eps).is_some() {
+            bail!("{label}: duplicate bench row {key}");
+        }
+    }
+    Ok(rows)
+}
+
+/// Join two artifacts' rows and compute per-row throughput deltas.
+pub fn bench_diff(old_text: &str, new_text: &str) -> Result<BenchDiff> {
+    let old = parse_bench_rows(old_text, "old artifact")?;
+    let mut new = parse_bench_rows(new_text, "new artifact")?;
+    let mut diff = BenchDiff::default();
+    for (key, old_eps) in old {
+        match new.remove(&key) {
+            Some(new_eps) => diff.rows.push(RowDiff {
+                key,
+                old_events_per_sec: old_eps,
+                new_events_per_sec: new_eps,
+                delta_pct: (new_eps - old_eps) / old_eps * 100.0,
+            }),
+            None => diff.only_old.push(key),
+        }
+    }
+    diff.only_new.extend(new.into_keys());
+    if diff.rows.is_empty() {
+        bail!(
+            "no comparable rows: the artifacts share no (scenario, nodes, threads) key \
+             ({} old-only, {} new-only)",
+            diff.only_old.len(),
+            diff.only_new.len()
+        );
+    }
+    Ok(diff)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(rows: &[(&str, usize, usize, f64)]) -> String {
+        let runs: Vec<String> = rows
+            .iter()
+            .map(|(s, n, t, eps)| {
+                format!(
+                    r#"{{"scenario":"{s}","nodes":{n},"threads":{t},"events_per_sec":{eps},"events":1000,"wall_ms":5.0}}"#
+                )
+            })
+            .collect();
+        format!(
+            r#"{{"bench":"engine","schema_version":2,"runs":[{}]}}"#,
+            runs.join(",")
+        )
+    }
+
+    #[test]
+    fn synthetic_regression_beyond_threshold_is_flagged() {
+        // The acceptance fixture: one row drops 15 % — past a 10 % gate,
+        // inside a 20 % one.
+        let old = doc(&[("large-fleet", 1000, 1, 100_000.0), ("capacity", 50, 1, 40_000.0)]);
+        let new = doc(&[("large-fleet", 1000, 1, 85_000.0), ("capacity", 50, 1, 44_000.0)]);
+        let d = bench_diff(&old, &new).unwrap();
+        assert_eq!(d.rows.len(), 2);
+        let bad = d.regressions_beyond(10.0);
+        assert_eq!(bad.len(), 1);
+        assert_eq!(bad[0].key.scenario, "large-fleet");
+        assert!((bad[0].delta_pct - (-15.0)).abs() < 1e-9);
+        assert!(d.regressions_beyond(20.0).is_empty());
+        assert!((d.worst_regression_pct() - 15.0).abs() < 1e-9);
+        let table = d.render();
+        assert!(table.contains("large-fleet"));
+        assert!(table.contains("-15.0%"));
+    }
+
+    #[test]
+    fn improvements_never_regress_and_rows_join_by_full_key() {
+        let old = doc(&[("bursty", 100, 1, 50_000.0), ("bursty", 100, 4, 120_000.0)]);
+        let new = doc(&[("bursty", 100, 1, 55_000.0), ("bursty", 100, 4, 130_000.0)]);
+        let d = bench_diff(&old, &new).unwrap();
+        assert_eq!(d.rows.len(), 2, "thread widths must join separately");
+        assert!(d.regressions_beyond(0.0).is_empty());
+        assert_eq!(d.worst_regression_pct(), 0.0);
+    }
+
+    #[test]
+    fn unmatched_rows_are_reported_not_fatal() {
+        let old = doc(&[("capacity", 50, 1, 10_000.0), ("gone", 8, 1, 5_000.0)]);
+        let new = doc(&[("capacity", 50, 1, 10_500.0), ("fresh", 9, 1, 7_000.0)]);
+        let d = bench_diff(&old, &new).unwrap();
+        assert_eq!(d.rows.len(), 1);
+        assert_eq!(d.only_old.len(), 1);
+        assert_eq!(d.only_new.len(), 1);
+        assert!(d.render().contains("dropped from the new sweep"));
+    }
+
+    #[test]
+    fn v1_artifacts_without_threads_default_to_width_one() {
+        let old = r#"{"bench":"engine","schema_version":1,"runs":[{"scenario":"capacity","nodes":50,"events_per_sec":9000.0}]}"#;
+        let new = doc(&[("capacity", 50, 1, 9100.0)]);
+        let d = bench_diff(old, &new).unwrap();
+        assert_eq!(d.rows.len(), 1);
+        assert_eq!(d.rows[0].key.threads, 1);
+    }
+
+    #[test]
+    fn malformed_artifacts_are_typed_errors() {
+        assert!(bench_diff("not json", "{}").is_err());
+        // Wrong artifact kind.
+        assert!(bench_diff(r#"{"bench":"tables","runs":[]}"#, "{}").is_err());
+        // Duplicate key within one artifact.
+        let dup = doc(&[("capacity", 50, 1, 1.0), ("capacity", 50, 1, 2.0)]);
+        let ok = doc(&[("capacity", 50, 1, 1.0)]);
+        assert!(bench_diff(&dup, &ok).is_err());
+        // Disjoint sweeps: nothing comparable.
+        let a = doc(&[("capacity", 50, 1, 1.0)]);
+        let b = doc(&[("bursty", 10, 1, 1.0)]);
+        assert!(bench_diff(&a, &b).is_err());
+        // Zero/NaN throughput cannot anchor a relative comparison.
+        let zero = doc(&[("capacity", 50, 1, 0.0)]);
+        assert!(bench_diff(&zero, &ok).is_err());
+    }
+}

@@ -40,6 +40,10 @@ pub struct EngineBenchConfig {
     pub seed: u64,
     /// Catalog names to run.
     pub scenarios: Vec<String>,
+    /// Observe-loop worker threads per run (reports are byte-identical
+    /// across widths; this sweeps wall time only). Recorded per row so
+    /// `pronto bench diff` never compares across widths.
+    pub threads: usize,
     /// Quick sizing (CI smoke) — recorded in the artifact.
     pub quick: bool,
 }
@@ -52,6 +56,7 @@ impl EngineBenchConfig {
             steps: 1_000,
             seed: 2021,
             scenarios: DEFAULT_BENCH_SCENARIOS.iter().map(|s| s.to_string()).collect(),
+            threads: 1,
             quick: false,
         }
     }
@@ -63,6 +68,7 @@ impl EngineBenchConfig {
             steps: 200,
             seed: 2021,
             scenarios: DEFAULT_BENCH_SCENARIOS.iter().map(|s| s.to_string()).collect(),
+            threads: 1,
             quick: true,
         }
     }
@@ -84,6 +90,8 @@ pub struct EngineBenchRun {
     pub nodes: usize,
     pub steps: usize,
     pub seed: u64,
+    /// Observe-loop worker threads this row ran with.
+    pub threads: usize,
     pub wall_ms: f64,
     /// Events the engine dispatched (`SimReport::events_processed`).
     pub events: usize,
@@ -102,6 +110,7 @@ impl EngineBenchRun {
         m.insert("nodes".into(), num(self.nodes));
         m.insert("steps".into(), num(self.steps));
         m.insert("seed".into(), JsonValue::String(self.seed.to_string()));
+        m.insert("threads".into(), num(self.threads));
         m.insert("wall_ms".into(), JsonValue::Number(self.wall_ms));
         m.insert("events".into(), num(self.events));
         m.insert("events_per_sec".into(), JsonValue::Number(self.events_per_sec));
@@ -115,17 +124,25 @@ impl EngineBenchRun {
 
 /// Run one scenario at one fleet size through the streaming source with
 /// `always`-accept policies, timed end to end.
+///
+/// Every run builds its generator, source, policies, engine, and report
+/// from scratch — rows share **no** scratch state, so any row of a sweep
+/// reproduces identically when run in isolation (audited by
+/// `sweep_rows_match_isolated_runs` below; `pronto bench diff` depends
+/// on rows being independent measurements).
 pub fn bench_engine_run(
     name: &str,
     nodes: usize,
     steps: usize,
     seed: u64,
+    threads: usize,
 ) -> Result<EngineBenchRun> {
     let scenario = Scenario::named(name)
         .ok_or_else(|| anyhow!("unknown bench scenario '{name}'"))?
         .with_nodes(nodes)
         .with_steps(steps)
-        .with_seed(seed);
+        .with_seed(seed)
+        .with_threads(threads);
     scenario.validate()?;
     let gen = TraceGenerator::new(GeneratorConfig::default(), seed);
     let members = fleet_members(nodes, BENCH_FANOUT);
@@ -145,6 +162,7 @@ pub fn bench_engine_run(
         nodes,
         steps,
         seed,
+        threads,
         wall_ms,
         events: report.events_processed,
         events_per_sec: report.events_processed as f64 / wall.as_secs_f64().max(1e-9),
@@ -160,11 +178,11 @@ pub fn bench_engine(cfg: &EngineBenchConfig) -> Result<Vec<EngineBenchRun>> {
     let mut runs = Vec::with_capacity(cfg.sizes.len() * cfg.scenarios.len());
     for &nodes in &cfg.sizes {
         for name in &cfg.scenarios {
-            let run = bench_engine_run(name, nodes, cfg.steps, cfg.seed)?;
+            let run = bench_engine_run(name, nodes, cfg.steps, cfg.seed, cfg.threads)?;
             eprintln!(
-                "bench engine: {name:<18} {nodes:>5} nodes x {} steps — \
+                "bench engine: {name:<18} {nodes:>5} nodes x {} steps x {} threads — \
                  {:>10.1} ms, {:>12.0} events/s, peak queue {}",
-                run.steps, run.wall_ms, run.events_per_sec, run.peak_queue_len
+                run.steps, run.threads, run.wall_ms, run.events_per_sec, run.peak_queue_len
             );
             runs.push(run);
         }
@@ -177,12 +195,14 @@ pub fn bench_engine(cfg: &EngineBenchConfig) -> Result<Vec<EngineBenchRun>> {
 pub fn bench_engine_report(cfg: &EngineBenchConfig, runs: &[EngineBenchRun]) -> JsonValue {
     let mut m = BTreeMap::new();
     m.insert("bench".into(), JsonValue::String("engine".into()));
-    m.insert("schema_version".into(), JsonValue::Number(1.0));
+    // v2: rows (and the sweep) carry `threads`.
+    m.insert("schema_version".into(), JsonValue::Number(2.0));
     m.insert("quick".into(), JsonValue::Bool(cfg.quick));
     m.insert("policy".into(), JsonValue::String("always".into()));
     m.insert("trace_source".into(), JsonValue::String("streaming".into()));
     m.insert("steps".into(), JsonValue::Number(cfg.steps as f64));
     m.insert("seed".into(), JsonValue::String(cfg.seed.to_string()));
+    m.insert("threads".into(), JsonValue::Number(cfg.threads as f64));
     m.insert(
         "sizes".into(),
         JsonValue::Array(cfg.sizes.iter().map(|&s| JsonValue::Number(s as f64)).collect()),
@@ -200,9 +220,10 @@ mod tests {
 
     #[test]
     fn quick_run_produces_sane_numbers() {
-        let run = bench_engine_run("large-fleet", 40, 120, 7).unwrap();
+        let run = bench_engine_run("large-fleet", 40, 120, 7, 1).unwrap();
         assert_eq!(run.nodes, 40);
         assert_eq!(run.steps, 120);
+        assert_eq!(run.threads, 1);
         assert!(run.events > 120, "fewer events than ticks: {}", run.events);
         assert!(run.wall_ms > 0.0);
         assert!(run.events_per_sec > 0.0);
@@ -211,7 +232,80 @@ mod tests {
 
     #[test]
     fn unknown_scenario_is_an_error() {
-        assert!(bench_engine_run("no-such-scenario", 4, 50, 1).is_err());
+        assert!(bench_engine_run("no-such-scenario", 4, 50, 1, 1).is_err());
+        assert!(
+            bench_engine_run("baseline-poisson", 4, 50, 1, 0).is_err(),
+            "zero threads must be rejected by scenario validation"
+        );
+    }
+
+    #[test]
+    fn sweep_rows_match_isolated_runs() {
+        // Audit for the row-independence contract: `bench_engine` builds
+        // every row from scratch (no reused scratch report), so each row
+        // of a sweep must equal the same configuration run in isolation
+        // on every deterministic field (wall time is the one legitimate
+        // difference). A shared-state regression — e.g. a reused engine
+        // or generator between rows — would show up as drift in the
+        // later rows.
+        let cfg = EngineBenchConfig {
+            sizes: vec![8, 14],
+            steps: 80,
+            seed: 11,
+            scenarios: vec!["baseline-poisson".into(), "capacity".into()],
+            threads: 2,
+            quick: true,
+        };
+        let sweep = bench_engine(&cfg).unwrap();
+        assert_eq!(sweep.len(), 4);
+        for row in &sweep {
+            let solo = bench_engine_run(&row.scenario, row.nodes, row.steps, row.seed, row.threads)
+                .unwrap();
+            assert_eq!(solo.events, row.events, "{} x {}", row.scenario, row.nodes);
+            assert_eq!(solo.jobs_arrived, row.jobs_arrived);
+            assert_eq!(solo.jobs_completed, row.jobs_completed);
+            assert_eq!(solo.peak_queue_len, row.peak_queue_len);
+            assert_eq!(solo.peak_inflight, row.peak_inflight);
+        }
+        // Re-seeding per fleet size is real: different sizes are
+        // different runs, not replays of each other. Compare the
+        // *capacity* rows — the no-capacity baseline's event count is
+        // fleet-size-invariant by construction (same seed-derived
+        // arrival/duration streams, unbounded hosts), but a capacity run
+        // sees a different slot budget per size.
+        assert!(
+            sweep[1].events != sweep[3].events
+                || sweep[1].jobs_completed != sweep[3].jobs_completed
+                || sweep[1].peak_queue_len != sweep[3].peak_queue_len,
+            "capacity rows at different fleet sizes produced identical runs"
+        );
+    }
+
+    #[test]
+    fn row_json_schema_keys_are_pinned() {
+        // `pronto bench diff` joins rows by (scenario, nodes, threads)
+        // and reads events_per_sec; this pins the exact key set so a
+        // schema drift fails here instead of silently breaking diffs.
+        let run = bench_engine_run("baseline-poisson", 6, 40, 2, 1).unwrap();
+        let JsonValue::Object(m) = run.to_json() else { panic!("row must be an object") };
+        let keys: Vec<&str> = m.keys().map(String::as_str).collect();
+        assert_eq!(
+            keys,
+            vec![
+                "events",
+                "events_per_sec",
+                "jobs_arrived",
+                "jobs_completed",
+                "nodes",
+                "peak_inflight",
+                "peak_queue_len",
+                "scenario",
+                "seed",
+                "steps",
+                "threads",
+                "wall_ms",
+            ]
+        );
     }
 
     #[test]
@@ -221,6 +315,7 @@ mod tests {
             steps: 60,
             seed: 3,
             scenarios: vec!["baseline-poisson".into(), "flash-crowd".into()],
+            threads: 1,
             quick: true,
         };
         let runs = bench_engine(&cfg).unwrap();
@@ -232,12 +327,17 @@ mod tests {
             parsed.get("bench").and_then(JsonValue::as_str),
             Some("engine")
         );
+        assert_eq!(
+            parsed.get("schema_version").and_then(JsonValue::as_usize),
+            Some(2)
+        );
         let runs_v = parsed.get("runs").expect("runs key");
         match runs_v {
             JsonValue::Array(a) => {
                 assert_eq!(a.len(), 2);
                 assert!(a[0].get("events_per_sec").is_some());
                 assert!(a[0].get("peak_queue_len").is_some());
+                assert_eq!(a[0].get("threads").and_then(JsonValue::as_usize), Some(1));
             }
             other => panic!("runs must be an array, got {other:?}"),
         }

@@ -5,9 +5,11 @@
 //! statistics (median + p10/p90), and plain-text table output matching the
 //! paper's rows so EXPERIMENTS.md can diff paper-vs-measured directly.
 
+pub mod diff;
 pub mod engine;
 pub mod experiments;
 
+pub use diff::{bench_diff, parse_bench_rows, BenchDiff, RowDiff, RowKey};
 pub use engine::{
     bench_engine, bench_engine_report, bench_engine_run, EngineBenchConfig, EngineBenchRun,
     DEFAULT_BENCH_SCENARIOS,

@@ -5,12 +5,13 @@
 //! pronto sim        [--scenario NAME|FILE.toml] [--json] [--config FILE]
 //!                   [--policy pronto|sp|fd|pm|random|always|oracle]
 //!                   [--replay CSV|DIR] [--replay-metric NAME]
-//!                   [--trace-source auto|stream|materialized]
+//!                   [--trace-source auto|stream|materialized] [--threads N]
 //! pronto scenarios  — list the built-in scenario catalog
 //! pronto eval       [--config FILE] [--method pronto|sp|fd|pm] [--window W]
 //! pronto federate   [--config FILE] [--nodes N] [--fanout F]
 //! pronto bench engine [--quick] [--out FILE] [--sizes 100,1000,5000]
-//!                   [--steps N] [--seed S] [--scenarios a,b,c]
+//!                   [--steps N] [--seed S] [--scenarios a,b,c] [--threads N]
+//! pronto bench diff OLD.json NEW.json [--max-regress PCT]
 //! pronto bench-tables [--table 1..3] [--quick]
 //! pronto inspect    [--compile] — artifact manifest + compile check
 //! ```
@@ -43,12 +44,15 @@ COMMANDS:
   gen-trace     generate synthetic VMware-style traces as CSV
   sim           run the cluster simulator (--scenario NAME|FILE.toml, --json,
                 --replay CSV|DIR for trace-driven arrivals, --trace-source
-                auto|stream|materialized for large fleets)
+                auto|stream|materialized for large fleets, --threads N for
+                the parallel observe loop — reports stay byte-identical)
   scenarios     list the built-in scenario catalog
   eval          fleet evaluation of rejection-signal quality (Fig 6/7)
   federate      run the concurrent DASM federation
   bench         fleet-scale engine benchmark (`bench engine` writes
-                BENCH_engine.json: events/s, wall time, peak queue depth)
+                BENCH_engine.json: events/s, wall time, peak queue depth;
+                `bench diff OLD NEW --max-regress PCT` gates on events/s
+                regressions between two artifacts)
   bench-tables  regenerate the paper tables (see also cargo bench)
   serve         stream trace CSVs through node pipelines, emit decisions
   inspect       show the AOT artifact manifest and compile status
@@ -169,7 +173,7 @@ fn cmd_sim(raw: &[String]) -> Result<()> {
     let args = Args::parse(raw, &["json"])?;
     args.reject_unknown(&[
         "config", "policy", "nodes", "steps", "seed", "scenario", "replay", "replay-metric",
-        "trace-source",
+        "trace-source", "threads",
     ])?;
     if args.get("replay-metric").is_some() && args.get("replay").is_none() {
         bail!("--replay-metric requires --replay");
@@ -207,6 +211,9 @@ fn cmd_sim(raw: &[String]) -> Result<()> {
             scenario.nodes = args.get_usize("nodes", scenario.nodes)?;
             scenario.steps = args.get_usize("steps", scenario.steps)?;
             scenario.seed = args.get_u64("seed", scenario.seed)?;
+            // Observe-loop width: byte-identical reports at any value
+            // (validated below), so this only changes wall time.
+            scenario.threads = args.get_usize("threads", scenario.threads)?;
             // --replay swaps the arrival pattern for a trace-driven
             // schedule (a CSV file or a directory of per-VM CSVs).
             if let Some(csv) = args.get("replay") {
@@ -229,6 +236,16 @@ fn cmd_sim(raw: &[String]) -> Result<()> {
             Some(scenario)
         }
         None => {
+            // The fixed-step facade has no observe loop to shard; only
+            // the no-op width is accepted (0 is as invalid as it is on
+            // the scenario path).
+            let threads = args.get_usize("threads", 1)?;
+            if threads != 1 {
+                bail!(
+                    "--threads {threads} requires --scenario (the fixed-step facade \
+                     is sequential; only --threads 1 is valid here)"
+                );
+            }
             // Keep the facade path reproducible from the printed report:
             // --seed drives the simulation RNG, not just trace generation.
             cfg.sim.seed = args.get_u64("seed", cfg.sim.seed)?;
@@ -542,20 +559,28 @@ fn cmd_federate(raw: &[String]) -> Result<()> {
     Ok(())
 }
 
-/// `pronto bench engine`: sweep catalog scenarios over fleet sizes
-/// through the streaming trace source and write the machine-readable
-/// `BENCH_engine.json` perf artifact (events/s, wall time, peak queue
-/// depth per run).
+/// `pronto bench <engine|diff>`: the perf-trajectory tooling. `engine`
+/// sweeps catalog scenarios over fleet sizes through the streaming trace
+/// source and writes the machine-readable `BENCH_engine.json` artifact
+/// (events/s, wall time, peak queue depth per run); `diff` compares two
+/// such artifacts row by row and exits non-zero when any row's events/s
+/// regressed past `--max-regress` percent (default 10).
 fn cmd_bench(raw: &[String]) -> Result<()> {
     let args = Args::parse(raw, &["quick"])?;
-    args.reject_unknown(&["out", "sizes", "steps", "seed", "scenarios"])?;
-    let sub = args.positional().first().map(String::as_str);
-    if sub != Some("engine") {
-        bail!(
+    match args.positional().first().map(String::as_str) {
+        Some("engine") => cmd_bench_engine(&args),
+        Some("diff") => cmd_bench_diff(&args),
+        _ => bail!(
             "usage: pronto bench engine [--quick] [--out FILE] \
-             [--sizes 100,1000,5000] [--steps N] [--seed S] [--scenarios a,b,c]"
-        );
+             [--sizes 100,1000,5000] [--steps N] [--seed S] [--scenarios a,b,c] \
+             [--threads N]\n\
+             \x20      pronto bench diff OLD.json NEW.json [--max-regress PCT]"
+        ),
     }
+}
+
+fn cmd_bench_engine(args: &Args) -> Result<()> {
+    args.reject_unknown(&["out", "sizes", "steps", "seed", "scenarios", "threads"])?;
     let mut cfg = if args.flag("quick") {
         EngineBenchConfig::quick()
     } else {
@@ -577,6 +602,10 @@ fn cmd_bench(raw: &[String]) -> Result<()> {
     }
     cfg.steps = args.get_usize("steps", cfg.steps)?;
     cfg.seed = args.get_u64("seed", cfg.seed)?;
+    cfg.threads = args.get_usize("threads", cfg.threads)?;
+    if cfg.threads == 0 {
+        bail!("--threads must be >= 1 (1 = the sequential observe loop)");
+    }
     if let Some(list) = args.get("scenarios") {
         cfg.scenarios = list
             .split(',')
@@ -592,6 +621,48 @@ fn cmd_bench(raw: &[String]) -> Result<()> {
     let out = args.get("out").unwrap_or("BENCH_engine.json");
     std::fs::write(out, format!("{doc}\n")).with_context(|| format!("writing {out}"))?;
     println!("wrote {} engine bench runs to {out}", runs.len());
+    Ok(())
+}
+
+/// `pronto bench diff OLD.json NEW.json [--max-regress PCT]`: the perf
+/// regression gate. Prints the per-row comparison, then fails (non-zero
+/// exit) when any joined row's events/s dropped by more than the
+/// threshold. Compare artifacts from the same machine — the figures are
+/// wall-clock-derived.
+fn cmd_bench_diff(args: &Args) -> Result<()> {
+    args.reject_unknown(&["max-regress"])?;
+    let pos = args.positional();
+    // pos[0] is the subcommand itself.
+    if pos.len() != 3 {
+        bail!("usage: pronto bench diff OLD.json NEW.json [--max-regress PCT]");
+    }
+    let max_regress = args.get_f64("max-regress", 10.0)?;
+    if !(max_regress.is_finite() && max_regress >= 0.0) {
+        bail!("--max-regress: need a finite percentage >= 0, got {max_regress}");
+    }
+    let old_text = std::fs::read_to_string(&pos[1])
+        .with_context(|| format!("reading old artifact {}", pos[1]))?;
+    let new_text = std::fs::read_to_string(&pos[2])
+        .with_context(|| format!("reading new artifact {}", pos[2]))?;
+    let diff = crate::bench::bench_diff(&old_text, &new_text)?;
+    print!("{}", diff.render());
+    let bad = diff.regressions_beyond(max_regress);
+    if !bad.is_empty() {
+        let rows: Vec<String> = bad
+            .iter()
+            .map(|r| format!("{} ({:+.1}%)", r.key, r.delta_pct))
+            .collect();
+        bail!(
+            "{} row(s) regressed beyond {max_regress}% events/s: {}",
+            bad.len(),
+            rows.join(", ")
+        );
+    }
+    println!(
+        "ok: worst regression {:.1}% within the {max_regress}% budget ({} rows compared)",
+        diff.worst_regression_pct(),
+        diff.rows.len()
+    );
     Ok(())
 }
 
@@ -905,11 +976,106 @@ mod tests {
     }
 
     #[test]
-    fn bench_requires_the_engine_subcommand() {
+    fn bench_requires_a_known_subcommand() {
         assert!(run(&argv(&["bench"])).is_err());
         assert!(run(&argv(&["bench", "nope"])).is_err());
         assert!(run(&argv(&["bench", "engine", "--sizes", "0"])).is_err());
         assert!(run(&argv(&["bench", "engine", "--scenarios", "nope", "--sizes", "2"])).is_err());
+        assert!(run(&argv(&["bench", "engine", "--threads", "0", "--sizes", "2"])).is_err());
+    }
+
+    #[test]
+    fn sim_threads_flag_is_validated_and_runs() {
+        assert!(run(&argv(&[
+            "sim", "--scenario", "capacity", "--nodes", "4", "--steps", "120", "--policy",
+            "always", "--threads", "3", "--json",
+        ]))
+        .is_ok());
+        // 0 is rejected by scenario validation, not clamped.
+        assert!(run(&argv(&[
+            "sim", "--scenario", "capacity", "--nodes", "4", "--steps", "120", "--threads", "0",
+        ]))
+        .is_err());
+        // The fixed-step facade has no observe loop to shard; 0 is as
+        // invalid there as on the scenario path.
+        assert!(run(&argv(&[
+            "sim", "--scenario", "none", "--nodes", "3", "--steps", "100", "--threads", "2",
+        ]))
+        .is_err());
+        assert!(run(&argv(&[
+            "sim", "--scenario", "none", "--nodes", "3", "--steps", "100", "--threads", "0",
+        ]))
+        .is_err());
+        assert!(run(&argv(&[
+            "sim", "--scenario", "none", "--nodes", "3", "--steps", "100", "--threads", "1",
+            "--policy", "always",
+        ]))
+        .is_ok());
+    }
+
+    #[test]
+    fn bench_diff_gates_on_synthetic_regression_fixtures() {
+        let dir = std::env::temp_dir().join("pronto_cli_bench_diff");
+        std::fs::create_dir_all(&dir).unwrap();
+        let row = |eps: f64| {
+            format!(
+                r#"{{"scenario":"large-fleet","nodes":200,"threads":1,"events_per_sec":{eps}}}"#
+            )
+        };
+        let doc = |eps: f64| {
+            format!(r#"{{"bench":"engine","schema_version":2,"runs":[{}]}}"#, row(eps))
+        };
+        let old = dir.join("old.json");
+        let ok_new = dir.join("ok.json");
+        let bad_new = dir.join("bad.json");
+        std::fs::write(&old, doc(100_000.0)).unwrap();
+        std::fs::write(&ok_new, doc(95_000.0)).unwrap();
+        // 15 % slower: past the default 10 % budget.
+        std::fs::write(&bad_new, doc(85_000.0)).unwrap();
+        let (old_s, ok_s, bad_s) = (
+            old.to_string_lossy().to_string(),
+            ok_new.to_string_lossy().to_string(),
+            bad_new.to_string_lossy().to_string(),
+        );
+        assert!(run(&argv(&["bench", "diff", &old_s, &ok_s])).is_ok());
+        assert!(
+            run(&argv(&["bench", "diff", &old_s, &bad_s])).is_err(),
+            "a >10% events/s regression must exit non-zero"
+        );
+        // A wider explicit budget admits the same fixture.
+        assert!(run(&argv(&[
+            "bench", "diff", &old_s, &bad_s, "--max-regress", "20"
+        ]))
+        .is_ok());
+        // Bad invocations fail loudly.
+        assert!(run(&argv(&["bench", "diff", &old_s])).is_err());
+        assert!(run(&argv(&["bench", "diff", &old_s, "/no/such.json"])).is_err());
+        assert!(run(&argv(&[
+            "bench", "diff", &old_s, &ok_s, "--max-regress", "-3"
+        ]))
+        .is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bench_engine_records_threads_in_rows() {
+        let dir = std::env::temp_dir().join("pronto_cli_bench_threads");
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("BENCH_engine.json");
+        let out_s = out.to_string_lossy().to_string();
+        assert!(run(&argv(&[
+            "bench", "engine", "--quick", "--sizes", "10", "--steps", "60", "--scenarios",
+            "large-fleet", "--threads", "2", "--out", &out_s,
+        ]))
+        .is_ok());
+        let text = std::fs::read_to_string(&out).unwrap();
+        let doc = crate::ser::parse_json(&text).expect("valid artifact");
+        let runs = doc.get("runs").and_then(crate::ser::JsonValue::as_array).unwrap();
+        assert_eq!(
+            runs[0].get("threads").and_then(crate::ser::JsonValue::as_usize),
+            Some(2)
+        );
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -18,7 +18,12 @@ use crate::rng::Xoshiro256;
 /// merged global view back through [`Admission::absorb`] when a node
 /// (re)joins the pool. Memoryless policies keep the no-op defaults and
 /// simply sit out the federation.
-pub trait Admission {
+///
+/// `Send` is a supertrait so the engine can shard the per-tick observe
+/// loop across worker threads (`--threads N`): policies hold only
+/// per-node state, each node lives in exactly one shard, and the merge
+/// is by node id — no `Sync` needed, no shared mutation allowed.
+pub trait Admission: Send {
     /// Observe the metric vector for the current timestep; returns `true`
     /// when a job arriving now would be ACCEPTED.
     fn observe(&mut self, y: &[f64]) -> bool;
@@ -51,7 +56,7 @@ impl<E: crate::baselines::StreamingEmbedding> ProntoPolicy<E> {
     }
 }
 
-impl<E: crate::baselines::StreamingEmbedding> Admission for ProntoPolicy<E> {
+impl<E: crate::baselines::StreamingEmbedding + Send> Admission for ProntoPolicy<E> {
     fn observe(&mut self, y: &[f64]) -> bool {
         self.node.observe(y)
     }

@@ -63,9 +63,40 @@
 //! the sorted alive-set is maintained incrementally (binary-search
 //! insert/remove instead of re-scan/re-sort), and per-node state is
 //! indexed by dense node id.
+//!
+//! # Parallel observe loop (`threads`)
+//!
+//! The per-tick observe loop — trace advancement, FPCA iterate, and
+//! rejection-signal scoring for every alive node — is embarrassingly
+//! parallel by construction (the paper's horizontal-scalability claim:
+//! each node's signal is a pure function of its own telemetry and local
+//! state). `Scenario::threads > 1` shards the **sorted alive set into
+//! contiguous chunks** across a [`minipool::WorkerPool`]: each worker
+//! owns a disjoint slice of the policies, the `can_accept` output, and
+//! the per-node [`crate::telemetry::NodeView`] trace state, so there is
+//! no shared mutation and the merged result (written in place, node-id
+//! order) is **byte-identical** to the sequential run. `threads = 1`
+//! (the default) executes today's exact sequential code path. Everything
+//! outside the observe loop — dispatch, capacity, churn, federation —
+//! stays sequential and single-ordered, which is what keeps reports
+//! byte-stable across widths (regression-tested per catalog scenario).
+//!
+//! # Same-tick event batching
+//!
+//! The event loop drains all events sharing a timestamp into a typed
+//! [`TickBatch`] before dispatch. In-batch order is exactly the
+//! `(time, seq)` pop order — handlers run unchanged, so the report byte
+//! contract is untouched — but the batch view lets per-tick work be
+//! hoisted out of per-event handlers: the ground-truth spike scan behind
+//! placement scoring is memoized per `(node, step)` for the duration of
+//! a step, so an arrival burst probing overlapping candidates fills the
+//! probe buffer once per tick instead of once per arrival (a measured
+//! hot-path win on `large-fleet` / `flash-crowd`, whose bursts put
+//! hundreds of same-step arrivals behind one telemetry tick).
 
 use super::events::{
-    latency_to_ticks, step_to_ticks, ticks_to_step, Event, EventQueue, SimTime, TICKS_PER_STEP,
+    latency_to_ticks, step_to_ticks, ticks_to_step, Event, EventQueue, SimTime, TickBatch,
+    TICKS_PER_STEP,
 };
 use super::scenario::{ArrivalPattern, CapacityModel, DispatchPolicy, ProbePolicy, Scenario};
 use crate::federation::{FederationTree, TreeTopology};
@@ -76,6 +107,7 @@ use crate::scheduler::{
 };
 use crate::ser::JsonValue;
 use crate::telemetry::{TraceSource, VmTrace};
+use minipool::WorkerPool;
 use std::collections::BTreeMap;
 use std::fmt;
 
@@ -568,7 +600,11 @@ fn pick_candidate(
 /// O(want + |pool|) draws instead of unbounded coupon collecting when
 /// `want` approaches the pool size (`k ≈ alive`, the pathological probe
 /// configuration).
-fn sample_distinct(
+///
+/// Public so the integration suite can cover the `k ≥ alive − 1`
+/// fallback boundary directly (`tests/probe_regressions.rs`); not part
+/// of the stable API surface otherwise.
+pub fn sample_distinct(
     rng: &mut Xoshiro256,
     pool: &[usize],
     exclude: Option<usize>,
@@ -603,6 +639,95 @@ fn sample_distinct(
             out.push(scratch.swap_remove(j));
         }
     }
+}
+
+/// Per-step memo of the ground-truth spike scan (`spike_within`): one
+/// look-ahead scan per `(node, step)` instead of one per probe. An
+/// arrival burst behind one telemetry tick probes overlapping candidate
+/// sets — on `flash-crowd` storms hundreds of same-step arrivals share a
+/// handful of hosts — so the probe buffer is effectively filled once per
+/// tick. Pure caching of a deterministic function: results (and the
+/// streaming window access pattern, which only ever re-reads already
+/// buffered spans) are untouched, so reports stay byte-identical.
+struct SpikeMemo {
+    /// `stamp[node] == step + 1` ⇒ `val[node]` holds the verdict for
+    /// `step` (0 = never computed; avoids a sentinel clash at step 0).
+    stamp: Vec<usize>,
+    val: Vec<bool>,
+}
+
+impl SpikeMemo {
+    fn new(nodes: usize) -> Self {
+        Self { stamp: vec![0; nodes], val: vec![false; nodes] }
+    }
+
+    /// `source.spike_within(node, lo, hi, threshold)`, memoized per
+    /// `(node, lo)` — callers always derive `hi` from `lo`, so `lo` keys
+    /// the whole query.
+    fn spike_within(
+        &mut self,
+        source: &mut TraceSource,
+        node: usize,
+        lo: usize,
+        hi: usize,
+        threshold: f64,
+    ) -> bool {
+        if self.stamp[node] == lo + 1 {
+            return self.val[node];
+        }
+        let v = source.spike_within(node, lo, hi, threshold);
+        self.stamp[node] = lo + 1;
+        self.val[node] = v;
+        v
+    }
+}
+
+/// The sharded observe loop: split the sorted alive set into contiguous
+/// chunks (one per pool thread), give each chunk exclusive slices of the
+/// policies, the `can_accept` output, and the per-node trace views, and
+/// run trace advancement + policy observe (FPCA iterate + rejection
+/// signal) per chunk. Chunks cover disjoint node-id ranges, so the
+/// merged result — written in place, node-id order — is byte-identical
+/// to the sequential loop regardless of scheduling.
+fn parallel_observe(
+    pool: &WorkerPool,
+    alive_ids: &[usize],
+    source: &mut TraceSource,
+    policies: &mut [Box<dyn Admission>],
+    can_accept: &mut [bool],
+    step: usize,
+) {
+    let mut views = source.node_views();
+    let per = alive_ids.len().div_ceil(pool.threads());
+    let mut tasks: Vec<minipool::Task<'_>> = Vec::with_capacity(pool.threads());
+    // Walk the state arrays left to right, carving off the id range each
+    // chunk covers. `base` is the absolute node id where the remaining
+    // (`*_rest`) slices start.
+    let mut pol_rest = policies;
+    let mut acc_rest = can_accept;
+    let mut view_rest = views.as_mut_slice();
+    let mut base = 0usize;
+    for ids in alive_ids.chunks(per.max(1)) {
+        let lo = ids[0];
+        let hi = ids[ids.len() - 1] + 1;
+        let (_, tail) = std::mem::take(&mut pol_rest).split_at_mut(lo - base);
+        let (pol_chunk, tail) = tail.split_at_mut(hi - lo);
+        pol_rest = tail;
+        let (_, tail) = std::mem::take(&mut acc_rest).split_at_mut(lo - base);
+        let (acc_chunk, tail) = tail.split_at_mut(hi - lo);
+        acc_rest = tail;
+        let (_, tail) = std::mem::take(&mut view_rest).split_at_mut(lo - base);
+        let (view_chunk, tail) = tail.split_at_mut(hi - lo);
+        view_rest = tail;
+        base = hi;
+        tasks.push(Box::new(move || {
+            for &id in ids {
+                let k = id - lo;
+                acc_chunk[k] = pol_chunk[k].observe(view_chunk[k].features(step));
+            }
+        }));
+    }
+    pool.run(tasks);
 }
 
 /// Start every waiting job on `node` that fits within `budget` slots.
@@ -825,13 +950,23 @@ impl DiscreteEventEngine {
 
         queue.schedule(0, Event::TelemetryTick { step: 0 });
 
-        while let Some(ev) = queue.pop() {
-            if ev.time >= horizon {
+        // Pool + per-step memo for the batched tick dispatch (see the
+        // module docs): batches preserve pop order exactly, so handler
+        // semantics and report bytes match the historical per-event loop.
+        let workers = WorkerPool::new(scenario.threads);
+        let mut memo = SpikeMemo::new(n);
+        let mut batch = TickBatch::default();
+        while queue.drain_tick(&mut batch) {
+            if batch.time() >= horizon {
                 // Pops are non-decreasing in time: everything left is
                 // also past the run. In-flight federation pushes would
                 // have delivered after the horizon — count them as late
                 // drops (parity with ConcurrentFederation) and stop.
-                let mut late = usize::from(matches!(ev.event, Event::FederationPush { .. }));
+                let mut late = batch
+                    .events()
+                    .iter()
+                    .filter(|s| matches!(s.event, Event::FederationPush { .. }))
+                    .count();
                 while let Some(rest) = queue.pop() {
                     if matches!(rest.event, Event::FederationPush { .. }) {
                         late += 1;
@@ -840,557 +975,579 @@ impl DiscreteEventEngine {
                 report.federation_late_drops = late;
                 break;
             }
-            report.events_processed += 1;
-            match ev.event {
-                Event::TelemetryTick { step } => {
-                    // 1. Every alive node consumes its metric vector.
-                    for i in 0..n {
-                        if alive[i] {
-                            can_accept[i] = policies[i].observe(source.features(i, step));
-                        }
-                    }
-
-                    // 1b. Capacity progress: let idle slots pick up queued
-                    //     work (completions drain too, but a queue built
-                    //     while the node was contended must not wait for
-                    //     the next completion once the signal clears).
-                    //     Utilization needs no sampling here — the meter
-                    //     integrates event-by-event.
-                    if let Some(c) = &cap {
-                        for i in 0..n {
-                            if alive[i] && hosts[i].queue_len() > 0 {
-                                let budget = if can_accept[i] {
-                                    hosts[i].slots()
-                                } else {
-                                    c.contended_budget(hosts[i].slots())
-                                };
-                                drain_queue(
-                                    i,
-                                    budget,
-                                    &mut hosts,
-                                    &mut jobs,
-                                    &mut queue,
-                                    ev.time,
-                                    &mut total_inflight,
-                                    &mut util,
-                                    &mut report,
-                                );
-                            }
-                        }
-                    }
-
-                    // 2. Churn hazard (respecting the min-alive floor; the
-                    //    provisional counter prevents one tick from
-                    //    scheduling the pool below the floor).
-                    if let Some(churn) = &scenario.churn {
-                        let mut planned_alive = alive_ids.len();
-                        for i in 0..n {
-                            if alive[i]
-                                && planned_alive > churn.min_alive
-                                && churn_rng.bernoulli(churn.leave_hazard)
-                            {
-                                planned_alive -= 1;
-                                queue.schedule(ev.time + 1, Event::NodeLeave { node: i });
-                            }
-                        }
-                    }
-
-                    // 2b. Pressure preemption: a node whose rejection
-                    //     signal is raised sheds running jobs down to the
-                    //     contended budget — lowest priority class first,
-                    //     newest first within a class. Scheduled after
-                    //     the churn leaves so a departing node's own
-                    //     evacuation wins (stale preempts no-op on the
-                    //     generation check).
-                    if let Some(c) = &cap {
-                        if c.pressure_enabled() {
+            for idx in 0..batch.len() {
+                let ev = batch.events()[idx];
+                report.events_processed += 1;
+                match ev.event {
+                    Event::TelemetryTick { step } => {
+                        // 1. Every alive node consumes its metric vector —
+                        //    the observe loop. Width 1 runs the exact
+                        //    historical sequential path; wider pools shard
+                        //    the sorted alive set into contiguous chunks
+                        //    with fully disjoint per-node state, so the
+                        //    in-place merge (node-id order) is
+                        //    byte-identical to the sequential result.
+                        if workers.is_parallel() && alive_ids.len() > 1 {
+                            parallel_observe(
+                                &workers,
+                                &alive_ids,
+                                &mut source,
+                                &mut policies,
+                                &mut can_accept,
+                                step,
+                            );
+                        } else {
                             for i in 0..n {
-                                let contended = c.contended_budget(hosts[i].slots());
+                                if alive[i] {
+                                    can_accept[i] = policies[i].observe(source.features(i, step));
+                                }
+                            }
+                        }
+
+                        // 1b. Capacity progress: let idle slots pick up queued
+                        //     work (completions drain too, but a queue built
+                        //     while the node was contended must not wait for
+                        //     the next completion once the signal clears).
+                        //     Utilization needs no sampling here — the meter
+                        //     integrates event-by-event.
+                        if let Some(c) = &cap {
+                            for i in 0..n {
+                                if alive[i] && hosts[i].queue_len() > 0 {
+                                    let budget = if can_accept[i] {
+                                        hosts[i].slots()
+                                    } else {
+                                        c.contended_budget(hosts[i].slots())
+                                    };
+                                    drain_queue(
+                                        i,
+                                        budget,
+                                        &mut hosts,
+                                        &mut jobs,
+                                        &mut queue,
+                                        ev.time,
+                                        &mut total_inflight,
+                                        &mut util,
+                                        &mut report,
+                                    );
+                                }
+                            }
+                        }
+
+                        // 2. Churn hazard (respecting the min-alive floor; the
+                        //    provisional counter prevents one tick from
+                        //    scheduling the pool below the floor).
+                        if let Some(churn) = &scenario.churn {
+                            let mut planned_alive = alive_ids.len();
+                            for i in 0..n {
                                 if alive[i]
-                                    && !can_accept[i]
-                                    && hosts[i].used() > contended
+                                    && planned_alive > churn.min_alive
+                                    && churn_rng.bernoulli(churn.leave_hazard)
                                 {
-                                    let mut over = hosts[i].used() - contended;
-                                    'shed: for p in 0..priority_levels {
-                                        for &(job_id, demand) in
-                                            hosts[i].running().iter().rev()
-                                        {
-                                            if jobs[job_id as usize].priority != p {
-                                                continue;
+                                    planned_alive -= 1;
+                                    queue.schedule(ev.time + 1, Event::NodeLeave { node: i });
+                                }
+                            }
+                        }
+
+                        // 2b. Pressure preemption: a node whose rejection
+                        //     signal is raised sheds running jobs down to the
+                        //     contended budget — lowest priority class first,
+                        //     newest first within a class. Scheduled after
+                        //     the churn leaves so a departing node's own
+                        //     evacuation wins (stale preempts no-op on the
+                        //     generation check).
+                        if let Some(c) = &cap {
+                            if c.pressure_enabled() {
+                                for i in 0..n {
+                                    let contended = c.contended_budget(hosts[i].slots());
+                                    if alive[i]
+                                        && !can_accept[i]
+                                        && hosts[i].used() > contended
+                                    {
+                                        let mut over = hosts[i].used() - contended;
+                                        'shed: for p in 0..priority_levels {
+                                            for &(job_id, demand) in
+                                                hosts[i].running().iter().rev()
+                                            {
+                                                if jobs[job_id as usize].priority != p {
+                                                    continue;
+                                                }
+                                                if over == 0 {
+                                                    break 'shed;
+                                                }
+                                                queue.schedule(
+                                                    ev.time + 1,
+                                                    Event::JobPreempt {
+                                                        node: i,
+                                                        job_id,
+                                                        gen: jobs[job_id as usize].gen,
+                                                    },
+                                                );
+                                                over = over.saturating_sub(demand);
                                             }
-                                            if over == 0 {
-                                                break 'shed;
-                                            }
-                                            queue.schedule(
-                                                ev.time + 1,
-                                                Event::JobPreempt {
-                                                    node: i,
-                                                    job_id,
-                                                    gen: jobs[job_id as usize].gen,
-                                                },
-                                            );
-                                            over = over.saturating_sub(demand);
                                         }
                                     }
                                 }
                             }
                         }
-                    }
 
-                    // 3. Job arrivals for this step (regime update first
-                    //    for the MMPP pattern; replay injects exact
-                    //    counts and consumes no randomness).
-                    if let ArrivalPattern::Bursty { mean_burst_len, mean_gap_len, .. } =
-                        scenario.arrivals
-                    {
-                        let flip = if burst_on {
-                            1.0 / mean_burst_len.max(1.0)
-                        } else {
-                            1.0 / mean_gap_len.max(1.0)
+                        // 3. Job arrivals for this step (regime update first
+                        //    for the MMPP pattern; replay injects exact
+                        //    counts and consumes no randomness).
+                        if let ArrivalPattern::Bursty { mean_burst_len, mean_gap_len, .. } =
+                            scenario.arrivals
+                        {
+                            let flip = if burst_on {
+                                1.0 / mean_burst_len.max(1.0)
+                            } else {
+                                1.0 / mean_gap_len.max(1.0)
+                            };
+                            if arrivals_rng.bernoulli(flip.min(1.0)) {
+                                burst_on = !burst_on;
+                            }
+                        }
+                        let k = match &scenario.arrivals {
+                            ArrivalPattern::Replay { schedule } => schedule.count_at(step) as usize,
+                            pattern => {
+                                let lam = pattern.rate_at(step, burst_on);
+                                arrivals_rng.poisson(lam) as usize
+                            }
                         };
-                        if arrivals_rng.bernoulli(flip.min(1.0)) {
-                            burst_on = !burst_on;
+                        for j in 0..k {
+                            let duration_steps = service.sample(&mut duration_rng);
+                            let demand = match &cap {
+                                Some(c) => {
+                                    1 + demand_rng.gen_range(c.max_job_slots as usize) as u32
+                                }
+                                None => 1,
+                            };
+                            // Priority draws use their own stream, and only
+                            // when classes exist — single-class fleets stay
+                            // byte-identical to the pre-priority engine.
+                            let priority: Priority = if priority_levels > 1 {
+                                priority_rng.gen_range(priority_levels as usize) as Priority
+                            } else {
+                                0
+                            };
+                            let job_id = jobs.len() as JobId;
+                            jobs.push(JobRec {
+                                demand,
+                                duration_steps,
+                                gen: 0,
+                                migrations_left: initial_migrations,
+                                priority,
+                                state: JobState::Dispatching,
+                                enqueued_at: None,
+                                deadline: None,
+                            });
+                            let off = (2 + j as u64).min(TICKS_PER_STEP - 1);
+                            queue.schedule(ev.time + off, Event::JobArrival { job_id });
+                        }
+
+                        // 4. Federation push boundary: alive leaves offer
+                        //    their iterate; delivery is delayed by the
+                        //    latency model (the merged iterate is stale by
+                        //    construction).
+                        if tree.is_some() && (step + 1) % fed.push_every == 0 {
+                            for &leaf in &alive_ids {
+                                if let Some(iterate) = policies[leaf].iterate() {
+                                    let delay = fed.latency.sample(&mut latency_rng);
+                                    let dt = latency_to_ticks(delay);
+                                    let snapshot = pool.put(iterate);
+                                    queue.schedule(
+                                        ev.time + dt,
+                                        Event::FederationPush { leaf, snapshot, sent_at: ev.time },
+                                    );
+                                }
+                            }
+                        }
+
+                        // 5. Next tick.
+                        if step + 1 < steps {
+                            queue.schedule(
+                                step_to_ticks(step + 1),
+                                Event::TelemetryTick { step: step + 1 },
+                            );
                         }
                     }
-                    let k = match &scenario.arrivals {
-                        ArrivalPattern::Replay { schedule } => schedule.count_at(step) as usize,
-                        pattern => {
-                            let lam = pattern.rate_at(step, burst_on);
-                            arrivals_rng.poisson(lam) as usize
+
+                    Event::JobArrival { job_id } => {
+                        let step = ticks_to_step(ev.time);
+                        report.jobs_arrived += 1;
+                        // SLO clock starts at arrival, whatever happens next:
+                        // rejected/dropped/lost jobs count against attainment.
+                        if let Some(slo) = cap.as_ref().and_then(|c| c.slo_steps) {
+                            jobs[job_id as usize].deadline =
+                                Some(ev.time + slo as u64 * TICKS_PER_STEP);
+                            report.slo_total += 1;
                         }
-                    };
-                    for j in 0..k {
-                        let duration_steps = service.sample(&mut duration_rng);
-                        let demand = match &cap {
-                            Some(c) => 1 + demand_rng.gen_range(c.max_job_slots as usize) as u32,
-                            None => 1,
-                        };
-                        // Priority draws use their own stream, and only
-                        // when classes exist — single-class fleets stay
-                        // byte-identical to the pre-priority engine.
-                        let priority: Priority = if priority_levels > 1 {
-                            priority_rng.gen_range(priority_levels as usize) as Priority
-                        } else {
-                            0
-                        };
-                        let job_id = jobs.len() as JobId;
-                        jobs.push(JobRec {
-                            demand,
-                            duration_steps,
-                            gen: 0,
-                            migrations_left: initial_migrations,
-                            priority,
-                            state: JobState::Dispatching,
-                            enqueued_at: None,
-                            deadline: None,
-                        });
-                        let off = (2 + j as u64).min(TICKS_PER_STEP - 1);
-                        queue.schedule(ev.time + off, Event::JobArrival { job_id });
+                        if alive_ids.is_empty() {
+                            report.jobs_rejected += 1;
+                            report.jobs_unplaceable += 1;
+                            report.outcomes.push(JobOutcome::Rejected { at: step });
+                            jobs[job_id as usize].state = JobState::Rejected;
+                            continue;
+                        }
+                        let m = alive_ids.len();
+                        candidates.clear();
+                        match scenario.probe {
+                            ProbePolicy::RandomProbe => {
+                                candidates.push(alive_ids[dispatch_rng.gen_range(m)]);
+                            }
+                            ProbePolicy::PowerOfK(k) => {
+                                // Bounded distinct draw (see `sample_distinct`):
+                                // byte-identical to the historical rejection
+                                // loop on the catalog, O(k + alive) worst case.
+                                sample_distinct(
+                                    &mut dispatch_rng,
+                                    &alive_ids,
+                                    None,
+                                    k.max(1),
+                                    &mut candidates,
+                                    &mut probe_scratch,
+                                );
+                            }
+                            ProbePolicy::RoundRobin => {
+                                // Identity-tracked cursor: probe the first
+                                // alive node with id >= rr_next (wrapping),
+                                // then advance past it. The historical cursor
+                                // was an index modulo the *current* alive
+                                // count, so any leave/join re-aliased every
+                                // later probe and could starve hosts under
+                                // churn. Dead ids are skipped naturally: only
+                                // alive ids are in the (sorted) list.
+                                let pos = alive_ids.partition_point(|&id| id < rr_next);
+                                let c = alive_ids[if pos == m { 0 } else { pos }];
+                                rr_next = c + 1;
+                                candidates.push(c);
+                            }
+                        }
+                        // Score the probe answers: SignalOnly reduces to "first
+                        // signal-clear candidate" (byte-identical to the
+                        // pre-probe dispatch); the scored policies compare
+                        // congestion among signal-clear candidates.
+                        let placed = pick_candidate(
+                            &candidates,
+                            scenario.dispatch,
+                            &can_accept,
+                            &hosts,
+                            |_| true,
+                        );
+                        match placed {
+                            Some(node) => {
+                                report.jobs_accepted += 1;
+                                let hi = score_hi(step);
+                                if memo.spike_within(&mut source, node, step, hi, ready_threshold) {
+                                    report.bad_accepts += 1;
+                                } else {
+                                    report.good_accepts += 1;
+                                }
+                                report.outcomes.push(JobOutcome::Accepted { node, at: step });
+                                // Hand the job to the host: it starts, parks,
+                                // or drops in the JobEnqueue handler.
+                                queue.schedule(ev.time, Event::JobEnqueue { node, job_id });
+                            }
+                            None => {
+                                report.jobs_rejected += 1;
+                                let hi = score_hi(step);
+                                let justified = candidates.iter().any(|&c| {
+                                    memo.spike_within(&mut source, c, step, hi, ready_threshold)
+                                });
+                                if justified {
+                                    report.justified_rejections += 1;
+                                }
+                                report.outcomes.push(JobOutcome::Rejected { at: step });
+                                jobs[job_id as usize].state = JobState::Rejected;
+                            }
+                        }
                     }
 
-                    // 4. Federation push boundary: alive leaves offer
-                    //    their iterate; delivery is delayed by the
-                    //    latency model (the merged iterate is stale by
-                    //    construction).
-                    if tree.is_some() && (step + 1) % fed.push_every == 0 {
-                        for &leaf in &alive_ids {
-                            if let Some(iterate) = policies[leaf].iterate() {
-                                let delay = fed.latency.sample(&mut latency_rng);
-                                let dt = latency_to_ticks(delay);
-                                let snapshot = pool.put(iterate);
+                    Event::JobEnqueue { node, job_id } => {
+                        let rec = &mut jobs[job_id as usize];
+                        if rec.state != JobState::Dispatching {
+                            continue;
+                        }
+                        if !alive[node] {
+                            // Defensive: the target vanished between admission
+                            // and hand-off (cannot happen with the current
+                            // event timing, but the ledger must never leak).
+                            rec.state = JobState::Displaced;
+                            report.jobs_displaced += 1;
+                            continue;
+                        }
+                        // Clamp to the placed host's budget: on heterogeneous
+                        // fleets (or an unvalidated scenario with
+                        // max_job_slots > slots_per_node) an oversized draw
+                        // would otherwise park a job that can never start and,
+                        // under FIFO, wedge the whole queue behind it for the
+                        // rest of the run.
+                        let demand = rec.demand.min(hosts[node].slots());
+                        if hosts[node].queue_len() == 0 && hosts[node].can_start(demand) {
+                            hosts[node].start(job_id, demand);
+                            util.job_started(ev.time, demand);
+                            rec.state = JobState::Running { node };
+                            total_inflight += 1;
+                            report.peak_inflight = report.peak_inflight.max(total_inflight);
+                            queue.schedule(
+                                ev.time,
+                                Event::JobStart { node, job_id, gen: rec.gen },
+                            );
+                        } else if hosts[node].try_enqueue(job_id, demand, rec.priority, ev.time) {
+                            rec.state = JobState::Queued { node };
+                            rec.enqueued_at = Some(ev.time);
+                            report.jobs_queued += 1;
+                            report.peak_queue_len =
+                                report.peak_queue_len.max(hosts[node].queue_len());
+                        } else {
+                            rec.state = JobState::Dropped;
+                            report.jobs_dropped += 1;
+                        }
+                    }
+
+                    Event::JobStart { node, job_id, gen } => {
+                        let rec = &mut jobs[job_id as usize];
+                        if rec.gen != gen || rec.state != (JobState::Running { node }) {
+                            continue;
+                        }
+                        if let Some(t0) = rec.enqueued_at.take() {
+                            let waited = ev.time - t0;
+                            qdelay_ticks_sum += waited;
+                            qdelay_count += 1;
+                            qdelay_p_sum[rec.priority as usize] += waited;
+                            qdelay_p_count[rec.priority as usize] += 1;
+                            hosts[node].note_queue_delay(waited);
+                        }
+                        queue.schedule(
+                            ev.time + rec.duration_steps as u64 * TICKS_PER_STEP,
+                            Event::JobCompletion { node, job_id, gen },
+                        );
+                    }
+
+                    Event::JobCompletion { node, job_id, gen } => {
+                        let rec = &mut jobs[job_id as usize];
+                        if rec.gen != gen || rec.state != (JobState::Running { node }) {
+                            continue;
+                        }
+                        let freed = hosts[node].finish(job_id).unwrap_or(0);
+                        util.job_finished(ev.time, freed);
+                        rec.state = JobState::Completed;
+                        report.jobs_completed += 1;
+                        if let Some(deadline) = rec.deadline {
+                            if ev.time <= deadline {
+                                report.slo_attained += 1;
+                            }
+                        }
+                        total_inflight -= 1;
+                        if let Some(c) = &cap {
+                            let budget = if can_accept[node] {
+                                hosts[node].slots()
+                            } else {
+                                c.contended_budget(hosts[node].slots())
+                            };
+                            drain_queue(
+                                node,
+                                budget,
+                                &mut hosts,
+                                &mut jobs,
+                                &mut queue,
+                                ev.time,
+                                &mut total_inflight,
+                                &mut util,
+                                &mut report,
+                            );
+                        }
+                    }
+
+                    Event::JobPreempt { node, job_id, gen } => {
+                        let rec = &mut jobs[job_id as usize];
+                        if rec.gen != gen || rec.state != (JobState::Running { node }) {
+                            continue; // completed or already displaced — stale
+                        }
+                        let freed = hosts[node].finish(job_id).unwrap_or(0);
+                        util.job_finished(ev.time, freed);
+                        rec.gen = rec.gen.wrapping_add(1);
+                        total_inflight -= 1;
+                        report.jobs_preempted += 1;
+                        if rec.migrations_left > 0 {
+                            rec.migrations_left -= 1;
+                            rec.state = JobState::Migrating;
+                            queue.schedule(ev.time + 1, Event::JobMigrate { job_id, from: node });
+                        } else {
+                            rec.state = JobState::Displaced;
+                            report.jobs_displaced += 1;
+                        }
+                        // No queue drain here: the node is contended — the
+                        // freed slots stay free until the signal clears (the
+                        // telemetry tick drains) or a completion fires.
+                    }
+
+                    Event::JobMigrate { job_id, from } => {
+                        let rec = &jobs[job_id as usize];
+                        if rec.state != JobState::Migrating {
+                            continue;
+                        }
+                        let demand = rec.demand;
+                        // Probe a few distinct alive peers (excluding the node
+                        // that shed the job) with the same bounded sampler as
+                        // arrivals. Peer selection mirrors arrival dispatch: a
+                        // peer is eligible when its admission signal is clear
+                        // *and* it can hold the job (clamped to its own
+                        // budget); SignalOnly takes the first such peer, the
+                        // scored policies compare congestion.
+                        sample_distinct(
+                            &mut migrate_rng,
+                            &alive_ids,
+                            Some(from),
+                            MIGRATION_PROBES,
+                            &mut candidates,
+                            &mut probe_scratch,
+                        );
+                        let target = pick_candidate(
+                            &candidates,
+                            scenario.dispatch,
+                            &can_accept,
+                            &hosts,
+                            |c| {
+                                hosts[c].can_start(demand.min(hosts[c].slots()))
+                                    || hosts[c].queue_has_room()
+                            },
+                        );
+                        let rec = &mut jobs[job_id as usize];
+                        match target {
+                            Some(node) => {
+                                rec.state = JobState::Dispatching;
+                                report.jobs_migrated += 1;
+                                queue.schedule(ev.time, Event::JobEnqueue { node, job_id });
+                            }
+                            None => {
+                                rec.state = JobState::Displaced;
+                                report.jobs_displaced += 1;
+                            }
+                        }
+                    }
+
+                    Event::FederationPush { leaf, snapshot, sent_at } => {
+                        if let Some(snap) = pool.take(snapshot) {
+                            if let Some(tree) = tree.as_mut() {
+                                tree.push_from_leaf(leaf, &snap);
+                            }
+                            // Instant models still pay the 1-tick scheduling
+                            // floor; don't let that show up as latency.
+                            if !fed.latency.is_instant() {
+                                lat_ticks_sum += ev.time - sent_at;
+                                lat_count += 1;
+                            }
+                        }
+                    }
+
+                    Event::NodeLeave { node } => {
+                        if !alive[node] {
+                            continue;
+                        }
+                        if let Some(churn) = &scenario.churn {
+                            if alive_ids.len() <= churn.min_alive {
+                                continue; // floor reached since scheduling
+                            }
+                        }
+                        alive[node] = false;
+                        report.node_leaves += 1;
+                        // alive_ids stays sorted: membership changes are a
+                        // binary search + shift instead of a full-fleet
+                        // re-scan — same resulting order, O(log n + shift).
+                        if let Ok(pos) = alive_ids.binary_search(&node) {
+                            alive_ids.remove(pos);
+                        }
+                        // Evacuate the host: running jobs are preempted and —
+                        // with migration budget — re-offered to peers; the
+                        // flushed wait queue gets the same treatment (minus
+                        // the preemption count: those jobs never held slots).
+                        let (running, queued) = hosts[node].evacuate();
+                        util.node_left(ev.time, hosts[node].slots());
+                        for (job_id, demand) in running {
+                            util.job_finished(ev.time, demand);
+                            let rec = &mut jobs[job_id as usize];
+                            rec.gen = rec.gen.wrapping_add(1);
+                            total_inflight -= 1;
+                            if cap.is_some() {
+                                report.jobs_preempted += 1;
+                            }
+                            if rec.migrations_left > 0 {
+                                rec.migrations_left -= 1;
+                                rec.state = JobState::Migrating;
                                 queue.schedule(
-                                    ev.time + dt,
-                                    Event::FederationPush { leaf, snapshot, sent_at: ev.time },
+                                    ev.time + 1,
+                                    Event::JobMigrate { job_id, from: node },
+                                );
+                            } else {
+                                rec.state = JobState::Displaced;
+                                report.jobs_displaced += 1;
+                            }
+                        }
+                        for qj in queued {
+                            let rec = &mut jobs[qj.job_id as usize];
+                            rec.gen = rec.gen.wrapping_add(1);
+                            rec.enqueued_at = None;
+                            if rec.migrations_left > 0 {
+                                rec.migrations_left -= 1;
+                                rec.state = JobState::Migrating;
+                                queue.schedule(
+                                    ev.time + 1,
+                                    Event::JobMigrate { job_id: qj.job_id, from: node },
+                                );
+                            } else {
+                                rec.state = JobState::Displaced;
+                                report.jobs_displaced += 1;
+                            }
+                        }
+                        if let Some(churn) = &scenario.churn {
+                            if churn.rejoin_delay_mean > 0.0 {
+                                let delay =
+                                    churn_rng.exponential(1.0 / churn.rejoin_delay_mean);
+                                queue.schedule(
+                                    ev.time + latency_to_ticks(delay),
+                                    Event::NodeJoin { node },
                                 );
                             }
                         }
                     }
 
-                    // 5. Next tick.
-                    if step + 1 < steps {
-                        queue.schedule(
-                            step_to_ticks(step + 1),
-                            Event::TelemetryTick { step: step + 1 },
-                        );
-                    }
-                }
-
-                Event::JobArrival { job_id } => {
-                    let step = ticks_to_step(ev.time);
-                    report.jobs_arrived += 1;
-                    // SLO clock starts at arrival, whatever happens next:
-                    // rejected/dropped/lost jobs count against attainment.
-                    if let Some(slo) = cap.as_ref().and_then(|c| c.slo_steps) {
-                        jobs[job_id as usize].deadline =
-                            Some(ev.time + slo as u64 * TICKS_PER_STEP);
-                        report.slo_total += 1;
-                    }
-                    if alive_ids.is_empty() {
-                        report.jobs_rejected += 1;
-                        report.jobs_unplaceable += 1;
-                        report.outcomes.push(JobOutcome::Rejected { at: step });
-                        jobs[job_id as usize].state = JobState::Rejected;
-                        continue;
-                    }
-                    let m = alive_ids.len();
-                    candidates.clear();
-                    match scenario.probe {
-                        ProbePolicy::RandomProbe => {
-                            candidates.push(alive_ids[dispatch_rng.gen_range(m)]);
+                    Event::NodeJoin { node } => {
+                        if alive[node] {
+                            continue;
                         }
-                        ProbePolicy::PowerOfK(k) => {
-                            // Bounded distinct draw (see `sample_distinct`):
-                            // byte-identical to the historical rejection
-                            // loop on the catalog, O(k + alive) worst case.
-                            sample_distinct(
-                                &mut dispatch_rng,
-                                &alive_ids,
-                                None,
-                                k.max(1),
-                                &mut candidates,
-                                &mut probe_scratch,
-                            );
+                        alive[node] = true;
+                        report.node_joins += 1;
+                        util.node_joined(ev.time, hosts[node].slots());
+                        // Sorted insert (same order the historical push+sort
+                        // produced, without re-sorting the whole fleet).
+                        if let Err(pos) = alive_ids.binary_search(&node) {
+                            alive_ids.insert(pos, node);
                         }
-                        ProbePolicy::RoundRobin => {
-                            // Identity-tracked cursor: probe the first
-                            // alive node with id >= rr_next (wrapping),
-                            // then advance past it. The historical cursor
-                            // was an index modulo the *current* alive
-                            // count, so any leave/join re-aliased every
-                            // later probe and could starve hosts under
-                            // churn. Dead ids are skipped naturally: only
-                            // alive ids are in the (sorted) list.
-                            let pos = alive_ids.partition_point(|&id| id < rr_next);
-                            let c = alive_ids[if pos == m { 0 } else { pos }];
-                            rr_next = c + 1;
-                            candidates.push(c);
-                        }
-                    }
-                    // Score the probe answers: SignalOnly reduces to "first
-                    // signal-clear candidate" (byte-identical to the
-                    // pre-probe dispatch); the scored policies compare
-                    // congestion among signal-clear candidates.
-                    let placed = pick_candidate(
-                        &candidates,
-                        scenario.dispatch,
-                        &can_accept,
-                        &hosts,
-                        |_| true,
-                    );
-                    match placed {
-                        Some(node) => {
-                            report.jobs_accepted += 1;
-                            let hi = score_hi(step);
-                            if source.spike_within(node, step, hi, ready_threshold) {
-                                report.bad_accepts += 1;
-                            } else {
-                                report.good_accepts += 1;
-                            }
-                            report.outcomes.push(JobOutcome::Accepted { node, at: step });
-                            // Hand the job to the host: it starts, parks,
-                            // or drops in the JobEnqueue handler.
-                            queue.schedule(ev.time, Event::JobEnqueue { node, job_id });
-                        }
-                        None => {
-                            report.jobs_rejected += 1;
-                            let hi = score_hi(step);
-                            let justified = candidates
-                                .iter()
-                                .any(|&c| source.spike_within(c, step, hi, ready_threshold));
-                            if justified {
-                                report.justified_rejections += 1;
-                            }
-                            report.outcomes.push(JobOutcome::Rejected { at: step });
-                            jobs[job_id as usize].state = JobState::Rejected;
-                        }
-                    }
-                }
-
-                Event::JobEnqueue { node, job_id } => {
-                    let rec = &mut jobs[job_id as usize];
-                    if rec.state != JobState::Dispatching {
-                        continue;
-                    }
-                    if !alive[node] {
-                        // Defensive: the target vanished between admission
-                        // and hand-off (cannot happen with the current
-                        // event timing, but the ledger must never leak).
-                        rec.state = JobState::Displaced;
-                        report.jobs_displaced += 1;
-                        continue;
-                    }
-                    // Clamp to the placed host's budget: on heterogeneous
-                    // fleets (or an unvalidated scenario with
-                    // max_job_slots > slots_per_node) an oversized draw
-                    // would otherwise park a job that can never start and,
-                    // under FIFO, wedge the whole queue behind it for the
-                    // rest of the run.
-                    let demand = rec.demand.min(hosts[node].slots());
-                    if hosts[node].queue_len() == 0 && hosts[node].can_start(demand) {
-                        hosts[node].start(job_id, demand);
-                        util.job_started(ev.time, demand);
-                        rec.state = JobState::Running { node };
-                        total_inflight += 1;
-                        report.peak_inflight = report.peak_inflight.max(total_inflight);
-                        queue.schedule(
-                            ev.time,
-                            Event::JobStart { node, job_id, gen: rec.gen },
-                        );
-                    } else if hosts[node].try_enqueue(job_id, demand, rec.priority, ev.time) {
-                        rec.state = JobState::Queued { node };
-                        rec.enqueued_at = Some(ev.time);
-                        report.jobs_queued += 1;
-                        report.peak_queue_len =
-                            report.peak_queue_len.max(hosts[node].queue_len());
-                    } else {
-                        rec.state = JobState::Dropped;
-                        report.jobs_dropped += 1;
-                    }
-                }
-
-                Event::JobStart { node, job_id, gen } => {
-                    let rec = &mut jobs[job_id as usize];
-                    if rec.gen != gen || rec.state != (JobState::Running { node }) {
-                        continue;
-                    }
-                    if let Some(t0) = rec.enqueued_at.take() {
-                        let waited = ev.time - t0;
-                        qdelay_ticks_sum += waited;
-                        qdelay_count += 1;
-                        qdelay_p_sum[rec.priority as usize] += waited;
-                        qdelay_p_count[rec.priority as usize] += 1;
-                        hosts[node].note_queue_delay(waited);
-                    }
-                    queue.schedule(
-                        ev.time + rec.duration_steps as u64 * TICKS_PER_STEP,
-                        Event::JobCompletion { node, job_id, gen },
-                    );
-                }
-
-                Event::JobCompletion { node, job_id, gen } => {
-                    let rec = &mut jobs[job_id as usize];
-                    if rec.gen != gen || rec.state != (JobState::Running { node }) {
-                        continue;
-                    }
-                    let freed = hosts[node].finish(job_id).unwrap_or(0);
-                    util.job_finished(ev.time, freed);
-                    rec.state = JobState::Completed;
-                    report.jobs_completed += 1;
-                    if let Some(deadline) = rec.deadline {
-                        if ev.time <= deadline {
-                            report.slo_attained += 1;
-                        }
-                    }
-                    total_inflight -= 1;
-                    if let Some(c) = &cap {
-                        let budget = if can_accept[node] {
-                            hosts[node].slots()
-                        } else {
-                            c.contended_budget(hosts[node].slots())
-                        };
-                        drain_queue(
-                            node,
-                            budget,
-                            &mut hosts,
-                            &mut jobs,
-                            &mut queue,
-                            ev.time,
-                            &mut total_inflight,
-                            &mut util,
-                            &mut report,
-                        );
-                    }
-                }
-
-                Event::JobPreempt { node, job_id, gen } => {
-                    let rec = &mut jobs[job_id as usize];
-                    if rec.gen != gen || rec.state != (JobState::Running { node }) {
-                        continue; // completed or already displaced — stale
-                    }
-                    let freed = hosts[node].finish(job_id).unwrap_or(0);
-                    util.job_finished(ev.time, freed);
-                    rec.gen = rec.gen.wrapping_add(1);
-                    total_inflight -= 1;
-                    report.jobs_preempted += 1;
-                    if rec.migrations_left > 0 {
-                        rec.migrations_left -= 1;
-                        rec.state = JobState::Migrating;
-                        queue.schedule(ev.time + 1, Event::JobMigrate { job_id, from: node });
-                    } else {
-                        rec.state = JobState::Displaced;
-                        report.jobs_displaced += 1;
-                    }
-                    // No queue drain here: the node is contended — the
-                    // freed slots stay free until the signal clears (the
-                    // telemetry tick drains) or a completion fires.
-                }
-
-                Event::JobMigrate { job_id, from } => {
-                    let rec = &jobs[job_id as usize];
-                    if rec.state != JobState::Migrating {
-                        continue;
-                    }
-                    let demand = rec.demand;
-                    // Probe a few distinct alive peers (excluding the node
-                    // that shed the job) with the same bounded sampler as
-                    // arrivals. Peer selection mirrors arrival dispatch: a
-                    // peer is eligible when its admission signal is clear
-                    // *and* it can hold the job (clamped to its own
-                    // budget); SignalOnly takes the first such peer, the
-                    // scored policies compare congestion.
-                    sample_distinct(
-                        &mut migrate_rng,
-                        &alive_ids,
-                        Some(from),
-                        MIGRATION_PROBES,
-                        &mut candidates,
-                        &mut probe_scratch,
-                    );
-                    let target = pick_candidate(
-                        &candidates,
-                        scenario.dispatch,
-                        &can_accept,
-                        &hosts,
-                        |c| {
-                            hosts[c].can_start(demand.min(hosts[c].slots()))
-                                || hosts[c].queue_has_room()
-                        },
-                    );
-                    let rec = &mut jobs[job_id as usize];
-                    match target {
-                        Some(node) => {
-                            rec.state = JobState::Dispatching;
-                            report.jobs_migrated += 1;
-                            queue.schedule(ev.time, Event::JobEnqueue { node, job_id });
-                        }
-                        None => {
-                            rec.state = JobState::Displaced;
-                            report.jobs_displaced += 1;
-                        }
-                    }
-                }
-
-                Event::FederationPush { leaf, snapshot, sent_at } => {
-                    if let Some(snap) = pool.take(snapshot) {
-                        if let Some(tree) = tree.as_mut() {
-                            tree.push_from_leaf(leaf, &snap);
-                        }
-                        // Instant models still pay the 1-tick scheduling
-                        // floor; don't let that show up as latency.
-                        if !fed.latency.is_instant() {
-                            lat_ticks_sum += ev.time - sent_at;
-                            lat_count += 1;
-                        }
-                    }
-                }
-
-                Event::NodeLeave { node } => {
-                    if !alive[node] {
-                        continue;
-                    }
-                    if let Some(churn) = &scenario.churn {
-                        if alive_ids.len() <= churn.min_alive {
-                            continue; // floor reached since scheduling
-                        }
-                    }
-                    alive[node] = false;
-                    report.node_leaves += 1;
-                    // alive_ids stays sorted: membership changes are a
-                    // binary search + shift instead of a full-fleet
-                    // re-scan — same resulting order, O(log n + shift).
-                    if let Ok(pos) = alive_ids.binary_search(&node) {
-                        alive_ids.remove(pos);
-                    }
-                    // Evacuate the host: running jobs are preempted and —
-                    // with migration budget — re-offered to peers; the
-                    // flushed wait queue gets the same treatment (minus
-                    // the preemption count: those jobs never held slots).
-                    let (running, queued) = hosts[node].evacuate();
-                    util.node_left(ev.time, hosts[node].slots());
-                    for (job_id, demand) in running {
-                        util.job_finished(ev.time, demand);
-                        let rec = &mut jobs[job_id as usize];
-                        rec.gen = rec.gen.wrapping_add(1);
-                        total_inflight -= 1;
-                        if cap.is_some() {
-                            report.jobs_preempted += 1;
-                        }
-                        if rec.migrations_left > 0 {
-                            rec.migrations_left -= 1;
-                            rec.state = JobState::Migrating;
-                            queue.schedule(
-                                ev.time + 1,
-                                Event::JobMigrate { job_id, from: node },
-                            );
-                        } else {
-                            rec.state = JobState::Displaced;
-                            report.jobs_displaced += 1;
-                        }
-                    }
-                    for qj in queued {
-                        let rec = &mut jobs[qj.job_id as usize];
-                        rec.gen = rec.gen.wrapping_add(1);
-                        rec.enqueued_at = None;
-                        if rec.migrations_left > 0 {
-                            rec.migrations_left -= 1;
-                            rec.state = JobState::Migrating;
-                            queue.schedule(
-                                ev.time + 1,
-                                Event::JobMigrate { job_id: qj.job_id, from: node },
-                            );
-                        } else {
-                            rec.state = JobState::Displaced;
-                            report.jobs_displaced += 1;
-                        }
-                    }
-                    if let Some(churn) = &scenario.churn {
-                        if churn.rejoin_delay_mean > 0.0 {
-                            let delay =
-                                churn_rng.exponential(1.0 / churn.rejoin_delay_mean);
-                            queue.schedule(
-                                ev.time + latency_to_ticks(delay),
-                                Event::NodeJoin { node },
-                            );
-                        }
-                    }
-                }
-
-                Event::NodeJoin { node } => {
-                    if alive[node] {
-                        continue;
-                    }
-                    alive[node] = true;
-                    report.node_joins += 1;
-                    util.node_joined(ev.time, hosts[node].slots());
-                    // Sorted insert (same order the historical push+sort
-                    // produced, without re-sorting the whole fleet).
-                    if let Err(pos) = alive_ids.binary_search(&node) {
-                        alive_ids.insert(pos, node);
-                    }
-                    // A restarted machine comes back with empty local
-                    // state…
-                    if let Some(f) = &factory {
-                        policies[node] = f(node);
-                        // …so its first post-restart push must clear the
-                        // ε gate even if the re-learned iterate resembles
-                        // the pre-restart one.
-                        if let Some(tree) = tree.as_mut() {
-                            tree.reset_leaf_gate(node);
-                        }
-                    }
-                    // …and (§5.2) seeds it by pulling the merged global
-                    // view — possibly stale, which is the point.
-                    if fed.pull_on_join {
-                        if let Some(tree) = tree.as_ref() {
-                            let global = tree.global_view();
-                            if !global.is_empty() {
-                                policies[node].absorb(global, fed.pull_forget);
+                        // A restarted machine comes back with empty local
+                        // state…
+                        if let Some(f) = &factory {
+                            policies[node] = f(node);
+                            // …so its first post-restart push must clear the
+                            // ε gate even if the re-learned iterate resembles
+                            // the pre-restart one.
+                            if let Some(tree) = tree.as_mut() {
+                                tree.reset_leaf_gate(node);
                             }
                         }
+                        // …and (§5.2) seeds it by pulling the merged global
+                        // view — possibly stale, which is the point.
+                        if fed.pull_on_join {
+                            if let Some(tree) = tree.as_ref() {
+                                let global = tree.global_view();
+                                if !global.is_empty() {
+                                    policies[node].absorb(global, fed.pull_forget);
+                                }
+                            }
+                        }
+                        // Fresh nodes accept until their first telemetry tick
+                        // says otherwise (cold PRONTO state raises no signal).
+                        can_accept[node] = true;
                     }
-                    // Fresh nodes accept until their first telemetry tick
-                    // says otherwise (cold PRONTO state raises no signal).
-                    can_accept[node] = true;
                 }
             }
         }
@@ -1920,6 +2077,113 @@ mod tests {
                 assert!(window < need);
             }
             other => panic!("undersized window must be typed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parallel_observe_is_byte_identical_to_sequential() {
+        // The quick in-crate parity check (the integration suite sweeps
+        // the full catalog): sequential and sharded observe loops must
+        // produce byte-identical reports with stateful FPCA policies.
+        for name in ["baseline-poisson", "capacity", "churn"] {
+            let sc = Scenario::named(name).unwrap().with_nodes(6).with_steps(400);
+            let tr = traces(6, 400, 17);
+            let base = DiscreteEventEngine::new(
+                sc.clone().with_threads(1),
+                tr.clone(),
+                pronto_policies(&tr),
+            )
+            .run();
+            for threads in [2, 3, 7] {
+                let par = DiscreteEventEngine::new(
+                    sc.clone().with_threads(threads),
+                    tr.clone(),
+                    pronto_policies(&tr),
+                )
+                .run();
+                assert_eq!(
+                    base.to_json_string(),
+                    par.to_json_string(),
+                    "{name} diverged at {threads} threads"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn same_tick_arrival_storms_batch_without_leaking_the_ledger() {
+        // > TICKS_PER_STEP − 2 arrivals per step forces genuinely
+        // same-timestamp arrival events (the per-arrival scheduling
+        // offset clamps at the step boundary), so the TickBatch path
+        // sees arrival/enqueue/start/completion/churn collisions at one
+        // tick. The ledger must balance and the report must stay
+        // byte-identical across runs and thread widths.
+        use crate::sim::scenario::ReplaySchedule;
+        let counts: Vec<u32> = (0..12).map(|t| if t % 4 == 0 { 1_200 } else { 0 }).collect();
+        let sc = Scenario {
+            arrivals: ArrivalPattern::Replay {
+                schedule: std::sync::Arc::new(ReplaySchedule::from_counts(counts, "storm")),
+            },
+            capacity: Some(CapacityModel {
+                slots_per_node: 2,
+                contended_slots: 2,
+                queue_capacity: 4,
+                max_job_slots: 1,
+                queue_policy: QueuePolicy::Fifo,
+                migration_limit: 1,
+                ..CapacityModel::default()
+            }),
+            churn: Some(ChurnModel {
+                leave_hazard: 0.05,
+                rejoin_delay_mean: 2.0,
+                min_alive: 2,
+            }),
+            duration_mu: 0.5,
+            duration_sigma: 0.2,
+            ..Scenario::default()
+        }
+        .with_nodes(6)
+        .with_steps(12);
+        let tr = traces(6, 12, 3);
+        let run = |threads: usize| {
+            DiscreteEventEngine::new(
+                sc.clone().with_threads(threads),
+                tr.clone(),
+                always_policies(&tr),
+            )
+            .run()
+        };
+        let a = run(1);
+        let b = run(1);
+        let c = run(4);
+        assert_eq!(a.to_json_string(), b.to_json_string(), "storm not reproducible");
+        assert_eq!(a.to_json_string(), c.to_json_string(), "threads changed bytes");
+        assert!(a.jobs_arrived >= 3_600, "storm too thin: {}", a.jobs_arrived);
+        assert!(a.jobs_dropped > 0, "storm never overflowed the bounded queues");
+        assert_ledger(&a);
+    }
+
+    #[test]
+    fn spike_memo_agrees_with_direct_scans() {
+        let tr = traces(3, 60, 5);
+        let mut direct = TraceSource::materialized(tr.clone());
+        let mut memo_src = TraceSource::materialized(tr);
+        let mut memo = SpikeMemo::new(3);
+        for step in (0..50).chain(10..20) {
+            let hi = (step + 5).min(59);
+            for node in 0..3 {
+                // Repeated queries (same node+step twice) hit the memo.
+                let want = direct.spike_within(node, step, hi, 400.0);
+                assert_eq!(
+                    memo.spike_within(&mut memo_src, node, step, hi, 400.0),
+                    want
+                );
+                assert_eq!(
+                    memo.spike_within(&mut memo_src, node, step, hi, 400.0),
+                    want,
+                    "memoized re-read diverged at node {node} step {step}"
+                );
+            }
         }
     }
 

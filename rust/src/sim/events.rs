@@ -142,6 +142,39 @@ impl EventQueue {
         self.heap.pop()
     }
 
+    /// Timestamp of the earliest pending event.
+    pub fn peek_time(&self) -> Option<SimTime> {
+        self.heap.peek().map(|s| s.time)
+    }
+
+    /// Drain **every** event sharing the earliest timestamp into `batch`
+    /// (clearing it first), in exactly the order [`EventQueue::pop`]
+    /// would have produced. Returns `false` when the queue is empty.
+    ///
+    /// Events scheduled *while a batch is being processed* — even at the
+    /// batch's own timestamp — carry higher sequence numbers, so they
+    /// land in a later batch, exactly where per-event popping would have
+    /// put them. Concatenating drained batches therefore reproduces the
+    /// per-event pop order byte-for-byte; the batch only gives the
+    /// engine a same-tick view to hoist per-tick work out of per-event
+    /// handlers.
+    pub fn drain_tick(&mut self, batch: &mut TickBatch) -> bool {
+        batch.events.clear();
+        let Some(first) = self.heap.pop() else {
+            batch.time = 0;
+            return false;
+        };
+        batch.time = first.time;
+        batch.events.push(first);
+        while let Some(next) = self.heap.peek() {
+            if next.time != batch.time {
+                break;
+            }
+            batch.events.push(self.heap.pop().expect("peeked event present"));
+        }
+        true
+    }
+
     pub fn len(&self) -> usize {
         self.heap.len()
     }
@@ -153,6 +186,61 @@ impl EventQueue {
     /// Total events scheduled over the queue's lifetime.
     pub fn scheduled_total(&self) -> usize {
         self.scheduled_total
+    }
+}
+
+/// All events sharing one simulation timestamp, in `(time, seq)` pop
+/// order — the unit the engine's event loop now dispatches. Reused
+/// across ticks (the backing `Vec` is cleared, not reallocated), so
+/// steady-state batching stays allocation-free.
+#[derive(Debug, Default)]
+pub struct TickBatch {
+    time: SimTime,
+    events: Vec<Scheduled>,
+}
+
+impl TickBatch {
+    /// The shared timestamp (meaningless while empty).
+    pub fn time(&self) -> SimTime {
+        self.time
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// The batch's events in pop order.
+    pub fn events(&self) -> &[Scheduled] {
+        &self.events
+    }
+
+    /// Job ids of the arrivals in this batch, in pop order.
+    pub fn arrivals(&self) -> impl Iterator<Item = crate::scheduler::JobId> + '_ {
+        self.events.iter().filter_map(|s| match s.event {
+            Event::JobArrival { job_id } => Some(job_id),
+            _ => None,
+        })
+    }
+
+    /// Completions in this batch as `(node, job_id)`, in pop order.
+    pub fn completions(&self) -> impl Iterator<Item = (usize, crate::scheduler::JobId)> + '_ {
+        self.events.iter().filter_map(|s| match s.event {
+            Event::JobCompletion { node, job_id, .. } => Some((node, job_id)),
+            _ => None,
+        })
+    }
+
+    /// Churn events in this batch as `(node, is_join)`, in pop order.
+    pub fn churn(&self) -> impl Iterator<Item = (usize, bool)> + '_ {
+        self.events.iter().filter_map(|s| match s.event {
+            Event::NodeJoin { node } => Some((node, true)),
+            Event::NodeLeave { node } => Some((node, false)),
+            _ => None,
+        })
     }
 }
 
@@ -207,5 +295,43 @@ mod tests {
         assert_eq!(latency_to_ticks(0.0), 1);
         assert_eq!(latency_to_ticks(2.0), 2 * TICKS_PER_STEP);
         assert_eq!(latency_to_ticks(0.5), TICKS_PER_STEP / 2);
+    }
+
+    #[test]
+    fn drain_tick_groups_same_timestamp_events_in_pop_order() {
+        let mut q = EventQueue::with_capacity(8);
+        q.schedule(20, Event::JobArrival { job_id: 2 });
+        q.schedule(10, Event::JobArrival { job_id: 0 });
+        q.schedule(10, Event::NodeLeave { node: 5 });
+        q.schedule(10, Event::JobArrival { job_id: 1 });
+        let mut batch = TickBatch::default();
+
+        assert!(q.drain_tick(&mut batch));
+        assert_eq!(batch.time(), 10);
+        assert_eq!(batch.len(), 3);
+        assert_eq!(batch.arrivals().collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(batch.churn().collect::<Vec<_>>(), vec![(5, false)]);
+        assert!(batch.completions().next().is_none());
+        // In-batch order is pop order, not grouped-by-kind order.
+        assert!(matches!(batch.events()[1].event, Event::NodeLeave { node: 5 }));
+
+        // The batch is reused: the next drain clears it first.
+        assert!(q.drain_tick(&mut batch));
+        assert_eq!(batch.time(), 20);
+        assert_eq!(batch.len(), 1);
+        assert!(q.is_empty());
+        assert!(!q.drain_tick(&mut batch));
+        assert!(batch.is_empty());
+    }
+
+    #[test]
+    fn peek_time_tracks_the_head() {
+        let mut q = EventQueue::with_capacity(4);
+        assert_eq!(q.peek_time(), None);
+        q.schedule(7, Event::TelemetryTick { step: 0 });
+        q.schedule(3, Event::TelemetryTick { step: 1 });
+        assert_eq!(q.peek_time(), Some(3));
+        q.pop();
+        assert_eq!(q.peek_time(), Some(7));
     }
 }

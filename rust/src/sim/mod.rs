@@ -25,11 +25,11 @@ pub mod events;
 pub mod scenario;
 
 pub use datacenter::{DataCenterSim, SimConfig};
-pub use engine::{DiscreteEventEngine, EngineError, PolicyFactory, SimReport};
+pub use engine::{sample_distinct, DiscreteEventEngine, EngineError, PolicyFactory, SimReport};
 pub use eval::{evaluate_method, EvalConfig, FleetEvaluation, NodeEvaluation};
 pub use events::{
     latency_to_ticks, step_to_ticks, ticks_to_step, Event, EventQueue, Scheduled, SimTime,
-    TICKS_PER_STEP,
+    TickBatch, TICKS_PER_STEP,
 };
 pub use scenario::{
     ArrivalPattern, CapacityModel, ChurnModel, DispatchPolicy, FederationSpec, HostClass,

@@ -407,6 +407,11 @@ pub struct Scenario {
     pub ready_threshold: f64,
     /// Horizon after acceptance scored for degradation (steps).
     pub score_window: usize,
+    /// Worker threads for the per-tick observe loop. 1 (the default)
+    /// runs the exact sequential code path; any width produces
+    /// byte-identical reports (per-node state is sharded disjointly and
+    /// merged in node-id order), so this knob trades wall time only.
+    pub threads: usize,
     pub churn: Option<ChurnModel>,
     pub federation: FederationSpec,
     /// Host capacity model; `None` = legacy admission-only simulation.
@@ -427,6 +432,7 @@ impl Default for Scenario {
             duration_sigma: 0.8,
             ready_threshold: 1000.0,
             score_window: 5,
+            threads: 1,
             churn: None,
             federation: FederationSpec::default(),
             capacity: None,
@@ -795,6 +801,7 @@ impl Scenario {
                     ("scenario", "duration_sigma") => s.duration_sigma = num()?,
                     ("scenario", "ready_threshold") => s.ready_threshold = num()?,
                     ("scenario", "score_window") => s.score_window = uint()?,
+                    ("scenario", "threads") => s.threads = uint()?,
 
                     ("arrivals", "pattern") => pattern = string()?,
                     ("arrivals", "rate") => rate = num()?,
@@ -1027,6 +1034,12 @@ impl Scenario {
         if self.nodes == 0 || self.steps == 0 {
             bail!("scenario: nodes and steps must be positive");
         }
+        if self.threads == 0 || self.threads > 256 {
+            bail!(
+                "scenario: threads ({}) must be in [1, 256] (1 = sequential)",
+                self.threads
+            );
+        }
         if self.federation.fanout < 2 {
             bail!("scenario: federation.fanout must be >= 2");
         }
@@ -1142,6 +1155,11 @@ impl Scenario {
         self.seed = seed;
         self
     }
+
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
 }
 
 #[cfg(test)]
@@ -1238,6 +1256,20 @@ latency_mean_steps = 5.0
         assert!(Scenario::from_toml("[scenario]\nnodes = 0\n").is_err());
         assert!(Scenario::from_toml("[scenario]\ndispatch = \"psychic\"\n").is_err());
         assert!(Scenario::from_toml("[scenario]\nprobe = \"signal-only\"\n").is_err());
+    }
+
+    #[test]
+    fn threads_knob_parses_and_validates() {
+        // Unset keeps the sequential default.
+        let s = Scenario::from_toml("[scenario]\nnodes = 4\n").unwrap();
+        assert_eq!(s.threads, 1);
+        let s = Scenario::from_toml("[scenario]\nthreads = 4\n").unwrap();
+        assert_eq!(s.threads, 4);
+        // 0 and absurd widths are rejected, not clamped silently.
+        assert!(Scenario::from_toml("[scenario]\nthreads = 0\n").is_err());
+        assert!(Scenario::from_toml("[scenario]\nthreads = 1000\n").is_err());
+        assert!(Scenario::default().with_threads(0).validate().is_err());
+        assert!(Scenario::default().with_threads(7).validate().is_ok());
     }
 
     #[test]

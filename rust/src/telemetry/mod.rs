@@ -24,5 +24,5 @@ pub mod trace;
 
 pub use catalog::{host_metric_names, vm_metric_names, CPU_READY_IDX, VM_DIM};
 pub use generator::{ClusterTrace, GeneratorConfig, TraceGenerator, VmTraceStream};
-pub use source::{fleet_members, StreamingFleet, TraceSource};
+pub use source::{fleet_members, NodeView, StreamNodeView, StreamingFleet, TraceSource};
 pub use trace::VmTrace;

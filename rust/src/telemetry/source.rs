@@ -106,6 +106,23 @@ impl TraceSource {
         }
     }
 
+    /// Split the source into one [`NodeView`] per node, each owning that
+    /// node's state exclusively (the trace slice, or the generator stream
+    /// + ring segment + frontier). The views are `Send` and mutate
+    /// disjoint storage, which is what lets the engine's observe loop
+    /// shard nodes across worker threads while every per-node read stays
+    /// bit-identical to the sequential path (same stream, same
+    /// advancement code — only the *interleaving across nodes* changes,
+    /// and no node ever reads another node's state).
+    pub fn node_views(&mut self) -> Vec<NodeView<'_>> {
+        match self {
+            TraceSource::Materialized(tr) => {
+                tr.iter().map(NodeView::Materialized).collect()
+            }
+            TraceSource::Streaming(s) => s.node_views(),
+        }
+    }
+
     /// CPU Ready value of `node` at `step` (same window rules).
     #[inline]
     pub fn cpu_ready(&mut self, node: usize, step: usize) -> f64 {
@@ -173,32 +190,133 @@ impl StreamingFleet {
         self.window
     }
 
-    #[inline]
-    fn slot(&self, node: usize, step: usize) -> usize {
-        (node * self.window + step % self.window) * self.dim
-    }
-
     /// The column of `node` at `step`, advancing the node's stream as
     /// needed. Panics when `step` has already slid out of the window —
     /// that is an engine access-pattern bug, not a recoverable condition.
     fn column(&mut self, node: usize, step: usize) -> &[f64] {
-        assert!(step < self.horizon, "streaming read past the horizon");
-        let dim = self.dim;
-        while self.frontier[node] <= step {
-            let t = self.frontier[node];
-            let at = self.slot(node, t);
-            self.streams[node].next_into(&mut self.ring[at..at + dim]);
-            self.frontier[node] = t + 1;
-        }
-        assert!(
-            step + self.window >= self.frontier[node],
-            "streaming read of step {step} on node {node} fell out of the \
-             window (frontier {}, window {})",
-            self.frontier[node],
-            self.window
+        let span = self.window * self.dim;
+        let chunk = &mut self.ring[node * span..(node + 1) * span];
+        advance_node(
+            &mut self.streams[node],
+            chunk,
+            &mut self.frontier[node],
+            self.window,
+            self.dim,
+            self.horizon,
+            node,
+            step,
         );
-        let at = self.slot(node, step);
-        &self.ring[at..at + dim]
+        let at = (step % self.window) * self.dim;
+        &chunk[at..at + self.dim]
+    }
+
+    /// Per-node views over disjoint slices of the fleet state (see
+    /// [`TraceSource::node_views`]).
+    fn node_views(&mut self) -> Vec<NodeView<'_>> {
+        let (window, dim, horizon) = (self.window, self.dim, self.horizon);
+        let span = window * dim;
+        self.ring
+            .chunks_mut(span)
+            .zip(self.streams.iter_mut())
+            .zip(self.frontier.iter_mut())
+            .enumerate()
+            .map(|(node, ((ring, stream), frontier))| {
+                NodeView::Streaming(StreamNodeView {
+                    stream,
+                    ring,
+                    frontier,
+                    window,
+                    dim,
+                    horizon,
+                    node,
+                })
+            })
+            .collect()
+    }
+}
+
+/// Advance one node's generator until `step` is buffered in its ring
+/// chunk. Shared by the whole-fleet accessor and the per-node
+/// [`StreamNodeView`], so both run the exact same per-step code (the
+/// bit-identity across sequential and sharded access rests on this).
+#[allow(clippy::too_many_arguments)]
+fn advance_node(
+    stream: &mut VmTraceStream,
+    chunk: &mut [f64],
+    frontier: &mut usize,
+    window: usize,
+    dim: usize,
+    horizon: usize,
+    node: usize,
+    step: usize,
+) {
+    assert!(step < horizon, "streaming read past the horizon");
+    while *frontier <= step {
+        let t = *frontier;
+        let at = (t % window) * dim;
+        stream.next_into(&mut chunk[at..at + dim]);
+        *frontier = t + 1;
+    }
+    assert!(
+        step + window >= *frontier,
+        "streaming read of step {step} on node {node} fell out of the \
+         window (frontier {}, window {})",
+        *frontier,
+        window
+    );
+}
+
+/// Exclusive handle on one node's telemetry: a trace borrow
+/// (materialized) or the node's generator stream + ring segment
+/// (streaming). Obtained via [`TraceSource::node_views`]; `Send`, so a
+/// worker thread can own a contiguous run of nodes during the parallel
+/// observe loop.
+pub enum NodeView<'a> {
+    /// Read-only slice of a fully materialized trace.
+    Materialized(&'a VmTrace),
+    /// Mutable per-node streaming state.
+    Streaming(StreamNodeView<'a>),
+}
+
+impl NodeView<'_> {
+    /// Metric vector at `step` (same window rules as
+    /// [`TraceSource::features`]).
+    #[inline]
+    pub fn features(&mut self, step: usize) -> &[f64] {
+        match self {
+            NodeView::Materialized(tr) => tr.features(step),
+            NodeView::Streaming(v) => v.features(step),
+        }
+    }
+}
+
+/// The streaming half of a [`NodeView`]: this node's generator stream,
+/// its `window × dim` ring segment, and its frontier — all disjoint from
+/// every other node's.
+pub struct StreamNodeView<'a> {
+    stream: &'a mut VmTraceStream,
+    ring: &'a mut [f64],
+    frontier: &'a mut usize,
+    window: usize,
+    dim: usize,
+    horizon: usize,
+    node: usize,
+}
+
+impl StreamNodeView<'_> {
+    fn features(&mut self, step: usize) -> &[f64] {
+        advance_node(
+            self.stream,
+            self.ring,
+            self.frontier,
+            self.window,
+            self.dim,
+            self.horizon,
+            self.node,
+            step,
+        );
+        let at = (step % self.window) * self.dim;
+        &self.ring[at..at + self.dim]
     }
 }
 
@@ -290,6 +408,43 @@ mod tests {
         assert!(fleet_members(0, 4).is_empty());
         // A degenerate fanout clamps to 1 instead of dividing by zero.
         assert_eq!(fleet_members(2, 0), vec![(0, 0), (1, 1)]);
+    }
+
+    #[test]
+    fn node_views_are_send_and_bit_identical_to_whole_source_reads() {
+        fn assert_send<T: Send>(_: &T) {}
+        let g = generator();
+        let n = 3;
+        let steps = 240;
+        let lookahead = 5;
+        let traces: Vec<VmTrace> = members(n)
+            .iter()
+            .map(|&(c, v)| g.generate_vm_in_cluster(c, v, steps))
+            .collect();
+        for streaming in [false, true] {
+            let mut src = if streaming {
+                TraceSource::streaming(&g, &members(n), steps, lookahead)
+            } else {
+                TraceSource::materialized(traces.clone())
+            };
+            let mut views = src.node_views();
+            assert_eq!(views.len(), n);
+            assert_send(&views);
+            // Drive the views in a deliberately skewed interleaving (node
+            // 2 far ahead of node 0) — per-node columns must still equal
+            // the materialized reference exactly.
+            for step in 0..steps / 2 {
+                assert_eq!(views[2].features(step * 2), traces[2].features(step * 2));
+                assert_eq!(views[0].features(step), traces[0].features(step));
+                assert_eq!(views[1].features(step), traces[1].features(step));
+            }
+            drop(views);
+            // The parent source continues from the views' frontiers.
+            let hi = steps - 1;
+            for (node, tr) in traces.iter().enumerate() {
+                assert_eq!(src.features(node, hi), tr.features(hi), "node {node}");
+            }
+        }
     }
 
     #[test]

@@ -9,7 +9,8 @@
 
 use pronto::proptest::forall;
 use pronto::sim::{
-    latency_to_ticks, step_to_ticks, ticks_to_step, Event, EventQueue, SimTime, TICKS_PER_STEP,
+    latency_to_ticks, step_to_ticks, ticks_to_step, Event, EventQueue, SimTime, TickBatch,
+    TICKS_PER_STEP,
 };
 
 /// Tag each scheduled event with its insertion index so the pop sequence
@@ -144,6 +145,115 @@ fn same_time_events_pop_in_schedule_order_exactly() {
 }
 
 #[test]
+fn tick_batches_partition_the_pop_order_by_timestamp() {
+    // The engine's batched event loop is only sound if concatenating
+    // drained batches reproduces the per-event pop order exactly, with
+    // each batch holding *all* events of one timestamp. Timestamps are
+    // drawn from a tiny range so duplicates are the norm, not the
+    // exception.
+    forall("drain_tick ≡ pop, grouped by equal timestamps", |rng| {
+        let n = 1 + rng.gen_range(400);
+        let time_range = 1 + rng.gen_range(8); // aggressive duplication
+        let mut batched = EventQueue::with_capacity(n);
+        let mut reference = EventQueue::with_capacity(n);
+        for i in 0..n {
+            let t = rng.gen_range(time_range) as SimTime;
+            batched.schedule(t, tagged(i));
+            reference.schedule(t, tagged(i));
+        }
+        let mut batch = TickBatch::default();
+        let mut last_time: Option<SimTime> = None;
+        let mut drained = 0usize;
+        while batched.drain_tick(&mut batch) {
+            if batch.is_empty() {
+                return Err("drain_tick returned true with an empty batch".into());
+            }
+            if let Some(lt) = last_time {
+                if batch.time() <= lt {
+                    return Err(format!(
+                        "batch times not strictly increasing: {} after {lt}",
+                        batch.time()
+                    ));
+                }
+            }
+            last_time = Some(batch.time());
+            for s in batch.events() {
+                if s.time != batch.time() {
+                    return Err(format!(
+                        "mixed timestamps in one batch: {} in a t={} batch",
+                        s.time,
+                        batch.time()
+                    ));
+                }
+                let want = reference.pop().ok_or("reference queue drained early")?;
+                if s.time != want.time || untag(s.event) != untag(want.event) {
+                    return Err(format!(
+                        "batch order diverged from pop order at tag {}",
+                        untag(s.event)
+                    ));
+                }
+                drained += 1;
+            }
+            // A batch must be maximal: the next pending event (if any)
+            // carries a strictly later timestamp.
+            if let Some(next) = batched.peek_time() {
+                if next == batch.time() {
+                    return Err("batch left a same-timestamp event behind".into());
+                }
+            }
+        }
+        if drained != n {
+            return Err(format!("drained {drained} of {n} events"));
+        }
+        if reference.pop().is_some() {
+            return Err("reference queue still has events".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn events_scheduled_mid_batch_land_in_a_later_batch() {
+    // The engine schedules same-timestamp follow-ups (enqueue → start)
+    // while processing a batch; they must surface in the *next* drain at
+    // that timestamp, in schedule order — exactly where per-event
+    // popping would have put them.
+    forall("mid-batch schedules drain next, FIFO", |rng| {
+        let t = rng.gen_range(100) as SimTime;
+        let first = 1 + rng.gen_range(20);
+        let mut q = EventQueue::with_capacity(64);
+        for i in 0..first {
+            q.schedule(t, tagged(i));
+        }
+        let mut batch = TickBatch::default();
+        if !q.drain_tick(&mut batch) || batch.len() != first {
+            return Err(format!("expected a {first}-event batch"));
+        }
+        // "Handlers" enqueue follow-ups at the same timestamp.
+        let extra = 1 + rng.gen_range(20);
+        for i in 0..extra {
+            q.schedule(t, tagged(first + i));
+        }
+        if !q.drain_tick(&mut batch) {
+            return Err("follow-up batch missing".into());
+        }
+        if batch.time() != t || batch.len() != extra {
+            return Err(format!(
+                "follow-ups mis-batched: {} events at t={}",
+                batch.len(),
+                batch.time()
+            ));
+        }
+        let tags: Vec<usize> = batch.events().iter().map(|s| untag(s.event)).collect();
+        let want: Vec<usize> = (first..first + extra).collect();
+        if tags != want {
+            return Err(format!("follow-up order {tags:?} != schedule order {want:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn step_tick_conversions_roundtrip_for_arbitrary_steps() {
     forall("step↔tick round-trip", |rng| {
         // Any step a realistic run could reach (u64 ticks cap the step
@@ -161,6 +271,98 @@ fn step_tick_conversions_roundtrip_for_arbitrary_steps() {
         // …and the first tick past it does not.
         if ticks_to_step(base + TICKS_PER_STEP) != step + 1 {
             return Err("step boundary off by one".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn same_tick_storm_interleavings_conserve_the_job_ledger() {
+    // Engine-level TickBatch coverage: replayed arrival storms past the
+    // per-step scheduling-offset clamp (> TICKS_PER_STEP − 2 arrivals in
+    // one step) force genuinely same-timestamp arrival events, which
+    // then collide with enqueues, starts, completions, preemptions, and
+    // churn at single ticks. Whatever the interleaving, the job ledger
+    // must balance and the run must be byte-reproducible.
+    use pronto::scheduler::{Admission, RandomPolicy};
+    use pronto::sim::{
+        ArrivalPattern, CapacityModel, ChurnModel, DiscreteEventEngine, ReplaySchedule, Scenario,
+    };
+    use pronto::telemetry::{GeneratorConfig, TraceGenerator};
+
+    forall("same-tick storms: ledger conservation + determinism", |rng| {
+        let nodes = 4 + rng.gen_range(5);
+        let steps = 8 + rng.gen_range(8);
+        // Mostly quiet steps with 1–3 storms big enough to clamp.
+        let mut counts = vec![0u32; steps];
+        for _ in 0..(1 + rng.gen_range(3)) {
+            counts[rng.gen_range(steps)] = 1_000 + rng.gen_range(600) as u32;
+        }
+        let seed = rng.next_u64();
+        let mut sc = Scenario {
+            arrivals: ArrivalPattern::Replay {
+                schedule: std::sync::Arc::new(ReplaySchedule::from_counts(
+                    counts, "prop-storm",
+                )),
+            },
+            capacity: Some(CapacityModel {
+                slots_per_node: 1 + rng.gen_range(3) as u32,
+                queue_capacity: rng.gen_range(6),
+                migration_limit: rng.gen_range(3) as u32,
+                ..CapacityModel::default()
+            }),
+            duration_mu: 0.4,
+            duration_sigma: 0.3,
+            ..Scenario::default()
+        }
+        .with_nodes(nodes)
+        .with_steps(steps)
+        .with_seed(seed);
+        // contended_slots must not exceed the drawn slots_per_node.
+        if let Some(c) = sc.capacity.as_mut() {
+            c.contended_slots = c.slots_per_node;
+        }
+        if rng.bernoulli(0.5) {
+            sc.churn = Some(ChurnModel {
+                leave_hazard: 0.1,
+                rejoin_delay_mean: 2.0,
+                min_alive: 2,
+            });
+        }
+        let gen = TraceGenerator::new(GeneratorConfig::default(), seed);
+        let tr: Vec<_> = (0..nodes).map(|v| gen.generate_vm_in_cluster(v / 4, v, steps)).collect();
+        let run = |threads: usize| {
+            let pol: Vec<Box<dyn Admission>> = (0..nodes)
+                .map(|i| Box::new(RandomPolicy::new(0.2, seed ^ i as u64)) as Box<dyn Admission>)
+                .collect();
+            DiscreteEventEngine::new(sc.clone().with_threads(threads), tr.clone(), pol).run()
+        };
+        let a = run(1);
+        let b = run(1);
+        if a.to_json_string() != b.to_json_string() {
+            return Err("storm run not reproducible".into());
+        }
+        let c = run(4);
+        if a.to_json_string() != c.to_json_string() {
+            return Err("thread width changed storm bytes".into());
+        }
+        if a.jobs_arrived < 1_000 {
+            return Err(format!("storm too thin: {}", a.jobs_arrived));
+        }
+        let settled = a.jobs_rejected
+            + a.jobs_completed
+            + a.jobs_dropped
+            + a.jobs_displaced
+            + a.jobs_still_queued
+            + a.jobs_still_running;
+        if a.jobs_arrived != settled {
+            return Err(format!(
+                "ledger leaked: {} arrived vs {settled} settled",
+                a.jobs_arrived
+            ));
+        }
+        if a.jobs_arrived != a.jobs_accepted + a.jobs_rejected {
+            return Err("accept/reject split leaked".into());
         }
         Ok(())
     });

@@ -1,0 +1,194 @@
+//! Byte-parity of the parallel observe loop: for any scenario, seed, and
+//! trace-source backing, `threads ∈ {1, 2, 4, 7}` must produce
+//! **byte-identical** `--json` reports — the whole determinism contract
+//! of `Scenario::threads`. Covers the full catalog deterministically and
+//! random small scenarios property-style (replayable via
+//! `PRONTO_PROP_SEED` / `PRONTO_PROP_CASES`, like the other prop suites).
+
+use pronto::proptest::forall;
+use pronto::scheduler::{Admission, NodeScheduler, ProntoPolicy, RandomPolicy, RejectConfig};
+use pronto::sim::{ArrivalPattern, ChurnModel, DiscreteEventEngine, ProbePolicy, Scenario, CATALOG};
+use pronto::telemetry::{fleet_members, GeneratorConfig, TraceGenerator, TraceSource, VmTrace};
+
+const FANOUT: usize = 4;
+
+fn fleet(nodes: usize, steps: usize, seed: u64) -> Vec<VmTrace> {
+    let gen = TraceGenerator::new(GeneratorConfig::default(), seed);
+    fleet_members(nodes, FANOUT)
+        .into_iter()
+        .map(|(c, v)| gen.generate_vm_in_cluster(c, v, steps))
+        .collect()
+}
+
+#[derive(Clone, Copy)]
+enum PolicyKind {
+    Always,
+    /// Per-node RNG state: exercises statefulness without FPCA cost.
+    Random,
+    /// Full FPCA pipeline per node.
+    Pronto,
+}
+
+fn make_policy(kind: PolicyKind, seed: u64, node: usize, dim: usize) -> Box<dyn Admission> {
+    match kind {
+        PolicyKind::Always => Box::new(RandomPolicy::always_accept(seed ^ node as u64)),
+        PolicyKind::Random => Box::new(RandomPolicy::new(0.25, seed ^ node as u64)),
+        PolicyKind::Pronto => {
+            Box::new(ProntoPolicy::new(NodeScheduler::new(dim, RejectConfig::default())))
+        }
+    }
+}
+
+fn policies(kind: PolicyKind, traces: &[VmTrace], seed: u64) -> Vec<Box<dyn Admission>> {
+    traces
+        .iter()
+        .enumerate()
+        .map(|(node, t)| make_policy(kind, seed, node, t.dim()))
+        .collect()
+}
+
+/// Run `scenario` and return the byte artifact.
+fn report_json(
+    scenario: &Scenario,
+    traces: &[VmTrace],
+    kind: PolicyKind,
+    threads: usize,
+    streaming: bool,
+) -> String {
+    let scenario = scenario.clone().with_threads(threads);
+    let pol = policies(kind, traces, scenario.seed);
+    let source = if streaming {
+        let gen = TraceGenerator::new(GeneratorConfig::default(), scenario.seed);
+        TraceSource::streaming(
+            &gen,
+            &fleet_members(scenario.nodes, FANOUT),
+            scenario.steps,
+            scenario.score_window,
+        )
+    } else {
+        TraceSource::materialized(traces.to_vec())
+    };
+    let mut engine = DiscreteEventEngine::try_from_source(scenario.clone(), source, pol)
+        .expect("valid parity fleet");
+    if scenario.churn.is_some() {
+        let seed = scenario.seed;
+        let dims: Vec<usize> = traces.iter().map(VmTrace::dim).collect();
+        let factory: pronto::sim::PolicyFactory =
+            Box::new(move |node| make_policy(kind, seed, node, dims[node]));
+        engine = engine.with_policy_factory(factory);
+    }
+    engine.run().to_json_string()
+}
+
+#[test]
+fn every_catalog_scenario_is_byte_identical_across_thread_counts() {
+    // The acceptance criterion: `--threads 4` ≡ `--threads 1` for every
+    // catalog scenario (shrunk to test sizes — the scale entries keep
+    // their arrival/capacity shape, just fewer nodes). `always` keeps
+    // the sweep fast; stateful-policy coverage lives in the tests below.
+    for name in CATALOG {
+        let sc = Scenario::named(name).unwrap().with_nodes(12).with_steps(200).with_seed(71);
+        let tr = fleet(12, 200, sc.seed);
+        let base = report_json(&sc, &tr, PolicyKind::Always, 1, false);
+        for threads in [2, 4, 7] {
+            assert_eq!(
+                base,
+                report_json(&sc, &tr, PolicyKind::Always, threads, false),
+                "catalog scenario '{name}' diverged at {threads} threads"
+            );
+        }
+        // Streaming backing under a parallel observe loop: still the
+        // same bytes.
+        assert_eq!(
+            base,
+            report_json(&sc, &tr, PolicyKind::Always, 4, true),
+            "catalog scenario '{name}' diverged streaming at 4 threads"
+        );
+    }
+}
+
+#[test]
+fn stateful_policies_stay_byte_identical_under_sharding() {
+    // FPCA iterates (pronto) and per-node RNG (random) carry state from
+    // tick to tick — exactly what sharding must not perturb.
+    for (name, kind) in [
+        ("baseline-poisson", PolicyKind::Pronto),
+        ("churn", PolicyKind::Pronto),
+        ("capacity", PolicyKind::Random),
+        ("flash-crowd", PolicyKind::Random),
+    ] {
+        let sc = Scenario::named(name).unwrap().with_nodes(8).with_steps(300).with_seed(5);
+        let tr = fleet(8, 300, sc.seed);
+        let base = report_json(&sc, &tr, kind, 1, false);
+        for threads in [2, 7] {
+            assert_eq!(
+                base,
+                report_json(&sc, &tr, kind, threads, false),
+                "'{name}' with stateful policies diverged at {threads} threads"
+            );
+        }
+        assert_eq!(
+            base,
+            report_json(&sc, &tr, kind, 4, true),
+            "'{name}' streaming x 4 threads diverged"
+        );
+    }
+}
+
+#[test]
+fn random_small_scenarios_are_thread_count_invariant() {
+    forall("threads ∈ {1,2,4,7} × sources byte parity", |rng| {
+        let nodes = 3 + rng.gen_range(10);
+        let steps = 60 + rng.gen_range(120);
+        let seed = rng.next_u64();
+        let mut sc = Scenario::default().with_nodes(nodes).with_steps(steps).with_seed(seed);
+        sc.arrivals = match rng.gen_range(3) {
+            0 => ArrivalPattern::Poisson { rate: 0.2 + rng.next_f64() },
+            1 => ArrivalPattern::Bursty {
+                base_rate: 0.2,
+                burst_rate: 1.0 + rng.next_f64() * 3.0,
+                mean_burst_len: 10.0,
+                mean_gap_len: 40.0,
+            },
+            _ => ArrivalPattern::Diurnal { base_rate: 0.4, amplitude: 0.8, period_steps: 50 },
+        };
+        sc.probe = match rng.gen_range(3) {
+            0 => ProbePolicy::RandomProbe,
+            1 => ProbePolicy::PowerOfK(1 + rng.gen_range(3)),
+            _ => ProbePolicy::RoundRobin,
+        };
+        if rng.bernoulli(0.4) && nodes > 2 {
+            sc.churn = Some(ChurnModel {
+                leave_hazard: 0.01,
+                rejoin_delay_mean: 15.0,
+                min_alive: 2,
+            });
+        }
+        if rng.bernoulli(0.5) {
+            sc.capacity = Some(Default::default());
+        }
+        let tr = fleet(nodes, steps, seed);
+        let kind = if rng.bernoulli(0.5) {
+            PolicyKind::Always
+        } else {
+            PolicyKind::Random
+        };
+        let base = report_json(&sc, &tr, kind, 1, false);
+        for threads in [2, 4, 7] {
+            let got = report_json(&sc, &tr, kind, threads, false);
+            if got != base {
+                return Err(format!(
+                    "materialized diverged at {threads} threads ({nodes} nodes x {steps})"
+                ));
+            }
+        }
+        // Streaming vs materialized under a parallel loop.
+        let got = report_json(&sc, &tr, kind, 4, true);
+        if got != base {
+            return Err(format!(
+                "streaming x 4 threads diverged ({nodes} nodes x {steps} steps)"
+            ));
+        }
+        Ok(())
+    });
+}

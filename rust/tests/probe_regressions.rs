@@ -1,0 +1,187 @@
+//! Engine-level regressions for the PR-4 probe fixes, which until now
+//! were only unit-tested:
+//!
+//! * the identity-tracked round-robin cursor — the historical
+//!   `cursor % alive_count` re-aliased after churn and could park the
+//!   rotation away from surviving hosts, starving them;
+//! * the bounded `sample_distinct` sampler's Fisher–Yates fallback at
+//!   the `k ≥ alive − 1` boundary (probe fan-outs that want essentially
+//!   the whole pool).
+
+use pronto::proptest::forall;
+use pronto::rng::Xoshiro256;
+use pronto::scheduler::{Admission, JobOutcome, RandomPolicy};
+use pronto::sim::{
+    sample_distinct, ArrivalPattern, ChurnModel, DiscreteEventEngine, ProbePolicy, Scenario,
+};
+use pronto::telemetry::{GeneratorConfig, TraceGenerator, VmTrace};
+
+fn fleet(n: usize, steps: usize, seed: u64) -> Vec<VmTrace> {
+    let gen = TraceGenerator::new(GeneratorConfig::default(), seed);
+    (0..n).map(|v| gen.generate_vm_in_cluster(v / 4, v, steps)).collect()
+}
+
+fn always(tr: &[VmTrace]) -> Vec<Box<dyn Admission>> {
+    tr.iter()
+        .enumerate()
+        .map(|(i, _)| Box::new(RandomPolicy::always_accept(i as u64)) as Box<dyn Admission>)
+        .collect()
+}
+
+#[test]
+fn round_robin_probes_every_survivor_within_one_rotation_after_churn() {
+    // Drain a 6-node fleet to its 3-node floor (aggressive hazard, no
+    // rejoin), then check the placement stream's tail: with always-accept
+    // policies every arrival is placed on exactly the probed host, so a
+    // healthy identity cursor makes every window of `min_alive`
+    // consecutive placements a full rotation — `min_alive` *distinct*
+    // hosts, the same host set in every window. The aliased index cursor
+    // re-aliased on each leave and could starve a survivor (repeats
+    // inside a window / a host missing from the tail entirely).
+    let min_alive = 3;
+    let sc = Scenario {
+        probe: ProbePolicy::RoundRobin,
+        arrivals: ArrivalPattern::Poisson { rate: 1.2 },
+        churn: Some(ChurnModel {
+            leave_hazard: 0.5,
+            rejoin_delay_mean: 0.0, // leavers never come back
+            min_alive,
+        }),
+        ..Scenario::default()
+    }
+    .with_nodes(6)
+    .with_steps(1_000);
+    let tr = fleet(6, 1_000, 41);
+    let report = DiscreteEventEngine::new(sc, tr.clone(), always(&tr)).run();
+    assert_eq!(
+        report.node_leaves,
+        6 - min_alive,
+        "fleet must drain to the floor for the regression to bite"
+    );
+    let placed: Vec<usize> = report
+        .outcomes
+        .iter()
+        .filter_map(|o| match o {
+            JobOutcome::Accepted { node, .. } => Some(*node),
+            _ => None,
+        })
+        .collect();
+    assert!(placed.len() > 200, "load too thin: {}", placed.len());
+    // Long tail, far past the churn transient.
+    let tail = &placed[placed.len() - 8 * min_alive..];
+    let survivor_set = |w: &[usize]| {
+        let mut s: Vec<usize> = w.to_vec();
+        s.sort_unstable();
+        s.dedup();
+        s
+    };
+    let survivors = survivor_set(&tail[..min_alive]);
+    assert_eq!(
+        survivors.len(),
+        min_alive,
+        "rotation repeated a host within one lap: {:?}",
+        &tail[..min_alive]
+    );
+    for w in tail.windows(min_alive) {
+        assert_eq!(
+            survivor_set(w),
+            survivors,
+            "a survivor was starved out of a rotation window: {w:?}"
+        );
+    }
+}
+
+#[test]
+fn probe_fanouts_of_nearly_the_whole_pool_run_deterministically() {
+    // k ≥ alive − 1 pushes every arrival's candidate draw into (or right
+    // up against) the sampler's Fisher–Yates fallback. The run must stay
+    // byte-reproducible and spread work across the whole fleet.
+    for k in [5, 6, 8] {
+        let sc = Scenario {
+            probe: ProbePolicy::PowerOfK(k),
+            arrivals: ArrivalPattern::Poisson { rate: 1.0 },
+            ..Scenario::default()
+        }
+        .with_nodes(6)
+        .with_steps(600);
+        let tr = fleet(6, 600, 43);
+        let a = DiscreteEventEngine::new(sc.clone(), tr.clone(), always(&tr)).run();
+        let b = DiscreteEventEngine::new(sc, tr.clone(), always(&tr)).run();
+        assert_eq!(a.to_json_string(), b.to_json_string(), "k={k} not reproducible");
+        let mut seen = [false; 6];
+        for o in &a.outcomes {
+            if let JobOutcome::Accepted { node, .. } = o {
+                seen[*node] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "k={k} starved a host: {seen:?}");
+    }
+}
+
+#[test]
+fn sample_distinct_is_complete_at_the_fallback_boundary() {
+    forall("sample_distinct: k ∈ {avail−1, avail, avail+3}", |rng| {
+        let pool_len = 2 + rng.gen_range(11);
+        let pool: Vec<usize> = (0..pool_len * 3).step_by(3).collect(); // sparse ids
+        let exclude = if rng.bernoulli(0.5) {
+            Some(pool[rng.gen_range(pool_len)])
+        } else {
+            None
+        };
+        let avail = pool_len - usize::from(exclude.is_some());
+        let mut out = Vec::new();
+        let mut scratch = Vec::new();
+        for want in [avail.saturating_sub(1), avail, avail + 3] {
+            let mut a = Xoshiro256::seed_from_u64(rng.next_u64());
+            let mut b = a.clone();
+            sample_distinct(&mut a, &pool, exclude, want, &mut out, &mut scratch);
+            let expect = want.min(avail);
+            if out.len() != expect {
+                return Err(format!(
+                    "want {want} of {avail} available returned {} (pool {pool_len})",
+                    out.len()
+                ));
+            }
+            let mut sorted = out.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            if sorted.len() != out.len() {
+                return Err(format!("duplicates in draw: {out:?}"));
+            }
+            if let Some(e) = exclude {
+                if out.contains(&e) {
+                    return Err(format!("excluded id {e} drawn: {out:?}"));
+                }
+            }
+            if out.iter().any(|c| !pool.contains(c)) {
+                return Err(format!("drew an id outside the pool: {out:?}"));
+            }
+            // Same RNG state ⇒ same draw (the determinism the engine's
+            // byte contract rests on).
+            let mut again = Vec::new();
+            sample_distinct(&mut b, &pool, exclude, want, &mut again, &mut scratch);
+            if again != out {
+                return Err("draw not deterministic under a cloned RNG".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sample_distinct_dense_draws_are_permutations_across_seeds() {
+    // The guaranteed-fallback shape: want == |pool| with a pool large
+    // enough that rejection sampling cannot finish inside its budget, so
+    // the Fisher–Yates completion must deliver the rest — for every
+    // seed, not just the one the unit test happens to use.
+    let pool: Vec<usize> = (0..96).collect();
+    let mut out = Vec::new();
+    let mut scratch = Vec::new();
+    for seed in 0..200u64 {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        sample_distinct(&mut rng, &pool, None, pool.len(), &mut out, &mut scratch);
+        let mut sorted = out.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, pool, "seed {seed}: dense draw is not a permutation");
+    }
+}

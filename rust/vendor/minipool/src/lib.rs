@@ -1,0 +1,193 @@
+//! Minimal, dependency-free worker pool (vendored, like `anyhow` /
+//! `once_cell`): std scoped threads draining a shared mpsc channel work
+//! queue. Built for deterministic data-parallel sharding — the caller
+//! splits its state into disjoint chunks, boxes one task per chunk, and
+//! [`WorkerPool::run`] executes them all before returning, so borrowed
+//! (non-`'static`) state is fine and no synchronization beyond the queue
+//! is needed.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Safety** — no `unsafe`. Scoped threads give borrowed tasks
+//!    without lifetime transmutation; the price is one thread spawn per
+//!    worker per [`WorkerPool::run`] call rather than persistent workers.
+//!    For the intended workload (one fan-out per simulation tick, each
+//!    task touching hundreds of nodes) the spawn cost is noise.
+//! 2. **Exact sequential fallback** — width 1 (or a single task) runs
+//!    inline on the caller's thread, in submission order, spawning
+//!    nothing. A `--threads 1` caller therefore executes byte-for-byte
+//!    the code it would have run without a pool in the picture.
+//! 3. **Work stealing by queue** — tasks go through one channel that idle
+//!    workers pull from, so an unbalanced split degrades throughput, not
+//!    correctness.
+//!
+//! Panic semantics: a panicking task aborts the fan-out — remaining
+//! queued tasks may be dropped unexecuted — and the panic propagates to
+//! the caller when the scope joins, so a failed parallel section can
+//! never be silently half-applied.
+
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+/// A boxed unit of work. The lifetime lets tasks borrow from the caller's
+/// stack frame; [`WorkerPool::run`] joins every task before returning, so
+/// the borrows never outlive their owner.
+pub type Task<'env> = Box<dyn FnOnce() + Send + 'env>;
+
+/// A fixed-width pool. Cheap to construct (no threads live between
+/// [`WorkerPool::run`] calls) and cheap to clone.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkerPool {
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// A pool of `threads` workers; 0 is clamped to 1.
+    pub fn new(threads: usize) -> Self {
+        Self { threads: threads.max(1) }
+    }
+
+    /// Configured width.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Will [`WorkerPool::run`] ever spawn a thread?
+    pub fn is_parallel(&self) -> bool {
+        self.threads > 1
+    }
+
+    /// Run every task to completion, then return.
+    ///
+    /// Width 1 — or a single task — runs inline in submission order: the
+    /// exact sequential path, no threads, no channel. Otherwise
+    /// `min(threads, tasks)` scoped workers drain the shared queue in
+    /// submission order (which worker gets which task is scheduling-
+    /// dependent; callers get determinism by writing to disjoint state,
+    /// not by relying on assignment).
+    pub fn run(&self, tasks: Vec<Task<'_>>) {
+        if self.threads == 1 || tasks.len() <= 1 {
+            for task in tasks {
+                task();
+            }
+            return;
+        }
+        let workers = self.threads.min(tasks.len());
+        let (tx, rx) = mpsc::channel();
+        for task in tasks {
+            tx.send(task).expect("receiver alive until scope end");
+        }
+        drop(tx); // queue drained ⇒ recv errors ⇒ workers exit
+        let rx = Mutex::new(rx);
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| loop {
+                    // Hold the queue lock only for the dequeue, never
+                    // while a task runs.
+                    let next = match rx.lock() {
+                        Ok(guard) => guard.recv(),
+                        // A sibling panicked holding the lock: stop
+                        // pulling work; the scope re-raises the panic.
+                        Err(_poisoned) => return,
+                    };
+                    match next {
+                        Ok(task) => task(),
+                        Err(_empty) => return,
+                    }
+                });
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn sequential_width_runs_inline_in_order() {
+        let pool = WorkerPool::new(1);
+        assert!(!pool.is_parallel());
+        let mut order: Vec<usize> = Vec::new();
+        let order_cell = std::sync::Mutex::new(&mut order);
+        let oc = &order_cell;
+        let tasks: Vec<Task> = (0..8)
+            .map(|i| Box::new(move || oc.lock().unwrap().push(i)) as Task)
+            .collect();
+        pool.run(tasks);
+        drop(order_cell);
+        assert_eq!(order, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_run_completes_disjoint_chunk_writes() {
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.threads(), 4);
+        let mut out = vec![0usize; 1000];
+        {
+            let tasks: Vec<Task> = out
+                .chunks_mut(123)
+                .enumerate()
+                .map(|(c, chunk)| {
+                    Box::new(move || {
+                        for (k, slot) in chunk.iter_mut().enumerate() {
+                            *slot = c * 123 + k + 1;
+                        }
+                    }) as Task
+                })
+                .collect();
+            pool.run(tasks);
+        }
+        // Every slot written exactly once with its own value.
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i + 1, "slot {i} not written");
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_and_zero_clamps_to_one() {
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.threads(), 1);
+        let hits = AtomicUsize::new(0);
+        for _ in 0..3 {
+            let tasks: Vec<Task> = (0..5)
+                .map(|_| {
+                    Box::new(|| {
+                        hits.fetch_add(1, Ordering::SeqCst);
+                    }) as Task
+                })
+                .collect();
+            pool.run(tasks);
+        }
+        assert_eq!(hits.load(Ordering::SeqCst), 15);
+    }
+
+    #[test]
+    fn more_tasks_than_threads_all_run() {
+        let pool = WorkerPool::new(3);
+        let hits = AtomicUsize::new(0);
+        let tasks: Vec<Task> = (0..64)
+            .map(|_| {
+                Box::new(|| {
+                    hits.fetch_add(1, Ordering::SeqCst);
+                }) as Task
+            })
+            .collect();
+        pool.run(tasks);
+        assert_eq!(hits.load(Ordering::SeqCst), 64);
+    }
+
+    #[test]
+    fn task_panic_propagates_to_caller() {
+        let pool = WorkerPool::new(2);
+        let result = std::panic::catch_unwind(|| {
+            let tasks: Vec<Task> = vec![
+                Box::new(|| {}) as Task,
+                Box::new(|| panic!("boom")) as Task,
+            ];
+            pool.run(tasks);
+        });
+        assert!(result.is_err(), "worker panic must not be swallowed");
+    }
+}
