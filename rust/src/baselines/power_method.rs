@@ -36,6 +36,13 @@ pub struct BlockPowerMethod {
 
 impl BlockPowerMethod {
     /// `block` defaults to `d` when 0 is passed (the paper's minimum).
+    ///
+    /// PM is the one randomized baseline: `seed` draws the Gaussian
+    /// start. Callers instantiating a fleet should derive per-node seeds
+    /// through [`crate::rng::node_stream_seed`] (the CLI uses stream
+    /// tag 10) rather than `seed ^ node` — a plain XOR leaves adjacent
+    /// nodes' SplitMix64 states nearly identical, correlating their
+    /// sketches.
     pub fn new(d: usize, r: usize, block: usize, seed: u64) -> Self {
         assert!(r >= 1 && r <= d);
         let block = if block == 0 { d } else { block };

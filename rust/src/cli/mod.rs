@@ -8,6 +8,8 @@
 //!                   [--trace-source auto|stream|materialized] [--threads N]
 //! pronto scenarios  — list the built-in scenario catalog
 //! pronto eval       [--config FILE] [--method pronto|sp|fd|pm] [--window W]
+//!                   [--scenario NAME[,NAME…]] [--trace-source auto|stream|materialized]
+//!                   [--threads N] [--out FILE] [--json]
 //! pronto federate   [--config FILE] [--nodes N] [--fanout F]
 //! pronto bench engine [--quick] [--out FILE] [--sizes 100,1000,5000]
 //!                   [--steps N] [--seed S] [--scenarios a,b,c] [--threads N]
@@ -47,7 +49,11 @@ COMMANDS:
                 auto|stream|materialized for large fleets, --threads N for
                 the parallel observe loop — reports stay byte-identical)
   scenarios     list the built-in scenario catalog
-  eval          fleet evaluation of rejection-signal quality (Fig 6/7)
+  eval          fleet evaluation of rejection-signal quality (Fig 6/7);
+                --scenario NAME[,NAME...] runs the engine-driven
+                prediction-quality sweep (lead time, precision/recall/F1,
+                signal-to-decision latency) across all four methods and
+                writes EVAL_quality.json
   federate      run the concurrent DASM federation
   bench         fleet-scale engine benchmark (`bench engine` writes
                 BENCH_engine.json: events/s, wall time, peak queue depth;
@@ -158,8 +164,17 @@ fn make_policy(
             FrequentDirections::new(d, cfg.fpca.initial_rank),
             cfg.reject,
         ))),
+        // PM's oversampled sketch is the one randomized baseline; it
+        // draws from dedicated stream 10 (the engine owns 1-9) so
+        // adjacent nodes decorrelate — the historical `seed ^ idx` left
+        // neighbours sharing most of their SplitMix64 state.
         "pm" => Box::new(ProntoPolicy::new(NodeScheduler::with_embedding(
-            BlockPowerMethod::new(d, cfg.fpca.initial_rank, d, cfg.seed ^ idx as u64),
+            BlockPowerMethod::new(
+                d,
+                cfg.fpca.initial_rank,
+                d,
+                crate::rng::node_stream_seed(cfg.seed, 10, idx),
+            ),
             cfg.reject,
         ))),
         "random" => Box::new(RandomPolicy::new(0.2, cfg.seed ^ idx as u64)),
@@ -459,28 +474,91 @@ fn arrival_kind(s: &Scenario) -> &'static str {
     }
 }
 
+/// CLI method names and their report tags, in sweep order.
+const EVAL_METHODS: [(&str, &str); 4] =
+    [("pronto", "PRONTO"), ("sp", "SP"), ("fd", "FD"), ("pm", "PM")];
+
+/// Resolve `--method` (a single name or a comma list) against the four
+/// embedding methods; `None` selects the full sweep.
+fn eval_methods(arg: Option<&str>) -> Result<Vec<(&'static str, &'static str)>> {
+    match arg {
+        None => Ok(EVAL_METHODS.to_vec()),
+        Some(list) => list
+            .split(',')
+            .map(str::trim)
+            .filter(|m| !m.is_empty())
+            .map(|m| {
+                EVAL_METHODS
+                    .iter()
+                    .find(|(name, _)| *name == m)
+                    .copied()
+                    .ok_or_else(|| anyhow!("unknown method '{m}' (pronto | sp | fd | pm)"))
+            })
+            .collect(),
+    }
+}
+
 fn cmd_eval(raw: &[String]) -> Result<()> {
-    let args = Args::parse(raw, &[])?;
-    args.reject_unknown(&["config", "method", "window", "nodes", "steps", "threshold"])?;
+    let args = Args::parse(raw, &["json"])?;
+    args.reject_unknown(&[
+        "config", "method", "window", "nodes", "steps", "seed", "threshold", "scenario",
+        "trace-source", "threads", "out",
+    ])?;
     let mut cfg = load_config(&args)?;
     cfg.nodes = args.get_usize("nodes", cfg.nodes)?;
     cfg.steps = args.get_usize("steps", cfg.steps)?;
-    let method = args.get("method").unwrap_or("pronto");
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+    // Validate every cheap knob before any trace generation: historically
+    // the fleet was materialized first, so a typo'd --method burned the
+    // whole generation pass, --nodes 0 panicked indexing fleet[0], and
+    // --window 0/1 silently degenerated the half-window to nothing.
+    let window = args.get_usize("window", 10)?;
+    if window < 2 {
+        bail!("--window must be >= 2 (the Figure-5 window needs both halves; got {window})");
+    }
+    let trace_source = args.get("trace-source").unwrap_or("auto");
+    if !matches!(trace_source, "auto" | "stream" | "materialized") {
+        bail!("--trace-source '{trace_source}' (auto | stream | materialized)");
+    }
+    let methods = eval_methods(args.get("method"))?;
+    if methods.is_empty() {
+        bail!("--method: empty list");
+    }
+
+    // --scenario switches to the engine-driven prediction-quality sweep
+    // (EVAL_quality.json); without it, the historical per-trace Figure
+    // 6/7 evaluation runs.
+    if let Some(spec) = args.get("scenario") {
+        return cmd_eval_quality(&args, &cfg, spec, window, trace_source, &methods);
+    }
+    for flag in ["out", "threads"] {
+        if args.get(flag).is_some() {
+            bail!("--{flag} requires --scenario (the quality sweep)");
+        }
+    }
+    if args.flag("json") || args.get("trace-source").is_some() {
+        bail!("--json/--trace-source require --scenario (the quality sweep)");
+    }
+    if cfg.nodes == 0 {
+        bail!("--nodes must be >= 1 (the evaluation needs at least one VM trace)");
+    }
+    // Legacy mode evaluates one method (default pronto); the comma-list
+    // sweep is a --scenario feature.
+    let (method, tag) = if args.get("method").is_none() {
+        EVAL_METHODS[0]
+    } else if methods.len() == 1 {
+        methods[0]
+    } else {
+        bail!("multiple methods require --scenario (the quality sweep)");
+    };
     let eval_cfg = EvalConfig {
-        window: args.get_usize("window", 10)?,
+        window,
         ready_threshold: args.get_f64("threshold", cfg.sim.ready_threshold)?,
         reject: cfg.reject,
     };
 
     let fleet_traces = gen_fleet(&cfg);
     let d = fleet_traces[0].dim();
-    let tag = match method {
-        "pronto" => "PRONTO",
-        "sp" => "SP",
-        "fd" => "FD",
-        "pm" => "PM",
-        other => bail!("unknown method '{other}'"),
-    };
     let mut fleet = FleetEvaluation::new(tag);
     for (i, tr) in fleet_traces.iter().enumerate() {
         let ev = match method {
@@ -492,7 +570,12 @@ fn cmd_eval(raw: &[String]) -> Result<()> {
                 &eval_cfg,
             ),
             "pm" => evaluate_method(
-                BlockPowerMethod::new(d, cfg.fpca.initial_rank, d, cfg.seed ^ i as u64),
+                BlockPowerMethod::new(
+                    d,
+                    cfg.fpca.initial_rank,
+                    d,
+                    crate::rng::node_stream_seed(cfg.seed, 10, i),
+                ),
                 tr,
                 &eval_cfg,
             ),
@@ -509,6 +592,125 @@ fn cmd_eval(raw: &[String]) -> Result<()> {
     println!("  CPU Ready spikes     : {spikes}");
     println!("  rejection raises     : {raises}");
     Ok(())
+}
+
+/// The engine-driven prediction-quality sweep: scenarios × methods →
+/// `EVAL_quality.json`. Every run records raised/spike timelines via
+/// [`DiscreteEventEngine::with_signal_capture`] and reduces them with
+/// [`crate::sim::score_report`]. Rows are byte-identical across
+/// `--trace-source` and `--threads` (the document records neither).
+fn cmd_eval_quality(
+    args: &Args,
+    base_cfg: &ProntoConfig,
+    spec: &str,
+    window: usize,
+    trace_source: &str,
+    methods: &[(&'static str, &'static str)],
+) -> Result<()> {
+    let names: Vec<&str> =
+        spec.split(',').map(str::trim).filter(|s| !s.is_empty()).collect();
+    if names.is_empty() {
+        bail!("--scenario: empty list");
+    }
+    let mut rows = Vec::new();
+    let mut resolved = Vec::new();
+    for name in &names {
+        let mut scenario = Scenario::resolve(name)?;
+        // Same override/validation dance as `pronto sim --scenario`.
+        scenario.nodes = args.get_usize("nodes", scenario.nodes)?;
+        scenario.steps = args.get_usize("steps", scenario.steps)?;
+        scenario.seed = args.get_u64("seed", scenario.seed)?;
+        scenario.threads = args.get_usize("threads", scenario.threads)?;
+        if args.get("threshold").is_some() {
+            scenario.ready_threshold =
+                args.get_f64("threshold", scenario.ready_threshold)?;
+        }
+        scenario.validate()?;
+        let mut cfg = base_cfg.clone();
+        cfg.nodes = scenario.nodes;
+        cfg.steps = scenario.steps;
+        cfg.seed = scenario.seed;
+        cfg.sim.ready_threshold = scenario.ready_threshold;
+        resolved.push(scenario.name.clone());
+        for (method, tag) in methods {
+            let report = run_quality_engine(&scenario, &cfg, method, trace_source)?;
+            rows.push(crate::sim::score_report(&report, window, tag));
+        }
+    }
+
+    let tags: Vec<&str> = methods.iter().map(|(_, t)| *t).collect();
+    let doc = crate::sim::quality_report(window, &tags, &resolved, &rows);
+    let out = args.get("out").unwrap_or("EVAL_quality.json");
+    std::fs::write(out, format!("{doc}\n")).with_context(|| format!("writing {out}"))?;
+    if args.flag("json") {
+        println!("{doc}");
+        return Ok(());
+    }
+    println!(
+        "prediction quality: {} scenario(s) x {} method(s), window = {window} -> {out}",
+        resolved.len(),
+        methods.len()
+    );
+    for row in &rows {
+        println!(
+            "  {:<16} {:<7} recall {:.3}  precision {:.3}  f1 {:.3}  \
+             lead p50 {:.0} steps  decision p50 {:.0} steps ({} samples)",
+            row.scenario,
+            row.method,
+            row.recall,
+            row.precision,
+            row.f1,
+            row.lead_p50,
+            row.decision_p50,
+            row.decision_samples
+        );
+    }
+    Ok(())
+}
+
+/// One capture-enabled engine run for the quality sweep — the same
+/// trace-source selection, policy wiring, and churn factory as
+/// `pronto sim --scenario`, so quality rows describe exactly the runs
+/// the simulator would execute.
+fn run_quality_engine(
+    scenario: &Scenario,
+    cfg: &ProntoConfig,
+    policy: &str,
+    trace_source: &str,
+) -> Result<SimReport> {
+    let stream = match trace_source {
+        "stream" => true,
+        "materialized" => false,
+        _ => {
+            scenario.nodes >= 512
+                || scenario.nodes.saturating_mul(scenario.steps) >= 1_000_000
+        }
+    };
+    let (source, dims) = if stream {
+        let gen = TraceGenerator::new(cfg.generator.clone(), cfg.seed);
+        let members = fleet_members(cfg.nodes, cfg.fanout);
+        let source = TraceSource::streaming(&gen, &members, cfg.steps, scenario.score_window);
+        (source, vec![cfg.generator.dim; cfg.nodes])
+    } else {
+        let fleet = gen_fleet(cfg);
+        let dims: Vec<usize> = fleet.iter().map(|t| t.dim()).collect();
+        (TraceSource::materialized(fleet), dims)
+    };
+    let policies: Vec<Box<dyn Admission>> = dims
+        .iter()
+        .enumerate()
+        .map(|(i, &d)| make_policy(policy, d, i, cfg))
+        .collect::<Result<_>>()?;
+    let mut engine = DiscreteEventEngine::try_from_source(scenario.clone(), source, policies)?
+        .with_signal_capture();
+    if scenario.churn.is_some() {
+        let cfg = cfg.clone();
+        let name = policy.to_string();
+        engine = engine.with_policy_factory(Box::new(move |node| {
+            make_policy(&name, dims[node], node, &cfg).expect("policy validated at startup")
+        }));
+    }
+    Ok(engine.run())
 }
 
 fn cmd_federate(raw: &[String]) -> Result<()> {
@@ -835,6 +1037,63 @@ mod tests {
             "eval", "--nodes", "2", "--steps", "600", "--method", "sp"
         ]))
         .is_ok());
+    }
+
+    #[test]
+    fn eval_rejects_bad_knobs_before_generating() {
+        // Degenerate windows: SlidingWindow's w >= 2 contract, enforced
+        // up front instead of silently halving to zero.
+        assert!(run(&argv(&["eval", "--window", "0", "--nodes", "2", "--steps", "50"])).is_err());
+        assert!(run(&argv(&["eval", "--window", "1", "--nodes", "2", "--steps", "50"])).is_err());
+        // --nodes 0 used to panic indexing fleet_traces[0].
+        assert!(run(&argv(&["eval", "--nodes", "0", "--steps", "50"])).is_err());
+        // Unknown method used to bail only after materializing the fleet.
+        assert!(
+            run(&argv(&["eval", "--method", "psychic", "--nodes", "2", "--steps", "50"]))
+                .is_err()
+        );
+        // Sweep-only flags without --scenario fail loudly.
+        assert!(
+            run(&argv(&["eval", "--method", "sp,fd", "--nodes", "2", "--steps", "50"])).is_err()
+        );
+        assert!(run(&argv(&["eval", "--out", "x.json", "--nodes", "2", "--steps", "50"]))
+            .is_err());
+        assert!(run(&argv(&["eval", "--threads", "2", "--nodes", "2", "--steps", "50"]))
+            .is_err());
+        assert!(run(&argv(&["eval", "--scenario", "not-a-scenario", "--json"])).is_err());
+        assert!(run(&argv(&["eval", "--scenario", " , ", "--json"])).is_err());
+    }
+
+    #[test]
+    fn eval_scenario_sweep_writes_quality_artifact() {
+        let dir = std::env::temp_dir().join("pronto_cli_eval_quality");
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("EVAL_quality.json");
+        let out_s = out.to_string_lossy().to_string();
+        assert!(run(&argv(&[
+            "eval", "--scenario", "capacity", "--nodes", "4", "--steps", "150", "--method",
+            "pronto,pm", "--out", &out_s,
+        ]))
+        .is_ok());
+        let text = std::fs::read_to_string(&out).unwrap();
+        let doc = crate::ser::parse_json(&text).expect("valid EVAL_quality.json");
+        assert_eq!(
+            doc.get("eval").and_then(crate::ser::JsonValue::as_str),
+            Some("quality")
+        );
+        assert_eq!(
+            doc.get("schema_version").and_then(crate::ser::JsonValue::as_usize),
+            Some(1)
+        );
+        let rows = doc.get("rows").and_then(crate::ser::JsonValue::as_array).unwrap();
+        assert_eq!(rows.len(), 2, "one row per scenario x method");
+        for (row, tag) in rows.iter().zip(["PRONTO", "PM"]) {
+            assert_eq!(row.get("method").and_then(crate::ser::JsonValue::as_str), Some(tag));
+            for key in ["recall", "precision", "f1", "lead_p50", "decision_p50"] {
+                assert!(row.get(key).is_some(), "row missing {key}");
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -8,8 +8,11 @@
 //! [`SlidingWindow`] provides the left/right-sided spike bookkeeping of
 //! Figure 5 used by the evaluation.
 
-mod window;
+pub mod window;
 mod zscore;
 
-pub use window::{SideCounts, SlidingWindow, SpikeSide};
+pub use window::{
+    classify_spike, lead_time, left_span, raise_true_positive, right_span, SideCounts,
+    SlidingWindow, SpikeSide,
+};
 pub use zscore::{MultiDetector, Spike, ZScoreConfig, ZScoreDetector};

@@ -1,23 +1,37 @@
-//! Sliding-window spike bookkeeping (Figure 5).
+//! Sliding-window spike bookkeeping (Figure 5) — the **single owner** of
+//! the left/right window semantics.
 //!
-//! PRONTO classifies detected spikes relative to a *reference point* placed
-//! at the middle of a window of size `w`: events in the half *after* the
-//! reference point ("left-sided" in the paper's time-flows-right rendering —
-//! i.e. in the future relative to the reference) are treated as **incoming
-//! predictions**; events in the half before it are in the past
-//! ("right-sided": consecutive/delayed detections). A prediction counts as
-//! successful when a CPU Ready spike is preceded by ≥ 1 rejection-signal
-//! raise within the current window.
+//! PRONTO classifies rejection-signal raises relative to a *reference
+//! point* placed at the middle of a window of size `w` (age `w/2` in
+//! steps-back form). With the reference point sitting on a CPU Ready
+//! spike, time flows right in the paper's rendering, so:
+//!
+//! * **Left-sided** raises are *at or before* the spike (ring ages
+//!   `>= w/2`): the early warnings. A prediction counts as successful
+//!   when a spike is preceded by — or coincides with, per §7 "shortly
+//!   before or coincides" — at least one raise inside the left half,
+//!   i.e. within the [`left_span`] steps leading up to the spike.
+//! * **Right-sided** raises are *after* the spike (ages `< w/2`):
+//!   consecutive-spike or delayed detections, within [`right_span`]
+//!   steps past it.
+//!
+//! Historically `sim::eval` carried its own copy of this classification
+//! with the opposite orientation from [`SlidingWindow::side_of`]; the
+//! timeline helpers below ([`classify_spike`], [`lead_time`],
+//! [`raise_true_positive`]) are the shared implementation both the
+//! Figure-6/7 evaluation and the prediction-quality scorer consume, so
+//! the semantics can no longer fork.
 
 /// Which half of the window an event falls in, relative to the reference
-/// point at w/2 (see Figure 5, third row).
+/// point at age w/2 (see Figure 5, third row).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SpikeSide {
-    /// Between the reference point and the window head: imminent/incoming
-    /// (the important kind — rejection raises here *precede* CPU Ready spikes).
+    /// At or before the reference point (ring ages `>= w/2`): raises here
+    /// *precede or coincide with* the referenced CPU Ready spike — the
+    /// early warnings the paper's success criterion counts.
     Left,
-    /// Behind the reference point: already happened (consecutive spikes or
-    /// delayed detection).
+    /// After the reference point (ages `< w/2`): consecutive spikes or
+    /// delayed detection.
     Right,
 }
 
@@ -32,6 +46,22 @@ impl SideCounts {
     pub fn total(&self) -> usize {
         self.left + self.right
     }
+}
+
+/// Timesteps *before* the reference spike covered by the left half of a
+/// width-`w` window whose reference point sits at `w/2`: the window holds
+/// `w - 1 - w/2` steps ahead of the reference in ring-age terms, i.e.
+/// earlier in time. A raise up to this many steps before a spike (or
+/// coincident with it) predicts it.
+pub fn left_span(w: usize) -> usize {
+    assert!(w >= 2, "window must hold at least two timesteps");
+    w - 1 - w / 2
+}
+
+/// Timesteps *after* the reference spike covered by the right half: `w/2`.
+pub fn right_span(w: usize) -> usize {
+    assert!(w >= 2, "window must hold at least two timesteps");
+    w / 2
 }
 
 /// Fixed-size boolean ring buffer over the last `w` timesteps with
@@ -92,10 +122,12 @@ impl SlidingWindow {
     }
 
     /// Classify a step-back age into a window side relative to the
-    /// reference point. Ages newer than the reference are `Left`
-    /// (incoming relative to the reference time), older are `Right`.
+    /// reference point. Ages at or older than the reference are `Left` —
+    /// they happened *before or at* the reference time, which is where
+    /// early warnings live (a coincident raise counts, per §7). Newer
+    /// ages are `Right` (after the reference: delayed detections).
     pub fn side_of(&self, age: usize) -> SpikeSide {
-        if age < self.reference_age() {
+        if age >= self.reference_age() {
             SpikeSide::Left
         } else {
             SpikeSide::Right
@@ -130,6 +162,47 @@ impl SlidingWindow {
     }
 }
 
+/// Figure-5 classification of a raise timeline around one spike at `t`:
+/// drive a [`SlidingWindow`] so its reference point lands on the spike
+/// (steps `[t - left_span, t + right_span]`, padded with `false` where
+/// the timeline ends — a spike at `t = 0` or near the horizon still gets
+/// a full window) and split the raises with [`SlidingWindow::side_counts`].
+///
+/// `left` counts raises in `[t - left_span(w), t]` (early warnings,
+/// coincident included); `right` counts raises in `(t, t + right_span(w)]`.
+pub fn classify_spike(raised: &[bool], t: usize, w: usize) -> SideCounts {
+    let mut win = SlidingWindow::new(w);
+    let lo = t as i64 - left_span(w) as i64;
+    let hi = t as i64 + right_span(w) as i64;
+    for s in lo..=hi {
+        let v = s >= 0 && (s as usize) < raised.len() && raised[s as usize];
+        win.push(v);
+    }
+    debug_assert!(win.full());
+    win.side_counts()
+}
+
+/// Lead time of the spike at `t`: steps from the **first** (earliest)
+/// raise inside the left half — `[t - left_span(w), t]` — to the spike.
+/// `None` when no raise precedes the spike within the window, i.e. the
+/// spike was unpredicted. `Some(0)` is a coincident raise.
+pub fn lead_time(raised: &[bool], t: usize, w: usize) -> Option<usize> {
+    let lo = t.saturating_sub(left_span(w));
+    (lo..=t).find(|&s| s < raised.len() && raised[s]).map(|s| t - s)
+}
+
+/// Is the raise at `r` a true positive — does a spike land within its
+/// forward window `[r, r + left_span(w)]`? Exactly dual to [`lead_time`]:
+/// a spike at `t` is predicted by a raise at `r` iff `0 <= t - r <=
+/// left_span(w)`, read from either end.
+pub fn raise_true_positive(spikes: &[bool], r: usize, w: usize) -> bool {
+    if spikes.is_empty() {
+        return false;
+    }
+    let hi = (r + left_span(w)).min(spikes.len() - 1);
+    (r..=hi).any(|s| spikes[s])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -153,10 +226,12 @@ mod tests {
     fn reference_point_is_half_window() {
         let w = SlidingWindow::new(10);
         assert_eq!(w.reference_age(), 5);
-        assert_eq!(w.side_of(0), SpikeSide::Left);
-        assert_eq!(w.side_of(4), SpikeSide::Left);
-        assert_eq!(w.side_of(5), SpikeSide::Right);
-        assert_eq!(w.side_of(9), SpikeSide::Right);
+        // Ages at/older than the reference are Left (before the spike —
+        // the early-warning half); newer ages are Right (after it).
+        assert_eq!(w.side_of(0), SpikeSide::Right);
+        assert_eq!(w.side_of(4), SpikeSide::Right);
+        assert_eq!(w.side_of(5), SpikeSide::Left);
+        assert_eq!(w.side_of(9), SpikeSide::Left);
     }
 
     #[test]
@@ -166,10 +241,101 @@ mod tests {
         for &e in &[true, false, false, true, false, true] {
             w.push(e);
         }
-        // ages: 0=T(newest) 1=F 2=T 3=F 4=F 5=T ; reference_age = 3
+        // ages: 0=T(newest) 1=F 2=T 3=F 4=F 5=T ; reference_age = 3.
+        // Left = ages >= 3 (the oldest half, at/before the reference):
+        // only age 5. Right = ages < 3 (after the reference): 0 and 2.
         let c = w.side_counts();
-        assert_eq!(c, SideCounts { left: 2, right: 1 });
+        assert_eq!(c, SideCounts { left: 1, right: 2 });
         assert_eq!(c.total(), 3);
+    }
+
+    #[test]
+    fn spans_partition_the_window() {
+        // left_span + 1 (the spike step) + right_span == w, odd or even.
+        for w in 2..=13 {
+            assert_eq!(left_span(w) + 1 + right_span(w), w, "w={w}");
+        }
+        assert_eq!(left_span(10), 4);
+        assert_eq!(right_span(10), 5);
+        assert_eq!(left_span(11), 5);
+        assert_eq!(right_span(11), 5);
+        assert_eq!(left_span(2), 0);
+        assert_eq!(right_span(2), 1);
+    }
+
+    #[test]
+    fn classify_spike_matches_manual_counts() {
+        // Timeline: raises at 2, 5, 9; spike at 6. w = 10 → left half is
+        // [2, 6] (raises 2 and 5), right half is (6, 11] (raise 9).
+        let mut raised = vec![false; 12];
+        for i in [2, 5, 9] {
+            raised[i] = true;
+        }
+        let c = classify_spike(&raised, 6, 10);
+        assert_eq!(c, SideCounts { left: 2, right: 1 });
+        // w = 4 → left [5, 6] (raise 5), right (6, 8] (none).
+        let c = classify_spike(&raised, 6, 4);
+        assert_eq!(c, SideCounts { left: 1, right: 0 });
+    }
+
+    #[test]
+    fn predicted_iff_left_raise_regression() {
+        // Pins the paper's "preceded by ≥1 raise" criterion on both
+        // parities of w, at the timeline edge, and for spikes packed
+        // closer than half a window — the configurations the historical
+        // eval/window orientation split disagreed on.
+        // Even w = 10: a raise exactly left_span = 4 steps early predicts…
+        let mut raised = vec![false; 40];
+        raised[6] = true;
+        assert_eq!(lead_time(&raised, 10, 10), Some(4));
+        assert!(classify_spike(&raised, 10, 10).left > 0);
+        // …but 5 steps early is outside the left half.
+        let mut raised = vec![false; 40];
+        raised[5] = true;
+        assert_eq!(lead_time(&raised, 10, 10), None);
+        assert_eq!(classify_spike(&raised, 10, 10).left, 0);
+        // Odd w = 11: left_span = 5, so the same raise predicts.
+        assert_eq!(lead_time(&raised, 10, 11), Some(5));
+        assert!(classify_spike(&raised, 10, 11).left > 0);
+        // Spike at t = 0: only a coincident raise can predict it, and the
+        // padded window must not panic or wrap.
+        let raised = [true, false, false];
+        assert_eq!(lead_time(&raised, 0, 10), Some(0));
+        assert_eq!(classify_spike(&raised, 0, 10).left, 1);
+        let raised = [false, true, false];
+        assert_eq!(lead_time(&raised, 0, 10), None);
+        // Spikes closer than w/2: one raise between two spikes is
+        // right-sided for the first and left-sided for the second.
+        let mut raised = vec![false; 20];
+        raised[8] = true; // spikes at 7 and 9
+        assert_eq!(lead_time(&raised, 7, 10), None);
+        assert_eq!(classify_spike(&raised, 7, 10).right, 1);
+        assert_eq!(lead_time(&raised, 9, 10), Some(1));
+        assert_eq!(classify_spike(&raised, 9, 10).left, 1);
+    }
+
+    #[test]
+    fn lead_time_reports_first_raise() {
+        // Raises at 3 and 5, spike at 6, w = 10: the earliest raise in
+        // [2, 6] is at 3 → lead 3 (not the nearer raise at 5).
+        let mut raised = vec![false; 10];
+        raised[3] = true;
+        raised[5] = true;
+        assert_eq!(lead_time(&raised, 6, 10), Some(3));
+    }
+
+    #[test]
+    fn raise_true_positive_is_dual_to_lead_time() {
+        let mut spikes = vec![false; 30];
+        spikes[10] = true;
+        // w = 10 → forward window of a raise spans left_span = 4 steps.
+        assert!(raise_true_positive(&spikes, 6, 10));
+        assert!(raise_true_positive(&spikes, 10, 10)); // coincident
+        assert!(!raise_true_positive(&spikes, 5, 10));
+        assert!(!raise_true_positive(&spikes, 11, 10));
+        // Past the end of the timeline: no spike, no credit, no panic.
+        assert!(!raise_true_positive(&spikes, 29, 10));
+        assert!(!raise_true_positive(&[], 0, 10));
     }
 
     #[test]
@@ -193,6 +359,12 @@ mod tests {
         let mut w = SlidingWindow::new(4);
         w.push(true);
         let _ = w.side_counts();
+    }
+
+    #[test]
+    #[should_panic]
+    fn spans_reject_degenerate_window() {
+        let _ = left_span(1);
     }
 
     #[test]

@@ -68,12 +68,15 @@ impl EmpiricalCdf {
             .collect()
     }
 
-    /// Inverse CDF (quantile) by order statistic.
+    /// Inverse CDF (quantile) by the standard nearest-rank order
+    /// statistic: the smallest x with F(x) ≥ q, i.e. sample
+    /// `ceil(q·n) - 1` (0-indexed), with q = 0 mapping to the minimum.
     pub fn inverse(&mut self, q: f64) -> f64 {
         assert!((0.0..=1.0).contains(&q) && !self.xs.is_empty());
         self.ensure_sorted();
-        let idx = ((self.xs.len() - 1) as f64 * q).round() as usize;
-        self.xs[idx]
+        let n = self.xs.len();
+        let rank = (q * n as f64).ceil().max(1.0) as usize;
+        self.xs[rank.min(n) - 1]
     }
 }
 
@@ -108,5 +111,41 @@ mod tests {
         assert_eq!(c.inverse(0.0), 10.0);
         assert_eq!(c.inverse(0.5), 20.0);
         assert_eq!(c.inverse(1.0), 30.0);
+    }
+
+    #[test]
+    fn inverse_uses_nearest_rank_not_round_half_away() {
+        // With n = 4 the nearest-rank statistic is ceil(q·4) - 1; the old
+        // round((n-1)·q) formula gave sample index 2 (30.0) at the median.
+        let mut c = EmpiricalCdf::from_samples(&[40.0, 10.0, 30.0, 20.0]);
+        assert_eq!(c.inverse(0.0), 10.0);
+        assert_eq!(c.inverse(0.25), 10.0);
+        assert_eq!(c.inverse(0.26), 20.0);
+        assert_eq!(c.inverse(0.5), 20.0);
+        assert_eq!(c.inverse(0.75), 30.0);
+        assert_eq!(c.inverse(0.9), 40.0);
+        assert_eq!(c.inverse(1.0), 40.0);
+    }
+
+    #[test]
+    fn inverse_is_smallest_x_with_mass_at_least_q() {
+        // The defining property of the nearest-rank quantile, checked
+        // against eval(): F(inverse(q)) >= q, and no smaller sample
+        // satisfies it. (The engine report's `queue_delay_p<i>` keys are
+        // per-priority *means*, not percentiles — the quality rows'
+        // lead/decision/recall p50/p90/p99 all route through `inverse`,
+        // so this property is the one that keeps those artifact figures
+        // honest order statistics.)
+        let mut c = EmpiricalCdf::from_samples(&[5.0, 1.0, 9.0, 3.0, 7.0, 2.0, 8.0]);
+        for i in 0..=20 {
+            let q = i as f64 / 20.0;
+            let x = c.inverse(q);
+            assert!(c.eval(x) >= q, "F({x}) < {q}");
+            let smaller: Vec<f64> =
+                [1.0, 2.0, 3.0, 5.0, 7.0, 8.0].iter().copied().filter(|&v| v < x).collect();
+            if let Some(&prev) = smaller.last() {
+                assert!(c.eval(prev) < q, "not minimal at q={q}");
+            }
+        }
     }
 }

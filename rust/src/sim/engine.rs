@@ -161,6 +161,22 @@ impl fmt::Display for EngineError {
 
 impl std::error::Error for EngineError {}
 
+/// Opt-in per-node signal timelines recorded during a run (see
+/// [`DiscreteEventEngine::with_signal_capture`]): the raw material of the
+/// prediction-quality evaluation ([`crate::sim::quality`]). Indexed
+/// `[node][step]`; a dead node records `false` on both timelines for the
+/// steps it is down, so shapes are always `nodes × steps` and capture is
+/// byte-equivalent across trace sources and observe-pool widths.
+#[derive(Debug, Clone, Default)]
+pub struct SignalCapture {
+    /// `raised[node][step]`: the node's admission policy was refusing
+    /// work at that step (the rejection signal, post-observe).
+    pub raised: Vec<Vec<bool>>,
+    /// `spikes[node][step]`: the node's CPU Ready ground truth was at or
+    /// above the scenario's `ready_threshold`.
+    pub spikes: Vec<Vec<bool>>,
+}
+
 /// Aggregate result of a simulation run.
 #[derive(Debug, Clone, Default)]
 pub struct SimReport {
@@ -242,6 +258,12 @@ pub struct SimReport {
     pub events_processed: usize,
     /// Per-job outcomes (ordered by arrival).
     pub outcomes: Vec<JobOutcome>,
+    /// Raised/spike timelines, present only when the engine was built
+    /// with [`DiscreteEventEngine::with_signal_capture`]. Like
+    /// `events_processed`, deliberately **not** serialized — the JSON
+    /// report byte contract is frozen; quality scoring consumes this
+    /// in-process.
+    pub signal_capture: Option<SignalCapture>,
 }
 
 impl SimReport {
@@ -761,6 +783,7 @@ pub struct DiscreteEventEngine {
     source: TraceSource,
     policies: Vec<Box<dyn Admission>>,
     factory: Option<PolicyFactory>,
+    capture: bool,
 }
 
 impl DiscreteEventEngine {
@@ -836,7 +859,7 @@ impl DiscreteEventEngine {
                 }
             }
         }
-        Ok(Self { scenario, source, policies, factory: None })
+        Ok(Self { scenario, source, policies, factory: None, capture: false })
     }
 
     /// Install a policy factory: nodes that rejoin after churn restart
@@ -846,20 +869,29 @@ impl DiscreteEventEngine {
         self
     }
 
+    /// Record per-node raised/spike timelines into
+    /// [`SimReport::signal_capture`]. Off by default: capture costs
+    /// `2 · nodes · steps` booleans and the serialized report never
+    /// carries it, so only the quality evaluation turns it on.
+    pub fn with_signal_capture(mut self) -> Self {
+        self.capture = true;
+        self
+    }
+
     /// Run to the horizon; consumes the engine.
     pub fn run(self) -> SimReport {
-        let Self { scenario, mut source, mut policies, factory } = self;
+        let Self { scenario, mut source, mut policies, factory, capture } = self;
         let n = source.nodes();
         let d = source.dim();
         let trace_len = source.len();
         let steps = scenario.steps.min(trace_len);
         let horizon: SimTime = step_to_ticks(steps);
 
-        // Independent, order-insensitive RNG streams.
-        let stream = |tag: u64| {
-            let mut sm = SplitMix64::new(scenario.seed ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15));
-            Xoshiro256::seed_from_u64(sm.next_u64())
-        };
+        // Independent, order-insensitive RNG streams (the shared
+        // convention in `crate::rng::stream_seed`; tags 1–9 here, tag 10
+        // is the CLI's PM-baseline per-node stream).
+        let stream =
+            |tag: u64| Xoshiro256::seed_from_u64(crate::rng::stream_seed(scenario.seed, tag));
         let mut arrivals_rng = stream(1);
         let mut duration_rng = stream(2);
         let mut dispatch_rng = stream(3);
@@ -922,6 +954,14 @@ impl DiscreteEventEngine {
             steps,
             seed: scenario.seed,
             ..Default::default()
+        };
+        let mut capture: Option<SignalCapture> = if capture {
+            Some(SignalCapture {
+                raised: vec![Vec::with_capacity(steps); n],
+                spikes: vec![Vec::with_capacity(steps); n],
+            })
+        } else {
+            None
         };
         let expected_jobs =
             (scenario.arrivals.mean_rate() * steps as f64).ceil() as usize;
@@ -1001,6 +1041,23 @@ impl DiscreteEventEngine {
                                 if alive[i] {
                                     can_accept[i] = policies[i].observe(source.features(i, step));
                                 }
+                            }
+                        }
+
+                        // 1a. Signal capture (opt-in): record the merged
+                        //     rejection signal and the ground-truth spike
+                        //     indicator for every node. Runs sequentially
+                        //     after the observe merge, so the timelines
+                        //     are byte-equivalent at any pool width; dead
+                        //     nodes record `false` without touching their
+                        //     trace state (streaming parity: their stream
+                        //     advances lazily on rejoin either way).
+                        if let Some(capt) = capture.as_mut() {
+                            for i in 0..n {
+                                capt.raised[i].push(alive[i] && !can_accept[i]);
+                                let spiked = alive[i]
+                                    && source.cpu_ready(i, step) >= ready_threshold;
+                                capt.spikes[i].push(spiked);
                             }
                         }
 
@@ -1592,6 +1649,7 @@ impl DiscreteEventEngine {
                 _ => {}
             }
         }
+        report.signal_capture = capture;
         report
     }
 }
@@ -1664,6 +1722,29 @@ mod tests {
             assert_eq!(a.to_json_string(), b.to_json_string(), "{name} diverged");
             assert_eq!(a.outcomes, b.outcomes);
         }
+    }
+
+    #[test]
+    fn signal_capture_has_full_shape_and_leaves_report_bytes_alone() {
+        let sc = Scenario::default().with_nodes(3).with_steps(400).with_seed(11);
+        let tr = traces(3, 400, 11);
+        let plain =
+            DiscreteEventEngine::new(sc.clone(), tr.clone(), pronto_policies(&tr)).run();
+        assert!(plain.signal_capture.is_none(), "capture must be opt-in");
+        let captured = DiscreteEventEngine::new(sc, tr.clone(), pronto_policies(&tr))
+            .with_signal_capture()
+            .run();
+        // Capture changes nothing observable in the serialized report.
+        assert_eq!(plain.to_json_string(), captured.to_json_string());
+        let capt = captured.signal_capture.expect("capture requested");
+        assert_eq!(capt.raised.len(), 3);
+        assert_eq!(capt.spikes.len(), 3);
+        for node in 0..3 {
+            assert_eq!(capt.raised[node].len(), 400);
+            assert_eq!(capt.spikes[node].len(), 400);
+        }
+        // Calibrated traces must contain ground-truth spikes somewhere.
+        assert!(capt.spikes.iter().flatten().any(|&s| s));
     }
 
     #[test]

@@ -1,17 +1,22 @@
 //! The §7.1 evaluation: rejection signal vs CPU Ready ground truth.
 //!
 //! For every CPU Ready spike in a VM's trace we examine the rejection
-//! signal inside a window of size `w` centred on the spike (the reference
-//! point sits at `w/2`, Figure 5): raises in the half *before* the spike
+//! signal inside a window of size `w` whose reference point sits on the
+//! spike at age `w/2` (Figure 5): raises in the half *before* the spike
 //! are **left-sided** (successful early warnings — "a CPU Ready spike is
 //! preceded by at least one rejection raise"), raises in the half after
-//! are **right-sided** (consecutive-spike or delayed detections). We also
-//! record the signal's **downtime** (fraction of time raised — lost
-//! admission capacity) and the **contained-spike percentage** (rejection
-//! raises per CPU Ready spike; >100 % ⇒ the method raises more often than
-//! the ground truth spikes — Figure 7's over-rejection axis).
+//! are **right-sided** (consecutive-spike or delayed detections). The
+//! classification itself lives in [`crate::detect::window`]
+//! ([`classify_spike`] / [`lead_time`]) so this module and the
+//! prediction-quality scorer ([`crate::sim::quality`]) share one
+//! implementation. We also record the signal's **downtime** (fraction of
+//! time raised — lost admission capacity) and the **contained-spike
+//! percentage** (rejection raises per CPU Ready spike; >100 % ⇒ the
+//! method raises more often than the ground truth spikes — Figure 7's
+//! over-rejection axis).
 
 use crate::baselines::StreamingEmbedding;
+use crate::detect::window::{classify_spike, lead_time};
 use crate::metrics::EmpiricalCdf;
 use crate::scheduler::{NodeScheduler, RejectConfig};
 use crate::telemetry::VmTrace;
@@ -51,6 +56,10 @@ pub struct NodeEvaluation {
     pub left_counts: Vec<usize>,
     /// Per-spike right-sided raise counts.
     pub right_counts: Vec<usize>,
+    /// Per-spike lead time: steps from the earliest left-sided raise to
+    /// the spike (`Some(0)` = coincident raise, `None` = unpredicted).
+    /// Aligned with `left_counts`/`right_counts`.
+    pub lead_times: Vec<Option<usize>>,
     /// Fraction of timesteps with the signal raised.
     pub downtime: f64,
     /// Total trace length.
@@ -102,28 +111,19 @@ pub fn evaluate_method<E: StreamingEmbedding>(
     }
     let method = node.method();
 
-    let half = cfg.window / 2;
     let mut left_counts = Vec::new();
     let mut right_counts = Vec::new();
+    let mut lead_times = Vec::new();
     let mut ready_spikes = 0usize;
     for t in 0..t_len {
         if trace.cpu_ready(t) < cfg.ready_threshold {
             continue;
         }
         ready_spikes += 1;
-        // Left: raises in [t-half, t] (early warning, inclusive of
-        // coincident raises per §7: "shortly before or coincides").
-        let lo = t.saturating_sub(half);
-        let left = raised[lo..=t].iter().filter(|&&r| r).count();
-        // Right: raises in (t, t+half].
-        let hi = (t + half).min(t_len - 1);
-        let right = if t < t_len - 1 {
-            raised[t + 1..=hi].iter().filter(|&&r| r).count()
-        } else {
-            0
-        };
-        left_counts.push(left);
-        right_counts.push(right);
+        let sides = classify_spike(&raised, t, cfg.window);
+        left_counts.push(sides.left);
+        right_counts.push(sides.right);
+        lead_times.push(lead_time(&raised, t, cfg.window));
     }
 
     NodeEvaluation {
@@ -132,6 +132,7 @@ pub fn evaluate_method<E: StreamingEmbedding>(
         rejection_raises: raised.iter().filter(|&&r| r).count(),
         left_counts,
         right_counts,
+        lead_times,
         downtime: node.stats().downtime(),
         steps: t_len,
     }
@@ -235,11 +236,23 @@ mod tests {
         assert_eq!(ev.steps, 4000);
         assert_eq!(ev.left_counts.len(), ev.ready_spikes);
         assert_eq!(ev.right_counts.len(), ev.ready_spikes);
+        assert_eq!(ev.lead_times.len(), ev.ready_spikes);
         assert!(ev.ready_spikes > 0, "calibrated trace must contain spikes");
         assert!((0.0..=1.0).contains(&ev.downtime));
-        // Left counts bounded by window half + 1.
-        let half = EvalConfig::default().window / 2;
-        assert!(ev.left_counts.iter().all(|&c| c <= half + 1));
+        // Side counts bounded by the window-half spans.
+        let w = EvalConfig::default().window;
+        let left_max = crate::detect::window::left_span(w) + 1;
+        let right_max = crate::detect::window::right_span(w);
+        assert!(ev.left_counts.iter().all(|&c| c <= left_max));
+        assert!(ev.right_counts.iter().all(|&c| c <= right_max));
+        // A spike has a lead time iff it has a left-sided raise, and the
+        // lead never exceeds the left span.
+        for (lc, lt) in ev.left_counts.iter().zip(&ev.lead_times) {
+            assert_eq!(*lc > 0, lt.is_some());
+            if let Some(l) = lt {
+                assert!(*l <= crate::detect::window::left_span(w));
+            }
+        }
     }
 
     #[test]
@@ -276,7 +289,8 @@ mod tests {
     #[test]
     fn oracle_like_signal_scores_perfectly() {
         // A synthetic evaluation where the rejection signal IS the spike
-        // indicator shifted one step early: every spike predicted.
+        // indicator shifted one step early: every spike predicted, via
+        // the canonical window classification.
         let tr = trace(5, 2000);
         let threshold = 1000.0;
         let t_len = tr.len();
@@ -286,18 +300,23 @@ mod tests {
                 raised[t - 1] = true;
             }
         }
-        // Re-derive counts with the same logic as evaluate_method.
-        let half = 5usize;
+        let w = 10usize;
         let mut predicted = 0;
         let mut spikes = 0;
-        for t in 0..t_len {
+        // Start at 1: a spike at step 0 has no earlier step for the
+        // shifted indicator to land on.
+        for t in 1..t_len {
             if tr.cpu_ready(t) < threshold {
                 continue;
             }
             spikes += 1;
-            let lo = t.saturating_sub(half);
-            if raised[lo..=t].iter().any(|&r| r) {
+            if classify_spike(&raised, t, w).left > 0 {
                 predicted += 1;
+                // Every predicted spike carries a lead time (clustered
+                // spikes can inherit an earlier neighbour's raise, so the
+                // exact value is pinned in tests/eval_quality.rs on a
+                // well-spaced synthetic timeline instead).
+                assert!(lead_time(&raised, t, w).is_some());
             }
         }
         assert_eq!(predicted, spikes);

@@ -17,16 +17,28 @@
 //!   against the CPU Ready ground truth: left/right-sided spike counts per
 //!   CPU Ready spike (Figure 6), downtime and contained-spike percentages
 //!   (Figure 7), and per-method aggregation over a fleet of VMs.
+//! * [`quality`] — the ground-truth-labeled prediction-quality scorer
+//!   (eval v2): per-spike lead time, precision/recall/F1,
+//!   false-positive rate, and signal-to-decision latency over
+//!   engine-captured raised/spike timelines, reduced to the
+//!   schema-versioned `EVAL_quality.json` rows of `pronto eval
+//!   --scenario`.
 
 pub mod datacenter;
 pub mod engine;
 pub mod eval;
 pub mod events;
+pub mod quality;
 pub mod scenario;
 
 pub use datacenter::{DataCenterSim, SimConfig};
-pub use engine::{sample_distinct, DiscreteEventEngine, EngineError, PolicyFactory, SimReport};
+pub use engine::{
+    sample_distinct, DiscreteEventEngine, EngineError, PolicyFactory, SignalCapture, SimReport,
+};
 pub use eval::{evaluate_method, EvalConfig, FleetEvaluation, NodeEvaluation};
+pub use quality::{
+    decision_latencies, quality_report, score_report, score_timeline, QualityRow, TimelineScore,
+};
 pub use events::{
     latency_to_ticks, step_to_ticks, ticks_to_step, Event, EventQueue, Scheduled, SimTime,
     TickBatch, TICKS_PER_STEP,

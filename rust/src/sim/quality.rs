@@ -1,0 +1,551 @@
+//! Ground-truth-labeled prediction quality: the eval v2 scorer.
+//!
+//! [`crate::sim::eval`] reproduces the paper's Figure 6/7 *counts*; this
+//! module scores the headline *claim* — that the rejection signal
+//! predicts CPU Ready responsiveness changes ahead of time — on
+//! engine-captured timelines ([`SignalCapture`]):
+//!
+//! * **Lead time** per spike: steps from the first preceding raise
+//!   (within the Figure-5 left half, [`left_span`] steps) to the spike.
+//! * **Precision / recall / F1**: a raise is a true positive iff a spike
+//!   lands within its forward window `[r, r + left_span]`; a spike is
+//!   recalled iff some raise precedes (or coincides with) it — the exact
+//!   dual, owned by [`crate::detect::window`].
+//! * **False-positive rate**: false raises over the steps whose forward
+//!   window holds no spike (the negatives).
+//! * **Signal-to-decision latency**: raise onset → first admission
+//!   rejection the engine actually issued (from
+//!   [`SimReport::outcomes`]), i.e. how fast a raised signal turns into
+//!   a scheduling decision.
+//!
+//! [`score_report`] reduces one engine run to a [`QualityRow`];
+//! [`quality_report`] assembles rows across scenarios × methods into the
+//! schema-versioned `EVAL_quality.json` document (`pronto eval
+//! --scenario`). Rows are derived purely from captured timelines and the
+//! outcome ledger — both byte-stable per seed at any `--threads` width
+//! and across trace sources — and deliberately record neither setting,
+//! so the document inherits that byte-identity.
+
+use crate::detect::window::{classify_spike, lead_time, left_span, raise_true_positive};
+use crate::metrics::EmpiricalCdf;
+use crate::scheduler::JobOutcome;
+use crate::ser::JsonValue;
+use crate::sim::engine::{SignalCapture, SimReport};
+use std::collections::BTreeMap;
+
+/// Confusion counts and lead times of one node's raised/spike timelines.
+#[derive(Debug, Clone, Default)]
+pub struct TimelineScore {
+    /// Timeline length in steps.
+    pub steps: usize,
+    /// Ground-truth CPU Ready spikes.
+    pub spikes: usize,
+    /// Spikes preceded by ≥1 raise within the left half-window.
+    pub predicted_spikes: usize,
+    /// Steps with the rejection signal raised.
+    pub raises: usize,
+    /// Raises whose forward window `[r, r + left_span]` holds a spike.
+    pub true_positive_raises: usize,
+    /// Steps whose forward window holds **no** spike — the population
+    /// false raises are scored against.
+    pub negatives: usize,
+    /// Lead time of each predicted spike, in spike order (steps from the
+    /// earliest left-half raise; 0 = coincident).
+    pub lead_times: Vec<usize>,
+}
+
+impl TimelineScore {
+    /// TP raises / all raises. No raises ⇒ vacuous 1.0 (nothing claimed,
+    /// nothing wrong).
+    pub fn precision(&self) -> f64 {
+        if self.raises == 0 {
+            1.0
+        } else {
+            self.true_positive_raises as f64 / self.raises as f64
+        }
+    }
+
+    /// Predicted spikes / all spikes. No spikes ⇒ vacuous 1.0 (nothing
+    /// to predict).
+    pub fn recall(&self) -> f64 {
+        if self.spikes == 0 {
+            1.0
+        } else {
+            self.predicted_spikes as f64 / self.spikes as f64
+        }
+    }
+
+    /// Harmonic mean of precision and recall (0.0 when both are 0).
+    pub fn f1(&self) -> f64 {
+        let (p, r) = (self.precision(), self.recall());
+        if p + r == 0.0 {
+            0.0
+        } else {
+            2.0 * p * r / (p + r)
+        }
+    }
+
+    /// False raises over negative steps (0.0 when every step's forward
+    /// window holds a spike — there is nothing to falsely alarm on).
+    pub fn false_positive_rate(&self) -> f64 {
+        if self.negatives == 0 {
+            0.0
+        } else {
+            (self.raises - self.true_positive_raises) as f64 / self.negatives as f64
+        }
+    }
+}
+
+/// Score one node's raised timeline against its spike ground truth under
+/// a Figure-5 window of size `w`. Both slices index by step and must be
+/// equally long.
+pub fn score_timeline(raised: &[bool], spikes: &[bool], w: usize) -> TimelineScore {
+    assert_eq!(raised.len(), spikes.len(), "timelines must align");
+    let steps = raised.len();
+    let mut score = TimelineScore { steps, ..Default::default() };
+    for t in 0..steps {
+        if spikes[t] {
+            score.spikes += 1;
+            if classify_spike(raised, t, w).left > 0 {
+                score.predicted_spikes += 1;
+                score.lead_times.push(
+                    lead_time(raised, t, w).expect("left-sided raise implies a lead time"),
+                );
+            }
+        }
+        let positive_window = raise_true_positive(spikes, t, w);
+        if !positive_window {
+            score.negatives += 1;
+        }
+        if raised[t] {
+            score.raises += 1;
+            if positive_window {
+                score.true_positive_raises += 1;
+            }
+        }
+    }
+    score
+}
+
+/// Signal-to-decision latencies: for every raise **onset** (a false→true
+/// transition on some node's raised timeline), the distance in steps to
+/// the first admission rejection the engine issued at or after it.
+/// Onsets with no subsequent rejection (censored by the horizon) are
+/// dropped. `rejection_steps` need not be sorted.
+pub fn decision_latencies(raised: &[Vec<bool>], rejection_steps: &[usize]) -> Vec<usize> {
+    let mut rejections = rejection_steps.to_vec();
+    rejections.sort_unstable();
+    let mut out = Vec::new();
+    for timeline in raised {
+        for (t, &up) in timeline.iter().enumerate() {
+            let onset = up && (t == 0 || !timeline[t - 1]);
+            if !onset {
+                continue;
+            }
+            let idx = rejections.partition_point(|&r| r < t);
+            if idx < rejections.len() {
+                out.push(rejections[idx] - t);
+            }
+        }
+    }
+    out
+}
+
+/// One scenario × method row of `EVAL_quality.json`.
+#[derive(Debug, Clone)]
+pub struct QualityRow {
+    pub scenario: String,
+    pub method: String,
+    pub nodes: usize,
+    pub steps: usize,
+    pub seed: u64,
+    pub window: usize,
+    /// Pooled (micro-averaged) confusion counts across the fleet.
+    pub spikes: usize,
+    pub predicted_spikes: usize,
+    pub raises: usize,
+    pub true_positive_raises: usize,
+    pub precision: f64,
+    pub recall: f64,
+    pub f1: f64,
+    pub false_positive_rate: f64,
+    /// Lead-time distribution over all predicted spikes (steps).
+    pub mean_lead_steps: f64,
+    pub lead_p50: f64,
+    pub lead_p90: f64,
+    pub lead_p99: f64,
+    /// Signal-to-decision latency distribution over raise onsets (steps).
+    pub decision_samples: usize,
+    pub mean_decision_latency_steps: f64,
+    pub decision_p50: f64,
+    pub decision_p90: f64,
+    pub decision_p99: f64,
+    /// Per-node (macro) distribution tails of recall and precision.
+    pub recall_node_p50: f64,
+    pub recall_node_p90: f64,
+    pub precision_node_p50: f64,
+    pub precision_node_p90: f64,
+    /// Mean fraction of steps with the signal raised (lost capacity).
+    pub mean_downtime: f64,
+}
+
+/// Nearest-rank quantile with an explicit empty-distribution guard (an
+/// empty CDF has no order statistics; rows render 0 there).
+fn quantile_or_zero(cdf: &mut EmpiricalCdf, q: f64) -> f64 {
+    if cdf.is_empty() {
+        0.0
+    } else {
+        cdf.inverse(q)
+    }
+}
+
+fn mean_or_zero(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+impl QualityRow {
+    /// Canonical JSON rendering (BTreeMap ⇒ sorted keys; seed as a
+    /// string for the same 2^53 reason as [`SimReport::to_json`]).
+    pub fn to_json(&self) -> JsonValue {
+        let mut m = BTreeMap::new();
+        let num = JsonValue::Number;
+        m.insert("scenario".into(), JsonValue::String(self.scenario.clone()));
+        m.insert("method".into(), JsonValue::String(self.method.clone()));
+        m.insert("nodes".into(), num(self.nodes as f64));
+        m.insert("steps".into(), num(self.steps as f64));
+        m.insert("seed".into(), JsonValue::String(self.seed.to_string()));
+        m.insert("window".into(), num(self.window as f64));
+        m.insert("spikes".into(), num(self.spikes as f64));
+        m.insert("predicted_spikes".into(), num(self.predicted_spikes as f64));
+        m.insert("raises".into(), num(self.raises as f64));
+        m.insert(
+            "true_positive_raises".into(),
+            num(self.true_positive_raises as f64),
+        );
+        m.insert("precision".into(), num(self.precision));
+        m.insert("recall".into(), num(self.recall));
+        m.insert("f1".into(), num(self.f1));
+        m.insert("false_positive_rate".into(), num(self.false_positive_rate));
+        m.insert("mean_lead_steps".into(), num(self.mean_lead_steps));
+        m.insert("lead_p50".into(), num(self.lead_p50));
+        m.insert("lead_p90".into(), num(self.lead_p90));
+        m.insert("lead_p99".into(), num(self.lead_p99));
+        m.insert("decision_samples".into(), num(self.decision_samples as f64));
+        m.insert(
+            "mean_decision_latency_steps".into(),
+            num(self.mean_decision_latency_steps),
+        );
+        m.insert("decision_p50".into(), num(self.decision_p50));
+        m.insert("decision_p90".into(), num(self.decision_p90));
+        m.insert("decision_p99".into(), num(self.decision_p99));
+        m.insert("recall_node_p50".into(), num(self.recall_node_p50));
+        m.insert("recall_node_p90".into(), num(self.recall_node_p90));
+        m.insert("precision_node_p50".into(), num(self.precision_node_p50));
+        m.insert("precision_node_p90".into(), num(self.precision_node_p90));
+        m.insert("mean_downtime".into(), num(self.mean_downtime));
+        JsonValue::Object(m)
+    }
+}
+
+/// Reduce one capture-enabled engine run to a quality row. Panics if the
+/// report was produced without
+/// [`crate::sim::DiscreteEventEngine::with_signal_capture`].
+pub fn score_report(report: &SimReport, window: usize, method: &str) -> QualityRow {
+    let capture: &SignalCapture = report
+        .signal_capture
+        .as_ref()
+        .expect("quality scoring needs a capture-enabled run (with_signal_capture)");
+    let _ = left_span(window); // window >= 2, checked up front
+
+    let mut pooled = TimelineScore::default();
+    let mut lead_cdf = EmpiricalCdf::new();
+    let mut leads = Vec::new();
+    let mut recall_cdf = EmpiricalCdf::new();
+    let mut precision_cdf = EmpiricalCdf::new();
+    let mut downtimes = Vec::new();
+    for (raised, spikes) in capture.raised.iter().zip(&capture.spikes) {
+        let s = score_timeline(raised, spikes, window);
+        pooled.steps += s.steps;
+        pooled.spikes += s.spikes;
+        pooled.predicted_spikes += s.predicted_spikes;
+        pooled.raises += s.raises;
+        pooled.true_positive_raises += s.true_positive_raises;
+        pooled.negatives += s.negatives;
+        recall_cdf.push(s.recall());
+        precision_cdf.push(s.precision());
+        downtimes.push(if s.steps == 0 {
+            0.0
+        } else {
+            s.raises as f64 / s.steps as f64
+        });
+        for &l in &s.lead_times {
+            lead_cdf.push(l as f64);
+            leads.push(l as f64);
+        }
+    }
+
+    // Rejections the engine actually issued, in step units, from the
+    // outcome ledger (ordered by arrival; steps are non-decreasing).
+    let rejection_steps: Vec<usize> = report
+        .outcomes
+        .iter()
+        .filter_map(|o| match o {
+            JobOutcome::Rejected { at } => Some(*at),
+            _ => None,
+        })
+        .collect();
+    let latencies = decision_latencies(&capture.raised, &rejection_steps);
+    let lat_f: Vec<f64> = latencies.iter().map(|&l| l as f64).collect();
+    let mut lat_cdf = EmpiricalCdf::from_samples(&lat_f);
+
+    QualityRow {
+        scenario: report.scenario.clone(),
+        method: method.to_string(),
+        nodes: report.nodes,
+        steps: report.steps,
+        seed: report.seed,
+        window,
+        spikes: pooled.spikes,
+        predicted_spikes: pooled.predicted_spikes,
+        raises: pooled.raises,
+        true_positive_raises: pooled.true_positive_raises,
+        precision: pooled.precision(),
+        recall: pooled.recall(),
+        f1: pooled.f1(),
+        false_positive_rate: pooled.false_positive_rate(),
+        mean_lead_steps: mean_or_zero(&leads),
+        lead_p50: quantile_or_zero(&mut lead_cdf, 0.5),
+        lead_p90: quantile_or_zero(&mut lead_cdf, 0.9),
+        lead_p99: quantile_or_zero(&mut lead_cdf, 0.99),
+        decision_samples: latencies.len(),
+        mean_decision_latency_steps: mean_or_zero(&lat_f),
+        decision_p50: quantile_or_zero(&mut lat_cdf, 0.5),
+        decision_p90: quantile_or_zero(&mut lat_cdf, 0.9),
+        decision_p99: quantile_or_zero(&mut lat_cdf, 0.99),
+        recall_node_p50: quantile_or_zero(&mut recall_cdf, 0.5),
+        recall_node_p90: quantile_or_zero(&mut recall_cdf, 0.9),
+        precision_node_p50: quantile_or_zero(&mut precision_cdf, 0.5),
+        precision_node_p90: quantile_or_zero(&mut precision_cdf, 0.9),
+        mean_downtime: mean_or_zero(&downtimes),
+    }
+}
+
+/// Assemble the `EVAL_quality.json` document: schema-versioned, in the
+/// style of `BENCH_engine.json`. Deliberately records **no** trace-source
+/// or thread-width field — rows are byte-identical across both, and the
+/// document must witness that.
+pub fn quality_report(
+    window: usize,
+    methods: &[&str],
+    scenarios: &[String],
+    rows: &[QualityRow],
+) -> JsonValue {
+    let mut doc = BTreeMap::new();
+    doc.insert("eval".into(), JsonValue::String("quality".into()));
+    doc.insert("schema_version".into(), JsonValue::Number(1.0));
+    doc.insert("window".into(), JsonValue::Number(window as f64));
+    doc.insert(
+        "methods".into(),
+        JsonValue::Array(
+            methods.iter().map(|m| JsonValue::String(m.to_string())).collect(),
+        ),
+    );
+    doc.insert(
+        "scenarios".into(),
+        JsonValue::Array(
+            scenarios.iter().map(|s| JsonValue::String(s.clone())).collect(),
+        ),
+    );
+    doc.insert(
+        "rows".into(),
+        JsonValue::Array(rows.iter().map(QualityRow::to_json).collect()),
+    );
+    JsonValue::Object(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shifted_oracle(spikes: &[bool], shift: usize) -> Vec<bool> {
+        let mut raised = vec![false; spikes.len()];
+        for (t, &s) in spikes.iter().enumerate() {
+            if s && t >= shift {
+                raised[t - shift] = true;
+            }
+        }
+        raised
+    }
+
+    #[test]
+    fn shifted_oracle_scores_perfectly() {
+        // Well-spaced spikes, indicator raised exactly one step early:
+        // precision = recall = 1.0 and every lead is exactly 1.
+        let mut spikes = vec![false; 200];
+        for t in (20..190).step_by(17) {
+            spikes[t] = true;
+        }
+        let raised = shifted_oracle(&spikes, 1);
+        let s = score_timeline(&raised, &spikes, 10);
+        assert_eq!(s.spikes, 10);
+        assert_eq!(s.predicted_spikes, 10);
+        assert_eq!(s.precision(), 1.0);
+        assert_eq!(s.recall(), 1.0);
+        assert_eq!(s.f1(), 1.0);
+        assert_eq!(s.false_positive_rate(), 0.0);
+        assert!(s.lead_times.iter().all(|&l| l == 1));
+    }
+
+    #[test]
+    fn vacuous_conventions() {
+        // No raises: perfect precision, zero FPR, zero recall (spikes
+        // exist but nothing predicted them).
+        let spikes = [false, true, false, false, true, false];
+        let s = score_timeline(&[false; 6], &spikes, 4);
+        assert_eq!(s.precision(), 1.0);
+        assert_eq!(s.false_positive_rate(), 0.0);
+        assert_eq!(s.recall(), 0.0);
+        assert_eq!(s.f1(), 0.0);
+        // No spikes: vacuous recall, every raise is false.
+        let s = score_timeline(&[true, false, true, false, false, false], &[false; 6], 4);
+        assert_eq!(s.recall(), 1.0);
+        assert_eq!(s.precision(), 0.0);
+        assert!(s.false_positive_rate() > 0.0);
+        assert_eq!(s.negatives, 6);
+        // Empty everything: all vacuous, nothing panics.
+        let s = score_timeline(&[], &[], 4);
+        assert_eq!(s.precision(), 1.0);
+        assert_eq!(s.recall(), 1.0);
+        assert_eq!(s.f1(), 1.0);
+        assert_eq!(s.false_positive_rate(), 0.0);
+    }
+
+    #[test]
+    fn confusion_counts_are_window_consistent() {
+        // Raise at 3 (spike at 5 within its left_span=2 forward window
+        // for w=6) is a TP; raise at 10 sees nothing.
+        let mut spikes = vec![false; 20];
+        spikes[5] = true;
+        let mut raised = vec![false; 20];
+        raised[3] = true;
+        raised[10] = true;
+        let s = score_timeline(&raised, &spikes, 6);
+        assert_eq!(s.raises, 2);
+        assert_eq!(s.true_positive_raises, 1);
+        assert_eq!(s.predicted_spikes, 1);
+        assert_eq!(s.lead_times, vec![2]);
+        assert_eq!(s.precision(), 0.5);
+        assert_eq!(s.recall(), 1.0);
+        // Negatives: steps 3..=5 have the spike in their forward window.
+        assert_eq!(s.negatives, 17);
+        assert_eq!(s.false_positive_rate(), 1.0 / 17.0);
+    }
+
+    #[test]
+    fn decision_latency_pairs_onsets_with_next_rejection() {
+        // Node timeline with onsets at 2 (run of 3) and 8; rejections at
+        // 4 and 8: onset 2 → rejection 4 (latency 2), onset 8 →
+        // rejection 8 (latency 0).
+        let raised = vec![vec![
+            false, false, true, true, true, false, false, false, true, false,
+        ]];
+        let lat = decision_latencies(&raised, &[8, 4]);
+        assert_eq!(lat, vec![2, 0]);
+        // Censored onset: no rejection at/after it → dropped.
+        let lat = decision_latencies(&raised, &[3]);
+        assert_eq!(lat, vec![1]);
+        // No rejections at all → no samples.
+        assert!(decision_latencies(&raised, &[]).is_empty());
+    }
+
+    #[test]
+    fn row_json_schema_keys_are_pinned() {
+        let row = QualityRow {
+            scenario: "s".into(),
+            method: "PRONTO".into(),
+            nodes: 2,
+            steps: 10,
+            seed: 7,
+            window: 10,
+            spikes: 1,
+            predicted_spikes: 1,
+            raises: 1,
+            true_positive_raises: 1,
+            precision: 1.0,
+            recall: 1.0,
+            f1: 1.0,
+            false_positive_rate: 0.0,
+            mean_lead_steps: 1.0,
+            lead_p50: 1.0,
+            lead_p90: 1.0,
+            lead_p99: 1.0,
+            decision_samples: 1,
+            mean_decision_latency_steps: 0.0,
+            decision_p50: 0.0,
+            decision_p90: 0.0,
+            decision_p99: 0.0,
+            recall_node_p50: 1.0,
+            recall_node_p90: 1.0,
+            precision_node_p50: 1.0,
+            precision_node_p90: 1.0,
+            mean_downtime: 0.1,
+        };
+        let json = row.to_json();
+        let obj = json.as_object().unwrap();
+        let keys: Vec<&str> = obj.keys().map(String::as_str).collect();
+        // The artifact schema: additions bump schema_version in
+        // quality_report; removals/renames are breaking.
+        assert_eq!(
+            keys,
+            [
+                "decision_p50",
+                "decision_p90",
+                "decision_p99",
+                "decision_samples",
+                "f1",
+                "false_positive_rate",
+                "lead_p50",
+                "lead_p90",
+                "lead_p99",
+                "mean_decision_latency_steps",
+                "mean_downtime",
+                "mean_lead_steps",
+                "method",
+                "nodes",
+                "precision",
+                "precision_node_p50",
+                "precision_node_p90",
+                "predicted_spikes",
+                "raises",
+                "recall",
+                "recall_node_p50",
+                "recall_node_p90",
+                "scenario",
+                "seed",
+                "spikes",
+                "steps",
+                "true_positive_raises",
+                "window"
+            ]
+        );
+        assert_eq!(json.get("seed").unwrap().as_str(), Some("7"));
+    }
+
+    #[test]
+    fn quality_report_document_shape() {
+        let doc = quality_report(10, &["PRONTO", "SP"], &["capacity".into()], &[]);
+        assert_eq!(doc.get("eval").unwrap().as_str(), Some("quality"));
+        assert_eq!(doc.get("schema_version").unwrap().as_f64(), Some(1.0));
+        assert_eq!(doc.get("window").unwrap().as_usize(), Some(10));
+        assert_eq!(doc.get("methods").unwrap().as_array().unwrap().len(), 2);
+        assert!(doc.get("rows").unwrap().as_array().unwrap().is_empty());
+        // The byte-identity contract: no environment-shaped keys.
+        let obj = doc.as_object().unwrap();
+        assert!(!obj.contains_key("threads"));
+        assert!(!obj.contains_key("trace_source"));
+    }
+}

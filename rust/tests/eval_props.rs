@@ -1,0 +1,148 @@
+//! Hand-rolled property tests (the crate's `proptest::forall` driver —
+//! no external proptest crate) for the Figure-5 window semantics: side
+//! classification, lead-time extraction, and the raise/spike duality
+//! that the prediction-quality scorer builds on.
+
+use pronto::detect::window::{
+    classify_spike, lead_time, left_span, raise_true_positive, right_span, SlidingWindow,
+    SpikeSide,
+};
+use pronto::proptest::forall;
+use pronto::rng::Xoshiro256;
+
+fn gen_timeline(rng: &mut Xoshiro256, len: usize, p: f64) -> Vec<bool> {
+    (0..len).map(|_| rng.next_f64() < p).collect()
+}
+
+fn gen_window(rng: &mut Xoshiro256) -> usize {
+    2 + rng.gen_range(12)
+}
+
+#[test]
+fn classify_spike_matches_manual_range_counts() {
+    forall("classify_spike == manual range counts", |rng| {
+        let len = 5 + rng.gen_range(60);
+        let raised = gen_timeline(rng, len, 0.3);
+        let w = gen_window(rng);
+        let t = rng.gen_range(len);
+        let c = classify_spike(&raised, t, w);
+        let lo = t.saturating_sub(left_span(w));
+        let left = raised[lo..=t].iter().filter(|&&r| r).count();
+        let hi = (t + right_span(w)).min(len - 1);
+        let right = if t < len - 1 {
+            raised[t + 1..=hi].iter().filter(|&&r| r).count()
+        } else {
+            0
+        };
+        if c.left == left && c.right == right {
+            Ok(())
+        } else {
+            Err(format!(
+                "w={w} t={t}: got {c:?}, manual left={left} right={right}, raised={raised:?}"
+            ))
+        }
+    });
+}
+
+#[test]
+fn lead_time_is_earliest_left_raise() {
+    forall("lead iff left raise, earliest wins", |rng| {
+        let len = 5 + rng.gen_range(60);
+        let raised = gen_timeline(rng, len, 0.2);
+        let w = gen_window(rng);
+        let t = rng.gen_range(len);
+        let c = classify_spike(&raised, t, w);
+        match lead_time(&raised, t, w) {
+            Some(lead) => {
+                if c.left == 0 {
+                    return Err(format!("lead {lead} but left count 0 (w={w}, t={t})"));
+                }
+                if lead > left_span(w) {
+                    return Err(format!("lead {lead} > left_span {}", left_span(w)));
+                }
+                let s = t - lead;
+                if !raised[s] {
+                    return Err(format!("no raise at claimed lead origin {s}"));
+                }
+                // Earliest: nothing raised between the window edge and s.
+                let lo = t.saturating_sub(left_span(w));
+                if raised[lo..s].iter().any(|&r| r) {
+                    return Err(format!("raise earlier than lead origin {s} (lo={lo})"));
+                }
+                Ok(())
+            }
+            None => {
+                if c.left == 0 {
+                    Ok(())
+                } else {
+                    Err(format!("left count {} but no lead time (w={w}, t={t})", c.left))
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn predicted_spike_and_tp_raise_are_dual() {
+    forall("spike predicted <=> witnessing raise is a TP", |rng| {
+        let len = 10 + rng.gen_range(60);
+        let raised = gen_timeline(rng, len, 0.2);
+        let spikes = gen_timeline(rng, len, 0.15);
+        let w = gen_window(rng);
+        for t in 0..len {
+            if spikes[t] {
+                if let Some(lead) = lead_time(&raised, t, w) {
+                    // The raise that predicted this spike must itself
+                    // score as a true positive.
+                    if !raise_true_positive(&spikes, t - lead, w) {
+                        return Err(format!(
+                            "spike {t} predicted by raise {} which is not a TP (w={w})",
+                            t - lead
+                        ));
+                    }
+                }
+            }
+            if raised[t] && raise_true_positive(&spikes, t, w) {
+                // A TP raise must make at least one forward spike
+                // left-predicted.
+                let hi = (t + left_span(w)).min(len - 1);
+                let witnessed = (t..=hi)
+                    .any(|s| spikes[s] && classify_spike(&raised, s, w).left > 0);
+                if !witnessed {
+                    return Err(format!("TP raise {t} predicts no spike (w={w})"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sliding_window_sides_partition_and_count() {
+    forall("side_of partitions ages; side_counts sums events", |rng| {
+        let w = gen_window(rng);
+        let mut win = SlidingWindow::new(w);
+        let events = gen_timeline(rng, w + rng.gen_range(10), 0.4);
+        for &e in &events {
+            win.push(e);
+        }
+        // Every age is on exactly one side; the boundary sits at w/2 with
+        // the reference (and everything older) on the Left.
+        for age in 0..w {
+            let side = win.side_of(age);
+            let expect = if age >= w / 2 { SpikeSide::Left } else { SpikeSide::Right };
+            if side != expect {
+                return Err(format!("w={w} age={age}: {side:?}, expected {expect:?}"));
+            }
+        }
+        let c = win.side_counts();
+        let total = (0..w).filter(|&a| win.get_back(a)).count();
+        if c.total() != total {
+            return Err(format!("side counts {c:?} don't sum to {total}"));
+        }
+        if left_span(w) + 1 + right_span(w) != w {
+            return Err(format!("spans don't partition w={w}"));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,136 @@
+//! End-to-end prediction-quality tests: a synthetic-oracle run scored
+//! through the full report path, and byte-parity of `EVAL_quality.json`
+//! across trace sources, thread widths, and repeat runs — the artifact's
+//! core contract (the document records neither setting, so identical
+//! bytes are the witness).
+
+use pronto::scheduler::JobOutcome;
+use pronto::sim::{score_report, SignalCapture, SimReport};
+
+fn argv(args: &[&str]) -> Vec<String> {
+    args.iter().map(|s| s.to_string()).collect()
+}
+
+#[test]
+fn synthetic_oracle_report_scores_perfectly_with_exact_lead() {
+    // Hand-built capture: two nodes, spikes every 13 steps, the raise
+    // indicator shifted exactly 2 steps early. Spacing 13 > left_span(10)
+    // = 4, so no spike can inherit a neighbour's raise: precision =
+    // recall = 1.0 and every lead is exactly 2.
+    let steps = 130;
+    let mut capture = SignalCapture::default();
+    for node in 0..2usize {
+        let mut spikes = vec![false; steps];
+        let mut raised = vec![false; steps];
+        for t in (10 + node..steps - 5).step_by(13) {
+            spikes[t] = true;
+            raised[t - 2] = true;
+        }
+        capture.spikes.push(spikes);
+        capture.raised.push(raised);
+    }
+    // Engine rejections landing right on the earliest raise onsets (node
+    // 0 first raises at 8, node 1 at 9): those two onsets score latency
+    // 0; every later onset has no rejection at/after it and is censored.
+    let report = SimReport {
+        scenario: "synthetic".into(),
+        nodes: 2,
+        steps,
+        seed: 7,
+        outcomes: vec![
+            JobOutcome::Rejected { at: 8 },
+            JobOutcome::Rejected { at: 9 },
+        ],
+        signal_capture: Some(capture),
+        ..Default::default()
+    };
+    let row = score_report(&report, 10, "ORACLE");
+    assert_eq!(row.precision, 1.0);
+    assert_eq!(row.recall, 1.0);
+    assert_eq!(row.f1, 1.0);
+    assert_eq!(row.false_positive_rate, 0.0);
+    assert!(row.spikes > 0 && row.spikes == row.predicted_spikes);
+    assert_eq!(row.mean_lead_steps, 2.0);
+    assert_eq!(row.lead_p50, 2.0);
+    assert_eq!(row.lead_p99, 2.0);
+    // The earliest onsets (8 on node 0, 9 on node 1) meet rejections at
+    // 0 latency; later onsets are censored (no rejection after them)
+    // and drop out.
+    assert_eq!(row.decision_samples, 2);
+    assert_eq!(row.mean_decision_latency_steps, 0.0);
+    assert_eq!(row.recall_node_p90, 1.0);
+    assert_eq!(row.precision_node_p50, 1.0);
+}
+
+/// Run `pronto eval --scenario …` to a temp file and return the artifact
+/// bytes.
+fn eval_bytes(dir: &std::path::Path, label: &str, extra: &[&str]) -> String {
+    let out = dir.join(format!("EVAL_{label}.json"));
+    let out_s = out.to_string_lossy().to_string();
+    let mut args = argv(&[
+        "eval",
+        "--scenario",
+        "capacity",
+        "--nodes",
+        "6",
+        "--steps",
+        "300",
+        "--method",
+        "pronto,sp",
+        "--out",
+        &out_s,
+    ]);
+    args.extend(extra.iter().map(|s| s.to_string()));
+    pronto::cli::run(&args).expect("eval run failed");
+    std::fs::read_to_string(&out).expect("artifact written")
+}
+
+#[test]
+fn eval_quality_bytes_identical_across_sources_threads_and_repeats() {
+    let dir = std::env::temp_dir().join("pronto_eval_quality_parity");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let baseline = eval_bytes(&dir, "mat1", &["--trace-source", "materialized"]);
+    let repeat = eval_bytes(&dir, "mat1b", &["--trace-source", "materialized"]);
+    assert_eq!(baseline, repeat, "repeat run diverged");
+
+    let streamed = eval_bytes(&dir, "stream1", &["--trace-source", "stream"]);
+    assert_eq!(baseline, streamed, "streaming trace source diverged");
+
+    let threaded = eval_bytes(
+        &dir,
+        "mat4",
+        &["--trace-source", "materialized", "--threads", "4"],
+    );
+    assert_eq!(baseline, threaded, "threads=4 diverged");
+
+    let streamed_threaded =
+        eval_bytes(&dir, "stream4", &["--trace-source", "stream", "--threads", "4"]);
+    assert_eq!(baseline, streamed_threaded, "stream+threads diverged");
+
+    // Sanity: the document actually carries rows for both methods and a
+    // nonzero spike population (capacity's calibrated traces spike).
+    let doc = pronto::ser::parse_json(&baseline).expect("valid artifact");
+    let rows = doc.get("rows").and_then(pronto::ser::JsonValue::as_array).unwrap();
+    assert_eq!(rows.len(), 2);
+    assert!(
+        rows.iter().all(|r| r
+            .get("spikes")
+            .and_then(pronto::ser::JsonValue::as_usize)
+            .unwrap()
+            > 0),
+        "no ground-truth spikes captured"
+    );
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn different_seeds_produce_different_rows() {
+    let dir = std::env::temp_dir().join("pronto_eval_quality_seeds");
+    std::fs::create_dir_all(&dir).unwrap();
+    let a = eval_bytes(&dir, "s1", &["--seed", "1"]);
+    let b = eval_bytes(&dir, "s2", &["--seed", "2"]);
+    assert_ne!(a, b, "seed must drive the rows");
+    std::fs::remove_dir_all(&dir).ok();
+}
