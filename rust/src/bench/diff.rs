@@ -44,8 +44,11 @@ pub struct RowDiff {
     pub key: RowKey,
     pub old_events_per_sec: f64,
     pub new_events_per_sec: f64,
-    /// `(new − old) / old × 100`; negative = slower.
-    pub delta_pct: f64,
+    /// `(new − old) / old × 100`; negative = slower. `None` when the
+    /// baseline throughput is zero — a relative change has no anchor
+    /// there (the naive division yields `inf`/`NaN`), so such rows
+    /// render as `n/a` and never trip the regression gate.
+    pub delta_pct: Option<f64>,
 }
 
 /// The full comparison of two artifacts.
@@ -61,14 +64,19 @@ pub struct BenchDiff {
 
 impl BenchDiff {
     /// Joined rows slower by more than `max_regress_pct` percent.
+    /// Zero-baseline rows (`delta_pct == None`) are skipped: with no
+    /// anchor there is no percentage to compare against the threshold.
     pub fn regressions_beyond(&self, max_regress_pct: f64) -> Vec<&RowDiff> {
-        self.rows.iter().filter(|r| r.delta_pct < -max_regress_pct).collect()
+        self.rows
+            .iter()
+            .filter(|r| matches!(r.delta_pct, Some(d) if d < -max_regress_pct))
+            .collect()
     }
 
     /// Largest throughput drop across joined rows, as a positive percent
-    /// (0 when nothing got slower).
+    /// (0 when nothing got slower; zero-baseline rows are skipped).
     pub fn worst_regression_pct(&self) -> f64 {
-        self.rows.iter().map(|r| -r.delta_pct).fold(0.0, f64::max)
+        self.rows.iter().filter_map(|r| r.delta_pct.map(|d| -d)).fold(0.0, f64::max)
     }
 
     /// Human-readable table (one line per joined row, then the
@@ -83,9 +91,13 @@ impl BenchDiff {
             // Pre-render the key: width/fill specs only apply to `&str`
             // (a custom `Display` ignores the padding).
             let key = r.key.to_string();
+            let delta = match r.delta_pct {
+                Some(d) => format!("{d:>+8.1}%"),
+                None => format!("{:>9}", "n/a"),
+            };
             out.push_str(&format!(
-                "{key:<44} {:>14.0} {:>14.0} {:>+8.1}%\n",
-                r.old_events_per_sec, r.new_events_per_sec, r.delta_pct
+                "{key:<44} {:>14.0} {:>14.0} {delta}\n",
+                r.old_events_per_sec, r.new_events_per_sec
             ));
         }
         for k in &self.only_old {
@@ -130,8 +142,11 @@ pub fn parse_bench_rows(text: &str, label: &str) -> Result<BTreeMap<RowKey, f64>
             .get("events_per_sec")
             .and_then(JsonValue::as_f64)
             .ok_or_else(|| anyhow!("{label}: run {i} missing events_per_sec"))?;
-        if !(eps.is_finite() && eps > 0.0) {
-            bail!("{label}: run {i} has a non-positive events_per_sec ({eps})");
+        // Zero is a legal measurement (a row whose run dispatched nothing
+        // still identifies itself); negative or non-finite throughput is
+        // a corrupt artifact.
+        if !(eps.is_finite() && eps >= 0.0) {
+            bail!("{label}: run {i} has an invalid events_per_sec ({eps})");
         }
         let key = RowKey { scenario, nodes, threads };
         if rows.insert(key.clone(), eps).is_some() {
@@ -152,7 +167,7 @@ pub fn bench_diff(old_text: &str, new_text: &str) -> Result<BenchDiff> {
                 key,
                 old_events_per_sec: old_eps,
                 new_events_per_sec: new_eps,
-                delta_pct: (new_eps - old_eps) / old_eps * 100.0,
+                delta_pct: (old_eps > 0.0).then(|| (new_eps - old_eps) / old_eps * 100.0),
             }),
             None => diff.only_old.push(key),
         }
@@ -199,7 +214,7 @@ mod tests {
         let bad = d.regressions_beyond(10.0);
         assert_eq!(bad.len(), 1);
         assert_eq!(bad[0].key.scenario, "large-fleet");
-        assert!((bad[0].delta_pct - (-15.0)).abs() < 1e-9);
+        assert!((bad[0].delta_pct.unwrap() - (-15.0)).abs() < 1e-9);
         assert!(d.regressions_beyond(20.0).is_empty());
         assert!((d.worst_regression_pct() - 15.0).abs() < 1e-9);
         let table = d.render();
@@ -250,8 +265,38 @@ mod tests {
         let a = doc(&[("capacity", 50, 1, 1.0)]);
         let b = doc(&[("bursty", 10, 1, 1.0)]);
         assert!(bench_diff(&a, &b).is_err());
-        // Zero/NaN throughput cannot anchor a relative comparison.
-        let zero = doc(&[("capacity", 50, 1, 0.0)]);
-        assert!(bench_diff(&zero, &ok).is_err());
+        // Negative or non-finite throughput is a corrupt artifact.
+        let neg = doc(&[("capacity", 50, 1, -3.0)]);
+        assert!(bench_diff(&neg, &ok).is_err());
+        let nan = r#"{"bench":"engine","runs":[{"scenario":"capacity","nodes":50,"threads":1,"events_per_sec":1e999}]}"#;
+        assert!(bench_diff(nan, &ok).is_err());
+    }
+
+    #[test]
+    fn zero_baseline_rows_render_na_and_never_gate() {
+        // A baseline row can legitimately record 0 events/s (e.g. a
+        // placeholder row added before the first real measurement, or a
+        // degenerate smoke run). The percent change has no anchor, so
+        // the row must neither divide to inf/NaN nor trip the gate —
+        // before this fix the parser rejected the whole artifact.
+        let old = doc(&[("large-fleet", 100_000, 4, 0.0), ("capacity", 50, 1, 40_000.0)]);
+        let new = doc(&[("large-fleet", 100_000, 4, 90_000.0), ("capacity", 50, 1, 41_000.0)]);
+        let d = bench_diff(&old, &new).unwrap();
+        assert_eq!(d.rows.len(), 2);
+        let zero_row = d.rows.iter().find(|r| r.key.scenario == "large-fleet").unwrap();
+        assert_eq!(zero_row.delta_pct, None);
+        assert!(d.regressions_beyond(0.0).is_empty(), "n/a rows never regress");
+        assert_eq!(d.worst_regression_pct(), 0.0);
+        let table = d.render();
+        assert!(table.contains("n/a"), "zero-baseline delta renders as n/a:\n{table}");
+        assert!(!table.contains("inf") && !table.contains("NaN"), "{table}");
+        // The degenerate direction too: both sides zero, and a new-side
+        // zero against a real baseline (that one *is* a -100% regression).
+        let both = bench_diff(&old, &old).unwrap();
+        assert!(both.regressions_beyond(0.0).is_empty());
+        let collapsed = bench_diff(&new, &old).unwrap();
+        let bad = collapsed.regressions_beyond(50.0);
+        assert_eq!(bad.len(), 1);
+        assert!((bad[0].delta_pct.unwrap() - (-100.0)).abs() < 1e-9);
     }
 }

@@ -30,6 +30,20 @@ const BENCH_FANOUT: usize = 8;
 pub const DEFAULT_BENCH_SCENARIOS: &[&str] =
     &["baseline-poisson", "capacity", "queue-aware", "large-fleet", "flash-crowd"];
 
+/// One extra sweep row at a scale and observe-pool width of its own,
+/// appended after the size ladder. The canonical use is the 100k-node
+/// `large-fleet` row: it needs a step count and thread width the ladder
+/// would make prohibitively slow fleet-wide, and `pronto bench diff`
+/// joins rows by `(scenario, nodes, threads)`, so a scale row diffs
+/// against the baseline independently of the ladder rows.
+#[derive(Debug, Clone)]
+pub struct ScaleRow {
+    pub scenario: String,
+    pub nodes: usize,
+    pub steps: usize,
+    pub threads: usize,
+}
+
 /// One sweep configuration.
 #[derive(Debug, Clone)]
 pub struct EngineBenchConfig {
@@ -44,12 +58,23 @@ pub struct EngineBenchConfig {
     /// across widths; this sweeps wall time only). Recorded per row so
     /// `pronto bench diff` never compares across widths.
     pub threads: usize,
+    /// Extra rows at their own scale/steps/width (the 100k-node row),
+    /// run after the ladder with the sweep's seed.
+    pub scale_rows: Vec<ScaleRow>,
     /// Quick sizing (CI smoke) — recorded in the artifact.
     pub quick: bool,
 }
 
+/// The default scale row: 100k nodes of `large-fleet` through the
+/// streaming source at 4 observe threads (`steps` differs between full
+/// and quick sizing).
+fn large_fleet_row(steps: usize) -> ScaleRow {
+    ScaleRow { scenario: "large-fleet".into(), nodes: 100_000, steps, threads: 4 }
+}
+
 impl EngineBenchConfig {
-    /// Full sizing: the 100 / 1 000 / 5 000-node ladder.
+    /// Full sizing: the 100 / 1 000 / 5 000-node ladder plus the
+    /// 100k-node × 200-step × 4-thread `large-fleet` scale row.
     pub fn full() -> Self {
         Self {
             sizes: vec![100, 1_000, 5_000],
@@ -57,11 +82,14 @@ impl EngineBenchConfig {
             seed: 2021,
             scenarios: DEFAULT_BENCH_SCENARIOS.iter().map(|s| s.to_string()).collect(),
             threads: 1,
+            scale_rows: vec![large_fleet_row(200)],
             quick: false,
         }
     }
 
-    /// Quick sizing for smoke runs.
+    /// Quick sizing for smoke runs. Keeps the 100k-node scale row (at a
+    /// smoke step count) so CI exercises the large-fleet path end to end
+    /// on every run.
     pub fn quick() -> Self {
         Self {
             sizes: vec![50, 200],
@@ -69,6 +97,7 @@ impl EngineBenchConfig {
             seed: 2021,
             scenarios: DEFAULT_BENCH_SCENARIOS.iter().map(|s| s.to_string()).collect(),
             threads: 1,
+            scale_rows: vec![large_fleet_row(20)],
             quick: true,
         }
     }
@@ -173,21 +202,39 @@ pub fn bench_engine_run(
     })
 }
 
-/// Run the full sweep, logging one line per run to stderr.
+/// Run the full sweep, logging one line per run to stderr: the size
+/// ladder first, then every configured [`ScaleRow`] (the 100k-node
+/// large-fleet row in the default configs) with its own steps/threads.
 pub fn bench_engine(cfg: &EngineBenchConfig) -> Result<Vec<EngineBenchRun>> {
-    let mut runs = Vec::with_capacity(cfg.sizes.len() * cfg.scenarios.len());
+    let mut runs =
+        Vec::with_capacity(cfg.sizes.len() * cfg.scenarios.len() + cfg.scale_rows.len());
     for &nodes in &cfg.sizes {
         for name in &cfg.scenarios {
             let run = bench_engine_run(name, nodes, cfg.steps, cfg.seed, cfg.threads)?;
-            eprintln!(
-                "bench engine: {name:<18} {nodes:>5} nodes x {} steps x {} threads — \
-                 {:>10.1} ms, {:>12.0} events/s, peak queue {}",
-                run.steps, run.threads, run.wall_ms, run.events_per_sec, run.peak_queue_len
-            );
+            log_run(&run);
             runs.push(run);
         }
     }
+    for row in &cfg.scale_rows {
+        let run = bench_engine_run(&row.scenario, row.nodes, row.steps, cfg.seed, row.threads)?;
+        log_run(&run);
+        runs.push(run);
+    }
     Ok(runs)
+}
+
+fn log_run(run: &EngineBenchRun) {
+    eprintln!(
+        "bench engine: {:<18} {:>6} nodes x {} steps x {} threads — \
+         {:>10.1} ms, {:>12.0} events/s, peak queue {}",
+        run.scenario,
+        run.nodes,
+        run.steps,
+        run.threads,
+        run.wall_ms,
+        run.events_per_sec,
+        run.peak_queue_len
+    );
 }
 
 /// The `BENCH_engine.json` document (schema documented in the README):
@@ -206,6 +253,22 @@ pub fn bench_engine_report(cfg: &EngineBenchConfig, runs: &[EngineBenchRun]) -> 
     m.insert(
         "sizes".into(),
         JsonValue::Array(cfg.sizes.iter().map(|&s| JsonValue::Number(s as f64)).collect()),
+    );
+    m.insert(
+        "scale_rows".into(),
+        JsonValue::Array(
+            cfg.scale_rows
+                .iter()
+                .map(|r| {
+                    let mut row = BTreeMap::new();
+                    row.insert("scenario".into(), JsonValue::String(r.scenario.clone()));
+                    row.insert("nodes".into(), JsonValue::Number(r.nodes as f64));
+                    row.insert("steps".into(), JsonValue::Number(r.steps as f64));
+                    row.insert("threads".into(), JsonValue::Number(r.threads as f64));
+                    JsonValue::Object(row)
+                })
+                .collect(),
+        ),
     );
     m.insert(
         "runs".into(),
@@ -254,6 +317,7 @@ mod tests {
             seed: 11,
             scenarios: vec!["baseline-poisson".into(), "capacity".into()],
             threads: 2,
+            scale_rows: vec![],
             quick: true,
         };
         let sweep = bench_engine(&cfg).unwrap();
@@ -279,6 +343,47 @@ mod tests {
                 || sweep[1].peak_queue_len != sweep[3].peak_queue_len,
             "capacity rows at different fleet sizes produced identical runs"
         );
+    }
+
+    #[test]
+    fn scale_rows_append_after_the_ladder_with_their_own_shape() {
+        // A miniature stand-in for the 100k large-fleet row: the scale
+        // row must run after every ladder row, with its *own* nodes,
+        // steps, and thread width (not the sweep's), and land in the
+        // report's `runs` array like any other row.
+        let cfg = EngineBenchConfig {
+            sizes: vec![6],
+            steps: 40,
+            seed: 5,
+            scenarios: vec!["baseline-poisson".into()],
+            threads: 1,
+            scale_rows: vec![ScaleRow {
+                scenario: "large-fleet".into(),
+                nodes: 30,
+                steps: 25,
+                threads: 2,
+            }],
+            quick: true,
+        };
+        let runs = bench_engine(&cfg).unwrap();
+        assert_eq!(runs.len(), 2);
+        let scale = &runs[1];
+        assert_eq!(scale.scenario, "large-fleet");
+        assert_eq!(scale.nodes, 30);
+        assert_eq!(scale.steps, 25);
+        assert_eq!(scale.threads, 2);
+        assert_eq!(scale.seed, cfg.seed, "scale rows run with the sweep seed");
+        // The descriptor is recorded in the report metadata so a diff of
+        // two artifacts can explain a missing/extra row.
+        let doc = bench_engine_report(&cfg, &runs);
+        let text = doc.to_string();
+        let parsed = crate::ser::parse_json(&text).expect("valid json");
+        let JsonValue::Array(rows) = parsed.get("scale_rows").expect("scale_rows key") else {
+            panic!("scale_rows must be an array")
+        };
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("nodes").and_then(JsonValue::as_usize), Some(30));
+        assert_eq!(rows[0].get("threads").and_then(JsonValue::as_usize), Some(2));
     }
 
     #[test]
@@ -316,6 +421,7 @@ mod tests {
             seed: 3,
             scenarios: vec!["baseline-poisson".into(), "flash-crowd".into()],
             threads: 1,
+            scale_rows: vec![],
             quick: true,
         };
         let runs = bench_engine(&cfg).unwrap();

@@ -12,7 +12,7 @@ pub mod experiments;
 pub use diff::{bench_diff, parse_bench_rows, BenchDiff, RowDiff, RowKey};
 pub use engine::{
     bench_engine, bench_engine_report, bench_engine_run, EngineBenchConfig, EngineBenchRun,
-    DEFAULT_BENCH_SCENARIOS,
+    ScaleRow, DEFAULT_BENCH_SCENARIOS,
 };
 
 use std::time::{Duration, Instant};

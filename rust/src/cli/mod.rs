@@ -11,7 +11,7 @@
 //!                   [--scenario NAME[,NAME…]] [--trace-source auto|stream|materialized]
 //!                   [--threads N] [--out FILE] [--json]
 //! pronto federate   [--config FILE] [--nodes N] [--fanout F]
-//! pronto bench engine [--quick] [--out FILE] [--sizes 100,1000,5000]
+//! pronto bench engine [--quick] [--no-scale] [--out FILE] [--sizes 100,1000,5000]
 //!                   [--steps N] [--seed S] [--scenarios a,b,c] [--threads N]
 //! pronto bench diff OLD.json NEW.json [--max-regress PCT]
 //! pronto bench-tables [--table 1..3] [--quick]
@@ -57,6 +57,8 @@ COMMANDS:
   federate      run the concurrent DASM federation
   bench         fleet-scale engine benchmark (`bench engine` writes
                 BENCH_engine.json: events/s, wall time, peak queue depth;
+                default sweeps end with a 100k-node large-fleet scale row,
+                dropped by --no-scale or any --sizes/--scenarios override;
                 `bench diff OLD NEW --max-regress PCT` gates on events/s
                 regressions between two artifacts)
   bench-tables  regenerate the paper tables (see also cargo bench)
@@ -768,12 +770,12 @@ fn cmd_federate(raw: &[String]) -> Result<()> {
 /// such artifacts row by row and exits non-zero when any row's events/s
 /// regressed past `--max-regress` percent (default 10).
 fn cmd_bench(raw: &[String]) -> Result<()> {
-    let args = Args::parse(raw, &["quick"])?;
+    let args = Args::parse(raw, &["quick", "no-scale"])?;
     match args.positional().first().map(String::as_str) {
         Some("engine") => cmd_bench_engine(&args),
         Some("diff") => cmd_bench_diff(&args),
         _ => bail!(
-            "usage: pronto bench engine [--quick] [--out FILE] \
+            "usage: pronto bench engine [--quick] [--no-scale] [--out FILE] \
              [--sizes 100,1000,5000] [--steps N] [--seed S] [--scenarios a,b,c] \
              [--threads N]\n\
              \x20      pronto bench diff OLD.json NEW.json [--max-regress PCT]"
@@ -818,6 +820,13 @@ fn cmd_bench_engine(args: &Args) -> Result<()> {
             bail!("--scenarios: empty list");
         }
     }
+    // The default sweeps append the 100k-node large-fleet scale row. An
+    // explicit --sizes/--scenarios override describes the *whole* sweep
+    // (nobody asking for `--sizes 12` wants a surprise 100k run riding
+    // along), and --no-scale drops the row from a default sweep.
+    if args.flag("no-scale") || args.get("sizes").is_some() || args.get("scenarios").is_some() {
+        cfg.scale_rows.clear();
+    }
     let runs = bench_engine(&cfg)?;
     let doc = bench_engine_report(&cfg, &runs);
     let out = args.get("out").unwrap_or("BENCH_engine.json");
@@ -850,9 +859,11 @@ fn cmd_bench_diff(args: &Args) -> Result<()> {
     print!("{}", diff.render());
     let bad = diff.regressions_beyond(max_regress);
     if !bad.is_empty() {
+        // `regressions_beyond` only returns rows with a computable delta
+        // (zero-baseline rows are `n/a` and never gate).
         let rows: Vec<String> = bad
             .iter()
-            .map(|r| format!("{} ({:+.1}%)", r.key, r.delta_pct))
+            .map(|r| format!("{} ({:+.1}%)", r.key, r.delta_pct.unwrap_or(0.0)))
             .collect();
         bail!(
             "{} row(s) regressed beyond {max_regress}% events/s: {}",

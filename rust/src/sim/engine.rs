@@ -1,7 +1,7 @@
 //! The deterministic discrete-event cluster engine.
 //!
 //! Replaces the fixed-step simulator loop: the cluster is driven by a
-//! binary-heap event queue ([`super::events`]) over typed events —
+//! timing-wheel event queue ([`super::events`]) over typed events —
 //! telemetry ticks, job arrivals/starts/completions, host-level queueing,
 //! preemption and migration of displaced jobs, federation pushes with
 //! delivery latency, and node churn. Determinism guarantees:
@@ -58,11 +58,15 @@
 //!
 //! The hot loop is allocation-free in steady state: events are small
 //! `Copy` values, federation subspace snapshots live in a free-listed
-//! slab referenced by index, probe candidates (and the Fisher–Yates
-//! fallback of the bounded distinct sampler) reuse dedicated buffers,
-//! the sorted alive-set is maintained incrementally (binary-search
-//! insert/remove instead of re-scan/re-sort), and per-node state is
-//! indexed by dense node id.
+//! slab referenced by index, probe candidates (and the stamp-mask
+//! fallback of the bounded distinct sampler, [`SampleScratch`]) reuse
+//! dedicated buffers, and per-node state lives in the struct-of-arrays
+//! layout of [`super::fleet`]: [`FleetState`] keeps the liveness flags,
+//! merged rejection signal, sorted alive-id list (maintained
+//! incrementally with a dense id→rank map), and round-robin cursor;
+//! [`HostTable`] keeps the hosts plus contiguous mirrors of their hot
+//! scalars, so the per-tick scans and probe answers touch dense arrays
+//! instead of chasing per-node structs.
 //!
 //! # Parallel observe loop (`threads`)
 //!
@@ -98,6 +102,7 @@ use super::events::{
     latency_to_ticks, step_to_ticks, ticks_to_step, Event, EventQueue, SimTime, TickBatch,
     TICKS_PER_STEP,
 };
+use super::fleet::{FleetState, HostTable};
 use super::scenario::{ArrivalPattern, CapacityModel, DispatchPolicy, ProbePolicy, Scenario};
 use crate::federation::{FederationTree, TreeTopology};
 use crate::fpca::Subspace;
@@ -590,12 +595,12 @@ fn pick_candidate(
     candidates: &[usize],
     policy: DispatchPolicy,
     can_accept: &[bool],
-    hosts: &[HostCapacity],
+    hosts: &HostTable,
     mut eligible: impl FnMut(usize) -> bool,
 ) -> Option<usize> {
     let mut best: Option<(usize, AdmissionProbe)> = None;
     for &c in candidates {
-        let p = hosts[c].probe(!can_accept[c]);
+        let p = hosts.probe(c, !can_accept[c]);
         if p.signal_raised || !eligible(c) {
             continue;
         }
@@ -610,18 +615,38 @@ fn pick_candidate(
     best.map(|(c, _)| c)
 }
 
-/// Fill `out` with `want` distinct members of the sorted `pool` (minus
-/// `exclude`), drawn uniformly via `rng`.
+/// Reusable state for [`sample_distinct`]: a generation-stamped
+/// membership mask keyed by pool index (O(1) "already drawn?" checks,
+/// reset by bumping the epoch instead of clearing the array) plus the
+/// Fisher–Yates fallback buffer. One instance serves any sequence of
+/// pools; the stamp array grows to the largest pool seen and is never
+/// cleared between calls.
+///
+/// The historical scratch was a bare `Vec<usize>` and the membership
+/// test was `out.contains(&c)` — O(want) per draw, and the fallback's
+/// `pool.iter().filter(!contains)` walk made a dense draw over a 100k
+/// alive-set O(pool·want). The stamps make both O(1) per element while
+/// reproducing the exact historical acceptance sequence (pool entries
+/// are distinct, so index-keyed and value-keyed membership agree).
+#[derive(Debug, Default)]
+pub struct SampleScratch {
+    fallback: Vec<usize>,
+    stamp: Vec<u32>,
+    epoch: u32,
+}
+
+/// Fill `out` with `want` distinct members of the sorted, duplicate-free
+/// `pool` (minus `exclude`), drawn uniformly via `rng`.
 ///
 /// Strategy: rejection-sample with a bounded draw budget — byte-identical
 /// to the historical unbounded `while !contains` loop whenever that loop
 /// would have finished within the budget, which the catalog's power-of-2
 /// probes do essentially always (a fallback needs ~`4·want` consecutive
 /// collisions) — then complete any remainder with a partial Fisher–Yates
-/// over the reusable `scratch` buffer. Worst-case RNG cost is
-/// O(want + |pool|) draws instead of unbounded coupon collecting when
-/// `want` approaches the pool size (`k ≈ alive`, the pathological probe
-/// configuration).
+/// over the reusable `scratch` buffer. Worst-case cost is
+/// O(want + |pool|) draws *and* O(want + |pool|) work: the scratch's
+/// stamp mask answers membership in O(1), so a dense draw over a
+/// 100k-node alive-set no longer degenerates quadratically.
 ///
 /// Public so the integration suite can cover the `k ≥ alive − 1`
 /// fallback boundary directly (`tests/probe_regressions.rs`); not part
@@ -632,7 +657,7 @@ pub fn sample_distinct(
     exclude: Option<usize>,
     want: usize,
     out: &mut Vec<usize>,
-    scratch: &mut Vec<usize>,
+    scratch: &mut SampleScratch,
 ) {
     out.clear();
     let excluded_in_pool = exclude.is_some_and(|e| pool.binary_search(&e).is_ok());
@@ -642,23 +667,42 @@ pub fn sample_distinct(
         return;
     }
     let m = pool.len();
+    if scratch.stamp.len() < m {
+        scratch.stamp.resize(m, 0);
+    }
+    scratch.epoch = scratch.epoch.wrapping_add(1);
+    if scratch.epoch == 0 {
+        // Epoch wrapped: stale stamps from 2³² calls ago could collide.
+        scratch.stamp.iter_mut().for_each(|s| *s = 0);
+        scratch.epoch = 1;
+    }
+    let epoch = scratch.epoch;
     let mut budget = 4 * want + 8;
     while out.len() < want && budget > 0 {
         budget -= 1;
-        let c = pool[rng.gen_range(m)];
-        if Some(c) != exclude && !out.contains(&c) {
+        let j = rng.gen_range(m);
+        let c = pool[j];
+        // Distinct pool entries make the index-keyed stamp equivalent to
+        // the historical value-keyed `out.contains(&c)` test: same
+        // acceptances, same RNG positions.
+        if Some(c) != exclude && scratch.stamp[j] != epoch {
+            scratch.stamp[j] = epoch;
             out.push(c);
         }
     }
     // Budget exhausted: finish deterministically over the survivors.
     if out.len() < want {
-        scratch.clear();
-        scratch.extend(
-            pool.iter().copied().filter(|c| Some(*c) != exclude && !out.contains(c)),
+        let SampleScratch { fallback, stamp, .. } = scratch;
+        fallback.clear();
+        fallback.extend(
+            pool.iter()
+                .enumerate()
+                .filter(|&(j, &c)| Some(c) != exclude && stamp[j] != epoch)
+                .map(|(_, &c)| c),
         );
         while out.len() < want {
-            let j = rng.gen_range(scratch.len());
-            out.push(scratch.swap_remove(j));
+            let j = rng.gen_range(fallback.len());
+            out.push(fallback.swap_remove(j));
         }
     }
 }
@@ -757,7 +801,7 @@ fn parallel_observe(
 fn drain_queue(
     node: usize,
     budget: u32,
-    hosts: &mut [HostCapacity],
+    hosts: &mut HostTable,
     jobs: &mut [JobRec],
     queue: &mut EventQueue,
     now: SimTime,
@@ -765,10 +809,10 @@ fn drain_queue(
     util: &mut UtilMeter,
     report: &mut SimReport,
 ) {
-    while let Some(qj) = hosts[node].pop_startable(budget) {
+    while let Some(qj) = hosts.pop_startable(node, budget) {
         let rec = &mut jobs[qj.job_id as usize];
         debug_assert_eq!(rec.state, JobState::Queued { node });
-        hosts[node].start(qj.job_id, qj.demand);
+        hosts.start(node, qj.job_id, qj.demand);
         util.job_started(now, qj.demand);
         rec.state = JobState::Running { node };
         *total_inflight += 1;
@@ -920,12 +964,11 @@ impl DiscreteEventEngine {
         let priority_levels = cap.as_ref().map_or(1, |c| c.priority_levels);
         let service = ServiceTimeModel::log_normal(scenario.duration_mu, scenario.duration_sigma);
 
-        // Dense per-node state. Heterogeneous fleets draw each node's slot
-        // budget from the class distribution (dedicated stream, so turning
-        // hetero on shifts nothing else).
-        let mut alive = vec![true; n];
-        let mut can_accept = vec![true; n];
-        let mut hosts: Vec<HostCapacity> = (0..n)
+        // Dense per-node state, struct-of-arrays (see `super::fleet`).
+        // Heterogeneous fleets draw each node's slot budget from the
+        // class distribution (dedicated stream, so turning hetero on
+        // shifts nothing else).
+        let raw_hosts: Vec<HostCapacity> = (0..n)
             .map(|_| match &cap {
                 Some(c) => HostCapacity::new(
                     c.draw_slots(&mut hetero_rng),
@@ -936,16 +979,13 @@ impl DiscreteEventEngine {
             })
             .collect();
         let initial_cap: u64 = if cap.is_some() {
-            hosts.iter().map(|h| h.slots() as u64).sum()
+            raw_hosts.iter().map(|h| h.slots() as u64).sum()
         } else {
             0
         };
+        let mut hosts = HostTable::new(raw_hosts);
         let mut util = UtilMeter::new(cap.is_some(), initial_cap);
-        let mut alive_ids: Vec<usize> = (0..n).collect();
-        // Round-robin cursor, tracked by node *identity* (the next node id
-        // to probe), not by index into the alive list — see the arrival
-        // handler.
-        let mut rr_next = 0usize;
+        let mut fleet = FleetState::new(n);
         let mut burst_on = false;
 
         let mut report = SimReport {
@@ -969,9 +1009,10 @@ impl DiscreteEventEngine {
 
         let mut queue = EventQueue::with_capacity(1024 + expected_jobs / 4);
         let mut candidates: Vec<usize> = Vec::with_capacity(8);
-        // Fisher–Yates fallback buffer for dense probe draws (reused so the
-        // arrival/probe hot path stays allocation-free in steady state).
-        let mut probe_scratch: Vec<usize> = Vec::new();
+        // Stamp mask + Fisher–Yates fallback buffer for distinct probe
+        // draws (reused so the arrival/probe hot path stays
+        // allocation-free in steady state).
+        let mut probe_scratch = SampleScratch::default();
         let mut jobs: Vec<JobRec> = Vec::with_capacity(expected_jobs + 16);
         let mut total_inflight = 0usize;
         let mut lat_ticks_sum = 0u64;
@@ -1027,19 +1068,26 @@ impl DiscreteEventEngine {
                         //    with fully disjoint per-node state, so the
                         //    in-place merge (node-id order) is
                         //    byte-identical to the sequential result.
-                        if workers.is_parallel() && alive_ids.len() > 1 {
-                            parallel_observe(
-                                &workers,
-                                &alive_ids,
-                                &mut source,
-                                &mut policies,
-                                &mut can_accept,
-                                step,
-                            );
-                        } else {
-                            for i in 0..n {
-                                if alive[i] {
-                                    can_accept[i] = policies[i].observe(source.features(i, step));
+                        {
+                            let (alive_ids, can_accept) = fleet.observe_split();
+                            if workers.is_parallel() && alive_ids.len() > 1 {
+                                parallel_observe(
+                                    &workers,
+                                    alive_ids,
+                                    &mut source,
+                                    &mut policies,
+                                    can_accept,
+                                    step,
+                                );
+                            } else {
+                                // Iterating the sorted alive ids visits the
+                                // same nodes in the same (ascending) order
+                                // as the historical `0..n` + alive-flag
+                                // scan — the dense list just skips the
+                                // dead stretches.
+                                for &i in alive_ids {
+                                    can_accept[i] =
+                                        policies[i].observe(source.features(i, step));
                                 }
                             }
                         }
@@ -1054,8 +1102,9 @@ impl DiscreteEventEngine {
                         //     advances lazily on rejoin either way).
                         if let Some(capt) = capture.as_mut() {
                             for i in 0..n {
-                                capt.raised[i].push(alive[i] && !can_accept[i]);
-                                let spiked = alive[i]
+                                capt.raised[i]
+                                    .push(fleet.is_alive(i) && !fleet.can_accept(i));
+                                let spiked = fleet.is_alive(i)
                                     && source.cpu_ready(i, step) >= ready_threshold;
                                 capt.spikes[i].push(spiked);
                             }
@@ -1068,12 +1117,16 @@ impl DiscreteEventEngine {
                         //     Utilization needs no sampling here — the meter
                         //     integrates event-by-event.
                         if let Some(c) = &cap {
-                            for i in 0..n {
-                                if alive[i] && hosts[i].queue_len() > 0 {
-                                    let budget = if can_accept[i] {
-                                        hosts[i].slots()
+                            // The queue-depth scan runs over the dense
+                            // alive list against the contiguous SoA
+                            // mirror — same visit order as the historical
+                            // full-fleet flag scan.
+                            for &i in fleet.alive_ids() {
+                                if hosts.queue_len(i) > 0 {
+                                    let budget = if fleet.can_accept(i) {
+                                        hosts.slots(i)
                                     } else {
-                                        c.contended_budget(hosts[i].slots())
+                                        c.contended_budget(hosts.slots(i))
                                     };
                                     drain_queue(
                                         i,
@@ -1094,10 +1147,13 @@ impl DiscreteEventEngine {
                         //    provisional counter prevents one tick from
                         //    scheduling the pool below the floor).
                         if let Some(churn) = &scenario.churn {
-                            let mut planned_alive = alive_ids.len();
-                            for i in 0..n {
-                                if alive[i]
-                                    && planned_alive > churn.min_alive
+                            let mut planned_alive = fleet.alive_count();
+                            // Alive-id iteration draws the hazard for the
+                            // same nodes in the same order as the flag
+                            // scan (dead nodes never drew — the flag
+                            // short-circuited before the RNG).
+                            for &i in fleet.alive_ids() {
+                                if planned_alive > churn.min_alive
                                     && churn_rng.bernoulli(churn.leave_hazard)
                                 {
                                     planned_alive -= 1;
@@ -1115,16 +1171,13 @@ impl DiscreteEventEngine {
                         //     generation check).
                         if let Some(c) = &cap {
                             if c.pressure_enabled() {
-                                for i in 0..n {
-                                    let contended = c.contended_budget(hosts[i].slots());
-                                    if alive[i]
-                                        && !can_accept[i]
-                                        && hosts[i].used() > contended
-                                    {
-                                        let mut over = hosts[i].used() - contended;
+                                for &i in fleet.alive_ids() {
+                                    let contended = c.contended_budget(hosts.slots(i));
+                                    if !fleet.can_accept(i) && hosts.used(i) > contended {
+                                        let mut over = hosts.used(i) - contended;
                                         'shed: for p in 0..priority_levels {
                                             for &(job_id, demand) in
-                                                hosts[i].running().iter().rev()
+                                                hosts.running(i).iter().rev()
                                             {
                                                 if jobs[job_id as usize].priority != p {
                                                     continue;
@@ -1206,7 +1259,7 @@ impl DiscreteEventEngine {
                         //    latency model (the merged iterate is stale by
                         //    construction).
                         if tree.is_some() && (step + 1) % fed.push_every == 0 {
-                            for &leaf in &alive_ids {
+                            for &leaf in fleet.alive_ids() {
                                 if let Some(iterate) = policies[leaf].iterate() {
                                     let delay = fed.latency.sample(&mut latency_rng);
                                     let dt = latency_to_ticks(delay);
@@ -1238,18 +1291,19 @@ impl DiscreteEventEngine {
                                 Some(ev.time + slo as u64 * TICKS_PER_STEP);
                             report.slo_total += 1;
                         }
-                        if alive_ids.is_empty() {
+                        if fleet.alive_count() == 0 {
                             report.jobs_rejected += 1;
                             report.jobs_unplaceable += 1;
                             report.outcomes.push(JobOutcome::Rejected { at: step });
                             jobs[job_id as usize].state = JobState::Rejected;
                             continue;
                         }
-                        let m = alive_ids.len();
                         candidates.clear();
                         match scenario.probe {
                             ProbePolicy::RandomProbe => {
-                                candidates.push(alive_ids[dispatch_rng.gen_range(m)]);
+                                let m = fleet.alive_count();
+                                candidates
+                                    .push(fleet.alive_ids()[dispatch_rng.gen_range(m)]);
                             }
                             ProbePolicy::PowerOfK(k) => {
                                 // Bounded distinct draw (see `sample_distinct`):
@@ -1257,7 +1311,7 @@ impl DiscreteEventEngine {
                                 // loop on the catalog, O(k + alive) worst case.
                                 sample_distinct(
                                     &mut dispatch_rng,
-                                    &alive_ids,
+                                    fleet.alive_ids(),
                                     None,
                                     k.max(1),
                                     &mut candidates,
@@ -1265,18 +1319,15 @@ impl DiscreteEventEngine {
                                 );
                             }
                             ProbePolicy::RoundRobin => {
-                                // Identity-tracked cursor: probe the first
-                                // alive node with id >= rr_next (wrapping),
-                                // then advance past it. The historical cursor
-                                // was an index modulo the *current* alive
-                                // count, so any leave/join re-aliased every
-                                // later probe and could starve hosts under
-                                // churn. Dead ids are skipped naturally: only
-                                // alive ids are in the (sorted) list.
-                                let pos = alive_ids.partition_point(|&id| id < rr_next);
-                                let c = alive_ids[if pos == m { 0 } else { pos }];
-                                rr_next = c + 1;
-                                candidates.push(c);
+                                // Identity-tracked cursor (see
+                                // `FleetState::rr_probe`): probe the first
+                                // alive node with id >= the cursor
+                                // (wrapping), then advance past it — an
+                                // index-modulo cursor re-aliased every later
+                                // probe after churn and could starve hosts.
+                                if let Some(c) = fleet.rr_probe() {
+                                    candidates.push(c);
+                                }
                             }
                         }
                         // Score the probe answers: SignalOnly reduces to "first
@@ -1286,7 +1337,7 @@ impl DiscreteEventEngine {
                         let placed = pick_candidate(
                             &candidates,
                             scenario.dispatch,
-                            &can_accept,
+                            fleet.can_accept_slice(),
                             &hosts,
                             |_| true,
                         );
@@ -1324,7 +1375,7 @@ impl DiscreteEventEngine {
                         if rec.state != JobState::Dispatching {
                             continue;
                         }
-                        if !alive[node] {
+                        if !fleet.is_alive(node) {
                             // Defensive: the target vanished between admission
                             // and hand-off (cannot happen with the current
                             // event timing, but the ledger must never leak).
@@ -1338,9 +1389,9 @@ impl DiscreteEventEngine {
                         // would otherwise park a job that can never start and,
                         // under FIFO, wedge the whole queue behind it for the
                         // rest of the run.
-                        let demand = rec.demand.min(hosts[node].slots());
-                        if hosts[node].queue_len() == 0 && hosts[node].can_start(demand) {
-                            hosts[node].start(job_id, demand);
+                        let demand = rec.demand.min(hosts.slots(node));
+                        if hosts.queue_len(node) == 0 && hosts.can_start(node, demand) {
+                            hosts.start(node, job_id, demand);
                             util.job_started(ev.time, demand);
                             rec.state = JobState::Running { node };
                             total_inflight += 1;
@@ -1349,12 +1400,13 @@ impl DiscreteEventEngine {
                                 ev.time,
                                 Event::JobStart { node, job_id, gen: rec.gen },
                             );
-                        } else if hosts[node].try_enqueue(job_id, demand, rec.priority, ev.time) {
+                        } else if hosts.try_enqueue(node, job_id, demand, rec.priority, ev.time)
+                        {
                             rec.state = JobState::Queued { node };
                             rec.enqueued_at = Some(ev.time);
                             report.jobs_queued += 1;
                             report.peak_queue_len =
-                                report.peak_queue_len.max(hosts[node].queue_len());
+                                report.peak_queue_len.max(hosts.queue_len(node));
                         } else {
                             rec.state = JobState::Dropped;
                             report.jobs_dropped += 1;
@@ -1372,7 +1424,7 @@ impl DiscreteEventEngine {
                             qdelay_count += 1;
                             qdelay_p_sum[rec.priority as usize] += waited;
                             qdelay_p_count[rec.priority as usize] += 1;
-                            hosts[node].note_queue_delay(waited);
+                            hosts.note_queue_delay(node, waited);
                         }
                         queue.schedule(
                             ev.time + rec.duration_steps as u64 * TICKS_PER_STEP,
@@ -1385,7 +1437,7 @@ impl DiscreteEventEngine {
                         if rec.gen != gen || rec.state != (JobState::Running { node }) {
                             continue;
                         }
-                        let freed = hosts[node].finish(job_id).unwrap_or(0);
+                        let freed = hosts.finish(node, job_id).unwrap_or(0);
                         util.job_finished(ev.time, freed);
                         rec.state = JobState::Completed;
                         report.jobs_completed += 1;
@@ -1396,10 +1448,10 @@ impl DiscreteEventEngine {
                         }
                         total_inflight -= 1;
                         if let Some(c) = &cap {
-                            let budget = if can_accept[node] {
-                                hosts[node].slots()
+                            let budget = if fleet.can_accept(node) {
+                                hosts.slots(node)
                             } else {
-                                c.contended_budget(hosts[node].slots())
+                                c.contended_budget(hosts.slots(node))
                             };
                             drain_queue(
                                 node,
@@ -1420,7 +1472,7 @@ impl DiscreteEventEngine {
                         if rec.gen != gen || rec.state != (JobState::Running { node }) {
                             continue; // completed or already displaced — stale
                         }
-                        let freed = hosts[node].finish(job_id).unwrap_or(0);
+                        let freed = hosts.finish(node, job_id).unwrap_or(0);
                         util.job_finished(ev.time, freed);
                         rec.gen = rec.gen.wrapping_add(1);
                         total_inflight -= 1;
@@ -1453,7 +1505,7 @@ impl DiscreteEventEngine {
                         // scored policies compare congestion.
                         sample_distinct(
                             &mut migrate_rng,
-                            &alive_ids,
+                            fleet.alive_ids(),
                             Some(from),
                             MIGRATION_PROBES,
                             &mut candidates,
@@ -1462,11 +1514,11 @@ impl DiscreteEventEngine {
                         let target = pick_candidate(
                             &candidates,
                             scenario.dispatch,
-                            &can_accept,
+                            fleet.can_accept_slice(),
                             &hosts,
                             |c| {
-                                hosts[c].can_start(demand.min(hosts[c].slots()))
-                                    || hosts[c].queue_has_room()
+                                hosts.can_start(c, demand.min(hosts.slots(c)))
+                                    || hosts.queue_has_room(c)
                             },
                         );
                         let rec = &mut jobs[job_id as usize];
@@ -1498,28 +1550,26 @@ impl DiscreteEventEngine {
                     }
 
                     Event::NodeLeave { node } => {
-                        if !alive[node] {
+                        if !fleet.is_alive(node) {
                             continue;
                         }
                         if let Some(churn) = &scenario.churn {
-                            if alive_ids.len() <= churn.min_alive {
+                            if fleet.alive_count() <= churn.min_alive {
                                 continue; // floor reached since scheduling
                             }
                         }
-                        alive[node] = false;
+                        // The sorted alive list and its dense rank map are
+                        // maintained incrementally (O(shift)) — same
+                        // resulting order as the historical binary-search
+                        // remove.
+                        fleet.leave(node);
                         report.node_leaves += 1;
-                        // alive_ids stays sorted: membership changes are a
-                        // binary search + shift instead of a full-fleet
-                        // re-scan — same resulting order, O(log n + shift).
-                        if let Ok(pos) = alive_ids.binary_search(&node) {
-                            alive_ids.remove(pos);
-                        }
                         // Evacuate the host: running jobs are preempted and —
                         // with migration budget — re-offered to peers; the
                         // flushed wait queue gets the same treatment (minus
                         // the preemption count: those jobs never held slots).
-                        let (running, queued) = hosts[node].evacuate();
-                        util.node_left(ev.time, hosts[node].slots());
+                        let (running, queued) = hosts.evacuate(node);
+                        util.node_left(ev.time, hosts.slots(node));
                         for (job_id, demand) in running {
                             util.job_finished(ev.time, demand);
                             let rec = &mut jobs[job_id as usize];
@@ -1569,17 +1619,15 @@ impl DiscreteEventEngine {
                     }
 
                     Event::NodeJoin { node } => {
-                        if alive[node] {
+                        if fleet.is_alive(node) {
                             continue;
                         }
-                        alive[node] = true;
+                        // Sorted insert at the id's rank (same order the
+                        // historical binary-search insert produced), rank
+                        // map updated in the same pass.
+                        fleet.join(node);
                         report.node_joins += 1;
-                        util.node_joined(ev.time, hosts[node].slots());
-                        // Sorted insert (same order the historical push+sort
-                        // produced, without re-sorting the whole fleet).
-                        if let Err(pos) = alive_ids.binary_search(&node) {
-                            alive_ids.insert(pos, node);
-                        }
+                        util.node_joined(ev.time, hosts.slots(node));
                         // A restarted machine comes back with empty local
                         // state…
                         if let Some(f) = &factory {
@@ -1603,7 +1651,7 @@ impl DiscreteEventEngine {
                         }
                         // Fresh nodes accept until their first telemetry tick
                         // says otherwise (cold PRONTO state raises no signal).
-                        can_accept[node] = true;
+                        fleet.set_can_accept(node, true);
                     }
                 }
             }
@@ -2022,7 +2070,7 @@ mod tests {
         let pool: Vec<usize> = (0..64).collect();
         let mut rng = Xoshiro256::seed_from_u64(5);
         let mut out = Vec::new();
-        let mut scratch = Vec::new();
+        let mut scratch = SampleScratch::default();
 
         // Dense draw (want == pool): the historical rejection loop would
         // coupon-collect ~300 draws; the bounded sampler finishes via the

@@ -1,15 +1,44 @@
 //! Typed simulation events and the deterministic event queue.
 //!
-//! The queue is a binary min-heap ordered by `(time, seq)`: `time` is a
-//! fixed-point tick count ([`TICKS_PER_STEP`] ticks per 20 s telemetry
-//! step, so sub-step latencies order correctly without floating-point
-//! comparisons) and `seq` is a monotone insertion counter that breaks ties
+//! The queue orders events by `(time, seq)`: `time` is a fixed-point tick
+//! count ([`TICKS_PER_STEP`] ticks per 20 s telemetry step, so sub-step
+//! latencies order correctly without floating-point comparisons) and
+//! `seq` is a monotone insertion counter that breaks ties
 //! deterministically — two runs that schedule the same events in the same
 //! order pop them in the same order, which is what makes reports
 //! bit-reproducible. Event payloads are small `Copy` data; anything large
 //! (federation subspace snapshots) lives in a pooled slab on the engine
 //! side and is referenced here by index, keeping the hot loop free of
 //! per-event allocation.
+//!
+//! # Backings: hierarchical timing wheel vs binary-heap oracle
+//!
+//! Two interchangeable backings implement the queue, selected per
+//! instance by [`QueueBacking`] and **guaranteed to produce the exact
+//! same `(time, seq)` pop order** (property-tested against each other in
+//! `tests/queue_wheel_parity.rs`, and byte-identical per catalog
+//! scenario):
+//!
+//! * [`QueueBacking::Wheel`] (the default) — a three-level hierarchical
+//!   timing wheel, 1024 slots per level (1 tick / 1024 ticks / 2²⁰ ticks
+//!   of slot granularity, ~2³⁰ ticks ≈ a million steps of total span),
+//!   with per-level occupancy bitmaps so empty stretches cost one word
+//!   scan instead of a slot walk. Schedule and pop are O(1) amortized at
+//!   storm rates — the `BinaryHeap`'s O(log n) comparisons (and its
+//!   cache-hostile sift paths) were the top engine cost at 100k-node
+//!   fleet sizes, where hundreds of thousands of arrival/completion
+//!   events are resident at once. Far-future events (beyond the top
+//!   level's span — only reachable through pathological service-time
+//!   draws) overflow into a small heap and re-enter the wheel when the
+//!   cursor reaches their span; events scheduled before the current
+//!   cursor (the engine never does this — it only schedules at or after
+//!   the tick being drained) are held in a strictly-earlier heap so the
+//!   pop order stays exact even for that misuse.
+//! * [`QueueBacking::Heap`] — the historical binary min-heap, kept as the
+//!   debug oracle. Build with `--features heap-oracle` (or set
+//!   `PRONTO_EVENT_QUEUE=heap` at run time) to force every queue in the
+//!   process onto the heap; CI diffs full catalog runs across the two
+//!   backings byte-for-byte.
 
 use crate::scheduler::JobId;
 use std::cmp::Ordering;
@@ -113,52 +142,314 @@ impl Ord for Scheduled {
     }
 }
 
-/// Deterministic event queue.
-#[derive(Debug, Default)]
-pub struct EventQueue {
-    heap: BinaryHeap<Scheduled>,
-    next_seq: u64,
-    scheduled_total: usize,
+/// Bits per timing-wheel level: 1024 slots each.
+const LEVEL_BITS: u32 = 10;
+/// Slots per level.
+const WHEEL_SLOTS: usize = 1 << LEVEL_BITS;
+/// Low-bits mask for one level's slot index.
+const SLOT_MASK: u64 = (WHEEL_SLOTS - 1) as u64;
+/// Levels in the hierarchy (1-tick, 2¹⁰-tick, 2²⁰-tick granularity).
+const WHEEL_LEVELS: usize = 3;
+/// `u64` words in one level's occupancy bitmap.
+const WHEEL_WORDS: usize = WHEEL_SLOTS / 64;
+
+/// One wheel level: 1024 event buckets plus an occupancy bitmap so the
+/// "next non-empty slot" scan reads 16 words instead of 1024 `Vec` heads.
+#[derive(Debug)]
+struct WheelLevel {
+    slots: Vec<Vec<Scheduled>>,
+    occupied: [u64; WHEEL_WORDS],
 }
 
-impl EventQueue {
-    /// Queue with pre-reserved capacity (the engine sizes this from the
-    /// scenario so steady-state operation never reallocates).
-    pub fn with_capacity(cap: usize) -> Self {
-        Self { heap: BinaryHeap::with_capacity(cap), next_seq: 0, scheduled_total: 0 }
+impl WheelLevel {
+    fn new() -> Self {
+        Self {
+            slots: (0..WHEEL_SLOTS).map(|_| Vec::new()).collect(),
+            occupied: [0; WHEEL_WORDS],
+        }
     }
 
-    /// Schedule `event` at `time`. Events at equal times fire in
-    /// scheduling order (FIFO) — the insertion counter breaks the tie.
-    pub fn schedule(&mut self, time: SimTime, event: Event) {
-        let seq = self.next_seq;
-        self.next_seq += 1;
-        self.scheduled_total += 1;
-        self.heap.push(Scheduled { time, seq, event });
+    #[inline]
+    fn mark(&mut self, slot: usize) {
+        self.occupied[slot >> 6] |= 1u64 << (slot & 63);
     }
 
-    /// Pop the earliest event.
-    pub fn pop(&mut self) -> Option<Scheduled> {
+    #[inline]
+    fn clear(&mut self, slot: usize) {
+        self.occupied[slot >> 6] &= !(1u64 << (slot & 63));
+    }
+
+    /// First occupied slot index `>= from`, if any.
+    fn next_occupied(&self, from: usize) -> Option<usize> {
+        if from >= WHEEL_SLOTS {
+            return None;
+        }
+        let mut w = from >> 6;
+        let mut word = self.occupied[w] & (!0u64 << (from & 63));
+        loop {
+            if word != 0 {
+                return Some((w << 6) + word.trailing_zeros() as usize);
+            }
+            w += 1;
+            if w == WHEEL_WORDS {
+                return None;
+            }
+            word = self.occupied[w];
+        }
+    }
+}
+
+/// Hierarchical timing wheel with exact `(time, seq)` pop order.
+///
+/// Placement is by *shared span with the cursor* (the timestamp of the
+/// most recently popped event): an event goes to the deepest level whose
+/// parent span it shares with the cursor — level 0 when it falls in the
+/// cursor's current 1024-tick span, level 1 when it shares the 2²⁰-tick
+/// span, level 2 when it shares the 2³⁰-tick span, and the `far` overflow
+/// heap beyond that. This absolute-indexed scheme has no lap ambiguity:
+///
+/// * every level-0 slot holds events of exactly **one** timestamp, so a
+///   tick drains as one bucket take + one in-bucket sort by `seq`;
+/// * all level-0 events precede all level-1 events, which precede all
+///   level-2 events, which precede everything in `far` — the minimum
+///   pending time is found level by level without cross-level compares;
+/// * when the cursor enters an upper slot's span, the slot *fully*
+///   cascades one level down (each event re-placed by the same rule), so
+///   each event moves at most twice over its lifetime — O(1) amortized.
+#[derive(Debug)]
+struct TimingWheel {
+    levels: Vec<WheelLevel>,
+    /// Timestamp of the most recent pop/drain (never decreases). All
+    /// wheel-resident events have `time >= cursor`.
+    cursor: SimTime,
+    /// Events resident in the wheel levels (excludes `past`/`far`).
+    in_wheel: usize,
+    /// Events scheduled strictly before the cursor. The engine never
+    /// produces these (it only schedules at or after the tick being
+    /// drained); kept so the pop order stays exact even for that misuse.
+    past: BinaryHeap<Scheduled>,
+    /// Events beyond the top level's span (cursor's 2³⁰-tick epoch);
+    /// re-placed into the wheel when the cursor reaches their epoch.
+    far: BinaryHeap<Scheduled>,
+}
+
+impl TimingWheel {
+    fn new() -> Self {
+        Self {
+            levels: (0..WHEEL_LEVELS).map(|_| WheelLevel::new()).collect(),
+            cursor: 0,
+            in_wheel: 0,
+            past: BinaryHeap::new(),
+            far: BinaryHeap::new(),
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.in_wheel + self.past.len() + self.far.len()
+    }
+
+    fn schedule(&mut self, s: Scheduled) {
+        if s.time < self.cursor {
+            self.past.push(s);
+        } else {
+            self.place(s);
+        }
+    }
+
+    /// Insert an event at or after the cursor into its level.
+    fn place(&mut self, s: Scheduled) {
+        let t = s.time;
+        let c = self.cursor;
+        debug_assert!(t >= c, "place() below the cursor");
+        let (lvl, idx) = if t >> LEVEL_BITS == c >> LEVEL_BITS {
+            (0, (t & SLOT_MASK) as usize)
+        } else if t >> (2 * LEVEL_BITS) == c >> (2 * LEVEL_BITS) {
+            (1, ((t >> LEVEL_BITS) & SLOT_MASK) as usize)
+        } else if t >> (3 * LEVEL_BITS) == c >> (3 * LEVEL_BITS) {
+            (2, ((t >> (2 * LEVEL_BITS)) & SLOT_MASK) as usize)
+        } else {
+            self.far.push(s);
+            return;
+        };
+        self.levels[lvl].slots[idx].push(s);
+        self.levels[lvl].mark(idx);
+        self.in_wheel += 1;
+    }
+
+    /// Exact timestamp of the earliest level-0 event. Level-0 events all
+    /// live in the cursor's 1024-tick span (one timestamp per slot), so
+    /// the first occupied slot at or after the cursor's offset *is* the
+    /// minimum.
+    fn level0_min(&self) -> Option<SimTime> {
+        let from = (self.cursor & SLOT_MASK) as usize;
+        self.levels[0]
+            .next_occupied(from)
+            .map(|s| (self.cursor & !SLOT_MASK) | s as u64)
+    }
+
+    /// Read-only exact minimum pending timestamp (the `peek_time`
+    /// contract). Levels are totally ordered (see the type docs), so the
+    /// first non-empty tier answers; within an upper-level slot the
+    /// events share the slot's span but not a single tick, hence the
+    /// in-slot min scan (only reached when every lower level is empty).
+    fn min_time(&self) -> Option<SimTime> {
+        if let Some(p) = self.past.peek() {
+            return Some(p.time);
+        }
+        if let Some(t) = self.level0_min() {
+            return Some(t);
+        }
+        for lvl in 1..WHEEL_LEVELS {
+            let idx = ((self.cursor >> (lvl as u32 * LEVEL_BITS)) & SLOT_MASK) as usize;
+            if let Some(s) = self.levels[lvl].next_occupied(idx) {
+                return self.levels[lvl].slots[s].iter().map(|e| e.time).min();
+            }
+        }
+        self.far.peek().map(|e| e.time)
+    }
+
+    /// Advance the cursor to the earliest pending event, cascading upper
+    /// levels down as their spans are entered, and return its timestamp —
+    /// which is then guaranteed to sit in a level-0 slot. `None` when
+    /// only `past` events (or nothing) remain.
+    fn advance(&mut self) -> Option<SimTime> {
+        loop {
+            if let Some(t) = self.level0_min() {
+                self.cursor = t;
+                return Some(t);
+            }
+            let mut cascaded = false;
+            for lvl in 1..WHEEL_LEVELS {
+                let idx = ((self.cursor >> (lvl as u32 * LEVEL_BITS)) & SLOT_MASK) as usize;
+                let Some(s) = self.levels[lvl].next_occupied(idx) else {
+                    continue;
+                };
+                // Enter the slot's span: every event in an upper slot
+                // shares it, so the whole bucket re-places one level
+                // down (the placement rule sees the advanced cursor).
+                let span_bits = (lvl as u32 + 1) * LEVEL_BITS;
+                let base = (self.cursor >> span_bits) << span_bits;
+                let slot_start = base | ((s as u64) << (lvl as u32 * LEVEL_BITS));
+                self.cursor = self.cursor.max(slot_start);
+                let moved = std::mem::take(&mut self.levels[lvl].slots[s]);
+                self.levels[lvl].clear(s);
+                self.in_wheel -= moved.len();
+                for e in moved {
+                    self.schedule(e);
+                }
+                cascaded = true;
+                break;
+            }
+            if cascaded {
+                continue;
+            }
+            // Wheels empty: jump to the far heap's epoch and pull in
+            // everything that now fits (far times are strictly beyond
+            // the cursor's previous top-level span, so this only moves
+            // the cursor forward).
+            let Some(next_epoch_time) = self.far.peek().map(|e| e.time) else {
+                return None;
+            };
+            self.cursor = self.cursor.max(next_epoch_time);
+            let epoch = self.cursor >> (WHEEL_LEVELS as u32 * LEVEL_BITS);
+            while let Some(p) = self.far.peek() {
+                if p.time >> (WHEEL_LEVELS as u32 * LEVEL_BITS) != epoch {
+                    break;
+                }
+                let e = self.far.pop().expect("peeked far event present");
+                self.place(e);
+            }
+        }
+    }
+
+    fn pop(&mut self) -> Option<Scheduled> {
+        if let Some(p) = self.past.pop() {
+            return Some(p);
+        }
+        let t = self.advance()?;
+        let idx = (t & SLOT_MASK) as usize;
+        let slot = &mut self.levels[0].slots[idx];
+        // All events in a level-0 slot share one timestamp; pop the
+        // lowest insertion seq. Linear, but `drain_tick_into` (the hot
+        // path) takes the bucket wholesale instead.
+        let mut k = 0;
+        for i in 1..slot.len() {
+            if slot[i].seq < slot[k].seq {
+                k = i;
+            }
+        }
+        let s = slot.swap_remove(k);
+        if slot.is_empty() {
+            self.levels[0].clear(idx);
+        }
+        self.in_wheel -= 1;
+        debug_assert_eq!(s.time, t);
+        Some(s)
+    }
+
+    fn drain_tick_into(&mut self, batch: &mut TickBatch) -> bool {
+        batch.events.clear();
+        // `past` times are strictly below the cursor, hence below every
+        // wheel-resident time — a tick can never straddle the two.
+        if let Some(first) = self.past.peek().map(|p| p.time) {
+            batch.time = first;
+            while let Some(p) = self.past.peek() {
+                if p.time != first {
+                    break;
+                }
+                batch.events.push(self.past.pop().expect("peeked past event"));
+            }
+            return true;
+        }
+        let Some(t) = self.advance() else {
+            batch.time = 0;
+            return false;
+        };
+        batch.time = t;
+        let idx = (t & SLOT_MASK) as usize;
+        let slot = &mut self.levels[0].slots[idx];
+        self.in_wheel -= slot.len();
+        // Drain (not take): the bucket keeps its capacity, so steady
+        // storm ticks re-fill it without reallocating.
+        batch.events.extend(slot.drain(..));
+        self.levels[0].clear(idx);
+        // One timestamp per bucket ⇒ sorting by seq alone restores the
+        // exact global pop order (cascade order scrambled it).
+        batch.events.sort_unstable_by_key(|e| e.seq);
+        true
+    }
+}
+
+/// The historical binary min-heap backing, kept as the debug oracle for
+/// the timing wheel (`--features heap-oracle` / `PRONTO_EVENT_QUEUE=heap`
+/// switch every queue onto it; the parity suite diffs the two).
+#[derive(Debug, Default)]
+struct HeapQueue {
+    heap: BinaryHeap<Scheduled>,
+}
+
+impl HeapQueue {
+    fn with_capacity(cap: usize) -> Self {
+        Self { heap: BinaryHeap::with_capacity(cap) }
+    }
+
+    fn schedule(&mut self, s: Scheduled) {
+        self.heap.push(s);
+    }
+
+    fn pop(&mut self) -> Option<Scheduled> {
         self.heap.pop()
     }
 
-    /// Timestamp of the earliest pending event.
-    pub fn peek_time(&self) -> Option<SimTime> {
+    fn peek_time(&self) -> Option<SimTime> {
         self.heap.peek().map(|s| s.time)
     }
 
-    /// Drain **every** event sharing the earliest timestamp into `batch`
-    /// (clearing it first), in exactly the order [`EventQueue::pop`]
-    /// would have produced. Returns `false` when the queue is empty.
-    ///
-    /// Events scheduled *while a batch is being processed* — even at the
-    /// batch's own timestamp — carry higher sequence numbers, so they
-    /// land in a later batch, exactly where per-event popping would have
-    /// put them. Concatenating drained batches therefore reproduces the
-    /// per-event pop order byte-for-byte; the batch only gives the
-    /// engine a same-tick view to hoist per-tick work out of per-event
-    /// handlers.
-    pub fn drain_tick(&mut self, batch: &mut TickBatch) -> bool {
+    fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    fn drain_tick_into(&mut self, batch: &mut TickBatch) -> bool {
         batch.events.clear();
         let Some(first) = self.heap.pop() else {
             batch.time = 0;
@@ -174,13 +465,146 @@ impl EventQueue {
         }
         true
     }
+}
+
+/// Which data structure backs an [`EventQueue`]. Both produce the exact
+/// same `(time, seq)` pop order; the wheel is the fast path, the heap the
+/// debug oracle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueueBacking {
+    /// Hierarchical timing wheel — O(1) amortized schedule/pop (default).
+    Wheel,
+    /// Binary min-heap — the historical O(log n) reference.
+    Heap,
+}
+
+impl QueueBacking {
+    /// Process-wide default: the wheel, unless the `heap-oracle` feature
+    /// is compiled in or `PRONTO_EVENT_QUEUE=heap` is set (both exist so
+    /// CI and local debugging can diff full runs across backings without
+    /// touching call sites).
+    pub fn from_env() -> Self {
+        if cfg!(feature = "heap-oracle") {
+            return QueueBacking::Heap;
+        }
+        match std::env::var("PRONTO_EVENT_QUEUE").as_deref() {
+            Ok("heap") => QueueBacking::Heap,
+            _ => QueueBacking::Wheel,
+        }
+    }
+}
+
+#[derive(Debug)]
+enum Backing {
+    Wheel(Box<TimingWheel>),
+    Heap(HeapQueue),
+}
+
+/// Deterministic event queue (see the module docs for the two backings).
+#[derive(Debug)]
+pub struct EventQueue {
+    backing: Backing,
+    next_seq: u64,
+    scheduled_total: usize,
+}
+
+impl Default for EventQueue {
+    fn default() -> Self {
+        Self::with_capacity(0)
+    }
+}
+
+impl EventQueue {
+    /// Queue with pre-reserved capacity on the default backing
+    /// ([`QueueBacking::from_env`]). The wheel's buckets grow on demand
+    /// and are drained (never freed) per tick, so it ignores the hint;
+    /// the heap oracle pre-reserves as before.
+    pub fn with_capacity(cap: usize) -> Self {
+        Self::with_backing(cap, QueueBacking::from_env())
+    }
+
+    /// Queue on an explicit backing (the parity tests drive both
+    /// side by side; everything else goes through `with_capacity`).
+    pub fn with_backing(cap: usize, backing: QueueBacking) -> Self {
+        let backing = match backing {
+            QueueBacking::Wheel => Backing::Wheel(Box::new(TimingWheel::new())),
+            QueueBacking::Heap => Backing::Heap(HeapQueue::with_capacity(cap)),
+        };
+        Self { backing, next_seq: 0, scheduled_total: 0 }
+    }
+
+    /// Which backing this queue runs on.
+    pub fn backing(&self) -> QueueBacking {
+        match self.backing {
+            Backing::Wheel(_) => QueueBacking::Wheel,
+            Backing::Heap(_) => QueueBacking::Heap,
+        }
+    }
+
+    /// Schedule `event` at `time`. Events at equal times fire in
+    /// scheduling order (FIFO) — the insertion counter breaks the tie.
+    pub fn schedule(&mut self, time: SimTime, event: Event) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.scheduled_total += 1;
+        let s = Scheduled { time, seq, event };
+        match &mut self.backing {
+            Backing::Wheel(w) => w.schedule(s),
+            Backing::Heap(h) => h.schedule(s),
+        }
+    }
+
+    /// Pop the earliest event.
+    pub fn pop(&mut self) -> Option<Scheduled> {
+        match &mut self.backing {
+            Backing::Wheel(w) => w.pop(),
+            Backing::Heap(h) => h.pop(),
+        }
+    }
+
+    /// Timestamp of the earliest pending event.
+    pub fn peek_time(&self) -> Option<SimTime> {
+        match &self.backing {
+            Backing::Wheel(w) => w.min_time(),
+            Backing::Heap(h) => h.peek_time(),
+        }
+    }
+
+    /// Drain **every** event sharing the earliest timestamp into the
+    /// caller-owned `batch` (clearing it first), in exactly the order
+    /// [`EventQueue::pop`] would have produced. Returns `false` when the
+    /// queue is empty. The batch's backing `Vec` is reused across calls,
+    /// and on the wheel the drained bucket keeps its capacity too — a
+    /// steady storm tick allocates nothing on either side.
+    ///
+    /// Events scheduled *while a batch is being processed* — even at the
+    /// batch's own timestamp — carry higher sequence numbers, so they
+    /// land in a later batch, exactly where per-event popping would have
+    /// put them. Concatenating drained batches therefore reproduces the
+    /// per-event pop order byte-for-byte; the batch only gives the
+    /// engine a same-tick view to hoist per-tick work out of per-event
+    /// handlers.
+    pub fn drain_tick_into(&mut self, batch: &mut TickBatch) -> bool {
+        match &mut self.backing {
+            Backing::Wheel(w) => w.drain_tick_into(batch),
+            Backing::Heap(h) => h.drain_tick_into(batch),
+        }
+    }
+
+    /// Alias of [`EventQueue::drain_tick_into`] (the historical name).
+    pub fn drain_tick(&mut self, batch: &mut TickBatch) -> bool {
+        self.drain_tick_into(batch)
+    }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        match &self.backing {
+            Backing::Wheel(w) => w.len(),
+            Backing::Heap(h) => h.len(),
+        }
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len() == 0
     }
 
     /// Total events scheduled over the queue's lifetime.
@@ -248,44 +672,54 @@ impl TickBatch {
 mod tests {
     use super::*;
 
+    fn both() -> [EventQueue; 2] {
+        [
+            EventQueue::with_backing(8, QueueBacking::Wheel),
+            EventQueue::with_backing(8, QueueBacking::Heap),
+        ]
+    }
+
     #[test]
     fn pops_in_time_order() {
-        let mut q = EventQueue::with_capacity(8);
-        q.schedule(30, Event::TelemetryTick { step: 3 });
-        q.schedule(10, Event::TelemetryTick { step: 1 });
-        q.schedule(20, Event::TelemetryTick { step: 2 });
-        let times: Vec<SimTime> = std::iter::from_fn(|| q.pop()).map(|s| s.time).collect();
-        assert_eq!(times, vec![10, 20, 30]);
+        for mut q in both() {
+            q.schedule(30, Event::TelemetryTick { step: 3 });
+            q.schedule(10, Event::TelemetryTick { step: 1 });
+            q.schedule(20, Event::TelemetryTick { step: 2 });
+            let times: Vec<SimTime> = std::iter::from_fn(|| q.pop()).map(|s| s.time).collect();
+            assert_eq!(times, vec![10, 20, 30], "{:?}", q.backing());
+        }
     }
 
     #[test]
     fn equal_times_pop_fifo() {
-        let mut q = EventQueue::with_capacity(8);
-        for node in 0..5 {
-            q.schedule(42, Event::NodeJoin { node });
+        for mut q in both() {
+            for node in 0..5 {
+                q.schedule(42, Event::NodeJoin { node });
+            }
+            let order: Vec<usize> = std::iter::from_fn(|| q.pop())
+                .map(|s| match s.event {
+                    Event::NodeJoin { node } => node,
+                    _ => unreachable!(),
+                })
+                .collect();
+            assert_eq!(order, vec![0, 1, 2, 3, 4], "{:?}", q.backing());
         }
-        let order: Vec<usize> = std::iter::from_fn(|| q.pop())
-            .map(|s| match s.event {
-                Event::NodeJoin { node } => node,
-                _ => unreachable!(),
-            })
-            .collect();
-        assert_eq!(order, vec![0, 1, 2, 3, 4]);
     }
 
     #[test]
     fn interleaved_schedule_pop_is_stable() {
-        let mut q = EventQueue::with_capacity(8);
-        q.schedule(5, Event::TelemetryTick { step: 0 });
-        q.schedule(1, Event::NodeLeave { node: 9 });
-        assert_eq!(q.len(), 2);
-        assert_eq!(q.pop().unwrap().time, 1);
-        q.schedule(2, Event::NodeJoin { node: 9 });
-        assert_eq!(q.pop().unwrap().time, 2);
-        assert_eq!(q.pop().unwrap().time, 5);
-        assert!(q.pop().is_none());
-        assert!(q.is_empty());
-        assert_eq!(q.scheduled_total(), 3);
+        for mut q in both() {
+            q.schedule(5, Event::TelemetryTick { step: 0 });
+            q.schedule(1, Event::NodeLeave { node: 9 });
+            assert_eq!(q.len(), 2);
+            assert_eq!(q.pop().unwrap().time, 1);
+            q.schedule(2, Event::NodeJoin { node: 9 });
+            assert_eq!(q.pop().unwrap().time, 2);
+            assert_eq!(q.pop().unwrap().time, 5);
+            assert!(q.pop().is_none());
+            assert!(q.is_empty());
+            assert_eq!(q.scheduled_total(), 3);
+        }
     }
 
     #[test]
@@ -299,39 +733,133 @@ mod tests {
 
     #[test]
     fn drain_tick_groups_same_timestamp_events_in_pop_order() {
-        let mut q = EventQueue::with_capacity(8);
-        q.schedule(20, Event::JobArrival { job_id: 2 });
-        q.schedule(10, Event::JobArrival { job_id: 0 });
-        q.schedule(10, Event::NodeLeave { node: 5 });
-        q.schedule(10, Event::JobArrival { job_id: 1 });
-        let mut batch = TickBatch::default();
+        for mut q in both() {
+            q.schedule(20, Event::JobArrival { job_id: 2 });
+            q.schedule(10, Event::JobArrival { job_id: 0 });
+            q.schedule(10, Event::NodeLeave { node: 5 });
+            q.schedule(10, Event::JobArrival { job_id: 1 });
+            let mut batch = TickBatch::default();
 
-        assert!(q.drain_tick(&mut batch));
-        assert_eq!(batch.time(), 10);
-        assert_eq!(batch.len(), 3);
-        assert_eq!(batch.arrivals().collect::<Vec<_>>(), vec![0, 1]);
-        assert_eq!(batch.churn().collect::<Vec<_>>(), vec![(5, false)]);
-        assert!(batch.completions().next().is_none());
-        // In-batch order is pop order, not grouped-by-kind order.
-        assert!(matches!(batch.events()[1].event, Event::NodeLeave { node: 5 }));
+            assert!(q.drain_tick(&mut batch));
+            assert_eq!(batch.time(), 10);
+            assert_eq!(batch.len(), 3);
+            assert_eq!(batch.arrivals().collect::<Vec<_>>(), vec![0, 1]);
+            assert_eq!(batch.churn().collect::<Vec<_>>(), vec![(5, false)]);
+            assert!(batch.completions().next().is_none());
+            // In-batch order is pop order, not grouped-by-kind order.
+            assert!(matches!(batch.events()[1].event, Event::NodeLeave { node: 5 }));
 
-        // The batch is reused: the next drain clears it first.
-        assert!(q.drain_tick(&mut batch));
-        assert_eq!(batch.time(), 20);
-        assert_eq!(batch.len(), 1);
-        assert!(q.is_empty());
-        assert!(!q.drain_tick(&mut batch));
-        assert!(batch.is_empty());
+            // The batch is reused: the next drain clears it first.
+            assert!(q.drain_tick_into(&mut batch));
+            assert_eq!(batch.time(), 20);
+            assert_eq!(batch.len(), 1);
+            assert!(q.is_empty());
+            assert!(!q.drain_tick_into(&mut batch));
+            assert!(batch.is_empty());
+        }
     }
 
     #[test]
     fn peek_time_tracks_the_head() {
-        let mut q = EventQueue::with_capacity(4);
-        assert_eq!(q.peek_time(), None);
-        q.schedule(7, Event::TelemetryTick { step: 0 });
-        q.schedule(3, Event::TelemetryTick { step: 1 });
-        assert_eq!(q.peek_time(), Some(3));
-        q.pop();
-        assert_eq!(q.peek_time(), Some(7));
+        for mut q in both() {
+            assert_eq!(q.peek_time(), None);
+            q.schedule(7, Event::TelemetryTick { step: 0 });
+            q.schedule(3, Event::TelemetryTick { step: 1 });
+            assert_eq!(q.peek_time(), Some(3));
+            q.pop();
+            assert_eq!(q.peek_time(), Some(7));
+        }
+    }
+
+    #[test]
+    fn wheel_handles_upper_level_and_far_future_times() {
+        // One event per tier: level 0 (same 2¹⁰ span as cursor 0),
+        // level 1 (same 2²⁰ span), level 2 (same 2³⁰ span), far heap
+        // (beyond), plus a second far epoch. Pop order must be global
+        // time order regardless of tier, and peek must be exact at
+        // every stage (upper tiers answer via the in-slot min scan).
+        let mut q = EventQueue::with_backing(0, QueueBacking::Wheel);
+        let times: [SimTime; 6] =
+            [5, 1_500, 2_000_000, 40_000_000, 3_000_000_000, 5_000_000_000];
+        for (i, &t) in times.iter().enumerate().rev() {
+            q.schedule(t, Event::TelemetryTick { step: i });
+        }
+        assert_eq!(q.len(), 6);
+        for &t in &times {
+            assert_eq!(q.peek_time(), Some(t));
+            let s = q.pop().unwrap();
+            assert_eq!(s.time, t);
+        }
+        assert!(q.is_empty());
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn wheel_cascade_preserves_fifo_within_one_tick() {
+        // Events landing on the same future tick via an upper level must
+        // still pop in scheduling order after cascading down (the bucket
+        // sort by seq at drain time).
+        let mut q = EventQueue::with_backing(0, QueueBacking::Wheel);
+        let t: SimTime = 700_000; // level 1 from cursor 0
+        for node in 0..7 {
+            q.schedule(t, Event::NodeJoin { node });
+        }
+        q.schedule(3, Event::TelemetryTick { step: 0 });
+        assert_eq!(q.pop().unwrap().time, 3);
+        let order: Vec<usize> = std::iter::from_fn(|| q.pop())
+            .map(|s| match s.event {
+                Event::NodeJoin { node } => node,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(order, vec![0, 1, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn wheel_accepts_schedules_at_the_drained_tick() {
+        // The engine's hot pattern: drain tick T, then schedule more
+        // work at exactly T (JobEnqueue/JobStart). Those must come back
+        // in the *next* batch at the same timestamp.
+        for mut q in both() {
+            q.schedule(10, Event::JobArrival { job_id: 0 });
+            let mut batch = TickBatch::default();
+            assert!(q.drain_tick_into(&mut batch));
+            assert_eq!(batch.time(), 10);
+            q.schedule(10, Event::JobEnqueue { node: 1, job_id: 0 });
+            q.schedule(11, Event::TelemetryTick { step: 0 });
+            assert!(q.drain_tick_into(&mut batch));
+            assert_eq!(batch.time(), 10);
+            assert_eq!(batch.len(), 1);
+            assert!(matches!(batch.events()[0].event, Event::JobEnqueue { .. }));
+            assert!(q.drain_tick_into(&mut batch));
+            assert_eq!(batch.time(), 11);
+        }
+    }
+
+    #[test]
+    fn wheel_orders_past_schedules_exactly() {
+        // Scheduling below the cursor is engine-illegal but must still
+        // pop in exact (time, seq) order via the `past` heap.
+        let mut q = EventQueue::with_backing(0, QueueBacking::Wheel);
+        q.schedule(100, Event::TelemetryTick { step: 0 });
+        q.schedule(200, Event::TelemetryTick { step: 1 });
+        assert_eq!(q.pop().unwrap().time, 100);
+        q.schedule(50, Event::NodeLeave { node: 1 });
+        q.schedule(40, Event::NodeLeave { node: 2 });
+        assert_eq!(q.peek_time(), Some(40));
+        assert_eq!(q.pop().unwrap().time, 40);
+        assert_eq!(q.pop().unwrap().time, 50);
+        assert_eq!(q.pop().unwrap().time, 200);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn default_backing_honours_the_oracle_feature() {
+        let q = EventQueue::with_capacity(4);
+        if cfg!(feature = "heap-oracle") {
+            assert_eq!(q.backing(), QueueBacking::Heap);
+        } else if std::env::var("PRONTO_EVENT_QUEUE").as_deref() != Ok("heap") {
+            assert_eq!(q.backing(), QueueBacking::Wheel);
+        }
     }
 }

@@ -1,0 +1,427 @@
+//! Struct-of-arrays fleet state for the engine's hot loops.
+//!
+//! At 100k nodes the per-tick scans — observe, capacity drain, churn
+//! hazard, pressure preemption — dominate the engine's wall time, and
+//! the historical layout (an array-of-structs [`HostCapacity`] per node,
+//! flags scattered across parallel `Vec<bool>`s owned by `run()`'s stack
+//! frame) made every scan a pointer-chase over ~100-byte strides. This
+//! module keeps the same *logical* state but pivots the hot fields into
+//! dense parallel arrays:
+//!
+//! * [`FleetState`] — liveness flags, the merged `can_accept` rejection
+//!   signal, the **sorted** alive-id list the observe shards and probe
+//!   samplers iterate, a dense id→position index map (O(1) membership
+//!   and rank lookups, maintained incrementally on churn), and the
+//!   round-robin probe cursor.
+//! * [`HostTable`] — the [`HostCapacity`] hosts plus struct-of-arrays
+//!   mirrors of their hot scalar fields (slot budget, slots used, queue
+//!   depth, queue-delay EWMA). Mutations delegate to the host (the
+//!   single source of truth for queue contents and the running set) and
+//!   re-sync that node's mirror; reads on the per-tick scan paths and
+//!   the probe fast path come straight from the contiguous arrays.
+//!
+//! Both types are pure layout changes: every method reproduces the exact
+//! value the scattered representation produced, so reports stay
+//! byte-identical (the catalog determinism suite is the witness).
+
+use crate::scheduler::{AdmissionProbe, HostCapacity, JobId, Priority, QueuedJob};
+
+/// Sentinel in the id→position map for nodes that are not alive.
+const NOT_ALIVE: u32 = u32::MAX;
+
+/// Dense per-node liveness/signal state plus the sorted alive-id list.
+///
+/// Invariants: `alive_ids` is strictly sorted; `alive[i]` ⇔ `alive_ids`
+/// contains `i` ⇔ `pos[i] != NOT_ALIVE`; and for every alive `i`,
+/// `alive_ids[pos[i] as usize] == i`. Leave/join maintain all three in
+/// one O(shift) pass (no binary search, no re-sort).
+#[derive(Debug)]
+pub struct FleetState {
+    alive: Vec<bool>,
+    can_accept: Vec<bool>,
+    alive_ids: Vec<usize>,
+    /// id → rank in `alive_ids` (`NOT_ALIVE` when down).
+    pos: Vec<u32>,
+    /// Round-robin probe cursor, tracked by node *identity* (the next
+    /// node id to probe), not by index into the alive list — an index
+    /// cursor re-aliases every later probe after churn.
+    rr_next: usize,
+}
+
+impl FleetState {
+    /// A fleet of `n` nodes, all alive and accepting.
+    pub fn new(n: usize) -> Self {
+        Self {
+            alive: vec![true; n],
+            can_accept: vec![true; n],
+            alive_ids: (0..n).collect(),
+            pos: (0..n).map(|i| i as u32).collect(),
+            rr_next: 0,
+        }
+    }
+
+    /// Total fleet size (alive or not).
+    pub fn len(&self) -> usize {
+        self.alive.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.alive.is_empty()
+    }
+
+    pub fn alive_count(&self) -> usize {
+        self.alive_ids.len()
+    }
+
+    #[inline]
+    pub fn is_alive(&self, node: usize) -> bool {
+        self.alive[node]
+    }
+
+    #[inline]
+    pub fn can_accept(&self, node: usize) -> bool {
+        self.can_accept[node]
+    }
+
+    #[inline]
+    pub fn set_can_accept(&mut self, node: usize, v: bool) {
+        self.can_accept[node] = v;
+    }
+
+    /// The sorted alive-id list (the iteration order of every per-tick
+    /// scan and the pool of every probe sampler).
+    pub fn alive_ids(&self) -> &[usize] {
+        &self.alive_ids
+    }
+
+    /// The merged rejection-signal array (`can_accept[node]`), for
+    /// read-only scoring paths that index by candidate id.
+    pub fn can_accept_slice(&self) -> &[bool] {
+        &self.can_accept
+    }
+
+    /// Split borrow for the observe loop: the alive ids to iterate and
+    /// the `can_accept` output array the per-node verdicts write into
+    /// (the parallel shards carve the latter into disjoint chunks).
+    pub fn observe_split(&mut self) -> (&[usize], &mut [bool]) {
+        (&self.alive_ids, &mut self.can_accept)
+    }
+
+    /// Mark `node` dead. Returns `false` (and changes nothing) when it
+    /// already was. O(shift) on the dense arrays.
+    pub fn leave(&mut self, node: usize) -> bool {
+        if !self.alive[node] {
+            return false;
+        }
+        self.alive[node] = false;
+        let p = self.pos[node] as usize;
+        debug_assert_eq!(self.alive_ids[p], node);
+        self.pos[node] = NOT_ALIVE;
+        self.alive_ids.remove(p);
+        for &id in &self.alive_ids[p..] {
+            self.pos[id] -= 1;
+        }
+        true
+    }
+
+    /// Mark `node` alive. Returns `false` (and changes nothing) when it
+    /// already was. O(shift); the sorted order is restored by inserting
+    /// at the id's rank, exactly where the historical binary-search
+    /// insert put it.
+    pub fn join(&mut self, node: usize) -> bool {
+        if self.alive[node] {
+            return false;
+        }
+        self.alive[node] = true;
+        // Rank of `node` among the alive ids = first position whose id
+        // exceeds it. Ids below `node` keep their rank; ids above shift
+        // up by one — the same walk updates the index map.
+        let p = self.alive_ids.partition_point(|&id| id < node);
+        self.alive_ids.insert(p, node);
+        self.pos[node] = p as u32;
+        for &id in &self.alive_ids[p + 1..] {
+            self.pos[id] += 1;
+        }
+        true
+    }
+
+    /// Round-robin probe: the first alive node with id `>= rr_next`
+    /// (wrapping), advancing the cursor past it. `None` on an empty
+    /// alive set. Identity-tracked (see the field docs), so churn never
+    /// re-aliases or starves the rotation.
+    pub fn rr_probe(&mut self) -> Option<usize> {
+        let m = self.alive_ids.len();
+        if m == 0 {
+            return None;
+        }
+        let pos = self.alive_ids.partition_point(|&id| id < self.rr_next);
+        let c = self.alive_ids[if pos == m { 0 } else { pos }];
+        self.rr_next = c + 1;
+        Some(c)
+    }
+}
+
+/// The fleet's hosts plus struct-of-arrays mirrors of their hot scalars.
+///
+/// Every mutation goes through a delegating method that re-syncs the
+/// touched node's mirror row, so `slots`/`used`/`queue_depth`/
+/// `delay_ewma` always equal the host's own accessors — probes and the
+/// per-tick capacity/pressure scans read the contiguous arrays, queue
+/// contents and the running set stay inside [`HostCapacity`].
+#[derive(Debug)]
+pub struct HostTable {
+    hosts: Vec<HostCapacity>,
+    slots: Vec<u32>,
+    used: Vec<u32>,
+    queue_depth: Vec<u32>,
+    delay_ewma: Vec<f64>,
+}
+
+impl HostTable {
+    pub fn new(hosts: Vec<HostCapacity>) -> Self {
+        let slots = hosts.iter().map(|h| h.slots()).collect();
+        let used = hosts.iter().map(|h| h.used()).collect();
+        let queue_depth = hosts.iter().map(|h| h.queue_len() as u32).collect();
+        let delay_ewma = hosts.iter().map(|h| h.queue_delay_ewma()).collect();
+        Self { hosts, slots, used, queue_depth, delay_ewma }
+    }
+
+    pub fn len(&self) -> usize {
+        self.hosts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.hosts.is_empty()
+    }
+
+    /// Re-read node `i`'s hot scalars from its host.
+    #[inline]
+    fn sync(&mut self, i: usize) {
+        let h = &self.hosts[i];
+        self.slots[i] = h.slots();
+        self.used[i] = h.used();
+        self.queue_depth[i] = h.queue_len() as u32;
+        self.delay_ewma[i] = h.queue_delay_ewma();
+    }
+
+    /// Read-only escape hatch (diagnostics/tests).
+    pub fn host(&self, i: usize) -> &HostCapacity {
+        &self.hosts[i]
+    }
+
+    #[inline]
+    pub fn slots(&self, i: usize) -> u32 {
+        self.slots[i]
+    }
+
+    #[inline]
+    pub fn used(&self, i: usize) -> u32 {
+        self.used[i]
+    }
+
+    /// Slots free right now (saturating, like [`HostCapacity::free`]).
+    #[inline]
+    pub fn free(&self, i: usize) -> u32 {
+        self.slots[i].saturating_sub(self.used[i])
+    }
+
+    #[inline]
+    pub fn can_start(&self, i: usize, demand: u32) -> bool {
+        demand <= self.free(i)
+    }
+
+    #[inline]
+    pub fn queue_len(&self, i: usize) -> usize {
+        self.queue_depth[i] as usize
+    }
+
+    pub fn queue_has_room(&self, i: usize) -> bool {
+        self.hosts[i].queue_has_room()
+    }
+
+    /// Running jobs on `i` in start order (newest last).
+    pub fn running(&self, i: usize) -> &[(JobId, u32)] {
+        self.hosts[i].running()
+    }
+
+    /// The structured probe answer, served entirely from the mirror
+    /// arrays — field-for-field identical to `host.probe(signal_raised)`.
+    #[inline]
+    pub fn probe(&self, i: usize, signal_raised: bool) -> AdmissionProbe {
+        AdmissionProbe {
+            signal_raised,
+            free_slots: self.free(i),
+            queue_depth: self.queue_depth[i] as usize,
+            queue_delay_ewma: self.delay_ewma[i],
+        }
+    }
+
+    pub fn start(&mut self, i: usize, job_id: JobId, demand: u32) {
+        self.hosts[i].start(job_id, demand);
+        self.sync(i);
+    }
+
+    pub fn finish(&mut self, i: usize, job_id: JobId) -> Option<u32> {
+        let freed = self.hosts[i].finish(job_id);
+        self.sync(i);
+        freed
+    }
+
+    pub fn try_enqueue(
+        &mut self,
+        i: usize,
+        job_id: JobId,
+        demand: u32,
+        priority: Priority,
+        now: u64,
+    ) -> bool {
+        let ok = self.hosts[i].try_enqueue(job_id, demand, priority, now);
+        self.sync(i);
+        ok
+    }
+
+    pub fn pop_startable(&mut self, i: usize, budget: u32) -> Option<QueuedJob> {
+        let qj = self.hosts[i].pop_startable(budget);
+        self.sync(i);
+        qj
+    }
+
+    pub fn note_queue_delay(&mut self, i: usize, delay_ticks: u64) {
+        self.hosts[i].note_queue_delay(delay_ticks);
+        self.sync(i);
+    }
+
+    pub fn evacuate(&mut self, i: usize) -> (Vec<(JobId, u32)>, Vec<QueuedJob>) {
+        let out = self.hosts[i].evacuate();
+        self.sync(i);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::QueuePolicy;
+
+    fn assert_invariants(f: &FleetState) {
+        let mut expect: Vec<usize> =
+            (0..f.len()).filter(|&i| f.is_alive(i)).collect();
+        expect.sort_unstable();
+        assert_eq!(f.alive_ids(), expect.as_slice(), "alive_ids out of sync");
+        for (rank, &id) in f.alive_ids().iter().enumerate() {
+            assert_eq!(f.pos[id] as usize, rank, "pos map wrong for id {id}");
+        }
+        for i in 0..f.len() {
+            if !f.is_alive(i) {
+                assert_eq!(f.pos[i], NOT_ALIVE, "dead id {i} still ranked");
+            }
+        }
+        assert_eq!(f.alive_count(), expect.len());
+    }
+
+    #[test]
+    fn leave_join_keep_the_index_map_dense_and_sorted() {
+        let mut f = FleetState::new(8);
+        assert_invariants(&f);
+        assert!(f.leave(3));
+        assert!(!f.leave(3), "double leave must be a no-op");
+        assert_invariants(&f);
+        assert!(f.leave(0));
+        assert!(f.leave(7));
+        assert_invariants(&f);
+        assert!(f.join(3));
+        assert!(!f.join(3), "double join must be a no-op");
+        assert_invariants(&f);
+        assert!(f.join(0));
+        assert!(f.join(7));
+        assert_invariants(&f);
+        assert_eq!(f.alive_ids(), (0..8).collect::<Vec<_>>().as_slice());
+    }
+
+    #[test]
+    fn mass_churn_stress_keeps_invariants() {
+        // Deterministic pseudo-random churn over a mid-sized fleet: the
+        // dense map must survive arbitrary interleavings.
+        let n = 257;
+        let mut f = FleetState::new(n);
+        let mut x = 0x9E3779B97F4A7C15u64;
+        for _ in 0..4_000 {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            let node = (x >> 16) as usize % n;
+            if x & 1 == 0 {
+                f.leave(node);
+            } else {
+                f.join(node);
+            }
+        }
+        assert_invariants(&f);
+        for i in 0..n {
+            f.join(i);
+        }
+        assert_invariants(&f);
+        assert_eq!(f.alive_count(), n);
+    }
+
+    #[test]
+    fn rr_probe_rotates_identity_order_and_survives_churn() {
+        let mut f = FleetState::new(4);
+        let first: Vec<usize> = (0..8).map(|_| f.rr_probe().unwrap()).collect();
+        assert_eq!(first, vec![0, 1, 2, 3, 0, 1, 2, 3]);
+        f.leave(1);
+        f.leave(2);
+        let after: Vec<usize> = (0..4).map(|_| f.rr_probe().unwrap()).collect();
+        assert_eq!(after, vec![0, 3, 0, 3], "rotation re-aliased under churn");
+        f.join(2);
+        let back: Vec<usize> = (0..3).map(|_| f.rr_probe().unwrap()).collect();
+        // Cursor sat past 3 (wrap): next is 0, then 2, then 3.
+        assert_eq!(back, vec![0, 2, 3]);
+        f.leave(0);
+        f.leave(2);
+        f.leave(3);
+        assert_eq!(f.alive_count(), 0);
+        assert_eq!(f.rr_probe(), None);
+    }
+
+    #[test]
+    fn host_table_mirrors_track_every_mutation() {
+        let hosts: Vec<HostCapacity> =
+            (0..3).map(|_| HostCapacity::new(4, 2, QueuePolicy::Fifo)).collect();
+        let mut t = HostTable::new(hosts);
+        let check = |t: &HostTable| {
+            for i in 0..t.len() {
+                let h = t.host(i);
+                assert_eq!(t.slots(i), h.slots());
+                assert_eq!(t.used(i), h.used());
+                assert_eq!(t.free(i), h.free());
+                assert_eq!(t.queue_len(i), h.queue_len());
+                let (a, b) = (t.probe(i, false), h.probe(false));
+                assert_eq!(a.free_slots, b.free_slots);
+                assert_eq!(a.queue_depth, b.queue_depth);
+                assert_eq!(a.queue_delay_ewma, b.queue_delay_ewma);
+            }
+        };
+        check(&t);
+        t.start(0, 1, 3);
+        assert!(t.can_start(0, 1) && !t.can_start(0, 2));
+        check(&t);
+        assert!(t.try_enqueue(0, 2, 2, 0, 10));
+        assert!(t.try_enqueue(0, 3, 1, 0, 11));
+        assert!(!t.try_enqueue(0, 4, 1, 0, 12), "bounded queue overflowed");
+        check(&t);
+        assert_eq!(t.finish(0, 1), Some(3));
+        check(&t);
+        let qj = t.pop_startable(0, 4).expect("queued job fits now");
+        assert_eq!(qj.job_id, 2);
+        t.start(0, qj.job_id, qj.demand);
+        t.note_queue_delay(0, 250);
+        check(&t);
+        let (running, queued) = t.evacuate(0);
+        assert_eq!(running.len(), 1);
+        assert_eq!(queued.len(), 1);
+        check(&t);
+        assert_eq!(t.used(0), 0);
+        assert_eq!(t.queue_len(0), 0);
+    }
+}

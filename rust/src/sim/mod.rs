@@ -1,7 +1,12 @@
 //! Data-center simulation and the §7.1 evaluation harness.
 //!
 //! * [`events`] — typed simulation events and the deterministic
-//!   `(time, seq)`-ordered binary-heap event queue.
+//!   `(time, seq)`-ordered event queue: a hierarchical timing wheel by
+//!   default, with the historical binary heap kept as a byte-identical
+//!   debug oracle (`--features heap-oracle` / `PRONTO_EVENT_QUEUE=heap`).
+//! * [`fleet`] — struct-of-arrays per-node state for the engine's hot
+//!   loops: liveness/signal flags with a dense alive-id index, and the
+//!   host table with contiguous mirrors of the hot capacity scalars.
 //! * [`engine`] — the discrete-event cluster engine: telemetry ticks, job
 //!   arrivals/starts/completions, host-level capacity (slot budgets,
 //!   bounded wait queues, preemption and migration of displaced jobs),
@@ -28,20 +33,23 @@ pub mod datacenter;
 pub mod engine;
 pub mod eval;
 pub mod events;
+pub mod fleet;
 pub mod quality;
 pub mod scenario;
 
 pub use datacenter::{DataCenterSim, SimConfig};
 pub use engine::{
-    sample_distinct, DiscreteEventEngine, EngineError, PolicyFactory, SignalCapture, SimReport,
+    sample_distinct, DiscreteEventEngine, EngineError, PolicyFactory, SampleScratch,
+    SignalCapture, SimReport,
 };
+pub use fleet::{FleetState, HostTable};
 pub use eval::{evaluate_method, EvalConfig, FleetEvaluation, NodeEvaluation};
 pub use quality::{
     decision_latencies, quality_report, score_report, score_timeline, QualityRow, TimelineScore,
 };
 pub use events::{
-    latency_to_ticks, step_to_ticks, ticks_to_step, Event, EventQueue, Scheduled, SimTime,
-    TickBatch, TICKS_PER_STEP,
+    latency_to_ticks, step_to_ticks, ticks_to_step, Event, EventQueue, QueueBacking, Scheduled,
+    SimTime, TickBatch, TICKS_PER_STEP,
 };
 pub use scenario::{
     ArrivalPattern, CapacityModel, ChurnModel, DispatchPolicy, FederationSpec, HostClass,

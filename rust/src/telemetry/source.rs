@@ -95,6 +95,22 @@ impl TraceSource {
         matches!(self, TraceSource::Streaming(_))
     }
 
+    /// Resident trace-storage footprint in bytes: the sliding-window
+    /// ring (streaming) or the full materialized columns. This is the
+    /// figure that makes the 100k-node `large-fleet` bench row viable —
+    /// streaming keeps it at `nodes × window × dim × 8` regardless of
+    /// horizon (≈ 300 MB at 100k nodes), where materializing the same
+    /// run would scale with `steps` instead.
+    pub fn buffered_bytes(&self) -> usize {
+        match self {
+            TraceSource::Materialized(tr) => tr
+                .iter()
+                .map(|t| t.len() * t.dim() * std::mem::size_of::<f64>())
+                .sum(),
+            TraceSource::Streaming(s) => s.ring_bytes(),
+        }
+    }
+
     /// Metric vector of `node` at `step`. Streaming: `step` must lie
     /// within the sliding window (never more than `lookahead` past the
     /// newest step read so far, never behind the window's tail).
@@ -184,6 +200,11 @@ impl StreamingFleet {
     /// horizon-proportional).
     pub fn buffered_len(&self) -> usize {
         self.ring.len()
+    }
+
+    /// Ring footprint in bytes (`nodes × window × dim × 8`).
+    pub fn ring_bytes(&self) -> usize {
+        self.ring.len() * std::mem::size_of::<f64>()
     }
 
     pub fn window(&self) -> usize {
@@ -372,6 +393,26 @@ mod tests {
         // 4 nodes × (5 + 2) window slots × 52 dims — horizon-independent.
         assert_eq!(fleet.window(), 7);
         assert_eq!(fleet.buffered_len(), 4 * 7 * 52);
+        assert_eq!(fleet.ring_bytes(), 4 * 7 * 52 * 8);
+        assert_eq!(src.buffered_bytes(), 4 * 7 * 52 * 8);
+    }
+
+    #[test]
+    fn materialized_buffered_bytes_scale_with_the_horizon() {
+        // The footprint contrast behind the 100k-node scale row: the
+        // streaming ring is horizon-independent, materialized storage
+        // is not.
+        let g = generator();
+        let steps = 50;
+        let traces: Vec<VmTrace> = members(2)
+            .iter()
+            .map(|&(c, v)| g.generate_vm_in_cluster(c, v, steps))
+            .collect();
+        let dim = traces[0].dim();
+        let src = TraceSource::materialized(traces);
+        assert_eq!(src.buffered_bytes(), 2 * steps * dim * 8);
+        let stream = TraceSource::streaming(&g, &members(2), steps, 5);
+        assert!(stream.buffered_bytes() < src.buffered_bytes());
     }
 
     #[test]

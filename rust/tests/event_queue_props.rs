@@ -254,6 +254,57 @@ fn events_scheduled_mid_batch_land_in_a_later_batch() {
 }
 
 #[test]
+fn drain_tick_into_reuses_a_caller_owned_batch_across_queues() {
+    // The allocation-churn fix: `drain_tick_into` clears and refills the
+    // caller's `TickBatch` instead of building a fresh one per tick. The
+    // same buffer must be safely reusable across drains *and across
+    // queues* — stale contents from a previous (larger) batch may never
+    // leak into a later one.
+    forall("drain_tick_into: caller-owned buffer, no stale events", |rng| {
+        let mut big = EventQueue::with_capacity(64);
+        let mut small = EventQueue::with_capacity(8);
+        let t = rng.gen_range(500) as SimTime;
+        let wide = 10 + rng.gen_range(40);
+        for i in 0..wide {
+            big.schedule(t, tagged(i));
+        }
+        let narrow = 1 + rng.gen_range(5);
+        for i in 0..narrow {
+            small.schedule(t + 1, tagged(1_000 + i));
+        }
+        let mut batch = TickBatch::default();
+        if !big.drain_tick_into(&mut batch) || batch.len() != wide {
+            return Err(format!("wide drain returned {} of {wide}", batch.len()));
+        }
+        // Refill the same buffer from the other queue: old events gone,
+        // new ones in schedule order.
+        if !small.drain_tick_into(&mut batch) {
+            return Err("narrow drain missing".into());
+        }
+        if batch.len() != narrow || batch.time() != t + 1 {
+            return Err(format!(
+                "stale batch state: {} events at t={}",
+                batch.len(),
+                batch.time()
+            ));
+        }
+        let tags: Vec<usize> = batch.events().iter().map(|s| untag(s.event)).collect();
+        let want: Vec<usize> = (1_000..1_000 + narrow).collect();
+        if tags != want {
+            return Err(format!("refill order {tags:?} != {want:?}"));
+        }
+        // Exhausted queues report false and leave the batch empty.
+        if big.drain_tick_into(&mut batch) {
+            return Err("drained queue reported another batch".into());
+        }
+        if !batch.is_empty() {
+            return Err("failed drain left stale events in the batch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn step_tick_conversions_roundtrip_for_arbitrary_steps() {
     forall("step↔tick round-trip", |rng| {
         // Any step a realistic run could reach (u64 ticks cap the step

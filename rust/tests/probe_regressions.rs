@@ -12,7 +12,8 @@ use pronto::proptest::forall;
 use pronto::rng::Xoshiro256;
 use pronto::scheduler::{Admission, JobOutcome, RandomPolicy};
 use pronto::sim::{
-    sample_distinct, ArrivalPattern, ChurnModel, DiscreteEventEngine, ProbePolicy, Scenario,
+    sample_distinct, ArrivalPattern, ChurnModel, DiscreteEventEngine, ProbePolicy,
+    SampleScratch, Scenario,
 };
 use pronto::telemetry::{GeneratorConfig, TraceGenerator, VmTrace};
 
@@ -130,7 +131,7 @@ fn sample_distinct_is_complete_at_the_fallback_boundary() {
         };
         let avail = pool_len - usize::from(exclude.is_some());
         let mut out = Vec::new();
-        let mut scratch = Vec::new();
+        let mut scratch = SampleScratch::default();
         for want in [avail.saturating_sub(1), avail, avail + 3] {
             let mut a = Xoshiro256::seed_from_u64(rng.next_u64());
             let mut b = a.clone();
@@ -176,12 +177,111 @@ fn sample_distinct_dense_draws_are_permutations_across_seeds() {
     // seed, not just the one the unit test happens to use.
     let pool: Vec<usize> = (0..96).collect();
     let mut out = Vec::new();
-    let mut scratch = Vec::new();
+    let mut scratch = SampleScratch::default();
     for seed in 0..200u64 {
         let mut rng = Xoshiro256::seed_from_u64(seed);
         sample_distinct(&mut rng, &pool, None, pool.len(), &mut out, &mut scratch);
         let mut sorted = out.clone();
         sorted.sort_unstable();
         assert_eq!(sorted, pool, "seed {seed}: dense draw is not a permutation");
+    }
+}
+
+#[test]
+fn sample_distinct_scales_to_hundred_k_alive_sets() {
+    // The 100k-node audit. Two historical hazards at this scale:
+    //
+    // * the membership test inside the rejection loop and the fallback
+    //   filter used to scan the pool/draw (`out.contains`, a linear probe
+    //   per candidate) — quadratic once `want` tracks the pool size, which
+    //   turned a single dense 100k draw into ~10^10 comparisons. The
+    //   stamp-epoch scratch makes both O(1) per candidate, so this test
+    //   finishes in milliseconds where the old code would hang.
+    // * the `4·want + 8` rejection budget collapsing for tiny `want`
+    //   against a huge alive set — the sparse draw below must still fill
+    //   from rejection sampling or complete exactly via the fallback.
+    let n = 100_000;
+    let pool: Vec<usize> = (0..n).collect();
+    let mut out = Vec::new();
+    let mut scratch = SampleScratch::default();
+
+    // Sparse fan-out (the PowerOfK hot path at fleet scale).
+    let mut rng = Xoshiro256::seed_from_u64(9);
+    let mut twin = rng.clone();
+    sample_distinct(&mut rng, &pool, Some(17), 8, &mut out, &mut scratch);
+    assert_eq!(out.len(), 8);
+    let mut sorted = out.clone();
+    sorted.sort_unstable();
+    sorted.dedup();
+    assert_eq!(sorted.len(), 8, "duplicates in sparse draw: {out:?}");
+    assert!(!out.contains(&17), "excluded id drawn");
+    let mut again = Vec::new();
+    sample_distinct(&mut twin, &pool, Some(17), 8, &mut again, &mut scratch);
+    assert_eq!(again, out, "sparse 100k draw not deterministic");
+
+    // Dense draw: the guaranteed Fisher–Yates fallback at 100k.
+    let mut rng = Xoshiro256::seed_from_u64(10);
+    sample_distinct(&mut rng, &pool, None, n, &mut out, &mut scratch);
+    assert_eq!(out.len(), n);
+    let mut sorted = out.clone();
+    sorted.sort_unstable();
+    assert_eq!(sorted, pool, "dense 100k draw is not a permutation");
+
+    // Back-to-back reuse of the same scratch (epoch bump, no clearing)
+    // must not leak stamps between draws.
+    let mut rng = Xoshiro256::seed_from_u64(11);
+    sample_distinct(&mut rng, &pool, None, 5, &mut out, &mut scratch);
+    assert_eq!(out.len(), 5);
+}
+
+#[test]
+fn round_robin_cursor_survives_mass_churn_at_scale() {
+    // Engine-level companion to the FleetState unit tests: a 48-node
+    // fleet drained to a 4-node floor under heavy hazard while the
+    // round-robin cursor keeps rotating. Every window of `min_alive`
+    // consecutive tail placements must be a full rotation over the same
+    // survivor set — cursor drift under mass leave/join (rank-shift bugs
+    // in the dense alive index) shows up as repeats or starvation.
+    let min_alive = 4;
+    let nodes = 48;
+    let sc = Scenario {
+        probe: ProbePolicy::RoundRobin,
+        arrivals: ArrivalPattern::Poisson { rate: 1.5 },
+        churn: Some(ChurnModel {
+            leave_hazard: 0.6,
+            rejoin_delay_mean: 0.0, // leavers never come back
+            min_alive,
+        }),
+        ..Scenario::default()
+    }
+    .with_nodes(nodes)
+    .with_steps(1_200);
+    let tr = fleet(nodes, 1_200, 47);
+    let report = DiscreteEventEngine::new(sc, tr.clone(), always(&tr)).run();
+    assert_eq!(
+        report.node_leaves,
+        nodes - min_alive,
+        "fleet must drain to the floor for the regression to bite"
+    );
+    let placed: Vec<usize> = report
+        .outcomes
+        .iter()
+        .filter_map(|o| match o {
+            JobOutcome::Accepted { node, .. } => Some(*node),
+            _ => None,
+        })
+        .collect();
+    assert!(placed.len() > 300, "load too thin: {}", placed.len());
+    let tail = &placed[placed.len() - 10 * min_alive..];
+    let survivor_set = |w: &[usize]| {
+        let mut s: Vec<usize> = w.to_vec();
+        s.sort_unstable();
+        s.dedup();
+        s
+    };
+    let survivors = survivor_set(&tail[..min_alive]);
+    assert_eq!(survivors.len(), min_alive, "rotation repeated a host: {:?}", &tail[..min_alive]);
+    for w in tail.windows(min_alive) {
+        assert_eq!(survivor_set(w), survivors, "survivor starved out of a window: {w:?}");
     }
 }

@@ -1,0 +1,262 @@
+//! Wheel-vs-heap equivalence: the hierarchical timing wheel must be an
+//! exact drop-in for the historical binary-heap event queue.
+//!
+//! Two layers of evidence:
+//!
+//! * queue-level property tests — randomized interleaved
+//!   (time, event) schedules, drains, and pops produce the *identical*
+//!   sequence from both backings (`EventQueue::with_backing`), with time
+//!   offsets spanning every wheel level, the far-future heap, and the
+//!   past-schedule path;
+//! * engine-level byte identity — every catalog scenario produces
+//!   byte-identical `SimReport` JSON under `PRONTO_EVENT_QUEUE=heap` and
+//!   the default wheel, at observe-pool widths 1 and 4.
+//!
+//! Seeded and replayable via `PRONTO_PROP_SEED` / `PRONTO_PROP_CASES`.
+
+use pronto::proptest::forall;
+use pronto::scheduler::{Admission, RandomPolicy};
+use pronto::sim::{
+    DiscreteEventEngine, Event, EventQueue, QueueBacking, Scenario, SimTime, TickBatch, CATALOG,
+};
+use pronto::telemetry::{GeneratorConfig, TraceGenerator, VmTrace};
+
+fn tagged(i: usize) -> Event {
+    Event::NodeJoin { node: i }
+}
+
+fn untag(e: Event) -> usize {
+    match e {
+        Event::NodeJoin { node } => node,
+        other => panic!("unexpected event {other:?}"),
+    }
+}
+
+/// Offsets spanning the wheel's structure: level 0 (< 2^10 ticks),
+/// level 1 (< 2^20), level 2 (< 2^30), and the far-future heap beyond.
+fn span_offset(rng: &mut pronto::rng::Xoshiro256, magnitude: usize) -> SimTime {
+    match magnitude {
+        0 => rng.gen_range(40) as SimTime,
+        1 => rng.gen_range(200_000) as SimTime,
+        2 => rng.gen_range(200_000_000) as SimTime,
+        _ => rng.gen_range(20_000_000_000) as SimTime,
+    }
+}
+
+#[test]
+fn interleaved_schedule_pop_sequences_match_across_backings() {
+    forall("wheel ≡ heap: interleaved schedule/pop, all levels", |rng| {
+        let mut wheel = EventQueue::with_backing(64, QueueBacking::Wheel);
+        let mut heap = EventQueue::with_backing(64, QueueBacking::Heap);
+        let rounds = 1 + rng.gen_range(24);
+        let mut next_tag = 0usize;
+        // The engine's clock contract: schedules never land before the
+        // last pop. `floor` tracks it so both queues see legal input.
+        let mut floor: SimTime = 0;
+        let mut scheduled = 0usize;
+        let mut popped = 0usize;
+        for _ in 0..rounds {
+            for _ in 0..(1 + rng.gen_range(12)) {
+                let mag = rng.gen_range(4);
+                let t = floor + span_offset(rng, mag);
+                wheel.schedule(t, tagged(next_tag));
+                heap.schedule(t, tagged(next_tag));
+                next_tag += 1;
+                scheduled += 1;
+            }
+            for _ in 0..rng.gen_range(10) {
+                let (a, b) = (wheel.pop(), heap.pop());
+                match (a, b) {
+                    (None, None) => break,
+                    (Some(x), Some(y)) => {
+                        if x.time != y.time || untag(x.event) != untag(y.event) {
+                            return Err(format!(
+                                "divergence at pop {popped}: wheel ({}, {}) vs heap ({}, {})",
+                                x.time,
+                                untag(x.event),
+                                y.time,
+                                untag(y.event)
+                            ));
+                        }
+                        floor = x.time;
+                        popped += 1;
+                    }
+                    (x, y) => {
+                        return Err(format!("one backing drained early: {x:?} vs {y:?}"))
+                    }
+                }
+            }
+        }
+        loop {
+            match (wheel.pop(), heap.pop()) {
+                (None, None) => break,
+                (Some(x), Some(y))
+                    if x.time == y.time && untag(x.event) == untag(y.event) =>
+                {
+                    popped += 1;
+                }
+                (x, y) => return Err(format!("drain divergence: {x:?} vs {y:?}")),
+            }
+        }
+        if popped != scheduled {
+            return Err(format!("lost events: {popped} of {scheduled}"));
+        }
+        if wheel.len() != 0 || heap.len() != 0 {
+            return Err("a backing still reports queued events".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn past_schedules_match_across_backings() {
+    // `EventQueue` tolerates schedules below the last popped time (the
+    // wheel routes them through its past-heap). Both backings must order
+    // such sequences identically — this is deliberately *outside* the
+    // engine's clock contract to pin the wheel's past path against the
+    // heap oracle.
+    forall("wheel ≡ heap: below-cursor schedules", |rng| {
+        let mut wheel = EventQueue::with_backing(16, QueueBacking::Wheel);
+        let mut heap = EventQueue::with_backing(16, QueueBacking::Heap);
+        let n = 2 + rng.gen_range(60);
+        let mut tag = 0usize;
+        // Advance both cursors first so "past" exists.
+        let warm = 1_000 + rng.gen_range(5_000) as SimTime;
+        wheel.schedule(warm, tagged(tag));
+        heap.schedule(warm, tagged(tag));
+        tag += 1;
+        let (a, b) = (wheel.pop().unwrap(), heap.pop().unwrap());
+        assert_eq!((a.time, untag(a.event)), (b.time, untag(b.event)));
+        for _ in 0..n {
+            // Mix of past, at-cursor, and future times.
+            let t = rng.gen_range(2 * warm as usize + 1) as SimTime;
+            wheel.schedule(t, tagged(tag));
+            heap.schedule(t, tagged(tag));
+            tag += 1;
+        }
+        loop {
+            match (wheel.pop(), heap.pop()) {
+                (None, None) => break,
+                (Some(x), Some(y))
+                    if x.time == y.time && untag(x.event) == untag(y.event) => {}
+                (x, y) => return Err(format!("past-path divergence: {x:?} vs {y:?}")),
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn drain_tick_batches_match_across_backings_with_mid_batch_schedules() {
+    // The engine's actual consumption pattern: batched tick drains with
+    // same-timestamp follow-ups scheduled between drains. Batches must
+    // agree event-for-event across backings.
+    forall("wheel ≡ heap: drain_tick with follow-ups", |rng| {
+        let mut wheel = EventQueue::with_backing(32, QueueBacking::Wheel);
+        let mut heap = EventQueue::with_backing(32, QueueBacking::Heap);
+        let n = 1 + rng.gen_range(200);
+        let mut tag = 0usize;
+        for _ in 0..n {
+            let mag = rng.gen_range(3);
+            let t = span_offset(rng, mag);
+            wheel.schedule(t, tagged(tag));
+            heap.schedule(t, tagged(tag));
+            tag += 1;
+        }
+        let mut wb = TickBatch::default();
+        let mut hb = TickBatch::default();
+        let mut drained = 0usize;
+        loop {
+            let (wa, ha) = (wheel.drain_tick(&mut wb), heap.drain_tick(&mut hb));
+            if wa != ha {
+                return Err(format!("drain_tick availability diverged at batch {drained}"));
+            }
+            if !wa {
+                break;
+            }
+            if wb.time() != hb.time() || wb.len() != hb.len() {
+                return Err(format!(
+                    "batch {drained} shape diverged: t={} n={} vs t={} n={}",
+                    wb.time(),
+                    wb.len(),
+                    hb.time(),
+                    hb.len()
+                ));
+            }
+            for (x, y) in wb.events().iter().zip(hb.events()) {
+                if untag(x.event) != untag(y.event) {
+                    return Err(format!(
+                        "batch {drained} order diverged: {} vs {}",
+                        untag(x.event),
+                        untag(y.event)
+                    ));
+                }
+            }
+            // Occasionally enqueue same-tick follow-ups mid-batch, like
+            // enqueue → start chains do.
+            if rng.bernoulli(0.3) {
+                for _ in 0..(1 + rng.gen_range(4)) {
+                    wheel.schedule(wb.time(), tagged(tag));
+                    heap.schedule(hb.time(), tagged(tag));
+                    tag += 1;
+                }
+            }
+            drained += 1;
+        }
+        if wheel.len() != 0 || heap.len() != 0 {
+            return Err("undrained events left behind".into());
+        }
+        Ok(())
+    });
+}
+
+fn fleet(n: usize, steps: usize, seed: u64) -> Vec<VmTrace> {
+    let gen = TraceGenerator::new(GeneratorConfig::default(), seed);
+    (0..n).map(|v| gen.generate_vm_in_cluster(v / 4, v, steps)).collect()
+}
+
+fn policies(n: usize, seed: u64) -> Vec<Box<dyn Admission>> {
+    (0..n)
+        .map(|i| Box::new(RandomPolicy::new(0.3, seed ^ i as u64)) as Box<dyn Admission>)
+        .collect()
+}
+
+#[test]
+fn every_catalog_scenario_is_byte_identical_under_both_backings() {
+    // The acceptance criterion of the wheel work: the full scenario
+    // catalog, at observe-pool widths 1 and 4, produces byte-identical
+    // reports whether the engine's queue is the wheel (default) or the
+    // heap oracle (PRONTO_EVENT_QUEUE=heap).
+    //
+    // The backing is selected per-queue at construction from the
+    // environment, so the env var is flipped around each heap run. This
+    // is the *only* test in this binary that touches the variable or
+    // runs engines, so the process-global mutation cannot race another
+    // test's queue construction.
+    let nodes = 6;
+    let steps = 800;
+    let run = |name: &str, threads: usize| {
+        let scenario = Scenario::named(name)
+            .unwrap()
+            .with_nodes(nodes)
+            .with_steps(steps)
+            .with_seed(0xFEED)
+            .with_threads(threads);
+        let tr = fleet(nodes, steps, 31);
+        DiscreteEventEngine::new(scenario, tr, policies(nodes, 77)).run()
+    };
+    for name in CATALOG {
+        for threads in [1, 4] {
+            std::env::remove_var("PRONTO_EVENT_QUEUE");
+            let wheel = run(name, threads);
+            std::env::set_var("PRONTO_EVENT_QUEUE", "heap");
+            let heap = run(name, threads);
+            std::env::remove_var("PRONTO_EVENT_QUEUE");
+            assert_eq!(
+                wheel.to_json_string(),
+                heap.to_json_string(),
+                "scenario '{name}' at {threads} threads: wheel and heap reports differ"
+            );
+        }
+    }
+}
