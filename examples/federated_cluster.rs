@@ -24,7 +24,9 @@ fn main() {
     println!("tree levels above leaves: {}", topo.levels());
 
     let fed = ConcurrentFederation::new(topo, 4, 0.5).with_push_every(64);
-    let report = fed.run(traces);
+    // `run()` is wall-clock-free (determinism invariant); time it here.
+    let started = std::time::Instant::now();
+    let report = fed.run(traces).with_wall(started.elapsed());
 
     println!("\nfederation report");
     println!("  wall time            : {:?}", report.wall);

@@ -8,6 +8,10 @@
 //! streams it through a PRONTO node (FPCA-Edge + Reject-Job), and prints
 //! the admission timeline plus summary statistics.
 
+// Index loops over parallel same-length arrays are the house style
+// here; see the scoped allow note in rust/src/lib.rs.
+#![allow(clippy::needless_range_loop)]
+
 use pronto::scheduler::{NodeScheduler, RejectConfig};
 use pronto::telemetry::{GeneratorConfig, TraceGenerator};
 

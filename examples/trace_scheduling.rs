@@ -16,6 +16,10 @@
 //! downtime, placement quality vs the always-accept and oracle baselines,
 //! plus decision latency. Results are recorded in EXPERIMENTS.md §E2E.
 
+// Index loops over parallel same-length arrays are the house style
+// here; see the scoped allow note in rust/src/lib.rs.
+#![allow(clippy::needless_range_loop)]
+
 use pronto::baselines::StreamingEmbedding;
 use pronto::fpca::{FpcaEdge, FpcaEdgeConfig};
 use pronto::scheduler::{

@@ -9,6 +9,10 @@
 //! Metric: fleet mean prediction rate (≥1 left-sided raise per CPU Ready
 //! spike) and mean downtime — the Figure 6/7 axes.
 
+// Index loops over parallel same-length arrays are the house style
+// here; see the scoped allow note in rust/src/lib.rs.
+#![allow(clippy::needless_range_loop)]
+
 use pronto::bench::Table;
 use pronto::fpca::{FpcaEdge, FpcaEdgeConfig};
 use pronto::scheduler::{NodeScheduler, RejectConfig};

@@ -4,6 +4,10 @@
 //! `PRONTO_BENCH_CSV_DIR` to capture the CSV for plotting. The paper's
 //! point: none of the offline methods track the spikes.
 
+// Index loops over parallel same-length arrays are the house style
+// here; see the scoped allow note in rust/src/lib.rs.
+#![allow(clippy::needless_range_loop)]
+
 use pronto::bench::Table;
 use pronto::forecast::{ExpSmoothing, Forecaster, LinearSvr, Naive};
 use pronto::metrics::rmse;

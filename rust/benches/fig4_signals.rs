@@ -4,6 +4,10 @@
 //! Emits the projection series and the (rejection, ready-spike) timeline;
 //! the claim to verify: rejection raises precede CPU Ready spikes.
 
+// Index loops over parallel same-length arrays are the house style
+// here; see the scoped allow note in rust/src/lib.rs.
+#![allow(clippy::needless_range_loop)]
+
 use pronto::bench::Table;
 use pronto::scheduler::{NodeScheduler, RejectConfig};
 use pronto::telemetry::{GeneratorConfig, TraceGenerator};

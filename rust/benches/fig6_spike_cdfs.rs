@@ -4,6 +4,10 @@
 //! Paper shape: left-sided counts dominate right-sided; PRONTO and FD
 //! find the most left-sided spikes, then PM and SP.
 
+// Index loops over parallel same-length arrays are the house style
+// here; see the scoped allow note in rust/src/lib.rs.
+#![allow(clippy::needless_range_loop)]
+
 use pronto::bench::experiments::{figure67_fleets, ExperimentScale};
 use pronto::bench::Table;
 use pronto::sim::EvalConfig;

@@ -26,7 +26,9 @@ fn main() {
             .collect();
         let fed = ConcurrentFederation::new(TreeTopology::new(n, 16), 4, 0.5)
             .with_push_every(64);
-        let report = fed.run(traces);
+        // `run()` is wall-clock-free (determinism invariant); time it here.
+        let started = std::time::Instant::now();
+        let report = fed.run(traces).with_wall(started.elapsed());
         let thr = report.throughput();
         if n == 1 {
             base = thr;

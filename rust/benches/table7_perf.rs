@@ -7,6 +7,10 @@
 //! exactly as §7.2 prescribes. Memory is the resident state the method
 //! owns (reported analytically — Rust has no interpreter slack).
 
+// Index loops over parallel same-length arrays are the house style
+// here; see the scoped allow note in rust/src/lib.rs.
+#![allow(clippy::needless_range_loop)]
+
 use pronto::baselines::*;
 use pronto::bench::{Bencher, Sample, Table};
 use pronto::fpca::{FpcaEdge, FpcaEdgeConfig};

@@ -15,6 +15,7 @@
 //!                   [--steps N] [--seed S] [--scenarios a,b,c] [--threads N]
 //! pronto bench diff OLD.json NEW.json [--max-regress PCT]
 //! pronto bench-tables [--table 1..3] [--quick]
+//! pronto lint       [--json] [PATHS…] — determinism & safety static analysis
 //! pronto inspect    [--compile] — artifact manifest + compile check
 //! ```
 
@@ -62,6 +63,11 @@ COMMANDS:
                 `bench diff OLD NEW --max-regress PCT` gates on events/s
                 regressions between two artifacts)
   bench-tables  regenerate the paper tables (see also cargo bench)
+  lint          determinism & safety static analysis over the source tree
+                (wall-clock, rng-discipline, unordered-iter, env-registry,
+                unsafe-audit, schema-pin; --json for machine output;
+                exits non-zero on findings — see README for the rule
+                table and `pronto-lint: allow(...)` pragma syntax)
   serve         stream trace CSVs through node pipelines, emit decisions
   inspect       show the AOT artifact manifest and compile status
   help          show this message
@@ -96,6 +102,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "federate" => cmd_federate(rest),
         "bench" => cmd_bench(rest),
         "bench-tables" => cmd_bench_tables(rest),
+        "lint" => cmd_lint(rest),
         "serve" => cmd_serve(rest),
         "inspect" => cmd_inspect(rest),
         "help" | "--help" | "-h" => {
@@ -167,15 +174,16 @@ fn make_policy(
             cfg.reject,
         ))),
         // PM's oversampled sketch is the one randomized baseline; it
-        // draws from dedicated stream 10 (the engine owns 1-9) so
-        // adjacent nodes decorrelate — the historical `seed ^ idx` left
-        // neighbours sharing most of their SplitMix64 state.
+        // draws from the dedicated PM_BASELINE stream (the engine owns
+        // ARRIVALS..HETERO) so adjacent nodes decorrelate — the
+        // historical `seed ^ idx` left neighbours sharing most of
+        // their generator state.
         "pm" => Box::new(ProntoPolicy::new(NodeScheduler::with_embedding(
             BlockPowerMethod::new(
                 d,
                 cfg.fpca.initial_rank,
                 d,
-                crate::rng::node_stream_seed(cfg.seed, 10, idx),
+                crate::rng::node_stream_seed(cfg.seed, crate::rng::streams::PM_BASELINE, idx),
             ),
             cfg.reject,
         ))),
@@ -576,7 +584,7 @@ fn cmd_eval(raw: &[String]) -> Result<()> {
                     d,
                     cfg.fpca.initial_rank,
                     d,
-                    crate::rng::node_stream_seed(cfg.seed, 10, i),
+                    crate::rng::node_stream_seed(cfg.seed, crate::rng::streams::PM_BASELINE, i),
                 ),
                 tr,
                 &eval_cfg,
@@ -748,7 +756,10 @@ fn cmd_federate(raw: &[String]) -> Result<()> {
     )
     .with_push_every(cfg.push_every)
     .with_latency(cfg.push_latency, cfg.seed);
-    let report = fed.run(traces);
+    // Timing belongs to the CLI: `run()` itself is wall-clock-free so
+    // the federation path stays deterministic.
+    let started = std::time::Instant::now();
+    let report = fed.run(traces).with_wall(started.elapsed());
     println!(
         "federation: {} leaves, {} steps each",
         report.leaves, report.steps_per_leaf
@@ -882,9 +893,6 @@ fn cmd_bench_diff(args: &Args) -> Result<()> {
 fn cmd_bench_tables(raw: &[String]) -> Result<()> {
     let args = Args::parse(raw, &["quick"])?;
     args.reject_unknown(&["table"])?;
-    if args.flag("quick") {
-        std::env::set_var("PRONTO_BENCH_QUICK", "1");
-    }
     let which = args.get("table").map(|s| s.to_string());
     println!(
         "bench-tables regenerates the paper tables inline; the full harness\n\
@@ -892,7 +900,13 @@ fn cmd_bench_tables(raw: &[String]) -> Result<()> {
         which.as_deref().unwrap_or("1-3")
     );
     use crate::bench::experiments::*;
-    let scale = ExperimentScale::from_env();
+    // `--quick` selects the scale directly rather than mutating the
+    // process environment (env-registry lint: `set_var` races threads).
+    let scale = if args.flag("quick") {
+        ExperimentScale::quick()
+    } else {
+        ExperimentScale::from_env()
+    };
     let sel = |n: &str| which.is_none() || which.as_deref() == Some(n);
     if sel("1") {
         println!("\nTable 1 (RMSE):");
@@ -914,6 +928,33 @@ fn cmd_bench_tables(raw: &[String]) -> Result<()> {
             let vals: Vec<String> = cells.iter().map(|c| format!("{c:.1}")).collect();
             println!("  {name:<12} {}", vals.join("  "));
         }
+    }
+    Ok(())
+}
+
+/// `pronto lint [--json] [PATHS…]`: the determinism & safety
+/// static-analysis pass over the source tree. Defaults to linting the
+/// current directory; CI runs it from `rust/` as
+/// `pronto lint --json . ../examples`. Exits non-zero (via the error
+/// path) when any finding survives pragma filtering, so the CI job is
+/// blocking by construction.
+fn cmd_lint(raw: &[String]) -> Result<()> {
+    let args = Args::parse(raw, &["json"])?;
+    args.reject_unknown(&[])?;
+    let roots: Vec<std::path::PathBuf> = if args.positional().is_empty() {
+        vec![std::path::PathBuf::from(".")]
+    } else {
+        args.positional().iter().map(std::path::PathBuf::from).collect()
+    };
+    let report = crate::lint::lint_tree(&roots)
+        .with_context(|| format!("linting {roots:?}"))?;
+    if args.flag("json") {
+        println!("{}", report.to_json());
+    } else {
+        print!("{}", report.render_text());
+    }
+    if !report.is_clean() {
+        bail!("pronto lint: {} finding(s)", report.findings.len());
     }
     Ok(())
 }

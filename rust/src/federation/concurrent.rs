@@ -16,7 +16,6 @@ use crate::scheduler::{NodeScheduler, RejectConfig};
 use crate::telemetry::VmTrace;
 use std::sync::mpsc;
 use std::thread;
-use std::time::Instant;
 
 /// Message sent up the tree: a leaf/aggregator summary.
 struct Summary {
@@ -41,12 +40,28 @@ pub struct FederationReport {
     pub rejected_steps: usize,
     /// The merged global view at the root.
     pub global_view: Subspace,
-    /// Wall-clock duration of the whole run.
+    /// Wall-clock duration of the whole run, as stamped by the *caller*
+    /// via [`FederationReport::with_wall`]. [`ConcurrentFederation::run`]
+    /// itself never reads the clock — the deterministic federation path
+    /// is wall-clock-free (`pronto lint` enforces this) — so this is
+    /// `Duration::ZERO` unless a timing-permitted caller (bench/CLI)
+    /// stamps it.
     pub wall: std::time::Duration,
 }
 
 impl FederationReport {
-    /// Aggregate throughput in observations/second.
+    /// Stamp the caller-measured wall-clock duration onto the report.
+    /// Timing lives with callers in `bench`/`cli`, where wall-clock
+    /// reads are permitted; the federation run itself stays
+    /// deterministic.
+    pub fn with_wall(mut self, wall: std::time::Duration) -> Self {
+        self.wall = wall;
+        self
+    }
+
+    /// Aggregate throughput in observations/second. Meaningful only
+    /// after [`Self::with_wall`]; with the default zero duration the
+    /// `1e-9` floor makes this a large-but-finite placeholder.
     pub fn throughput(&self) -> f64 {
         (self.leaves * self.steps_per_leaf) as f64 / self.wall.as_secs_f64().max(1e-9)
     }
@@ -106,7 +121,6 @@ impl ConcurrentFederation {
         let steps_per_leaf = traces.iter().map(|t| t.len()).min().unwrap_or(0);
         let fanout = self.topo.fanout;
         let groups = self.topo.leaves.div_ceil(fanout);
-        let start = Instant::now();
 
         // Channels: leaves → their group aggregator; aggregators → root.
         let (root_tx, root_rx) = mpsc::channel::<Summary>();
@@ -150,7 +164,11 @@ impl ConcurrentFederation {
             let push_every = self.push_every;
             let cfg = self.reject_cfg;
             let latency = self.latency;
-            let latency_seed = self.latency_seed ^ (leaf as u64).wrapping_mul(0x9E37_79B9);
+            let latency_seed = crate::rng::node_stream_seed(
+                self.latency_seed,
+                crate::rng::streams::CONCURRENT_PUSH_LATENCY,
+                leaf,
+            );
             leaf_handles.push(thread::spawn(move || {
                 let mut node = NodeScheduler::new(trace.dim(), cfg);
                 let mut lat_rng = Xoshiro256::seed_from_u64(latency_seed);
@@ -247,7 +265,7 @@ impl ConcurrentFederation {
             late_drops,
             rejected_steps,
             global_view,
-            wall: start.elapsed(),
+            wall: std::time::Duration::ZERO,
         }
     }
 }
@@ -313,6 +331,30 @@ mod tests {
         assert_eq!(report.pushes, 0);
         assert!(report.late_drops > 0);
         assert!(report.global_view.is_empty());
+    }
+
+    #[test]
+    fn run_is_wall_clock_free_and_repeatable() {
+        // Regression for the `Instant::now()` that used to live inside
+        // `run()`: the report must come back with a zero wall (no clock
+        // was read), the caller stamps timing via `with_wall`, and two
+        // identical runs agree on every counting field.
+        let mk = || {
+            ConcurrentFederation::new(TreeTopology::new(4, 4), 4, 0.0)
+                .with_push_every(32)
+                .with_latency(LatencyModel::Exponential { mean_steps: 24.0 }, 99)
+                .run(traces(4, 512, 99))
+        };
+        let a = mk();
+        assert_eq!(a.wall, std::time::Duration::ZERO);
+        let stamped = mk().with_wall(std::time::Duration::from_secs(2));
+        assert_eq!(stamped.wall, std::time::Duration::from_secs(2));
+        assert!((stamped.throughput() - (4.0 * 512.0) / 2.0).abs() < 1e-9);
+        let b = mk();
+        assert_eq!(a.pushes, b.pushes);
+        assert_eq!(a.suppressed, b.suppressed);
+        assert_eq!(a.late_drops, b.late_drops);
+        assert_eq!(a.rejected_steps, b.rejected_steps);
     }
 
     #[test]

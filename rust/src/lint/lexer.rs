@@ -1,0 +1,488 @@
+//! A lightweight Rust tokenizer for the lint pass.
+//!
+//! This is not a full Rust lexer — it only needs to be precise about the
+//! things the rules care about: identifiers, integer literals, string
+//! literals (including raw and byte strings), and comments (line, block,
+//! doc), each stamped with its 1-based source line. Everything else is
+//! emitted as single-character [`TokenKind::Punct`] tokens, which is
+//! enough to pattern-match call shapes like `insert("key"` or
+//! `stream_seed(seed, 3)` without building an AST. Crucially it never
+//! confuses the *contents* of strings or comments with code, so a comment
+//! mentioning `Instant::now()` does not trip the wall-clock rule.
+
+/// Token classes the rule engine distinguishes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokenKind {
+    /// Identifier or keyword (`Instant`, `unsafe`, `insert`, ...).
+    Ident,
+    /// Integer literal, raw text preserved (`10`, `0x9E37_79B9`, `1u64`).
+    IntLit,
+    /// Float literal (`1.5`, `1e-9`, `2.0f64`).
+    FloatLit,
+    /// String literal; `text` holds the *unquoted* content with escape
+    /// sequences left as written (`\n` stays two characters).
+    StrLit,
+    /// Character or byte literal (`'a'`, `b'\n'`).
+    CharLit,
+    /// Lifetime (`'a` in `&'a str`).
+    Lifetime,
+    /// `// ...` comment (including `///` and `//!` doc comments);
+    /// `text` holds the full lexeme including the slashes.
+    LineComment,
+    /// `/* ... */` comment (nesting handled); `line` is the start line.
+    BlockComment,
+    /// Any other single character (`{`, `#`, `:`, ...).
+    Punct,
+}
+
+/// One lexed token with its 1-based start line.
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub kind: TokenKind,
+    pub text: String,
+    pub line: usize,
+}
+
+impl Token {
+    /// Comments carry pragmas and `SAFETY:` notes but are never code.
+    pub fn is_comment(&self) -> bool {
+        matches!(self.kind, TokenKind::LineComment | TokenKind::BlockComment)
+    }
+
+    pub fn is_ident(&self, name: &str) -> bool {
+        self.kind == TokenKind::Ident && self.text == name
+    }
+
+    pub fn is_punct(&self, ch: char) -> bool {
+        self.kind == TokenKind::Punct && self.text.len() == 1 && self.text.starts_with(ch)
+    }
+}
+
+/// Tokenize a source file. Never fails: unexpected bytes degrade to
+/// `Punct` tokens rather than aborting the lint of the whole file.
+pub fn lex(source: &str) -> Vec<Token> {
+    Lexer {
+        chars: source.chars().collect(),
+        pos: 0,
+        line: 1,
+        out: Vec::new(),
+    }
+    .run()
+}
+
+/// Parse an integer literal's numeric value: strips `_` separators,
+/// handles `0x`/`0o`/`0b` radix prefixes, and ignores a trailing type
+/// suffix (`u64`, `usize`, ...). Returns `None` for malformed text.
+pub fn int_value(text: &str) -> Option<u64> {
+    let t: String = text.chars().filter(|&c| c != '_').collect();
+    let lower = t.to_ascii_lowercase();
+    let (radix, digits) = if let Some(rest) = lower.strip_prefix("0x") {
+        (16, rest.to_string())
+    } else if let Some(rest) = lower.strip_prefix("0o") {
+        (8, rest.to_string())
+    } else if let Some(rest) = lower.strip_prefix("0b") {
+        (2, rest.to_string())
+    } else {
+        (10, lower)
+    };
+    let end = digits
+        .find(|c: char| !c.is_digit(radix))
+        .unwrap_or(digits.len());
+    let num = &digits[..end];
+    if num.is_empty() {
+        return None;
+    }
+    u64::from_str_radix(num, radix).ok()
+}
+
+struct Lexer {
+    chars: Vec<char>,
+    pos: usize,
+    line: usize,
+    out: Vec<Token>,
+}
+
+impl Lexer {
+    fn peek(&self, ahead: usize) -> Option<char> {
+        self.chars.get(self.pos + ahead).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.chars.get(self.pos).copied();
+        if let Some(c) = c {
+            self.pos += 1;
+            if c == '\n' {
+                self.line += 1;
+            }
+        }
+        c
+    }
+
+    fn push(&mut self, kind: TokenKind, text: String, line: usize) {
+        self.out.push(Token { kind, text, line });
+    }
+
+    fn run(mut self) -> Vec<Token> {
+        while let Some(c) = self.peek(0) {
+            if c.is_whitespace() {
+                self.bump();
+            } else if c == '/' && self.peek(1) == Some('/') {
+                self.line_comment();
+            } else if c == '/' && self.peek(1) == Some('*') {
+                self.block_comment();
+            } else if (c == 'r' || c == 'b') && self.string_prefix() {
+                // consumed a raw/byte string, raw ident, or byte char
+            } else if c == '"' {
+                self.string();
+            } else if c == '\'' {
+                self.quote();
+            } else if c.is_ascii_digit() {
+                self.number();
+            } else if c.is_alphabetic() || c == '_' {
+                self.ident();
+            } else {
+                let line = self.line;
+                self.bump();
+                self.push(TokenKind::Punct, c.to_string(), line);
+            }
+        }
+        self.out
+    }
+
+    fn line_comment(&mut self) {
+        let line = self.line;
+        let mut text = String::new();
+        while let Some(c) = self.peek(0) {
+            if c == '\n' {
+                break;
+            }
+            text.push(c);
+            self.bump();
+        }
+        self.push(TokenKind::LineComment, text, line);
+    }
+
+    fn block_comment(&mut self) {
+        let line = self.line;
+        let mut text = String::new();
+        let mut depth = 0usize;
+        while let Some(c) = self.peek(0) {
+            if c == '/' && self.peek(1) == Some('*') {
+                depth += 1;
+                text.push_str("/*");
+                self.bump();
+                self.bump();
+            } else if c == '*' && self.peek(1) == Some('/') {
+                depth = depth.saturating_sub(1);
+                text.push_str("*/");
+                self.bump();
+                self.bump();
+                if depth == 0 {
+                    break;
+                }
+            } else {
+                text.push(c);
+                self.bump();
+            }
+        }
+        self.push(TokenKind::BlockComment, text, line);
+    }
+
+    /// Handle the `r`/`b` prefixes: raw strings `r"…"` / `r#"…"#`, byte
+    /// strings `b"…"` / `br#"…"#`, byte chars `b'…'`, and raw idents
+    /// `r#ident`. Returns false when the `r`/`b` is just the start of an
+    /// ordinary identifier, leaving the cursor untouched.
+    fn string_prefix(&mut self) -> bool {
+        let first = self.peek(0).unwrap_or(' ');
+        let mut k = 1;
+        if first == 'b' {
+            match self.peek(1) {
+                Some('"') => {
+                    self.bump(); // 'b'
+                    self.string();
+                    return true;
+                }
+                Some('\'') => {
+                    self.bump(); // 'b'
+                    self.char_literal();
+                    return true;
+                }
+                Some('r') => k = 2,
+                _ => return false,
+            }
+        }
+        // At `r` (possibly after `b`): count hashes, expect a quote.
+        let mut hashes = 0;
+        while self.peek(k) == Some('#') {
+            hashes += 1;
+            k += 1;
+        }
+        match self.peek(k) {
+            Some('"') => {
+                self.raw_string(k, hashes);
+                true
+            }
+            Some(c) if first == 'r' && hashes == 1 && (c.is_alphabetic() || c == '_') => {
+                // Raw identifier `r#ident`: strip the prefix, lex the rest.
+                self.bump();
+                self.bump();
+                self.ident();
+                true
+            }
+            _ => false,
+        }
+    }
+
+    fn raw_string(&mut self, quote_at: usize, hashes: usize) {
+        let line = self.line;
+        for _ in 0..=quote_at {
+            self.bump(); // prefix chars + opening quote
+        }
+        let mut text = String::new();
+        while let Some(c) = self.peek(0) {
+            if c == '"' {
+                let mut all = true;
+                for h in 0..hashes {
+                    if self.peek(1 + h) != Some('#') {
+                        all = false;
+                        break;
+                    }
+                }
+                if all {
+                    self.bump(); // closing quote
+                    for _ in 0..hashes {
+                        self.bump();
+                    }
+                    break;
+                }
+            }
+            text.push(c);
+            self.bump();
+        }
+        self.push(TokenKind::StrLit, text, line);
+    }
+
+    fn string(&mut self) {
+        let line = self.line;
+        self.bump(); // opening quote
+        let mut text = String::new();
+        while let Some(c) = self.bump() {
+            if c == '\\' {
+                text.push(c);
+                if let Some(esc) = self.bump() {
+                    text.push(esc);
+                }
+            } else if c == '"' {
+                break;
+            } else {
+                text.push(c);
+            }
+        }
+        self.push(TokenKind::StrLit, text, line);
+    }
+
+    /// At a `'`: disambiguate lifetimes (`'a`) from char literals (`'x'`).
+    fn quote(&mut self) {
+        let next = self.peek(1);
+        let after = self.peek(2);
+        let is_lifetime = matches!(next, Some(c) if c.is_alphabetic() || c == '_')
+            && after != Some('\'');
+        if is_lifetime {
+            let line = self.line;
+            let mut text = String::from("'");
+            self.bump();
+            while let Some(c) = self.peek(0) {
+                if c.is_alphanumeric() || c == '_' {
+                    text.push(c);
+                    self.bump();
+                } else {
+                    break;
+                }
+            }
+            self.push(TokenKind::Lifetime, text, line);
+        } else {
+            self.char_literal();
+        }
+    }
+
+    fn char_literal(&mut self) {
+        let line = self.line;
+        let mut text = String::from("'");
+        self.bump(); // opening quote
+        // Bounded scan to the closing quote; escapes skip one char (and
+        // `\u{…}` skips to the brace close).
+        let mut guard = 0;
+        while let Some(c) = self.bump() {
+            guard += 1;
+            if guard > 16 {
+                break; // malformed; don't eat the file
+            }
+            if c == '\\' {
+                text.push(c);
+                match self.bump() {
+                    Some('u') => {
+                        text.push('u');
+                        if self.peek(0) == Some('{') {
+                            while let Some(u) = self.bump() {
+                                text.push(u);
+                                if u == '}' {
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                    Some(esc) => text.push(esc),
+                    None => break,
+                }
+            } else if c == '\'' {
+                text.push(c);
+                break;
+            } else {
+                text.push(c);
+            }
+        }
+        self.push(TokenKind::CharLit, text, line);
+    }
+
+    fn number(&mut self) {
+        let line = self.line;
+        let mut text = String::new();
+        let radix_prefix = self.peek(0) == Some('0')
+            && matches!(self.peek(1), Some('x' | 'X' | 'o' | 'b'));
+        text.push(self.bump().unwrap());
+        if radix_prefix {
+            text.push(self.bump().unwrap());
+        }
+        let mut is_float = false;
+        while let Some(c) = self.peek(0) {
+            if c.is_ascii_alphanumeric() || c == '_' {
+                if !radix_prefix && (c == 'e' || c == 'E') {
+                    // Exponent only when digits (or a signed digit) follow;
+                    // otherwise it's a suffix/ident boundary.
+                    let d1 = self.peek(1);
+                    let d2 = self.peek(2);
+                    let exp = matches!(d1, Some(d) if d.is_ascii_digit())
+                        || (matches!(d1, Some('+' | '-'))
+                            && matches!(d2, Some(d) if d.is_ascii_digit()));
+                    if exp {
+                        is_float = true;
+                        text.push(self.bump().unwrap());
+                        if matches!(self.peek(0), Some('+' | '-')) {
+                            text.push(self.bump().unwrap());
+                        }
+                        continue;
+                    }
+                }
+                text.push(self.bump().unwrap());
+            } else if c == '.'
+                && !radix_prefix
+                && !is_float
+                && matches!(self.peek(1), Some(d) if d.is_ascii_digit())
+            {
+                is_float = true;
+                text.push(self.bump().unwrap());
+            } else {
+                break;
+            }
+        }
+        let lower = text.to_ascii_lowercase();
+        let float = is_float || (!radix_prefix && (lower.ends_with("f32") || lower.ends_with("f64")));
+        let kind = if float { TokenKind::FloatLit } else { TokenKind::IntLit };
+        self.push(kind, text, line);
+    }
+
+    fn ident(&mut self) {
+        let line = self.line;
+        let mut text = String::new();
+        while let Some(c) = self.peek(0) {
+            if c.is_alphanumeric() || c == '_' {
+                text.push(c);
+                self.bump();
+            } else {
+                break;
+            }
+        }
+        self.push(TokenKind::Ident, text, line);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokenKind, String)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn idents_numbers_and_puncts() {
+        let toks = kinds("let x = 0x9E37_79B9u64 + 10;");
+        assert!(toks.contains(&(TokenKind::Ident, "let".into())));
+        assert!(toks.contains(&(TokenKind::IntLit, "0x9E37_79B9u64".into())));
+        assert!(toks.contains(&(TokenKind::IntLit, "10".into())));
+        assert!(toks.contains(&(TokenKind::Punct, ";".into())));
+    }
+
+    #[test]
+    fn int_values_parse_radix_and_suffix() {
+        assert_eq!(int_value("10"), Some(10));
+        assert_eq!(int_value("0x9E37_79B9"), Some(0x9E37_79B9));
+        assert_eq!(int_value("0x9E37_79B9_7F4A_7C15"), Some(0x9E37_79B9_7F4A_7C15));
+        assert_eq!(int_value("42u64"), Some(42));
+        assert_eq!(int_value("0b101"), Some(5));
+        assert_eq!(int_value("_"), None);
+    }
+
+    #[test]
+    fn strings_and_comments_do_not_leak_code() {
+        let toks = lex("// Instant::now() in a comment\nlet s = \"SystemTime\";");
+        let idents: Vec<&str> = toks
+            .iter()
+            .filter(|t| t.kind == TokenKind::Ident)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(idents, vec!["let", "s"]);
+        assert!(toks.iter().any(|t| t.kind == TokenKind::StrLit && t.text == "SystemTime"));
+    }
+
+    #[test]
+    fn raw_and_byte_strings() {
+        let toks = kinds(r####"let a = r#"raw "quoted" text"#; let b = b"bytes";"####);
+        assert!(toks.contains(&(TokenKind::StrLit, "raw \"quoted\" text".into())));
+        assert!(toks.contains(&(TokenKind::StrLit, "bytes".into())));
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let toks = kinds("fn f<'a>(x: &'a str) { let c = 'x'; let n = '\\n'; }");
+        assert!(toks.contains(&(TokenKind::Lifetime, "'a".into())));
+        assert!(toks.iter().any(|(k, t)| *k == TokenKind::CharLit && t.contains('x')));
+        assert!(!toks.iter().any(|(k, t)| *k == TokenKind::Lifetime && t == "'x"));
+        let _ = toks.iter().any(|(k, _)| *k == TokenKind::CharLit);
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let toks = lex("/* outer /* inner */ still comment */ fn f() {}");
+        assert_eq!(toks[0].kind, TokenKind::BlockComment);
+        assert!(toks[0].text.contains("inner"));
+        assert!(toks.iter().any(|t| t.is_ident("fn")));
+    }
+
+    #[test]
+    fn line_numbers_track_newlines() {
+        let toks = lex("a\nb\n\nc");
+        let lines: Vec<usize> = toks.iter().map(|t| t.line).collect();
+        assert_eq!(lines, vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn floats_are_not_int_lits() {
+        let toks = kinds("let x = 1.5 + 1e-9 + 2.0f64; let r = 0..10;");
+        assert!(toks.contains(&(TokenKind::FloatLit, "1.5".into())));
+        assert!(toks.contains(&(TokenKind::FloatLit, "1e-9".into())));
+        assert!(toks.contains(&(TokenKind::FloatLit, "2.0f64".into())));
+        assert!(toks.contains(&(TokenKind::IntLit, "0".into())));
+        assert!(toks.contains(&(TokenKind::IntLit, "10".into())));
+    }
+}

@@ -1,0 +1,313 @@
+//! `pronto lint` — the determinism & safety static-analysis pass.
+//!
+//! Every claim the repo makes about byte-identical reports rests on
+//! invariants that are easy to erode one innocuous edit at a time: no
+//! wall-clock reads in engine paths, RNG streams derived only through
+//! the audited `rng::stream_seed` helpers with registered tags, no
+//! nondeterministically-ordered containers, environment knobs drawn from
+//! a single registry, audited `unsafe`, and a pinned report schema.
+//! This module machine-checks all of them with a lightweight tokenizer
+//! ([`lexer`]) and a rule engine ([`rules`]) — no rustc, no syn, std
+//! only — so the check runs as a plain blocking CI job:
+//!
+//! ```bash
+//! cargo run --release -- lint --json . ../examples
+//! ```
+//!
+//! Violations can be waived per-site with an explained pragma
+//! ([`pragma`]): `// pronto-lint: allow(<rule>) — <reason>`. Unexplained,
+//! unknown, or unused pragmas are themselves findings, so the exemption
+//! list can only shrink.
+
+pub mod lexer;
+pub mod pragma;
+pub mod registry;
+pub mod rules;
+
+pub use rules::Finding;
+
+use crate::ser::JsonValue;
+use std::collections::BTreeMap;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Directories the tree walker never descends into. `lint_fixtures`
+/// holds the deliberately-violating test corpus.
+const SKIP_DIRS: &[&str] = &["target", "lint_fixtures", "node_modules"];
+
+/// Outcome of linting a set of roots.
+#[derive(Debug)]
+pub struct LintReport {
+    pub files_scanned: usize,
+    /// Sorted by (path, line, rule).
+    pub findings: Vec<Finding>,
+}
+
+impl LintReport {
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Machine-readable document (stable key order via `BTreeMap`).
+    pub fn to_json(&self) -> JsonValue {
+        let mut m = BTreeMap::new();
+        m.insert("lint".into(), JsonValue::String("pronto".into()));
+        m.insert("schema_version".into(), JsonValue::Number(1.0));
+        m.insert(
+            "files_scanned".into(),
+            JsonValue::Number(self.files_scanned as f64),
+        );
+        m.insert(
+            "findings".into(),
+            JsonValue::Array(
+                self.findings
+                    .iter()
+                    .map(|f| {
+                        let mut o = BTreeMap::new();
+                        o.insert("rule".into(), JsonValue::String(f.rule.into()));
+                        o.insert("path".into(), JsonValue::String(f.path.clone()));
+                        o.insert("line".into(), JsonValue::Number(f.line as f64));
+                        o.insert("message".into(), JsonValue::String(f.message.clone()));
+                        JsonValue::Object(o)
+                    })
+                    .collect(),
+            ),
+        );
+        JsonValue::Object(m)
+    }
+
+    /// Human-readable rendering, one `path:line: [rule] message` per
+    /// finding plus a summary line.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&format!("{}:{}: [{}] {}\n", f.path, f.line, f.rule, f.message));
+        }
+        out.push_str(&format!(
+            "pronto lint: {} file(s) scanned, {} finding(s)\n",
+            self.files_scanned,
+            self.findings.len()
+        ));
+        out
+    }
+}
+
+/// Lint a single source text under a (possibly virtual) path. Pragma
+/// handling included; path classification follows the same rules as the
+/// tree walk, so fixtures can impersonate engine files
+/// (`lint_source("src/sim/fixture.rs", src)`).
+pub fn lint_source(path: &str, source: &str) -> Vec<Finding> {
+    lint_source_full(path, source).0
+}
+
+fn lint_source_full(path: &str, source: &str) -> (Vec<Finding>, rules::FileFacts) {
+    let path = registry::norm_path(path);
+    let tokens = lexer::lex(source);
+    let in_test = rules::test_regions(&tokens);
+    let (mut findings, facts) = rules::check_file(&path, &tokens, &in_test);
+
+    // Apply suppression pragmas, then report pragma problems.
+    let pragmas = pragma::parse_pragmas(&tokens);
+    let mut used = vec![false; pragmas.len()];
+    findings.retain(|f| {
+        for (i, p) in pragmas.iter().enumerate() {
+            if f.rule != "pragma" && p.covers(f.rule, f.line) {
+                used[i] = true;
+                return false;
+            }
+        }
+        true
+    });
+    for (i, p) in pragmas.iter().enumerate() {
+        if p.malformed {
+            findings.push(Finding {
+                rule: "pragma",
+                path: path.clone(),
+                line: p.line,
+                message: "malformed pragma; expected `pronto-lint: allow(<rule>) — <reason>`"
+                    .into(),
+            });
+            continue;
+        }
+        let mut known = true;
+        for r in &p.rules {
+            if !registry::RULES.contains(&r.as_str()) {
+                known = false;
+                findings.push(Finding {
+                    rule: "pragma",
+                    path: path.clone(),
+                    line: p.line,
+                    message: format!("pragma names unknown rule `{r}`"),
+                });
+            }
+        }
+        if !p.has_reason {
+            findings.push(Finding {
+                rule: "pragma",
+                path: path.clone(),
+                line: p.line,
+                message: "pragma without a reason never suppresses; add `— <reason>`".into(),
+            });
+        } else if known && !used[i] {
+            findings.push(Finding {
+                rule: "pragma",
+                path: path.clone(),
+                line: p.line,
+                message: "unused pragma (suppresses nothing); remove it".into(),
+            });
+        }
+    }
+    (findings, facts)
+}
+
+/// Per-crate accumulator for the unsafe-free `forbid(unsafe_code)` check.
+#[derive(Default)]
+struct CrateFacts {
+    has_unsafe: bool,
+    lib_rs: Option<String>,
+    lib_has_forbid: bool,
+}
+
+/// Walk `roots` (files or directories), lint every `.rs` file, and run
+/// the tree-level checks: per-crate `#![forbid(unsafe_code)]` for
+/// unsafe-free crates, and uniqueness of the RNG stream-tag registry.
+pub fn lint_tree(roots: &[PathBuf]) -> io::Result<LintReport> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    for root in roots {
+        if root.is_file() {
+            files.push(root.clone());
+        } else {
+            walk(root, &mut files)?;
+        }
+    }
+    files.sort();
+    files.dedup();
+
+    let mut findings = Vec::new();
+    let mut crates: BTreeMap<String, CrateFacts> = BTreeMap::new();
+    for file in &files {
+        let source = fs::read_to_string(file)?;
+        let path = registry::norm_path(&file.to_string_lossy());
+        let (file_findings, facts) = lint_source_full(&path, &source);
+        findings.extend(file_findings);
+        if let Some(root) = crate_src_root(&path) {
+            let entry = crates.entry(root).or_default();
+            entry.has_unsafe |= facts.has_unsafe;
+            if path.ends_with("src/lib.rs") {
+                entry.lib_rs = Some(path.clone());
+                entry.lib_has_forbid = facts.has_forbid_unsafe;
+            }
+        }
+    }
+
+    for facts in crates.values() {
+        if let Some(lib) = &facts.lib_rs {
+            if !facts.has_unsafe && !facts.lib_has_forbid {
+                findings.push(Finding {
+                    rule: "unsafe-audit",
+                    path: lib.clone(),
+                    line: 1,
+                    message: "crate has no `unsafe` code; add `#![forbid(unsafe_code)]`".into(),
+                });
+            }
+        }
+    }
+
+    // The stream-tag registry is code, so check it directly: tags and
+    // names must be unique or two "independent" streams would collide.
+    {
+        let mut tags: Vec<u64> = crate::rng::streams::ALL.iter().map(|&(t, _)| t).collect();
+        let mut names: Vec<&str> = crate::rng::streams::ALL.iter().map(|&(_, n)| n).collect();
+        tags.sort_unstable();
+        names.sort_unstable();
+        let dup_tag = tags.windows(2).any(|w| w[0] == w[1]);
+        let dup_name = names.windows(2).any(|w| w[0] == w[1]);
+        if dup_tag || dup_name {
+            findings.push(Finding {
+                rule: "rng-discipline",
+                path: "src/rng.rs".into(),
+                line: 1,
+                message: "duplicate entry in `rng::streams::ALL`; stream tags and names \
+                          must be unique"
+                    .into(),
+            });
+        }
+    }
+
+    findings.sort_by(|a, b| {
+        (a.path.as_str(), a.line, a.rule).cmp(&(b.path.as_str(), b.line, b.rule))
+    });
+    Ok(LintReport { files_scanned: files.len(), findings })
+}
+
+/// `…/src/lib.rs` → the crate directory owning that `src/` tree.
+fn crate_src_root(path: &str) -> Option<String> {
+    let segs: Vec<&str> = path.split('/').collect();
+    let at = segs.iter().position(|&s| s == "src")?;
+    Some(segs[..at].join("/"))
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<_> = fs::read_dir(dir)?.collect::<Result<Vec<_>, _>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for entry in entries {
+        let name = entry.file_name().to_string_lossy().into_owned();
+        let ty = entry.file_type()?;
+        if ty.is_dir() {
+            if name.starts_with('.') || SKIP_DIRS.contains(&name.as_str()) {
+                continue;
+            }
+            walk(&entry.path(), out)?;
+        } else if name.ends_with(".rs") {
+            out.push(entry.path());
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clean_engine_snippet_has_no_findings() {
+        let src = "pub fn step(seed: u64) -> u64 {\n    crate::rng::stream_seed(seed, crate::rng::streams::ARRIVALS)\n}\n";
+        assert!(lint_source("src/sim/snippet.rs", src).is_empty());
+    }
+
+    #[test]
+    fn pragma_suppresses_and_is_marked_used() {
+        let src = "// pronto-lint: allow(wall-clock) — illustrative snippet for the docs\nlet t = Instant::now();\n";
+        let findings = lint_source("src/sim/snippet.rs", src);
+        assert!(findings.is_empty(), "unexpected: {findings:?}");
+    }
+
+    #[test]
+    fn unused_pragma_is_reported() {
+        let src = "// pronto-lint: allow(wall-clock) — nothing here needs it\nlet x = 1;\n";
+        let findings = lint_source("src/sim/snippet.rs", src);
+        assert_eq!(findings.len(), 1);
+        assert_eq!(findings[0].rule, "pragma");
+        assert!(findings[0].message.contains("unused"));
+    }
+
+    #[test]
+    fn report_renders_text_and_json() {
+        let report = LintReport {
+            files_scanned: 2,
+            findings: vec![Finding {
+                rule: "wall-clock",
+                path: "src/sim/a.rs".into(),
+                line: 3,
+                message: "msg".into(),
+            }],
+        };
+        let text = report.render_text();
+        assert!(text.contains("src/sim/a.rs:3: [wall-clock] msg"));
+        assert!(text.contains("1 finding(s)"));
+        let json = report.to_json().to_string();
+        assert!(json.contains("\"files_scanned\":2"));
+        assert!(json.contains("\"rule\":\"wall-clock\""));
+    }
+}

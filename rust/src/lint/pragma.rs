@@ -1,0 +1,146 @@
+//! `pronto-lint` suppression pragmas.
+//!
+//! A finding is suppressed by a line comment of the form
+//!
+//! ```text
+//! // pronto-lint: allow(<rule>[, <rule>...]) — <reason>
+//! ```
+//!
+//! placed either on the offending line (trailing) or on the line
+//! directly above it. The em-dash separator may also be written `--`.
+//! The reason is mandatory: a pragma without one never suppresses and
+//! is itself reported, as are pragmas naming unknown rules and pragmas
+//! that suppress nothing (so stale exemptions cannot linger).
+
+use super::lexer::{Token, TokenKind};
+
+/// One parsed pragma comment.
+#[derive(Debug, Clone)]
+pub struct Pragma {
+    /// 1-based line of the pragma comment.
+    pub line: usize,
+    /// Rules it names (empty when malformed).
+    pub rules: Vec<String>,
+    /// Whether a non-empty reason follows the `—` / `--` separator.
+    pub has_reason: bool,
+    /// `pronto-lint:` marker present but the `allow(...)` clause is not
+    /// parseable.
+    pub malformed: bool,
+}
+
+impl Pragma {
+    /// Does this pragma (when well-formed, with a reason) cover a
+    /// finding of `rule` on `line`?
+    pub fn covers(&self, rule: &str, line: usize) -> bool {
+        !self.malformed
+            && self.has_reason
+            && (self.line == line || self.line + 1 == line)
+            && self.rules.iter().any(|r| r == rule)
+    }
+}
+
+/// Extract every pragma from a token stream (only `//` line comments are
+/// considered; doc comments `///` and `//!` are prose, not directives).
+pub fn parse_pragmas(tokens: &[Token]) -> Vec<Pragma> {
+    let mut out = Vec::new();
+    for t in tokens {
+        if t.kind != TokenKind::LineComment {
+            continue;
+        }
+        let body = t.text.trim_start_matches('/');
+        // Exactly `//`: three or more slashes make it a doc comment.
+        if t.text.len() - body.len() != 2 {
+            continue;
+        }
+        let body = body.trim_start();
+        let Some(rest) = body.strip_prefix("pronto-lint:") else {
+            continue;
+        };
+        let rest = rest.trim_start();
+        let Some(args) = rest.strip_prefix("allow") else {
+            out.push(Pragma { line: t.line, rules: Vec::new(), has_reason: false, malformed: true });
+            continue;
+        };
+        let args = args.trim_start();
+        let (inner, tail) = match args.strip_prefix('(').and_then(|a| a.split_once(')')) {
+            Some(pair) => pair,
+            None => {
+                out.push(Pragma {
+                    line: t.line,
+                    rules: Vec::new(),
+                    has_reason: false,
+                    malformed: true,
+                });
+                continue;
+            }
+        };
+        let rules: Vec<String> = inner
+            .split(',')
+            .map(|r| r.trim().to_string())
+            .filter(|r| !r.is_empty())
+            .collect();
+        let tail = tail.trim_start();
+        let reason = tail
+            .strip_prefix('\u{2014}')
+            .or_else(|| tail.strip_prefix("--"))
+            .map(str::trim)
+            .unwrap_or("");
+        out.push(Pragma {
+            line: t.line,
+            rules,
+            has_reason: !reason.is_empty(),
+            malformed: false,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::lexer::lex;
+
+    #[test]
+    fn parses_rule_and_reason() {
+        let toks = lex("// pronto-lint: allow(wall-clock) — bench timing is the product\nlet x = 1;");
+        let p = parse_pragmas(&toks);
+        assert_eq!(p.len(), 1);
+        assert!(!p[0].malformed);
+        assert_eq!(p[0].rules, vec!["wall-clock".to_string()]);
+        assert!(p[0].has_reason);
+        assert!(p[0].covers("wall-clock", 1));
+        assert!(p[0].covers("wall-clock", 2));
+        assert!(!p[0].covers("wall-clock", 3));
+        assert!(!p[0].covers("rng-discipline", 1));
+    }
+
+    #[test]
+    fn ascii_double_dash_separator() {
+        let toks = lex("// pronto-lint: allow(env-registry, schema-pin) -- two rules at once");
+        let p = parse_pragmas(&toks);
+        assert_eq!(p[0].rules.len(), 2);
+        assert!(p[0].has_reason);
+    }
+
+    #[test]
+    fn missing_reason_never_covers() {
+        let toks = lex("// pronto-lint: allow(wall-clock)");
+        let p = parse_pragmas(&toks);
+        assert!(!p[0].malformed);
+        assert!(!p[0].has_reason);
+        assert!(!p[0].covers("wall-clock", 1));
+    }
+
+    #[test]
+    fn malformed_pragma_flagged() {
+        let toks = lex("// pronto-lint: please ignore this");
+        let p = parse_pragmas(&toks);
+        assert!(p[0].malformed);
+    }
+
+    #[test]
+    fn doc_comments_are_not_pragmas() {
+        let toks = lex("/// pronto-lint: allow(wall-clock) — prose about pragmas");
+        assert!(parse_pragmas(&toks).is_empty());
+    }
+}

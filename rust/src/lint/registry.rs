@@ -1,0 +1,248 @@
+//! Checked-in registries the lint rules resolve against.
+//!
+//! Three kinds of facts live here: *path classification* (which modules
+//! are deterministic engine paths, what counts as vendored or test code),
+//! the *environment-variable registry* (every `PRONTO_*` key the tree is
+//! allowed to read), and the *report-schema manifest* (every key a
+//! serialized report may emit). The RNG stream-tag registry itself lives
+//! with the RNG substrate in [`crate::rng::streams`] — the lint checks it
+//! for uniqueness at runtime rather than duplicating it here.
+
+/// Rule identifiers, as written in `pronto-lint: allow(<rule>)` pragmas.
+pub const RULES: &[&str] = &[
+    "wall-clock",
+    "rng-discipline",
+    "unordered-iter",
+    "env-registry",
+    "unsafe-audit",
+    "schema-pin",
+];
+
+/// Top-level `src/` modules where wall-clock reads (`Instant`,
+/// `SystemTime`) are banned: everything that must replay byte-identically
+/// from a seed. `bench` and `cli` stay free to time things.
+pub const WALL_CLOCK_BANNED: &[&str] = &[
+    "sim",
+    "scheduler",
+    "federation",
+    "fpca",
+    "detect",
+    "telemetry",
+    "rng",
+];
+
+/// Engine modules where RNG construction must route through
+/// `rng::stream_seed` / `rng::node_stream_seed` instead of hand-mixing
+/// seeds. `rng` itself is exempt — it *is* the blessed implementation.
+pub const RNG_DISCIPLINE: &[&str] = &[
+    "sim",
+    "scheduler",
+    "federation",
+    "fpca",
+    "detect",
+    "telemetry",
+];
+
+/// Every environment variable the tree may read. `pronto lint` rejects
+/// any `PRONTO_*` string literal whose leading key is not listed here —
+/// adding a knob means registering it (and documenting it in the README).
+pub const ENV_KEYS: &[&str] = &[
+    "PRONTO_ARTIFACTS",
+    "PRONTO_BENCH_CSV_DIR",
+    "PRONTO_BENCH_JSON",
+    "PRONTO_BENCH_QUICK",
+    "PRONTO_EVENT_QUEUE",
+    "PRONTO_PROP_CASES",
+    "PRONTO_PROP_SEED",
+];
+
+/// The one file allowed to mutate the environment: the queue-backing
+/// parity suite runs as an isolated test binary precisely so its
+/// `set_var` cannot race other tests.
+pub const SET_VAR_ALLOWED_FILE: &str = "tests/queue_wheel_parity.rs";
+
+/// Files whose `insert("key", …)` literals form the serialized report
+/// surface; every key must appear in [`REPORT_KEYS`] (or match a
+/// [`REPORT_KEY_PREFIXES`] entry for `format!`-built dynamic keys).
+pub const SCHEMA_FILES: &[&str] = &[
+    "src/sim/engine.rs",
+    "src/sim/quality.rs",
+    "src/bench/engine.rs",
+];
+
+/// The pinned report-schema manifest: the union of keys emitted by
+/// `SimReport::to_json`, `QualityRow::to_json` / `quality_report`, and
+/// `EngineBenchRun::to_json` / `bench_engine_report`. Sorted; the
+/// registry test enforces order and uniqueness. Renaming or adding a
+/// report key is a schema change and must be made here, on purpose.
+pub const REPORT_KEYS: &[&str] = &[
+    "acceptance_rate",
+    "bad_accepts",
+    "bench",
+    "decision_p50",
+    "decision_p90",
+    "decision_p99",
+    "decision_samples",
+    "eval",
+    "events",
+    "events_per_sec",
+    "f1",
+    "false_positive_rate",
+    "federation_late_drops",
+    "federation_pushes",
+    "federation_suppressed",
+    "good_accepts",
+    "jobs_accepted",
+    "jobs_arrived",
+    "jobs_completed",
+    "jobs_displaced",
+    "jobs_dropped",
+    "jobs_migrated",
+    "jobs_preempted",
+    "jobs_queued",
+    "jobs_rejected",
+    "jobs_still_queued",
+    "jobs_still_running",
+    "jobs_unplaceable",
+    "justified_rejections",
+    "lead_p50",
+    "lead_p90",
+    "lead_p99",
+    "mean_decision_latency_steps",
+    "mean_downtime",
+    "mean_lead_steps",
+    "mean_push_latency_steps",
+    "mean_queue_delay_steps",
+    "mean_utilization",
+    "method",
+    "methods",
+    "node_joins",
+    "node_leaves",
+    "nodes",
+    "outcomes_digest",
+    "peak_inflight",
+    "peak_queue_len",
+    "placement_quality",
+    "policy",
+    "precision",
+    "precision_node_p50",
+    "precision_node_p90",
+    "predicted_spikes",
+    "quick",
+    "raises",
+    "recall",
+    "recall_node_p50",
+    "recall_node_p90",
+    "rejection_precision",
+    "rows",
+    "runs",
+    "scale_rows",
+    "scenario",
+    "scenarios",
+    "schema_version",
+    "seed",
+    "sizes",
+    "slo_attained",
+    "slo_attainment",
+    "slo_total",
+    "spikes",
+    "steps",
+    "threads",
+    "trace_source",
+    "true_positive_raises",
+    "wall_ms",
+    "window",
+];
+
+/// Allowed prefixes for dynamic keys built with `format!` (per-priority
+/// queue-delay percentiles: `queue_delay_p0`, `queue_delay_p1`, ...).
+pub const REPORT_KEY_PREFIXES: &[&str] = &["queue_delay_p"];
+
+/// The SplitMix64 gamma — any integer literal starting with these hex
+/// digits in an engine path is hand-rolled stream mixing.
+pub const STREAM_GAMMA: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Normalize a path for rule matching: forward slashes, no leading `./`.
+pub fn norm_path(path: &str) -> String {
+    let p = path.replace('\\', "/");
+    let mut s = p.as_str();
+    while let Some(rest) = s.strip_prefix("./") {
+        s = rest;
+    }
+    s.to_string()
+}
+
+/// Vendored crates keep their upstream style; only `unsafe-audit`
+/// applies to them.
+pub fn is_vendor(path: &str) -> bool {
+    path.split('/').any(|seg| seg == "vendor")
+}
+
+/// Whole-file test context: integration tests and criterion-style bench
+/// drivers (`tests/`, `benches/` directory segments).
+pub fn is_test_path(path: &str) -> bool {
+    path.split('/').any(|seg| seg == "tests" || seg == "benches")
+}
+
+/// The top-level module a `src/` file belongs to (`src/sim/engine.rs` →
+/// `sim`, `src/rng.rs` → `rng`). `None` outside a `src/` tree or inside
+/// `vendor/`.
+pub fn src_module(path: &str) -> Option<String> {
+    if is_vendor(path) {
+        return None;
+    }
+    let segs: Vec<&str> = path.split('/').collect();
+    let at = segs.iter().position(|&s| s == "src")?;
+    let next = segs.get(at + 1)?;
+    Some(next.trim_end_matches(".rs").to_string())
+}
+
+/// True when `path` is one of the schema-pinned report serializers.
+pub fn is_schema_file(path: &str) -> bool {
+    SCHEMA_FILES.iter().any(|s| path.ends_with(s))
+}
+
+/// Extract the leading `KEY_LIKE` portion of a `PRONTO_*` string literal
+/// (so `"PRONTO_EVENT_QUEUE=heap …"` in a usage message still resolves
+/// to its key).
+pub fn leading_env_key(content: &str) -> &str {
+    let end = content
+        .find(|c: char| !(c.is_ascii_uppercase() || c.is_ascii_digit() || c == '_'))
+        .unwrap_or(content.len());
+    &content[..end]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_keys_sorted_and_unique() {
+        for w in REPORT_KEYS.windows(2) {
+            assert!(w[0] < w[1], "REPORT_KEYS out of order at {:?}", w);
+        }
+        for w in ENV_KEYS.windows(2) {
+            assert!(w[0] < w[1], "ENV_KEYS out of order at {:?}", w);
+        }
+    }
+
+    #[test]
+    fn module_classification() {
+        assert_eq!(src_module("rust/src/sim/engine.rs").as_deref(), Some("sim"));
+        assert_eq!(src_module("src/rng.rs").as_deref(), Some("rng"));
+        assert_eq!(src_module("./src/cli/mod.rs").as_deref(), Some("cli"));
+        assert_eq!(src_module("examples/quickstart.rs"), None);
+        assert_eq!(src_module("rust/vendor/minipool/src/lib.rs"), None);
+        assert!(is_vendor("rust/vendor/anyhow/src/lib.rs"));
+        assert!(is_test_path("rust/tests/determinism.rs"));
+        assert!(is_test_path("rust/benches/hotpath.rs"));
+        assert!(!is_test_path("rust/src/sim/engine.rs"));
+    }
+
+    #[test]
+    fn env_key_extraction() {
+        assert_eq!(leading_env_key("PRONTO_EVENT_QUEUE=heap cargo test"), "PRONTO_EVENT_QUEUE");
+        // pronto-lint: allow(env-registry) — deliberately unregistered key text
+        assert_eq!(leading_env_key("PRONTO_NOPE"), "PRONTO_NOPE");
+    }
+}

@@ -1,0 +1,352 @@
+//! The six determinism & safety rules.
+//!
+//! Each rule is a pure function over a lexed file: `(path, tokens,
+//! test-region map)` → findings. Rules only ever match real code tokens —
+//! the lexer has already separated strings and comments — so prose about
+//! `Instant::now()` or `HashMap` never trips anything.
+
+use super::lexer::{int_value, Token, TokenKind};
+use super::registry;
+
+/// One rule violation at a source location.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Rule identifier (one of [`registry::RULES`], or `pragma` for
+    /// problems with the suppression pragmas themselves — those are
+    /// never suppressible).
+    pub rule: &'static str,
+    pub path: String,
+    pub line: usize,
+    pub message: String,
+}
+
+/// Per-file facts the tree-level checks need beyond findings.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FileFacts {
+    /// File contains an `unsafe` token anywhere (tests included).
+    pub has_unsafe: bool,
+    /// File contains `forbid(unsafe_code)`.
+    pub has_forbid_unsafe: bool,
+}
+
+/// Mark the token ranges belonging to `#[test]` functions and
+/// `#[cfg(test)]` items: the body (brace-matched) following such an
+/// attribute. `#[cfg(not(test))]` is explicitly *not* a test region.
+pub fn test_regions(tokens: &[Token]) -> Vec<bool> {
+    let mut mark = vec![false; tokens.len()];
+    let sig: Vec<usize> = (0..tokens.len()).filter(|&i| !tokens[i].is_comment()).collect();
+    let mut j = 0;
+    while j < sig.len() {
+        if !(tokens[sig[j]].is_punct('#')
+            && j + 1 < sig.len()
+            && tokens[sig[j + 1]].is_punct('['))
+        {
+            j += 1;
+            continue;
+        }
+        // Scan the attribute to its matching `]`, collecting idents.
+        let mut k = j + 2;
+        let mut depth = 1usize;
+        let mut idents: Vec<&str> = Vec::new();
+        while k < sig.len() && depth > 0 {
+            let t = &tokens[sig[k]];
+            if t.is_punct('[') {
+                depth += 1;
+            } else if t.is_punct(']') {
+                depth -= 1;
+            } else if t.kind == TokenKind::Ident {
+                idents.push(&t.text);
+            }
+            k += 1;
+        }
+        let is_test_attr = idents == ["test"]
+            || (idents.first() == Some(&"cfg")
+                && idents.contains(&"test")
+                && !idents.contains(&"not"));
+        if !is_test_attr {
+            j = k;
+            continue;
+        }
+        // Find the item body: first `{` before any top-level `;`, then
+        // brace-match to its close. (`#[cfg(test)] use …;` has no body.)
+        let mut m = k;
+        let mut braces = 0usize;
+        let mut start = None;
+        while m < sig.len() {
+            let t = &tokens[sig[m]];
+            if t.is_punct('{') {
+                if start.is_none() {
+                    start = Some(m);
+                }
+                braces += 1;
+            } else if t.is_punct('}') {
+                braces = braces.saturating_sub(1);
+                if start.is_some() && braces == 0 {
+                    break;
+                }
+            } else if t.is_punct(';') && start.is_none() {
+                break;
+            }
+            m += 1;
+        }
+        if start.is_some() && m < sig.len() {
+            for idx in sig[j]..=sig[m] {
+                mark[idx] = true;
+            }
+            j = m + 1;
+        } else {
+            j = k;
+        }
+    }
+    mark
+}
+
+/// Run every per-file rule. `in_test[i]` must parallel `tokens`.
+pub fn check_file(path: &str, tokens: &[Token], in_test: &[bool]) -> (Vec<Finding>, FileFacts) {
+    let mut findings = Vec::new();
+    let mut facts = FileFacts::default();
+    let sig: Vec<usize> = (0..tokens.len()).filter(|&i| !tokens[i].is_comment()).collect();
+
+    let vendor = registry::is_vendor(path);
+    let test_file = registry::is_test_path(path);
+    let module = registry::src_module(path);
+    let module = module.as_deref();
+
+    let finding = |rule: &'static str, line: usize, message: String| Finding {
+        rule,
+        path: path.to_string(),
+        line,
+        message,
+    };
+
+    // ---- unsafe-audit (applies everywhere, vendor and tests included) ----
+    for t in tokens.iter() {
+        if t.is_ident("unsafe") {
+            facts.has_unsafe = true;
+            let covered = tokens.iter().any(|c| {
+                c.is_comment()
+                    && c.text.contains("SAFETY:")
+                    && c.line <= t.line
+                    && c.line + 8 >= t.line
+            });
+            if !covered {
+                findings.push(finding(
+                    "unsafe-audit",
+                    t.line,
+                    "`unsafe` without a `// SAFETY:` comment in the preceding lines".into(),
+                ));
+            }
+        }
+    }
+    for w in sig.windows(3) {
+        if tokens[w[0]].is_ident("forbid")
+            && tokens[w[1]].is_punct('(')
+            && tokens[w[2]].is_ident("unsafe_code")
+        {
+            facts.has_forbid_unsafe = true;
+        }
+    }
+    if vendor {
+        // Vendored crates keep upstream style for everything else.
+        return (findings, facts);
+    }
+
+    // ---- wall-clock ----
+    if !test_file {
+        if let Some(m) = module {
+            if registry::WALL_CLOCK_BANNED.contains(&m) {
+                for (i, t) in tokens.iter().enumerate() {
+                    if in_test[i] {
+                        continue;
+                    }
+                    if t.is_ident("Instant") || t.is_ident("SystemTime") {
+                        findings.push(finding(
+                            "wall-clock",
+                            t.line,
+                            format!(
+                                "`{}` in deterministic module `{m}`; inject time from a \
+                                 caller in `bench`/`cli` instead",
+                                t.text
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+
+    // ---- rng-discipline: no hand-rolled seed mixing in engine paths ----
+    if !test_file {
+        if let Some(m) = module {
+            if registry::RNG_DISCIPLINE.contains(&m) {
+                for (i, t) in tokens.iter().enumerate() {
+                    if in_test[i] {
+                        continue;
+                    }
+                    if t.is_ident("SplitMix64") {
+                        findings.push(finding(
+                            "rng-discipline",
+                            t.line,
+                            format!(
+                                "direct `SplitMix64` use in engine module `{m}`; derive \
+                                 seeds via `rng::stream_seed`/`node_stream_seed`"
+                            ),
+                        ));
+                    }
+                    if t.kind == TokenKind::IntLit {
+                        let stripped: String =
+                            t.text.chars().filter(|&c| c != '_').collect::<String>().to_ascii_lowercase();
+                        if stripped.starts_with("0x9e37")
+                            || int_value(&t.text) == Some(registry::STREAM_GAMMA)
+                        {
+                            findings.push(finding(
+                                "rng-discipline",
+                                t.line,
+                                "hand-rolled stream-gamma mixing; use `rng::stream_seed` \
+                                 (the gamma lives in `rng` only)"
+                                    .into(),
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // ---- rng-discipline: stream tags must be named registry constants ----
+    if !test_file {
+        let mut j = 0;
+        while j + 2 < sig.len() {
+            let t = &tokens[sig[j]];
+            if (t.is_ident("stream_seed") || t.is_ident("node_stream_seed"))
+                && tokens[sig[j + 1]].is_punct('(')
+                && !in_test[sig[j]]
+            {
+                // Find the token after the first top-level comma: the tag.
+                let mut depth = 1usize;
+                let mut k = j + 2;
+                while k < sig.len() && depth > 0 {
+                    let a = &tokens[sig[k]];
+                    if a.is_punct('(') || a.is_punct('[') {
+                        depth += 1;
+                    } else if a.is_punct(')') || a.is_punct(']') {
+                        depth -= 1;
+                    } else if a.is_punct(',') && depth == 1 {
+                        if let Some(tag) = sig.get(k + 1).map(|&i| &tokens[i]) {
+                            if tag.kind == TokenKind::IntLit {
+                                findings.push(finding(
+                                    "rng-discipline",
+                                    tag.line,
+                                    format!(
+                                        "integer-literal stream tag `{}`; use a named \
+                                         constant from `rng::streams`",
+                                        tag.text
+                                    ),
+                                ));
+                            }
+                        }
+                        break;
+                    }
+                    k += 1;
+                }
+            }
+            j += 1;
+        }
+    }
+
+    // ---- unordered-iter ----
+    if module.is_some() {
+        for (i, t) in tokens.iter().enumerate() {
+            if in_test[i] {
+                continue;
+            }
+            if t.is_ident("HashMap") || t.is_ident("HashSet") {
+                findings.push(finding(
+                    "unordered-iter",
+                    t.line,
+                    format!(
+                        "`{}` iteration order is nondeterministic; use `BTreeMap`/`BTreeSet` \
+                         (reports must render byte-identically)",
+                        t.text
+                    ),
+                ));
+            }
+        }
+    }
+
+    // ---- env-registry ----
+    for t in tokens.iter() {
+        // pronto-lint: allow(env-registry) — the match prefix itself, not an env read
+        if t.kind == TokenKind::StrLit && t.text.starts_with("PRONTO_") {
+            let key = registry::leading_env_key(&t.text);
+            if !registry::ENV_KEYS.contains(&key) {
+                findings.push(finding(
+                    "env-registry",
+                    t.line,
+                    format!("unregistered env key `{key}`; add it to `lint::registry::ENV_KEYS`"),
+                ));
+            }
+        }
+    }
+    if !path.ends_with(registry::SET_VAR_ALLOWED_FILE) {
+        for t in tokens.iter() {
+            if t.is_ident("set_var") || t.is_ident("remove_var") {
+                findings.push(finding(
+                    "env-registry",
+                    t.line,
+                    format!(
+                        "`{}` outside the isolated `queue_wheel_parity` test binary races \
+                         the process environment",
+                        t.text
+                    ),
+                ));
+            }
+        }
+    }
+
+    // ---- schema-pin ----
+    if registry::is_schema_file(path) {
+        let mut j = 0;
+        while j + 2 < sig.len() {
+            let t = &tokens[sig[j]];
+            if t.is_ident("insert") && tokens[sig[j + 1]].is_punct('(') && !in_test[sig[j]] {
+                let arg = &tokens[sig[j + 2]];
+                if arg.kind == TokenKind::StrLit {
+                    if !registry::REPORT_KEYS.contains(&arg.text.as_str()) {
+                        findings.push(finding(
+                            "schema-pin",
+                            arg.line,
+                            format!(
+                                "report key \"{}\" is not in the pinned schema manifest \
+                                 (`lint::registry::REPORT_KEYS`)",
+                                arg.text
+                            ),
+                        ));
+                    }
+                } else if arg.is_ident("format")
+                    && j + 5 < sig.len()
+                    && tokens[sig[j + 3]].is_punct('!')
+                    && tokens[sig[j + 4]].is_punct('(')
+                    && tokens[sig[j + 5]].kind == TokenKind::StrLit
+                {
+                    let lit = &tokens[sig[j + 5]];
+                    let prefix = lit.text.split('{').next().unwrap_or("");
+                    if !registry::REPORT_KEY_PREFIXES.contains(&prefix) {
+                        findings.push(finding(
+                            "schema-pin",
+                            lit.line,
+                            format!(
+                                "dynamic report key \"{}\" has no registered prefix \
+                                 (`lint::registry::REPORT_KEY_PREFIXES`)",
+                                lit.text
+                            ),
+                        ));
+                    }
+                }
+            }
+            j += 1;
+        }
+    }
+
+    (findings, facts)
+}

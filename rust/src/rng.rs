@@ -36,6 +36,56 @@ impl SplitMix64 {
 /// space (the same constant SplitMix64 increments by).
 const STREAM_GAMMA: u64 = 0x9E37_79B9_7F4A_7C15;
 
+/// The central RNG stream-tag registry.
+///
+/// Every dedicated RNG stream in the engine and its satellites is keyed
+/// by one of these tags via [`stream_seed`] / [`node_stream_seed`].
+/// Historically the tag assignments (1–10) lived only in comments; this
+/// module is the single checked source of truth. `pronto lint`
+/// (rng-discipline rule) rejects integer-literal tags in engine paths —
+/// new streams must add a named constant here — and both a unit test
+/// below and the lint run itself verify the registry stays collision-free.
+pub mod streams {
+    /// Job inter-arrival draws (`sim::engine`).
+    pub const ARRIVALS: u64 = 1;
+    /// Job service-time draws (`sim::engine`).
+    pub const DURATION: u64 = 2;
+    /// Candidate-probe / dispatch sampling (`sim::engine`).
+    pub const DISPATCH: u64 = 3;
+    /// Node churn (leave/join) schedule (`sim::engine`).
+    pub const CHURN: u64 = 4;
+    /// Federation push-latency sampling inside the engine (`sim::engine`).
+    pub const FED_LATENCY: u64 = 5;
+    /// Per-job slot-demand draws (`sim::engine`).
+    pub const DEMAND: u64 = 6;
+    /// Migration peer sampling (`sim::engine`).
+    pub const MIGRATE: u64 = 7;
+    /// Per-job priority-class draws (`sim::engine`).
+    pub const PRIORITY: u64 = 8;
+    /// Heterogeneous host-class slot-budget draws (`sim::engine`).
+    pub const HETERO: u64 = 9;
+    /// PM baseline per-node sketch seeding (`cli`, `sim::eval` callers).
+    pub const PM_BASELINE: u64 = 10;
+    /// Per-leaf push-latency sampling in the thread-per-leaf concurrent
+    /// federation (`federation::concurrent`).
+    pub const CONCURRENT_PUSH_LATENCY: u64 = 11;
+
+    /// Every registered stream, for uniqueness checks and docs.
+    pub const ALL: &[(u64, &str)] = &[
+        (ARRIVALS, "arrivals"),
+        (DURATION, "duration"),
+        (DISPATCH, "dispatch"),
+        (CHURN, "churn"),
+        (FED_LATENCY, "fed-latency"),
+        (DEMAND, "demand"),
+        (MIGRATE, "migrate"),
+        (PRIORITY, "priority"),
+        (HETERO, "hetero"),
+        (PM_BASELINE, "pm-baseline"),
+        (CONCURRENT_PUSH_LATENCY, "concurrent-push-latency"),
+    ];
+}
+
 /// Seed for dedicated RNG stream `tag` of a run keyed by `seed` — the
 /// convention behind the engine's independent, order-insensitive streams
 /// (arrivals = 1, duration = 2, …, hetero = 9; see `sim::engine`). Two
@@ -43,6 +93,15 @@ const STREAM_GAMMA: u64 = 0x9E37_79B9_7F4A_7C15;
 /// perturbs the draws of an existing one.
 pub fn stream_seed(seed: u64, tag: u64) -> u64 {
     SplitMix64::new(seed ^ tag.wrapping_mul(STREAM_GAMMA)).next_u64()
+}
+
+/// One mixing hop of `seed` itself — `stream_seed(seed, 0)`, i.e. a plain
+/// SplitMix64 expansion with no stream tag. This is the root of
+/// hierarchical derivations (e.g. the telemetry generator folds a path of
+/// stream components on top of it), kept as a named helper so engine code
+/// never passes a literal tag.
+pub fn seed_hash(seed: u64) -> u64 {
+    SplitMix64::new(seed).next_u64()
 }
 
 /// Per-node substream of stream `tag`: one more SplitMix64 hop keyed by
@@ -325,6 +384,39 @@ mod tests {
             let mut sm = SplitMix64::new(seed ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15));
             assert_eq!(stream_seed(seed, tag), sm.next_u64());
         }
+    }
+
+    #[test]
+    fn seed_hash_is_the_tagless_stream_seed() {
+        // `seed_hash` must stay the tag-0 hop so hierarchical derivations
+        // (telemetry generator) are byte-identical to the historical
+        // inline SplitMix64 expansion.
+        for seed in [0u64, 1, 2021, 0xFEED, u64::MAX] {
+            assert_eq!(seed_hash(seed), stream_seed(seed, 0));
+            let mut sm = SplitMix64::new(seed);
+            assert_eq!(seed_hash(seed), sm.next_u64());
+        }
+    }
+
+    #[test]
+    fn stream_registry_tags_are_unique_and_match_constants() {
+        // The registry is the single source of truth for stream tags;
+        // a collision would silently correlate two "independent" streams.
+        let mut tags: Vec<u64> = streams::ALL.iter().map(|(t, _)| *t).collect();
+        tags.sort_unstable();
+        let n = tags.len();
+        tags.dedup();
+        assert_eq!(tags.len(), n, "duplicate stream tag in rng::streams::ALL");
+        let mut names: Vec<&str> = streams::ALL.iter().map(|(_, n)| *n).collect();
+        names.sort_unstable();
+        let n = names.len();
+        names.dedup();
+        assert_eq!(names.len(), n, "duplicate stream name in rng::streams::ALL");
+        // The named constants and the ALL table must agree.
+        assert!(streams::ALL.contains(&(streams::ARRIVALS, "arrivals")));
+        assert!(streams::ALL
+            .contains(&(streams::CONCURRENT_PUSH_LATENCY, "concurrent-push-latency")));
+        assert_eq!(streams::ALL.len(), 11);
     }
 
     #[test]

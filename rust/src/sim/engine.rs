@@ -106,7 +106,7 @@ use super::fleet::{FleetState, HostTable};
 use super::scenario::{ArrivalPattern, CapacityModel, DispatchPolicy, ProbePolicy, Scenario};
 use crate::federation::{FederationTree, TreeTopology};
 use crate::fpca::Subspace;
-use crate::rng::{SplitMix64, Xoshiro256};
+use crate::rng::{streams, Xoshiro256};
 use crate::scheduler::{
     Admission, AdmissionProbe, HostCapacity, JobId, JobOutcome, Priority, ServiceTimeModel,
 };
@@ -307,9 +307,11 @@ impl SimReport {
     /// Order-sensitive FNV/SplitMix fold over the outcome sequence: two
     /// runs with identical per-job outcomes (and only those) agree.
     pub fn outcomes_digest(&self) -> u64 {
+        // One SplitMix64 hop per folded value — exactly `rng::stream_seed`
+        // with the value as the tag, so the digest shares the audited
+        // mixing path instead of hand-rolling gamma arithmetic.
         fn mix(h: u64, v: u64) -> u64 {
-            let mut s = SplitMix64::new(h ^ v.wrapping_mul(0x9E37_79B9_7F4A_7C15));
-            s.next_u64()
+            crate::rng::stream_seed(h, v)
         }
         let mut h = 0xcbf2_9ce4_8422_2325u64;
         for o in &self.outcomes {
@@ -932,19 +934,19 @@ impl DiscreteEventEngine {
         let horizon: SimTime = step_to_ticks(steps);
 
         // Independent, order-insensitive RNG streams (the shared
-        // convention in `crate::rng::stream_seed`; tags 1–9 here, tag 10
-        // is the CLI's PM-baseline per-node stream).
+        // convention in `crate::rng::stream_seed`; tags are the named
+        // constants of the central `rng::streams` registry).
         let stream =
             |tag: u64| Xoshiro256::seed_from_u64(crate::rng::stream_seed(scenario.seed, tag));
-        let mut arrivals_rng = stream(1);
-        let mut duration_rng = stream(2);
-        let mut dispatch_rng = stream(3);
-        let mut churn_rng = stream(4);
-        let mut latency_rng = stream(5);
-        let mut demand_rng = stream(6);
-        let mut migrate_rng = stream(7);
-        let mut priority_rng = stream(8);
-        let mut hetero_rng = stream(9);
+        let mut arrivals_rng = stream(streams::ARRIVALS);
+        let mut duration_rng = stream(streams::DURATION);
+        let mut dispatch_rng = stream(streams::DISPATCH);
+        let mut churn_rng = stream(streams::CHURN);
+        let mut latency_rng = stream(streams::FED_LATENCY);
+        let mut demand_rng = stream(streams::DEMAND);
+        let mut migrate_rng = stream(streams::MIGRATE);
+        let mut priority_rng = stream(streams::PRIORITY);
+        let mut hetero_rng = stream(streams::HETERO);
 
         let fed = &scenario.federation;
         let mut tree = if fed.enabled {

@@ -229,11 +229,12 @@ impl TraceGenerator {
     }
 
     fn derive_rng(&self, stream: &[u64]) -> Xoshiro256 {
-        let mut h = crate::rng::SplitMix64::new(self.seed);
-        let mut acc = h.next_u64();
+        // Fold the hierarchical stream path through `rng::stream_seed`
+        // one hop at a time on top of the hashed base seed —
+        // byte-identical to the historical inline mixing.
+        let mut acc = crate::rng::seed_hash(self.seed);
         for &s in stream {
-            let mut h2 = crate::rng::SplitMix64::new(acc ^ s.wrapping_mul(0x9E3779B97F4A7C15));
-            acc = h2.next_u64();
+            acc = crate::rng::stream_seed(acc, s);
         }
         Xoshiro256::seed_from_u64(acc)
     }

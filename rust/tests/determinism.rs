@@ -1,6 +1,10 @@
 //! Determinism regressions: the engine must be bit-reproducible given a
 //! seed, and the two federation runtimes must agree on the merged view.
 
+// Index loops over parallel same-length arrays are the house style
+// here; see the scoped allow note in rust/src/lib.rs.
+#![allow(clippy::needless_range_loop)]
+
 use pronto::federation::{
     ConcurrentFederation, FederationTree, LatencyModel, TreeTopology,
 };

@@ -1,6 +1,10 @@
 //! End-to-end integration: telemetry → node pipelines → federation →
 //! simulator, all composed, plus CSV round-trips through the CLI surface.
 
+// Index loops over parallel same-length arrays are the house style
+// here; see the scoped allow note in rust/src/lib.rs.
+#![allow(clippy::needless_range_loop)]
+
 use pronto::config::ProntoConfig;
 use pronto::federation::{ConcurrentFederation, FederationTree, PushOutcome, TreeTopology};
 use pronto::scheduler::{Admission, NodeScheduler, ProntoPolicy, RandomPolicy, RejectConfig};

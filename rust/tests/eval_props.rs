@@ -3,6 +3,10 @@
 //! classification, lead-time extraction, and the raise/spike duality
 //! that the prediction-quality scorer builds on.
 
+// Index loops over parallel same-length arrays are the house style
+// here; see the scoped allow note in rust/src/lib.rs.
+#![allow(clippy::needless_range_loop)]
+
 use pronto::detect::window::{
     classify_spike, lead_time, left_span, raise_true_positive, right_span, SlidingWindow,
     SpikeSide,

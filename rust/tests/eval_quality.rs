@@ -4,6 +4,10 @@
 //! core contract (the document records neither setting, so identical
 //! bytes are the witness).
 
+// Index loops over parallel same-length arrays are the house style
+// here; see the scoped allow note in rust/src/lib.rs.
+#![allow(clippy::needless_range_loop)]
+
 use pronto::scheduler::JobOutcome;
 use pronto::sim::{score_report, SignalCapture, SimReport};
 

@@ -7,6 +7,10 @@
 //! `(time, seq)`, same-time events preserve schedule order (FIFO), and
 //! the step/tick conversions round-trip.
 
+// Index loops over parallel same-length arrays are the house style
+// here; see the scoped allow note in rust/src/lib.rs.
+#![allow(clippy::needless_range_loop)]
+
 use pronto::proptest::forall;
 use pronto::sim::{
     latency_to_ticks, step_to_ticks, ticks_to_step, Event, EventQueue, SimTime, TickBatch,

@@ -10,6 +10,10 @@
 //!   arrival order / smallest-first demand order);
 //! * enqueue/pop/evacuate conserve jobs — nothing is lost or duplicated.
 
+// Index loops over parallel same-length arrays are the house style
+// here; see the scoped allow note in rust/src/lib.rs.
+#![allow(clippy::needless_range_loop)]
+
 use pronto::proptest::forall;
 use pronto::rng::Xoshiro256;
 use pronto::scheduler::{HostCapacity, JobId, Priority, QueuePolicy, QueuedJob};

@@ -2,6 +2,10 @@
 //! in-crate `pronto::proptest` harness (seeded, replayable via
 //! `PRONTO_PROP_SEED` / `PRONTO_PROP_CASES`).
 
+// Index loops over parallel same-length arrays are the house style
+// here; see the scoped allow note in rust/src/lib.rs.
+#![allow(clippy::needless_range_loop)]
+
 use pronto::linalg::{
     frob_diff, householder_qr, jacobi_svd, orthonormality_error, subspace_distance,
     svd_truncated, thin_qr, Mat,

@@ -1,0 +1,241 @@
+//! End-to-end coverage for `pronto lint`: every rule has a bad fixture
+//! that fires under a banned virtual path and a good fixture that stays
+//! clean, the pragma grammar is exercised in all four states (honored,
+//! reason-less, unused, unknown rule), and the whole tree — the crate
+//! itself plus `examples/` — must lint clean, which is exactly what the
+//! CI job enforces.
+//!
+//! Fixtures live in `tests/lint_fixtures/` and are fed to the linter as
+//! strings under *virtual* paths, so one snippet can be checked against
+//! several module classifications. The tree walker skips that directory,
+//! keeping the deliberately-bad snippets out of the self-lint.
+
+use pronto::lint::{lint_source, lint_tree, Finding};
+use std::path::PathBuf;
+
+fn rules(findings: &[Finding]) -> Vec<&'static str> {
+    findings.iter().map(|f| f.rule).collect()
+}
+
+fn crate_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+// ---------------------------------------------------------------- wall-clock
+
+#[test]
+fn wall_clock_fires_in_banned_module() {
+    let src = include_str!("lint_fixtures/wall_clock_bad.rs");
+    let findings = lint_source("src/sim/fixture.rs", src);
+    assert_eq!(rules(&findings), vec!["wall-clock", "wall-clock"], "{findings:?}");
+    assert_eq!(findings[0].line, 3);
+    assert_eq!(findings[1].line, 8);
+}
+
+#[test]
+fn wall_clock_allowed_in_bench_and_cli() {
+    let src = include_str!("lint_fixtures/wall_clock_bad.rs");
+    assert!(lint_source("src/bench/fixture.rs", src).is_empty());
+    assert!(lint_source("src/cli/fixture.rs", src).is_empty());
+}
+
+#[test]
+fn wall_clock_good_is_clean() {
+    let src = include_str!("lint_fixtures/wall_clock_good.rs");
+    assert!(lint_source("src/sim/fixture.rs", src).is_empty());
+}
+
+// ------------------------------------------------------------ rng-discipline
+
+#[test]
+fn rng_discipline_fires_on_raw_mixing_and_literal_tags() {
+    let src = include_str!("lint_fixtures/rng_bad.rs");
+    let findings = lint_source("src/sim/fixture.rs", src);
+    assert_eq!(
+        rules(&findings),
+        vec!["rng-discipline", "rng-discipline", "rng-discipline"],
+        "{findings:?}"
+    );
+    assert!(findings[0].message.contains("gamma"), "{findings:?}");
+    assert!(findings[1].message.contains("SplitMix64"), "{findings:?}");
+    assert!(findings[2].message.contains("stream tag"), "{findings:?}");
+}
+
+#[test]
+fn rng_discipline_good_is_clean() {
+    let src = include_str!("lint_fixtures/rng_good.rs");
+    assert!(lint_source("src/sim/fixture.rs", src).is_empty());
+}
+
+// ------------------------------------------------------------- unordered-iter
+
+#[test]
+fn unordered_iter_fires_on_hash_containers() {
+    let src = include_str!("lint_fixtures/unordered_bad.rs");
+    let findings = lint_source("src/sim/fixture.rs", src);
+    assert_eq!(findings.len(), 3, "{findings:?}");
+    assert!(findings.iter().all(|f| f.rule == "unordered-iter"));
+}
+
+#[test]
+fn unordered_iter_good_is_clean() {
+    let src = include_str!("lint_fixtures/unordered_good.rs");
+    assert!(lint_source("src/sim/fixture.rs", src).is_empty());
+}
+
+// -------------------------------------------------------------- env-registry
+
+#[test]
+fn env_registry_fires_on_unregistered_key_and_set_var() {
+    let src = include_str!("lint_fixtures/env_bad.rs");
+    let findings = lint_source("src/sim/fixture.rs", src);
+    assert_eq!(rules(&findings), vec!["env-registry", "env-registry"], "{findings:?}");
+    assert!(findings[0].message.contains("unregistered env key"), "{findings:?}");
+    assert!(findings[1].message.contains("set_var"), "{findings:?}");
+}
+
+#[test]
+fn env_registry_applies_in_test_paths_too() {
+    let src = include_str!("lint_fixtures/env_bad.rs");
+    let findings = lint_source("tests/fixture.rs", src);
+    assert_eq!(findings.len(), 2, "{findings:?}");
+}
+
+#[test]
+fn set_var_allowed_only_in_queue_wheel_parity() {
+    let src = include_str!("lint_fixtures/env_bad.rs");
+    let findings = lint_source("tests/queue_wheel_parity.rs", src);
+    // The mutation is waived there; the unregistered key still fires.
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert!(findings[0].message.contains("unregistered env key"));
+}
+
+#[test]
+fn env_registry_good_is_clean() {
+    let src = include_str!("lint_fixtures/env_good.rs");
+    assert!(lint_source("src/sim/fixture.rs", src).is_empty());
+}
+
+// -------------------------------------------------------------- unsafe-audit
+
+#[test]
+fn unsafe_audit_fires_without_safety_comment() {
+    let src = include_str!("lint_fixtures/unsafe_bad.rs");
+    let findings = lint_source("src/sim/fixture.rs", src);
+    assert_eq!(rules(&findings), vec!["unsafe-audit"], "{findings:?}");
+    // Unlike the engine-only rules, this one also applies under tests/
+    // and vendor/.
+    assert_eq!(lint_source("tests/fixture.rs", src).len(), 1);
+    assert_eq!(lint_source("vendor/x/src/lib.rs", src).len(), 1);
+}
+
+#[test]
+fn unsafe_audit_good_is_clean() {
+    let src = include_str!("lint_fixtures/unsafe_good.rs");
+    assert!(lint_source("src/sim/fixture.rs", src).is_empty());
+}
+
+// ---------------------------------------------------------------- schema-pin
+
+#[test]
+fn schema_pin_fires_on_unpinned_keys() {
+    let src = include_str!("lint_fixtures/schema_bad.rs");
+    let findings = lint_source("src/sim/engine.rs", src);
+    assert_eq!(rules(&findings), vec!["schema-pin", "schema-pin"], "{findings:?}");
+}
+
+#[test]
+fn schema_pin_only_applies_to_pinned_files() {
+    let src = include_str!("lint_fixtures/schema_bad.rs");
+    assert!(lint_source("src/sim/other.rs", src).is_empty());
+}
+
+#[test]
+fn schema_pin_good_is_clean() {
+    let src = include_str!("lint_fixtures/schema_good.rs");
+    assert!(lint_source("src/sim/engine.rs", src).is_empty());
+}
+
+// -------------------------------------------------------------------- pragmas
+
+#[test]
+fn pragma_with_reason_suppresses() {
+    let src = include_str!("lint_fixtures/pragma_ok.rs");
+    let findings = lint_source("src/sim/fixture.rs", src);
+    assert!(findings.is_empty(), "{findings:?}");
+}
+
+#[test]
+fn pragma_without_reason_is_rejected_and_suppresses_nothing() {
+    let src = include_str!("lint_fixtures/pragma_no_reason.rs");
+    let mut got = rules(&lint_source("src/sim/fixture.rs", src));
+    got.sort_unstable();
+    assert_eq!(got, vec!["pragma", "wall-clock"]);
+}
+
+#[test]
+fn unused_pragma_is_a_finding() {
+    let src = include_str!("lint_fixtures/pragma_unused.rs");
+    let findings = lint_source("src/sim/fixture.rs", src);
+    assert_eq!(rules(&findings), vec!["pragma"], "{findings:?}");
+    assert!(findings[0].message.contains("unused"), "{findings:?}");
+}
+
+#[test]
+fn pragma_naming_unknown_rule_is_a_finding() {
+    let src = include_str!("lint_fixtures/pragma_unknown_rule.rs");
+    let findings = lint_source("src/sim/fixture.rs", src);
+    assert_eq!(rules(&findings), vec!["pragma"], "{findings:?}");
+    assert!(findings[0].message.contains("unknown rule"), "{findings:?}");
+}
+
+// ------------------------------------------------------------------ the tree
+
+#[test]
+fn whole_tree_lints_clean() {
+    let rust = crate_root();
+    let examples = rust.join("..").join("examples");
+    let report = lint_tree(&[rust, examples]).expect("walking the tree");
+    assert!(report.files_scanned > 60, "only scanned {} files", report.files_scanned);
+    assert!(report.is_clean(), "tree is not lint-clean:\n{}", report.render_text());
+}
+
+#[test]
+fn report_json_shape() {
+    let src = include_str!("lint_fixtures/unsafe_bad.rs");
+    let findings = lint_source("src/sim/fixture.rs", src);
+    assert_eq!(findings.len(), 1);
+    // The CLI exposes the same findings via `--json`; spot-check the
+    // stable field set on the Finding itself.
+    assert_eq!(findings[0].rule, "unsafe-audit");
+    assert_eq!(findings[0].path, "src/sim/fixture.rs");
+    assert!(findings[0].line >= 3);
+}
+
+// ---------------------------------------------------------------- CLI wiring
+
+#[test]
+fn cli_lint_errors_on_a_dirty_root() {
+    let fixture = crate_root().join("tests/lint_fixtures/env_bad.rs");
+    let argv = vec!["lint".to_string(), fixture.to_string_lossy().into_owned()];
+    let err = pronto::cli::run(&argv).expect_err("env_bad must fail the lint");
+    assert!(format!("{err}").contains("finding"), "{err}");
+}
+
+#[test]
+fn cli_lint_errors_on_unsafe_fixture() {
+    let fixture = crate_root().join("tests/lint_fixtures/unsafe_bad.rs");
+    let argv = vec![
+        "lint".to_string(),
+        "--json".to_string(),
+        fixture.to_string_lossy().into_owned(),
+    ];
+    assert!(pronto::cli::run(&argv).is_err());
+}
+
+#[test]
+fn cli_lint_ok_on_a_clean_subtree() {
+    let dir = crate_root().join("src").join("lint");
+    let argv = vec!["lint".to_string(), dir.to_string_lossy().into_owned()];
+    pronto::cli::run(&argv).expect("src/lint must be lint-clean");
+}

@@ -1,0 +1,8 @@
+// Fixture: unregistered env key and environment mutation.
+pub fn unregistered() -> bool {
+    std::env::var("PRONTO_SECRET_KNOB").is_ok()
+}
+
+pub fn mutate() {
+    std::env::set_var("PRONTO_BENCH_QUICK", "1");
+}

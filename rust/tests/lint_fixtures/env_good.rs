@@ -1,0 +1,4 @@
+// Fixture: registered key, read-only access.
+pub fn quick() -> bool {
+    std::env::var("PRONTO_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}

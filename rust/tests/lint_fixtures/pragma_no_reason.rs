@@ -1,0 +1,5 @@
+// Fixture: a pragma with no reason suppresses nothing and is flagged.
+pub fn timed_ms() -> u128 {
+    // pronto-lint: allow(wall-clock)
+    std::time::Instant::now().elapsed().as_millis()
+}

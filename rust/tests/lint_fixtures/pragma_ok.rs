@@ -1,0 +1,5 @@
+// Fixture: an explained pragma suppresses the finding it covers.
+pub fn timed_ms() -> u128 {
+    // pronto-lint: allow(wall-clock) — fixture demonstrating an explained waiver
+    std::time::Instant::now().elapsed().as_millis()
+}

@@ -1,0 +1,3 @@
+// Fixture: unknown rule names are rejected.
+// pronto-lint: allow(no-such-rule) — the rule list is closed
+pub fn nothing() {}

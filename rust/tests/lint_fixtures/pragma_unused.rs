@@ -1,0 +1,5 @@
+// Fixture: a pragma that suppresses nothing is itself a finding.
+// pronto-lint: allow(wall-clock) — stale waiver kept after the fix landed
+pub fn logical(now_steps: u64) -> u64 {
+    now_steps
+}

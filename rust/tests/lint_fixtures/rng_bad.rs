@@ -1,0 +1,13 @@
+// Fixture: hand-rolled seed mixing and literal stream tags.
+pub fn hand_mixed(seed: u64) -> u64 {
+    seed ^ 7u64.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+pub fn raw_splitmix(seed: u64) -> u64 {
+    let mut sm = crate::rng::SplitMix64::new(seed);
+    sm.next_u64()
+}
+
+pub fn literal_tag(seed: u64) -> u64 {
+    crate::rng::stream_seed(seed, 3)
+}

@@ -1,0 +1,8 @@
+// Fixture: seeds derived through the registry-tagged helpers.
+pub fn tagged(seed: u64) -> u64 {
+    crate::rng::stream_seed(seed, crate::rng::streams::ARRIVALS)
+}
+
+pub fn per_node(seed: u64, node: usize) -> u64 {
+    crate::rng::node_stream_seed(seed, crate::rng::streams::DISPATCH, node)
+}

@@ -1,0 +1,7 @@
+// Fixture: report keys missing from the pinned schema manifest.
+use std::collections::BTreeMap;
+
+pub fn render(m: &mut BTreeMap<String, u64>, p: usize) {
+    m.insert("mystery_counter".into(), 1);
+    m.insert(format!("mystery_p{p}"), 2);
+}

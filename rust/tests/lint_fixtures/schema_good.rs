@@ -1,0 +1,7 @@
+// Fixture: pinned keys (and a registered dynamic-key prefix) only.
+use std::collections::BTreeMap;
+
+pub fn render(m: &mut BTreeMap<String, u64>, p: usize) {
+    m.insert("scenario".into(), 1);
+    m.insert(format!("queue_delay_p{p}"), 2);
+}

@@ -1,0 +1,4 @@
+// Fixture: `unsafe` without a SAFETY comment.
+pub fn first(v: &[u8]) -> u8 {
+    unsafe { *v.as_ptr() }
+}

@@ -1,0 +1,10 @@
+// Fixture: wall-clock reads are banned in deterministic engine modules.
+pub fn elapsed_ms() -> u128 {
+    let start = std::time::Instant::now();
+    start.elapsed().as_millis()
+}
+
+pub fn since_epoch() -> u64 {
+    let _ = std::time::SystemTime::now();
+    0
+}

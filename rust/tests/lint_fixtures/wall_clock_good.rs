@@ -1,0 +1,4 @@
+// Fixture: callers inject timestamps; the engine derives time logically.
+pub fn stamp(now_steps: u64) -> u64 {
+    now_steps + 1
+}

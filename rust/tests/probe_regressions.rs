@@ -8,6 +8,10 @@
 //!   the `k ≥ alive − 1` boundary (probe fan-outs that want essentially
 //!   the whole pool).
 
+// Index loops over parallel same-length arrays are the house style
+// here; see the scoped allow note in rust/src/lib.rs.
+#![allow(clippy::needless_range_loop)]
+
 use pronto::proptest::forall;
 use pronto::rng::Xoshiro256;
 use pronto::scheduler::{Admission, JobOutcome, RandomPolicy};

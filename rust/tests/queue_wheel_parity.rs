@@ -14,6 +14,10 @@
 //!
 //! Seeded and replayable via `PRONTO_PROP_SEED` / `PRONTO_PROP_CASES`.
 
+// Index loops over parallel same-length arrays are the house style
+// here; see the scoped allow note in rust/src/lib.rs.
+#![allow(clippy::needless_range_loop)]
+
 use pronto::proptest::forall;
 use pronto::scheduler::{Admission, RandomPolicy};
 use pronto::sim::{

@@ -2,6 +2,10 @@
 //! with the Rust oracle over realistic multi-block streams. Skipped when
 //! artifacts are absent (`make artifacts` not run).
 
+// Index loops over parallel same-length arrays are the house style
+// here; see the scoped allow note in rust/src/lib.rs.
+#![allow(clippy::needless_range_loop)]
+
 use pronto::baselines::StreamingEmbedding;
 use pronto::fpca::{FpcaEdge, FpcaEdgeConfig, Subspace};
 use pronto::linalg::subspace_distance;

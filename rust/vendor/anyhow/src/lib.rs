@@ -8,6 +8,8 @@
 //! `From<E: std::error::Error>` conversion to exist without overlapping
 //! `From<Error>`.
 
+#![forbid(unsafe_code)]
+
 use std::fmt;
 
 /// An error chain: the outermost message first, each `context` layer

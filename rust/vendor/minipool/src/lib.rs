@@ -26,6 +26,8 @@
 //! the caller when the scope joins, so a failed parallel section can
 //! never be silently half-applied.
 
+#![forbid(unsafe_code)]
+
 use std::sync::mpsc;
 use std::sync::Mutex;
 

@@ -10,6 +10,8 @@
 //! the real binding to enable the AOT execution path; no source changes
 //! are needed.
 
+#![forbid(unsafe_code)]
+
 /// Error type matching the binding's `Debug`-formatted errors.
 #[derive(Debug)]
 pub enum Error {
