@@ -25,6 +25,9 @@ pub struct BlockPowerMethod {
     q: Mat,
     /// Accumulated covariance action on Q for the current block: (ΣyyᵀQ).
     acc: Mat,
+    /// Scratch for the per-observation projection yᵀQ (allocation-free
+    /// hot path).
+    proj: Vec<f64>,
     /// Observations accumulated in the current block.
     in_block: usize,
     /// Block size (≥ d per the paper's requirement).
@@ -56,6 +59,7 @@ impl BlockPowerMethod {
             r,
             q,
             acc: Mat::zeros(d, r),
+            proj: vec![0.0; r],
             in_block: 0,
             block,
             iterations: 0,
@@ -72,10 +76,11 @@ impl BlockPowerMethod {
 impl StreamingEmbedding for BlockPowerMethod {
     fn observe(&mut self, y: &[f64]) {
         assert_eq!(y.len(), self.d);
-        // acc += y (yᵀ Q): rank-1 covariance action, O(d·r).
-        let yq = self.q.transpose_matvec(y); // r values
+        // acc += y (yᵀ Q): rank-1 covariance action, O(d·r). The
+        // projection lands in the owned scratch (no per-step Vec).
+        self.q.transpose_matvec_into(y, &mut self.proj);
         for j in 0..self.r {
-            let w = yq[j];
+            let w = self.proj[j];
             if w == 0.0 {
                 continue;
             }

@@ -72,9 +72,18 @@ fn large_fleet_row(steps: usize) -> ScaleRow {
     ScaleRow { scenario: "large-fleet".into(), nodes: 100_000, steps, threads: 4 }
 }
 
+/// The quarter-million row: 250k nodes of `large-fleet` at 4 observe
+/// threads. Runs after the 100k row with a smaller step budget — the
+/// point is the per-event cost at 2.5× the fleet footprint (sharded
+/// merge fan-in, SoA state, timing wheel), not a long trajectory.
+fn quarter_million_row(steps: usize) -> ScaleRow {
+    ScaleRow { scenario: "large-fleet".into(), nodes: 250_000, steps, threads: 4 }
+}
+
 impl EngineBenchConfig {
     /// Full sizing: the 100 / 1 000 / 5 000-node ladder plus the
-    /// 100k-node × 200-step × 4-thread `large-fleet` scale row.
+    /// 100k-node × 200-step and 250k-node × 120-step 4-thread
+    /// `large-fleet` scale rows.
     pub fn full() -> Self {
         Self {
             sizes: vec![100, 1_000, 5_000],
@@ -82,14 +91,14 @@ impl EngineBenchConfig {
             seed: 2021,
             scenarios: DEFAULT_BENCH_SCENARIOS.iter().map(|s| s.to_string()).collect(),
             threads: 1,
-            scale_rows: vec![large_fleet_row(200)],
+            scale_rows: vec![large_fleet_row(200), quarter_million_row(120)],
             quick: false,
         }
     }
 
-    /// Quick sizing for smoke runs. Keeps the 100k-node scale row (at a
-    /// smoke step count) so CI exercises the large-fleet path end to end
-    /// on every run.
+    /// Quick sizing for smoke runs. Keeps both scale rows (at smoke
+    /// step counts) so CI exercises the 100k and 250k large-fleet paths
+    /// end to end on every run.
     pub fn quick() -> Self {
         Self {
             sizes: vec![50, 200],
@@ -97,7 +106,7 @@ impl EngineBenchConfig {
             seed: 2021,
             scenarios: DEFAULT_BENCH_SCENARIOS.iter().map(|s| s.to_string()).collect(),
             threads: 1,
-            scale_rows: vec![large_fleet_row(20)],
+            scale_rows: vec![large_fleet_row(20), quarter_million_row(12)],
             quick: true,
         }
     }
@@ -384,6 +393,24 @@ mod tests {
         assert_eq!(rows.len(), 1);
         assert_eq!(rows[0].get("nodes").and_then(JsonValue::as_usize), Some(30));
         assert_eq!(rows[0].get("threads").and_then(JsonValue::as_usize), Some(2));
+    }
+
+    #[test]
+    fn default_configs_carry_both_scale_rows() {
+        // The perf trajectory tracks two fixed large-fleet points: 100k
+        // and 250k nodes, both at 4 observe threads. `bench diff` joins
+        // rows by (scenario, nodes, threads), so these must not drift.
+        for cfg in [EngineBenchConfig::full(), EngineBenchConfig::quick()] {
+            assert_eq!(cfg.scale_rows.len(), 2);
+            assert_eq!(cfg.scale_rows[0].nodes, 100_000);
+            assert_eq!(cfg.scale_rows[1].nodes, 250_000);
+            assert!(cfg
+                .scale_rows
+                .iter()
+                .all(|r| r.scenario == "large-fleet" && r.threads == 4));
+        }
+        assert_eq!(EngineBenchConfig::quick().scale_rows[1].steps, 12);
+        assert_eq!(EngineBenchConfig::full().scale_rows[1].steps, 120);
     }
 
     #[test]

@@ -132,21 +132,29 @@ impl ConcurrentFederation {
             let root_tx = root_tx.clone();
             let rank = self.rank;
             agg_handles.push(thread::spawn(move || {
-                // Aggregator: merge everything the group sends, then forward
-                // the group summary upward once the leaves hang up (DASM:
-                // summaries travel up once per propagation wave).
+                // Aggregator with a batched drain: block for the first
+                // pending summary, then drain whatever else the group has
+                // already queued and merge the whole batch in arrival
+                // order before forwarding the group view upward *once*
+                // (DASM: summaries travel up once per propagation wave —
+                // batching turns N queued messages into one upward send
+                // instead of N).
                 let mut summary: Option<Subspace> = None;
                 let mut merges = 0usize;
-                while let Ok(msg) = rx.recv() {
-                    summary = Some(match summary {
-                        None => msg.subspace,
-                        Some(cur) => {
-                            merges += 1;
-                            merge_subspaces(&cur, &msg.subspace, MergeOptions::rank(rank))
-                        }
-                    });
-                    // Forward the *current* group view upward; the root
-                    // keeps only the latest per group wave.
+                while let Ok(first) = rx.recv() {
+                    let mut batch = vec![first];
+                    while let Ok(more) = rx.try_recv() {
+                        batch.push(more);
+                    }
+                    for msg in batch {
+                        summary = Some(match summary.take() {
+                            None => msg.subspace,
+                            Some(cur) => {
+                                merges += 1;
+                                merge_subspaces(&cur, &msg.subspace, MergeOptions::rank(rank))
+                            }
+                        });
+                    }
                     if let Some(s) = &summary {
                         let _ = root_tx.send(Summary { subspace: s.clone() });
                     }
@@ -223,15 +231,24 @@ impl ConcurrentFederation {
         }
         drop(group_txs);
 
-        // Root: merge group summaries as they arrive.
+        // Root: same batched drain — merge every queued group summary in
+        // arrival order per wake-up instead of re-waking per message.
         let rank = self.rank;
         let root_handle = thread::spawn(move || {
             let mut global: Option<Subspace> = None;
-            while let Ok(msg) = root_rx.recv() {
-                global = Some(match global {
-                    None => msg.subspace,
-                    Some(cur) => merge_subspaces(&cur, &msg.subspace, MergeOptions::rank(rank)),
-                });
+            while let Ok(first) = root_rx.recv() {
+                let mut batch = vec![first];
+                while let Ok(more) = root_rx.try_recv() {
+                    batch.push(more);
+                }
+                for msg in batch {
+                    global = Some(match global.take() {
+                        None => msg.subspace,
+                        Some(cur) => {
+                            merge_subspaces(&cur, &msg.subspace, MergeOptions::rank(rank))
+                        }
+                    });
+                }
             }
             global
         });

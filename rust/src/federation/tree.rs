@@ -1,6 +1,25 @@
-//! The DASM federation tree (single-threaded engine).
+//! The DASM federation tree (single-threaded engine, shardable fan-in).
+//!
+//! Since PR 9 the fan-in is organized for sharding. Level-0 aggregators
+//! (the level directly above the leaves) accumulate leaf iterates
+//! *incrementally*, exactly as the historical per-push path did: each
+//! accepted iterate is merged into its group summary in arrival order.
+//! Every level above is **derived** — recomputed on demand as a fixed
+//! left-to-right fold over its non-empty children, and skipped entirely
+//! when no child changed since the last reduction (dirty flag).
+//!
+//! Because the upper levels are a pure function of level-0 state, the
+//! batched [`FederationTree::push_from_leaves`] entry point — which
+//! shards *disjoint* level-0 groups across a [`minipool::WorkerPool`] —
+//! lands in bit-for-bit the state the equivalent sequence of
+//! [`FederationTree::push_from_leaf`] calls produces, at every pool
+//! width. Determinism comes from the structure, not from scheduling:
+//! each group's pending iterates are merged in batch order by exactly
+//! one worker, groups never share state, and the upward reduction is a
+//! single-threaded fixed-order fold.
 
 use crate::fpca::{merge_subspaces, MergeOptions, Subspace};
+use minipool::{Task, WorkerPool};
 
 /// Identifier of a tree node (leaves and aggregators share the space).
 pub type NodeId = usize;
@@ -42,11 +61,13 @@ impl TreeTopology {
     }
 }
 
-/// One aggregator's state: the merged summary of its subtree.
+/// One aggregator's state: the merged summary of its subtree, plus a
+/// dirty flag meaning "changed since my parent last reduced over me".
 #[derive(Debug, Clone)]
 struct Aggregator {
     summary: Subspace,
     merges: usize,
+    dirty: bool,
 }
 
 /// The federation tree engine.
@@ -77,7 +98,7 @@ impl FederationTree {
         loop {
             width = width.div_ceil(topo.fanout);
             aggs.push(vec![
-                Aggregator { summary: Subspace::empty(d), merges: 0 };
+                Aggregator { summary: Subspace::empty(d), merges: 0, dirty: false };
                 width.max(1)
             ]);
             if width <= 1 {
@@ -110,6 +131,16 @@ impl FederationTree {
         self.suppressed
     }
 
+    /// Merge count of the aggregator at `(level, index)` — level 0 is the
+    /// level directly above the leaves. Level-0 counters tick once per
+    /// accepted leaf iterate; upper-level counters tick once per pairwise
+    /// merge performed while re-deriving a parent summary, so a parent
+    /// whose subtree didn't change contributes nothing (the dirty-flag
+    /// skip this exposes is pinned by a regression test).
+    pub fn merges_at(&self, level: usize, index: usize) -> usize {
+        self.aggs[level][index].merges
+    }
+
     /// Forget the ε-gate baseline for `leaf` (call when the node behind
     /// the leaf restarts: its first post-rejoin push must not be
     /// suppressed just because the re-learned iterate resembles the
@@ -119,9 +150,9 @@ impl FederationTree {
         self.last_push[leaf] = None;
     }
 
-    /// Leaf `leaf` offers its current iterate. Applies the ε gate, then
-    /// merges upward through every ancestor to the root (DASM: summaries
-    /// travel up once).
+    /// Leaf `leaf` offers its current iterate. Applies the ε gate, merges
+    /// into the leaf's level-0 group, then re-derives the dirty ancestors
+    /// up to the root (DASM: summaries travel up once).
     pub fn push_from_leaf(&mut self, leaf: NodeId, iterate: &Subspace) -> PushOutcome {
         assert!(leaf < self.topo.leaves);
         assert_eq!(iterate.dim(), self.d);
@@ -136,23 +167,184 @@ impl FederationTree {
         }
         self.last_push[leaf] = Some(iterate.clone());
 
-        // Walk ancestors: child index at level 0 is the leaf id.
-        let mut child = leaf;
-        let mut levels = 0;
-        for level in 0..self.aggs.len() {
-            let parent = child / self.topo.fanout;
-            let agg = &mut self.aggs[level][parent];
-            agg.summary = merge_subspaces(
-                &agg.summary,
-                iterate,
-                MergeOptions::rank(self.rank),
-            );
-            agg.merges += 1;
-            child = parent;
-            levels += 1;
-        }
+        let group = leaf / self.topo.fanout;
+        let agg = &mut self.aggs[0][group];
+        agg.summary = merge_subspaces(
+            &agg.summary,
+            iterate,
+            MergeOptions::rank(self.rank),
+        );
+        agg.merges += 1;
+        agg.dirty = true;
         self.pushes += 1;
-        PushOutcome::Propagated { levels }
+        self.reduce_upward();
+        PushOutcome::Propagated { levels: self.aggs.len() }
+    }
+
+    /// Batched fan-in: apply every `(leaf, iterate)` pair, sharding the
+    /// per-group ε-gating and level-0 merges across `pool`, then reduce
+    /// upward once. Ends in **bit-for-bit** the state the same pairs
+    /// pushed one-by-one through [`FederationTree::push_from_leaf`] would
+    /// produce, at every pool width:
+    ///
+    /// * pairs are bucketed by level-0 group with a stable counting sort,
+    ///   so each group sees its iterates in batch order;
+    /// * a group's aggregator and its leaves' ε-gate snapshots are owned
+    ///   by exactly one worker (groups cover disjoint contiguous leaf
+    ///   ranges, so `last_push` shards along group boundaries);
+    /// * the upward reduction is a single-threaded left-to-right fold
+    ///   that skips parents whose children are all clean.
+    pub fn push_from_leaves(&mut self, items: &[(NodeId, &Subspace)], pool: &WorkerPool) {
+        if items.is_empty() {
+            return;
+        }
+        let fanout = self.topo.fanout;
+        let leaves = self.topo.leaves;
+        let groups = self.aggs[0].len();
+        let epsilon = self.epsilon;
+        let rank = self.rank;
+
+        // Stable counting sort of item indices by level-0 group.
+        let mut counts = vec![0usize; groups];
+        for &(leaf, iterate) in items {
+            assert!(leaf < leaves);
+            assert_eq!(iterate.dim(), self.d);
+            counts[leaf / fanout] += 1;
+        }
+        let mut offsets = vec![0usize; groups + 1];
+        for g in 0..groups {
+            offsets[g + 1] = offsets[g] + counts[g];
+        }
+        let mut order = vec![0usize; items.len()];
+        let mut cursor = offsets.clone();
+        for (ix, &(leaf, _)) in items.iter().enumerate() {
+            let g = leaf / fanout;
+            order[cursor[g]] = ix;
+            cursor[g] += 1;
+        }
+
+        // Contiguous group ranges, one per worker chunk. Level-0
+        // aggregators and the leaf gate snapshots shard along the same
+        // boundaries (group g owns leaves [g·fanout, (g+1)·fanout)).
+        let per = groups.div_ceil(pool.threads()).max(1);
+        let mut ranges: Vec<(usize, usize)> = Vec::new();
+        let mut g = 0;
+        while g < groups {
+            let hi = (g + per).min(groups);
+            ranges.push((g, hi));
+            g = hi;
+        }
+
+        let mut counters = vec![(0usize, 0usize); ranges.len()];
+        let order_ref: &[usize] = &order;
+        let offsets_ref: &[usize] = &offsets;
+        let (level0, _upper) = self.aggs.split_at_mut(1);
+        let mut agg_rest: &mut [Aggregator] = &mut level0[0];
+        let mut lp_rest: &mut [Option<Subspace>] = &mut self.last_push;
+        let mut lp_consumed = 0;
+        let mut tasks: Vec<Task<'_>> = Vec::with_capacity(ranges.len());
+        for (&(g_lo, g_hi), cnt) in ranges.iter().zip(counters.iter_mut()) {
+            let leaf_lo = g_lo * fanout;
+            let leaf_hi = (g_hi * fanout).min(leaves);
+            let (agg_chunk, agg_tail) =
+                std::mem::take(&mut agg_rest).split_at_mut(g_hi - g_lo);
+            agg_rest = agg_tail;
+            debug_assert_eq!(leaf_lo, lp_consumed); // ranges are contiguous from 0
+            let (lp_chunk, lp_tail) =
+                std::mem::take(&mut lp_rest).split_at_mut(leaf_hi - lp_consumed);
+            lp_rest = lp_tail;
+            lp_consumed = leaf_hi;
+            if offsets_ref[g_hi] == offsets_ref[g_lo] {
+                continue; // no pending iterates in this chunk
+            }
+            tasks.push(Box::new(move || {
+                for g in g_lo..g_hi {
+                    let agg = &mut agg_chunk[g - g_lo];
+                    for &ix in &order_ref[offsets_ref[g]..offsets_ref[g + 1]] {
+                        let (leaf, iterate) = items[ix];
+                        if iterate.is_empty() {
+                            continue;
+                        }
+                        let slot = &mut lp_chunk[leaf - leaf_lo];
+                        if let Some(prev) = slot {
+                            if prev.abs_diff(iterate) <= epsilon {
+                                cnt.1 += 1;
+                                continue;
+                            }
+                        }
+                        *slot = Some(iterate.clone());
+                        agg.summary = merge_subspaces(
+                            &agg.summary,
+                            iterate,
+                            MergeOptions::rank(rank),
+                        );
+                        agg.merges += 1;
+                        agg.dirty = true;
+                        cnt.0 += 1;
+                    }
+                }
+            }));
+        }
+        pool.run(tasks);
+
+        for (pushed, suppressed) in counters {
+            self.pushes += pushed;
+            self.suppressed += suppressed;
+        }
+        self.reduce_upward();
+    }
+
+    /// Re-derive every level above 0: a parent with at least one dirty
+    /// child is recomputed as a left-to-right fold over its *non-empty*
+    /// children (the first contributes `truncate(rank)` — bit-equal to
+    /// merging it into an empty summary — each further one a pairwise
+    /// [`merge_subspaces`]); a parent whose children are all clean keeps
+    /// its summary and merge counter untouched.
+    fn reduce_upward(&mut self) {
+        let fanout = self.topo.fanout;
+        let rank = self.rank;
+        let d = self.d;
+        for level in 1..self.aggs.len() {
+            let (below, above) = self.aggs.split_at_mut(level);
+            let children = &mut below[level - 1];
+            let parents = &mut above[0];
+            for (p, parent) in parents.iter_mut().enumerate() {
+                let lo = p * fanout;
+                let hi = (lo + fanout).min(children.len());
+                if !children[lo..hi].iter().any(|c| c.dirty) {
+                    continue;
+                }
+                let mut acc: Option<Subspace> = None;
+                let mut merges = 0usize;
+                for child in &children[lo..hi] {
+                    if child.summary.is_empty() {
+                        continue;
+                    }
+                    acc = Some(match acc {
+                        None => child.summary.truncate(rank),
+                        Some(folded) => {
+                            merges += 1;
+                            merge_subspaces(
+                                &folded,
+                                &child.summary,
+                                MergeOptions::rank(rank),
+                            )
+                        }
+                    });
+                }
+                parent.summary = acc.unwrap_or_else(|| Subspace::empty(d));
+                parent.merges += merges;
+                parent.dirty = true;
+            }
+            for child in children.iter_mut() {
+                child.dirty = false;
+            }
+        }
+        if let Some(top) = self.aggs.last_mut() {
+            for agg in top.iter_mut() {
+                agg.dirty = false;
+            }
+        }
     }
 
     /// The merged global view at the root (empty until any push).
@@ -187,6 +379,43 @@ mod tests {
 
     fn subspace(rng: &mut Xoshiro256, d: usize, r: usize) -> Subspace {
         Subspace::new(gen_orthonormal(rng, d, r), gen_spectrum(rng, r))
+    }
+
+    /// Bitwise state equality: counters, every aggregator summary at every
+    /// level, and the per-leaf ε-gate snapshots. Merge counters compare at
+    /// level 0 only — level-0 counts tick once per accepted iterate and are
+    /// therefore flush-invariant, while upper-level counts price the
+    /// re-derivations actually performed, which legitimately depend on how
+    /// the same pushes were grouped into flushes (per-push sequential calls
+    /// re-derive ancestors once per push; a batch re-derives them once).
+    fn assert_trees_equal(a: &FederationTree, b: &FederationTree) {
+        assert_eq!(a.pushes, b.pushes);
+        assert_eq!(a.suppressed, b.suppressed);
+        assert_eq!(a.aggs.len(), b.aggs.len());
+        for (level, (la, lb)) in a.aggs.iter().zip(b.aggs.iter()).enumerate() {
+            assert_eq!(la.len(), lb.len());
+            for (idx, (x, y)) in la.iter().zip(lb.iter()).enumerate() {
+                if level == 0 {
+                    assert_eq!(x.merges, y.merges, "merges at level 0 agg {idx}");
+                }
+                assert_eq!(
+                    x.summary.u.data(),
+                    y.summary.u.data(),
+                    "basis at level {level} agg {idx}"
+                );
+                assert_eq!(x.summary.sigma, y.summary.sigma);
+            }
+        }
+        for (leaf, (x, y)) in a.last_push.iter().zip(b.last_push.iter()).enumerate() {
+            match (x, y) {
+                (None, None) => {}
+                (Some(sx), Some(sy)) => {
+                    assert_eq!(sx.u.data(), sy.u.data(), "gate snapshot leaf {leaf}");
+                    assert_eq!(sx.sigma, sy.sigma);
+                }
+                _ => panic!("gate snapshot presence differs at leaf {leaf}"),
+            }
+        }
     }
 
     #[test]
@@ -277,5 +506,80 @@ mod tests {
         assert!(refreshed.rank() <= 4);
         // Refreshed view is not identical to local: global info arrived.
         assert!(refreshed.abs_diff(&local) > 1e-6);
+    }
+
+    #[test]
+    fn clean_ancestors_skip_re_merging() {
+        // 8 leaves, fanout 2 → level 0 has 4 groups, level 1 has 2
+        // aggregators, level 2 is the root. Level-1 aggregator 0 covers
+        // groups {0, 1} (leaves 0–3); aggregator 1 covers groups {2, 3}.
+        let mut rng = Xoshiro256::seed_from_u64(6);
+        let mut tree = FederationTree::new(TreeTopology::new(8, 2), 10, 4, 0.0);
+        let (a, b, c) = (
+            subspace(&mut rng, 10, 2),
+            subspace(&mut rng, 10, 2),
+            subspace(&mut rng, 10, 2),
+        );
+
+        tree.push_from_leaf(0, &a); // group 0 only → no pairwise fold yet
+        assert_eq!(tree.merges_at(1, 0), 0);
+        tree.push_from_leaf(2, &b); // groups 0 and 2 non-empty → one fold
+        assert_eq!(tree.merges_at(1, 0), 1);
+        assert_eq!(tree.merges_at(1, 1), 0); // right subtree untouched
+
+        // A push in the *right* subtree must not re-derive the clean left
+        // level-1 aggregator: its counter stays at 1.
+        tree.push_from_leaf(4, &c);
+        assert_eq!(tree.merges_at(1, 0), 1, "clean ancestor was re-merged");
+        assert_eq!(tree.merges_at(1, 1), 0); // single non-empty child
+        assert_eq!(tree.merges_at(2, 0), 1); // root folded both halves
+
+        // And a push back in the left subtree re-derives only the left.
+        tree.push_from_leaf(1, &c);
+        assert_eq!(tree.merges_at(1, 0), 2);
+        assert_eq!(tree.merges_at(1, 1), 0);
+    }
+
+    #[test]
+    fn batched_push_matches_sequential_at_every_width() {
+        // A batch exercising every gate path: normal pushes, a duplicate
+        // leaf whose second iterate is ε-suppressed, an empty iterate,
+        // and leaves spread across groups of a 3-level tree.
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let d = 12;
+        let topo = || TreeTopology::new(23, 3); // 23 → 8 → 3 → 1
+        let subs: Vec<Subspace> = (0..8).map(|_| subspace(&mut rng, d, 3)).collect();
+        let empty = Subspace::empty(d);
+        let items: Vec<(NodeId, &Subspace)> = vec![
+            (0, &subs[0]),
+            (22, &subs[1]),
+            (7, &subs[2]),
+            (7, &subs[2]), // ε-suppressed (identical to previous push)
+            (11, &empty),  // never counted
+            (3, &subs[3]),
+            (15, &subs[4]),
+            (7, &subs[5]), // moved again → propagates
+            (4, &subs[6]),
+            (16, &subs[7]),
+        ];
+
+        let mut seq = FederationTree::new(topo(), d, 4, 0.05);
+        for &(leaf, s) in &items {
+            seq.push_from_leaf(leaf, s);
+        }
+        assert!(seq.pushes() > 0 && seq.suppressed() > 0);
+
+        for width in [1, 2, 4, 7] {
+            let pool = WorkerPool::new(width);
+            let mut batched = FederationTree::new(topo(), d, 4, 0.05);
+            batched.push_from_leaves(&items, &pool);
+            assert_trees_equal(&seq, &batched);
+
+            // Split into two flushes (dirty flags must carry across calls).
+            let mut split = FederationTree::new(topo(), d, 4, 0.05);
+            split.push_from_leaves(&items[..4], &pool);
+            split.push_from_leaves(&items[4..], &pool);
+            assert_trees_equal(&seq, &split);
+        }
     }
 }

@@ -80,6 +80,11 @@ pub struct FpcaEdge {
     /// Observation buffer `B` (filled column by column).
     buffer: Mat,
     buffered: usize,
+    /// Reusable scratch for the update panel `[λ·U·diag(Σ) | B]` —
+    /// reallocated only when the estimate rank or block width changes,
+    /// so steady-state block updates assemble in place instead of paying
+    /// the historical scaled-basis/scale/hcat allocation chain.
+    panel: Mat,
     /// Blocks processed so far.
     blocks: usize,
     /// External estimate refreshes (federation pulls) absorbed so far;
@@ -100,6 +105,7 @@ impl FpcaEdge {
             estimate: Subspace::empty(d),
             buffer: Mat::zeros(d, cfg.block_size),
             buffered: 0,
+            panel: Mat::zeros(0, 0),
             blocks: 0,
             pulls: 0,
         }
@@ -175,9 +181,13 @@ impl FpcaEdge {
         if self.buffered < self.cfg.block_size {
             return false;
         }
-        let block = self.buffer.clone();
+        // Lend the full buffer to the update without the historical
+        // per-block clone: swap it out for a zero-capacity placeholder
+        // (`update_block` never touches the buffer) and put it back.
+        let block = std::mem::replace(&mut self.buffer, Mat::zeros(0, 0));
         self.buffered = 0;
         self.update_block(&block);
+        self.buffer = block;
         true
     }
 
@@ -193,19 +203,32 @@ impl FpcaEdge {
         assert_eq!(block.rows(), self.d);
         let r = self.rank;
 
-        let (m, warm, iters) = if self.estimate.is_empty() {
-            (block.clone(), 0, 24)
-        } else {
-            // Warm start on the previous PCs (the leading columns of M):
-            // 10 sweeps reach the same accuracy 24 cold sweeps do.
-            let m = self
-                .estimate
-                .scaled_basis()
-                .scaled(self.cfg.forget)
-                .hcat(block);
-            (m, self.estimate.rank(), 6)
-        };
-        let svd = svd_gram_topk_warm(&m, r, iters, warm);
+        // Assemble M = [λ·U·diag(Σ) | B] into the reusable panel scratch.
+        // Column j of the leading part is u_j · σ_j · λ — the exact
+        // per-element product order of the historical
+        // `scaled_basis().scaled(forget).hcat(block)` chain, so results
+        // are bit-identical without its three per-block allocations.
+        let r_e = self.estimate.rank();
+        let want = r_e + block.cols();
+        if self.panel.rows() != self.d || self.panel.cols() != want {
+            self.panel = Mat::zeros(self.d, want);
+        }
+        let forget = self.cfg.forget;
+        for j in 0..r_e {
+            let sj = self.estimate.sigma[j];
+            let src = self.estimate.u.col(j);
+            let dst = self.panel.col_mut(j);
+            for i in 0..src.len() {
+                dst[i] = src[i] * sj * forget;
+            }
+        }
+        for j in 0..block.cols() {
+            self.panel.col_mut(r_e + j).copy_from_slice(block.col(j));
+        }
+        // Warm start on the previous PCs (the leading columns of M):
+        // 6 warm sweeps reach the same accuracy 24 cold sweeps do.
+        let (warm, iters) = if r_e == 0 { (0, 24) } else { (r_e, 6) };
+        let svd = svd_gram_topk_warm(&self.panel, r, iters, warm);
         self.estimate = Subspace::new(svd.u, svd.sigma);
         self.blocks += 1;
 

@@ -45,17 +45,14 @@ impl Subspace {
         self.u.transpose_matvec(y)
     }
 
-    /// Projection without allocation (hot path).
+    /// Projection without allocation (hot path) — routed through the
+    /// column-jammed [`Mat::transpose_matvec_into`] kernel, which performs
+    /// the same row-ascending dot per component as the historical loop
+    /// here did (bit-identical results).
     pub fn project_into(&self, y: &[f64], out: &mut [f64]) {
         assert!(out.len() >= self.rank());
-        for j in 0..self.rank() {
-            let c = self.u.col(j);
-            let mut s = 0.0;
-            for k in 0..c.len() {
-                s += c[k] * y[k];
-            }
-            out[j] = s;
-        }
+        let r = self.rank();
+        self.u.transpose_matvec_into(y, &mut out[..r]);
     }
 
     /// Truncate to at most `r` leading components.

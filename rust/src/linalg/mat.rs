@@ -3,8 +3,58 @@
 //! Column-major matches the paper's convention (data matrices are d × n with
 //! one *column* per observation) and makes appending streaming observations
 //! a memcpy.
+//!
+//! The product kernels come in two backings (see [`LinalgBacking`]): the
+//! default **blocked** kernels walk 4-column panels with register-jammed
+//! plain-`f64` loops shaped for autovectorization (no intrinsics,
+//! std-only), and the **scalar** backing keeps the historical
+//! straight-line loops as a debug oracle, selectable at process start via
+//! `PRONTO_LINALG=scalar`. Both backings perform, for every output
+//! element, the *identical* sequence of floating-point operations — the
+//! jam only reorders loads across independent accumulators — so results
+//! are bit-identical by construction; `tests/linalg_oracle_parity.rs`
+//! pins that forall-style and CI diffs full engine runs across backings
+//! (the same contract as `PRONTO_EVENT_QUEUE=heap`).
 
 use std::fmt;
+use std::sync::OnceLock;
+
+/// Width of the column panels the blocked kernels jam per pass. Four f64
+/// accumulators fit comfortably in one AVX2 register file lane set and
+/// still help on plain SSE2; the remainder columns fall back to the
+/// single-column loop (which performs the same per-element op sequence).
+const PANEL: usize = 4;
+
+/// Which kernel implementation the dispatching [`Mat`] products use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinalgBacking {
+    /// Column-panel blocked kernels (default).
+    Blocked,
+    /// Historical straight-line scalar loops — the debug oracle.
+    Scalar,
+}
+
+static BACKING: OnceLock<LinalgBacking> = OnceLock::new();
+
+impl LinalgBacking {
+    /// Resolve the backing from `PRONTO_LINALG`: `scalar` selects the
+    /// oracle, anything else (or unset) the blocked default. Uncached —
+    /// the parity test exercises the env plumbing in-process; runtime
+    /// callers go through [`LinalgBacking::current`].
+    pub fn from_env() -> Self {
+        match std::env::var("PRONTO_LINALG") {
+            Ok(v) if v == "scalar" => LinalgBacking::Scalar,
+            _ => LinalgBacking::Blocked,
+        }
+    }
+
+    /// The process-wide backing used by the dispatching kernels, resolved
+    /// from the environment once at first use (a getenv per matvec would
+    /// dominate the small kernels the hot paths issue).
+    pub fn current() -> Self {
+        *BACKING.get_or_init(Self::from_env)
+    }
+}
 
 /// Dense, heap-allocated, column-major `f64` matrix.
 #[derive(Clone, PartialEq)]
@@ -129,26 +179,111 @@ impl Mat {
         t
     }
 
-    /// Matrix product `self * rhs` with a column-blocked kernel: for each
-    /// output column we accumulate scaled columns of `self`, which walks both
-    /// operands in storage order.
+    /// Matrix product `self * rhs` (allocating convenience wrapper over
+    /// [`Mat::matmul_into`]).
     pub fn matmul(&self, rhs: &Mat) -> Mat {
         assert_eq!(self.cols, rhs.rows, "matmul dim mismatch");
         let mut out = Mat::zeros(self.rows, rhs.cols);
+        self.matmul_into(rhs, &mut out);
+        out
+    }
+
+    /// Matrix product `self * rhs` into a caller-owned output, through the
+    /// backing selected by `PRONTO_LINALG` (see [`LinalgBacking`]). Both
+    /// backings accumulate every output element over `k` ascending with
+    /// one multiply-add per term, so they are bit-identical.
+    pub fn matmul_into(&self, rhs: &Mat, out: &mut Mat) {
+        self.matmul_into_with(rhs, out, LinalgBacking::current());
+    }
+
+    /// Explicit-backing variant of [`Mat::matmul_into`] — used by the
+    /// parity oracle to compare both kernels inside one process.
+    pub fn matmul_into_with(&self, rhs: &Mat, out: &mut Mat, backing: LinalgBacking) {
+        assert_eq!(self.cols, rhs.rows, "matmul dim mismatch");
+        assert_eq!(
+            (out.rows, out.cols),
+            (self.rows, rhs.cols),
+            "matmul out shape mismatch"
+        );
+        match backing {
+            LinalgBacking::Scalar => self.matmul_into_scalar(rhs, out),
+            LinalgBacking::Blocked => self.matmul_into_blocked(rhs, out),
+        }
+    }
+
+    /// Batched matrix–vector product: `out[:, j] = self · xs[:, j]` for
+    /// every column of `xs` — one panel kernel pass instead of
+    /// `xs.cols()` separate matvecs. Shares the matmul core. Unlike
+    /// [`Mat::matvec_into`] this path carries no per-element zero skip
+    /// (skipping would break the register jam); use the single-vector
+    /// path where the historical skip semantics matter.
+    pub fn batch_matvec_into(&self, xs: &Mat, out: &mut Mat) {
+        self.matmul_into(xs, out);
+    }
+
+    /// Explicit-backing variant of [`Mat::batch_matvec_into`].
+    pub fn batch_matvec_into_with(&self, xs: &Mat, out: &mut Mat, backing: LinalgBacking) {
+        self.matmul_into_with(xs, out, backing);
+    }
+
+    /// Scalar oracle: one output column at a time, `k` ascending.
+    fn matmul_into_scalar(&self, rhs: &Mat, out: &mut Mat) {
         for j in 0..rhs.cols {
-            let rcol = rhs.col(j);
             let ocol = out.col_mut(j);
-            for (k, &rv) in rcol.iter().enumerate() {
-                if rv == 0.0 {
-                    continue;
-                }
-                let lcol = self.col(k);
-                for i in 0..lcol.len() {
-                    ocol[i] += lcol[i] * rv;
+            ocol.fill(0.0);
+            for k in 0..self.cols {
+                let b = rhs.data[j * rhs.rows + k];
+                let a = &self.data[k * self.rows..(k + 1) * self.rows];
+                for i in 0..a.len() {
+                    ocol[i] += a[i] * b;
                 }
             }
         }
-        out
+    }
+
+    /// Blocked kernel: 4-wide output-column panels. Per `k` the `self`
+    /// column is loaded once and axpy'd into four independent output
+    /// columns — the compiler keeps four accumulator streams live and
+    /// autovectorizes the inner loop. Each output element still receives
+    /// exactly one `+= a·b` per `k`, in `k` order: bit-identical to the
+    /// scalar oracle.
+    fn matmul_into_blocked(&self, rhs: &Mat, out: &mut Mat) {
+        let rows = self.rows;
+        let mut j = 0;
+        while j + PANEL <= rhs.cols {
+            let panel = &mut out.data[j * rows..(j + PANEL) * rows];
+            panel.fill(0.0);
+            let (c0, rest) = panel.split_at_mut(rows);
+            let (c1, rest) = rest.split_at_mut(rows);
+            let (c2, c3) = rest.split_at_mut(rows);
+            for k in 0..self.cols {
+                let a = &self.data[k * rows..(k + 1) * rows];
+                let b0 = rhs.data[j * rhs.rows + k];
+                let b1 = rhs.data[(j + 1) * rhs.rows + k];
+                let b2 = rhs.data[(j + 2) * rhs.rows + k];
+                let b3 = rhs.data[(j + 3) * rhs.rows + k];
+                for i in 0..a.len() {
+                    let ai = a[i];
+                    c0[i] += ai * b0;
+                    c1[i] += ai * b1;
+                    c2[i] += ai * b2;
+                    c3[i] += ai * b3;
+                }
+            }
+            j += PANEL;
+        }
+        while j < rhs.cols {
+            let ocol = out.col_mut(j);
+            ocol.fill(0.0);
+            for k in 0..self.cols {
+                let b = rhs.data[j * rhs.rows + k];
+                let a = &self.data[k * self.rows..(k + 1) * self.rows];
+                for i in 0..a.len() {
+                    ocol[i] += a[i] * b;
+                }
+            }
+            j += 1;
+        }
     }
 
     /// `selfᵀ * rhs` without materializing the transpose: each output entry
@@ -198,32 +333,150 @@ impl Mat {
     }
 
     /// Matrix–vector product `self * v` into a caller-owned buffer
-    /// (allocation-free; same accumulation order as [`Mat::matvec`], so
-    /// results are bit-identical).
+    /// (allocation-free), through the backing selected by `PRONTO_LINALG`.
+    /// Both backings keep the historical `x == 0.0` column skip and add
+    /// terms in `j` ascending order, so results are bit-identical to each
+    /// other and to [`Mat::matvec`].
     pub fn matvec_into(&self, v: &[f64], out: &mut [f64]) {
+        self.matvec_into_with(v, out, LinalgBacking::current());
+    }
+
+    /// Explicit-backing variant of [`Mat::matvec_into`] — used by the
+    /// parity oracle to compare both kernels inside one process.
+    // The fused update below must stay `out[i] = out[i] + t0 + t1 + …`:
+    // `+=` would sum the terms *before* folding them into the
+    // accumulator, a different FP association than the scalar oracle's
+    // one-add-per-term sequence.
+    #[allow(clippy::assign_op_pattern)]
+    pub fn matvec_into_with(&self, v: &[f64], out: &mut [f64], backing: LinalgBacking) {
         assert_eq!(self.cols, v.len(), "matvec dim mismatch");
         assert_eq!(self.rows, out.len(), "matvec out dim mismatch");
         out.fill(0.0);
-        for (j, &x) in v.iter().enumerate() {
-            if x == 0.0 {
-                continue;
+        match backing {
+            LinalgBacking::Scalar => {
+                for (j, &x) in v.iter().enumerate() {
+                    if x == 0.0 {
+                        continue;
+                    }
+                    let c = self.col(j);
+                    for i in 0..self.rows {
+                        out[i] += c[i] * x;
+                    }
+                }
             }
-            let c = self.col(j);
-            for i in 0..self.rows {
-                out[i] += c[i] * x;
+            LinalgBacking::Blocked => {
+                // 4-column jam: one pass over `out` folds four scaled
+                // columns, left to right — the same one-add-per-term
+                // sequence as the scalar loop. Panels containing a zero
+                // coefficient drop to the per-column loop so the skip
+                // semantics (and `±0.0`/`inf` edge cases) stay exact.
+                let rows = self.rows;
+                let mut j = 0;
+                while j + PANEL <= self.cols {
+                    let (x0, x1, x2, x3) = (v[j], v[j + 1], v[j + 2], v[j + 3]);
+                    if x0 != 0.0 && x1 != 0.0 && x2 != 0.0 && x3 != 0.0 {
+                        let block = &self.data[j * rows..(j + PANEL) * rows];
+                        let (a0, rest) = block.split_at(rows);
+                        let (a1, rest) = rest.split_at(rows);
+                        let (a2, a3) = rest.split_at(rows);
+                        for i in 0..rows {
+                            out[i] = out[i] + a0[i] * x0 + a1[i] * x1 + a2[i] * x2 + a3[i] * x3;
+                        }
+                    } else {
+                        for t in 0..PANEL {
+                            let x = v[j + t];
+                            if x == 0.0 {
+                                continue;
+                            }
+                            let c = self.col(j + t);
+                            for i in 0..rows {
+                                out[i] += c[i] * x;
+                            }
+                        }
+                    }
+                    j += PANEL;
+                }
+                while j < self.cols {
+                    let x = v[j];
+                    if x != 0.0 {
+                        let c = self.col(j);
+                        for i in 0..rows {
+                            out[i] += c[i] * x;
+                        }
+                    }
+                    j += 1;
+                }
             }
         }
     }
 
-    /// `selfᵀ * v` — projections of v onto each column.
+    /// `selfᵀ * v` — projections of v onto each column (allocating
+    /// convenience wrapper over [`Mat::transpose_matvec_into`]).
     pub fn transpose_matvec(&self, v: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.cols];
+        self.transpose_matvec_into(v, &mut out);
+        out
+    }
+
+    /// `selfᵀ * v` into a caller-owned buffer, through the backing
+    /// selected by `PRONTO_LINALG`. Every output element is a dot product
+    /// accumulated over the row index ascending in both backings —
+    /// bit-identical.
+    pub fn transpose_matvec_into(&self, v: &[f64], out: &mut [f64]) {
+        self.transpose_matvec_into_with(v, out, LinalgBacking::current());
+    }
+
+    /// Explicit-backing variant of [`Mat::transpose_matvec_into`].
+    pub fn transpose_matvec_into_with(&self, v: &[f64], out: &mut [f64], backing: LinalgBacking) {
         assert_eq!(self.rows, v.len(), "transpose_matvec dim mismatch");
-        (0..self.cols)
-            .map(|j| {
-                let c = self.col(j);
-                c.iter().zip(v).map(|(a, b)| a * b).sum()
-            })
-            .collect()
+        assert_eq!(self.cols, out.len(), "transpose_matvec out dim mismatch");
+        match backing {
+            LinalgBacking::Scalar => {
+                for j in 0..self.cols {
+                    let c = self.col(j);
+                    let mut s = 0.0;
+                    for i in 0..c.len() {
+                        s += c[i] * v[i];
+                    }
+                    out[j] = s;
+                }
+            }
+            LinalgBacking::Blocked => {
+                // 4-column jam sharing each `v` load across four
+                // independent accumulators; each accumulator performs the
+                // exact op sequence of its scalar dot.
+                let rows = self.rows;
+                let mut j = 0;
+                while j + PANEL <= self.cols {
+                    let block = &self.data[j * rows..(j + PANEL) * rows];
+                    let (a0, rest) = block.split_at(rows);
+                    let (a1, rest) = rest.split_at(rows);
+                    let (a2, a3) = rest.split_at(rows);
+                    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+                    for i in 0..rows {
+                        let vi = v[i];
+                        s0 += a0[i] * vi;
+                        s1 += a1[i] * vi;
+                        s2 += a2[i] * vi;
+                        s3 += a3[i] * vi;
+                    }
+                    out[j] = s0;
+                    out[j + 1] = s1;
+                    out[j + 2] = s2;
+                    out[j + 3] = s3;
+                    j += PANEL;
+                }
+                while j < self.cols {
+                    let c = self.col(j);
+                    let mut s = 0.0;
+                    for i in 0..c.len() {
+                        s += c[i] * v[i];
+                    }
+                    out[j] = s;
+                    j += 1;
+                }
+            }
+        }
     }
 
     /// Horizontal concatenation `[self | rhs]`.
@@ -396,6 +649,75 @@ mod tests {
     fn frob_norm_known() {
         let a = Mat::from_rows(2, 2, &[3.0, 0.0, 0.0, 4.0]);
         assert!((a.frob_norm() - 5.0).abs() < 1e-12);
+    }
+
+    fn random_mat(rng: &mut crate::rng::Xoshiro256, rows: usize, cols: usize) -> Mat {
+        Mat::from_col_major(rows, cols, (0..rows * cols).map(|_| rng.normal()).collect())
+    }
+
+    #[test]
+    fn matmul_backings_bit_agree_across_shapes() {
+        // Shapes straddling the panel width: full panels, remainders,
+        // degenerate single-row/column cases.
+        let mut rng = crate::rng::Xoshiro256::seed_from_u64(9);
+        for &(m, k, n) in &[(5, 7, 9), (8, 4, 4), (3, 1, 6), (1, 5, 1), (6, 6, 5), (4, 3, 8)] {
+            let a = random_mat(&mut rng, m, k);
+            let b = random_mat(&mut rng, k, n);
+            let mut blocked = Mat::zeros(m, n);
+            let mut scalar = Mat::zeros(m, n);
+            a.matmul_into_with(&b, &mut blocked, LinalgBacking::Blocked);
+            a.matmul_into_with(&b, &mut scalar, LinalgBacking::Scalar);
+            assert_eq!(blocked.data(), scalar.data(), "{m}x{k}·{k}x{n}");
+            assert_eq!(a.matmul(&b).data(), blocked.data());
+        }
+    }
+
+    #[test]
+    fn matvec_backings_bit_agree_with_zero_gates_and_remainders() {
+        let mut rng = crate::rng::Xoshiro256::seed_from_u64(10);
+        for cols in 1..=11 {
+            let a = random_mat(&mut rng, 7, cols);
+            let mut v: Vec<f64> = (0..cols).map(|_| rng.normal()).collect();
+            if cols > 2 {
+                v[1] = 0.0; // exercise the skip inside a jammed panel
+            }
+            let mut blocked = vec![0.0; 7];
+            let mut scalar = vec![0.0; 7];
+            a.matvec_into_with(&v, &mut blocked, LinalgBacking::Blocked);
+            a.matvec_into_with(&v, &mut scalar, LinalgBacking::Scalar);
+            assert_eq!(blocked, scalar, "matvec cols={cols}");
+            assert_eq!(a.matvec(&v), blocked);
+
+            let y: Vec<f64> = (0..7).map(|_| rng.normal()).collect();
+            let mut tb = vec![0.0; cols];
+            let mut ts = vec![0.0; cols];
+            a.transpose_matvec_into_with(&y, &mut tb, LinalgBacking::Blocked);
+            a.transpose_matvec_into_with(&y, &mut ts, LinalgBacking::Scalar);
+            assert_eq!(tb, ts, "transpose_matvec cols={cols}");
+            assert_eq!(a.transpose_matvec(&y), tb);
+        }
+    }
+
+    #[test]
+    fn batch_matvec_matches_per_column_matvec() {
+        // Zero-free inputs: the batched kernel (no zero skip) must agree
+        // bit-for-bit with the gated single-vector path column by column.
+        let mut rng = crate::rng::Xoshiro256::seed_from_u64(11);
+        let a = random_mat(&mut rng, 9, 6);
+        let xs = random_mat(&mut rng, 6, 7);
+        let mut out = Mat::zeros(9, 7);
+        a.batch_matvec_into(&xs, &mut out);
+        for j in 0..xs.cols() {
+            assert_eq!(out.col(j), a.matvec(xs.col(j)).as_slice(), "column {j}");
+        }
+    }
+
+    #[test]
+    fn env_selects_the_scalar_oracle() {
+        // `from_env` is the uncached read; the isolated parity binary
+        // (tests/linalg_oracle_parity.rs) pins the set_var plumbing.
+        // Here we only pin the default.
+        assert_eq!(LinalgBacking::current(), LinalgBacking::from_env());
     }
 }
 

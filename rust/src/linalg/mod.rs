@@ -15,7 +15,7 @@ mod mat;
 mod qr;
 mod svd;
 
-pub use mat::Mat;
+pub use mat::{LinalgBacking, Mat};
 pub use qr::{householder_qr, thin_qr};
 pub use svd::{jacobi_svd, svd_gram_topk, svd_gram_topk_warm, svd_truncated, Svd};
 

@@ -52,14 +52,17 @@ pub const ENV_KEYS: &[&str] = &[
     "PRONTO_BENCH_JSON",
     "PRONTO_BENCH_QUICK",
     "PRONTO_EVENT_QUEUE",
+    "PRONTO_LINALG",
     "PRONTO_PROP_CASES",
     "PRONTO_PROP_SEED",
 ];
 
-/// The one file allowed to mutate the environment: the queue-backing
-/// parity suite runs as an isolated test binary precisely so its
-/// `set_var` cannot race other tests.
-pub const SET_VAR_ALLOWED_FILE: &str = "tests/queue_wheel_parity.rs";
+/// The only files allowed to mutate the environment: the backing-parity
+/// suites (event-queue wheel/heap, linalg blocked/scalar) each run as an
+/// isolated test binary precisely so their `set_var` cannot race other
+/// tests.
+pub const SET_VAR_ALLOWED_FILES: &[&str] =
+    &["tests/linalg_oracle_parity.rs", "tests/queue_wheel_parity.rs"];
 
 /// Files whose `insert("key", …)` literals form the serialized report
 /// surface; every key must appear in [`REPORT_KEYS`] (or match a

@@ -288,14 +288,14 @@ pub fn check_file(path: &str, tokens: &[Token], in_test: &[bool]) -> (Vec<Findin
             }
         }
     }
-    if !path.ends_with(registry::SET_VAR_ALLOWED_FILE) {
+    if !registry::SET_VAR_ALLOWED_FILES.iter().any(|f| path.ends_with(f)) {
         for t in tokens.iter() {
             if t.is_ident("set_var") || t.is_ident("remove_var") {
                 findings.push(finding(
                     "env-registry",
                     t.line,
                     format!(
-                        "`{}` outside the isolated `queue_wheel_parity` test binary races \
+                        "`{}` outside the isolated backing-parity test binaries races \
                          the process environment",
                         t.text
                     ),

@@ -1039,6 +1039,9 @@ impl DiscreteEventEngine {
         let workers = WorkerPool::new(scenario.threads);
         let mut memo = SpikeMemo::new(n);
         let mut batch = TickBatch::default();
+        // Federation deliveries collected per tick batch and flushed once
+        // through the sharded `push_from_leaves` fan-in (reused buffer).
+        let mut fed_batch: Vec<(usize, Subspace)> = Vec::new();
         while queue.drain_tick(&mut batch) {
             if batch.time() >= horizon {
                 // Pops are non-decreasing in time: everything left is
@@ -1539,8 +1542,16 @@ impl DiscreteEventEngine {
 
                     Event::FederationPush { leaf, snapshot, sent_at } => {
                         if let Some(snap) = pool.take(snapshot) {
-                            if let Some(tree) = tree.as_mut() {
-                                tree.push_from_leaf(leaf, &snap);
+                            // Deliveries accumulate across the tick batch
+                            // and flush once through the sharded
+                            // `push_from_leaves` fan-in after the batch —
+                            // batches preserve pop order, so each leaf's
+                            // iterates reach its level-0 group in the same
+                            // order the per-event path applied them, and
+                            // the derived upper levels land in the same
+                            // final state.
+                            if tree.is_some() {
+                                fed_batch.push((leaf, snap));
                             }
                             // Instant models still pay the 1-tick scheduling
                             // floor; don't let that show up as latency.
@@ -1656,6 +1667,21 @@ impl DiscreteEventEngine {
                         fleet.set_can_accept(node, true);
                     }
                 }
+            }
+
+            // End-of-batch federation flush: this tick's deliveries merge
+            // through the sharded fan-in on the engine pool. Group merges
+            // run on disjoint aggregator state in batch order and the
+            // upward reduction is a fixed fold, so the flush is
+            // bit-identical at every `--threads` width; joins in the same
+            // batch pull the pre-batch global view (also width-invariant).
+            if !fed_batch.is_empty() {
+                if let Some(tree) = tree.as_mut() {
+                    let pending: Vec<(usize, &Subspace)> =
+                        fed_batch.iter().map(|(leaf, snap)| (*leaf, snap)).collect();
+                    tree.push_from_leaves(&pending, &workers);
+                }
+                fed_batch.clear();
             }
         }
 

@@ -1,0 +1,122 @@
+//! Sharded-merge determinism: the batched federation fan-in
+//! (`FederationTree::push_from_leaves`) shards level-0 aggregation
+//! across the observe pool, and the engine flushes each tick's pushes
+//! through it — so every catalog scenario must produce **byte-identical**
+//! reports at every `--threads` width.
+//!
+//! Two layers of evidence:
+//!
+//! * engine-level byte identity — the full scenario catalog at observe
+//!   widths 1/2/4/7 (1 is the inline sequential path; 7 leaves ragged
+//!   aggregator-group shards) renders the same `SimReport` JSON;
+//! * a bracket-order regression on `merge_subspaces` — the fan-in's
+//!   left-to-right fold is *not* bitwise-associative, which is exactly
+//!   why the tree pins the reduction order instead of merging in
+//!   arrival order. (`federation::tree` pins batched ≡ sequential at
+//!   the unit level; this pins the *reason* the order is load-bearing.)
+//!
+//! Seeded and replayable via `PRONTO_PROP_SEED` / `PRONTO_PROP_CASES`.
+
+// Index loops over parallel same-length arrays are the house style
+// here; see the scoped allow note in rust/src/lib.rs.
+#![allow(clippy::needless_range_loop)]
+
+use pronto::fpca::{merge_subspaces, MergeOptions, Subspace};
+use pronto::proptest::{gen_orthonormal, gen_spectrum};
+use pronto::rng::Xoshiro256;
+use pronto::scheduler::{Admission, RandomPolicy};
+use pronto::sim::{DiscreteEventEngine, Scenario, CATALOG};
+use pronto::telemetry::{GeneratorConfig, TraceGenerator, VmTrace};
+
+fn fleet(n: usize, steps: usize, seed: u64) -> Vec<VmTrace> {
+    let gen = TraceGenerator::new(GeneratorConfig::default(), seed);
+    (0..n).map(|v| gen.generate_vm_in_cluster(v / 4, v, steps)).collect()
+}
+
+fn policies(n: usize, seed: u64) -> Vec<Box<dyn Admission>> {
+    (0..n)
+        .map(|i| Box::new(RandomPolicy::new(0.3, seed ^ i as u64)) as Box<dyn Admission>)
+        .collect()
+}
+
+#[test]
+fn every_catalog_scenario_is_byte_identical_at_every_width() {
+    // The acceptance criterion of the sharding work: reports are a pure
+    // function of (scenario, seed), never of the worker count. Width 1
+    // exercises the inline sequential path of `push_from_leaves`; the
+    // prime width leaves a ragged final shard.
+    let nodes = 6;
+    let steps = 800;
+    let run = |name: &str, threads: usize| {
+        let scenario = Scenario::named(name)
+            .unwrap()
+            .with_nodes(nodes)
+            .with_steps(steps)
+            .with_seed(0xFEED)
+            .with_threads(threads);
+        let tr = fleet(nodes, steps, 31);
+        DiscreteEventEngine::new(scenario, tr, policies(nodes, 77)).run()
+    };
+    for name in CATALOG {
+        let baseline = run(name, 1).to_json_string();
+        for threads in [2, 4, 7] {
+            let wide = run(name, threads).to_json_string();
+            assert_eq!(
+                baseline, wide,
+                "scenario '{name}': report at {threads} threads differs from width 1"
+            );
+        }
+    }
+}
+
+#[test]
+fn merge_fan_in_bracket_order_is_load_bearing() {
+    // `merge_subspaces` is not bitwise-associative: (A⊕B)⊕C and A⊕(B⊕C)
+    // run the randomized-SVD iteration over *different* panels, so their
+    // low-order bits diverge. That non-associativity is why
+    // `FederationTree::reduce_upward` folds children strictly left to
+    // right — any arrival-order or tree-shape dependence would leak into
+    // the report bytes. A handful of trials guards against the (measure-
+    // zero, but cheap to tolerate) case where one draw happens to agree.
+    let opts = MergeOptions::rank(3);
+    let mut diverged = 0usize;
+    for trial in 0..8u64 {
+        let mut rng = Xoshiro256::seed_from_u64(0xB0AC + trial);
+        let d = 10;
+        let gen = |rng: &mut Xoshiro256| {
+            let u = gen_orthonormal(rng, d, 3);
+            let s = gen_spectrum(rng, 3);
+            Subspace::new(u, s)
+        };
+        let (a, b, c) = (gen(&mut rng), gen(&mut rng), gen(&mut rng));
+        let left = merge_subspaces(&merge_subspaces(&a, &b, opts), &c, opts);
+        let right = merge_subspaces(&a, &merge_subspaces(&b, &c, opts), opts);
+        // The fold itself must be exactly reproducible...
+        let left2 = merge_subspaces(&merge_subspaces(&a, &b, opts), &c, opts);
+        assert!(
+            bits_equal(&left, &left2),
+            "trial {trial}: left fold is not reproducible bit-for-bit"
+        );
+        // ...while the alternative bracketing generally is a different
+        // computation.
+        if !bits_equal(&left, &right) {
+            diverged += 1;
+        }
+    }
+    assert!(
+        diverged > 0,
+        "all {diverged}/8 bracketings agreed bitwise — associativity assumption changed; \
+         revisit whether the fan-in still needs a pinned reduction order"
+    );
+}
+
+fn bits_equal(x: &Subspace, y: &Subspace) -> bool {
+    x.u.data().len() == y.u.data().len()
+        && x.sigma.len() == y.sigma.len()
+        && x.u
+            .data()
+            .iter()
+            .zip(y.u.data())
+            .all(|(a, b)| a.to_bits() == b.to_bits())
+        && x.sigma.iter().zip(&y.sigma).all(|(a, b)| a.to_bits() == b.to_bits())
+}

@@ -1,0 +1,134 @@
+//! Blocked-vs-scalar linalg kernel parity: the panel-blocked kernels
+//! behind `Mat::matmul_into`, `matvec_into`, and `transpose_matvec_into`
+//! must be **bit-identical** to the scalar oracle that
+//! `PRONTO_LINALG=scalar` selects.
+//!
+//! Two layers of evidence, mirroring `tests/queue_wheel_parity.rs`:
+//!
+//! * kernel-level property tests — randomized shapes (panel remainders
+//!   included) and data (exact zeros injected to exercise the matvec
+//!   skip gate) produce bitwise-equal outputs from both backings via the
+//!   explicit `_with` entry points;
+//! * an env-plumbing test pinning `LinalgBacking::from_env()`. The
+//!   cached `LinalgBacking::current()` cannot flip mid-process (it is a
+//!   `OnceLock`), so engine-level byte identity under
+//!   `PRONTO_LINALG=scalar` runs cross-process in CI, diffing full
+//!   scenario reports against the default blocked run.
+//!
+//! Seeded and replayable via `PRONTO_PROP_SEED` / `PRONTO_PROP_CASES`.
+
+// Index loops over parallel same-length arrays are the house style
+// here; see the scoped allow note in rust/src/lib.rs.
+#![allow(clippy::needless_range_loop)]
+
+use pronto::linalg::{LinalgBacking, Mat};
+use pronto::proptest::forall;
+use pronto::rng::Xoshiro256;
+
+/// Random matrix with exact zeros sprinkled in: the matvec kernels gate
+/// on `x == 0.0`, so parity must hold across the skip/no-skip boundary.
+fn random_mat(rng: &mut Xoshiro256, rows: usize, cols: usize, zero_prob: f64) -> Mat {
+    let data: Vec<f64> = (0..rows * cols)
+        .map(|_| if rng.bernoulli(zero_prob) { 0.0 } else { rng.normal() })
+        .collect();
+    Mat::from_col_major(rows, cols, data)
+}
+
+/// Bitwise comparison: `f64::==` would let `-0.0` impersonate `0.0`.
+fn bits_equal(a: &[f64], b: &[f64]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+#[test]
+fn matmul_backings_are_bit_identical() {
+    forall("blocked ≡ scalar: matmul_into over random shapes", |rng| {
+        // Shapes straddle the 4-wide panel boundary on every side.
+        let m = 1 + rng.gen_range(13);
+        let k = 1 + rng.gen_range(10);
+        let n = 1 + rng.gen_range(13);
+        let a = random_mat(rng, m, k, 0.15);
+        let b = random_mat(rng, k, n, 0.15);
+        let mut blocked = Mat::zeros(m, n);
+        let mut scalar = Mat::zeros(m, n);
+        a.matmul_into_with(&b, &mut blocked, LinalgBacking::Blocked);
+        a.matmul_into_with(&b, &mut scalar, LinalgBacking::Scalar);
+        if bits_equal(blocked.data(), scalar.data()) {
+            Ok(())
+        } else {
+            Err(format!("matmul {m}x{k} · {k}x{n}: backings disagree bitwise"))
+        }
+    });
+}
+
+#[test]
+fn batch_matvec_backings_are_bit_identical() {
+    forall("blocked ≡ scalar: batch_matvec_into", |rng| {
+        let d = 1 + rng.gen_range(16);
+        let r = 1 + rng.gen_range(9);
+        let cols = 1 + rng.gen_range(9);
+        let u = random_mat(rng, d, r, 0.1);
+        let xs = random_mat(rng, r, cols, 0.1);
+        let mut blocked = Mat::zeros(d, cols);
+        let mut scalar = Mat::zeros(d, cols);
+        u.batch_matvec_into_with(&xs, &mut blocked, LinalgBacking::Blocked);
+        u.batch_matvec_into_with(&xs, &mut scalar, LinalgBacking::Scalar);
+        if bits_equal(blocked.data(), scalar.data()) {
+            Ok(())
+        } else {
+            Err(format!("batch_matvec {d}x{r} · {r}x{cols}: backings disagree bitwise"))
+        }
+    });
+}
+
+#[test]
+fn matvec_backings_are_bit_identical_across_zero_gates() {
+    forall("blocked ≡ scalar: matvec_into / transpose_matvec_into", |rng| {
+        let rows = 1 + rng.gen_range(14);
+        let cols = 1 + rng.gen_range(14);
+        let a = random_mat(rng, rows, cols, 0.1);
+        // Heavy zero density in the vector: every panel shape (all-zero,
+        // mixed, zero-free) shows up across cases, exercising both the
+        // jammed fast path and the per-column skip fallback.
+        let v: Vec<f64> = (0..cols)
+            .map(|_| if rng.bernoulli(0.4) { 0.0 } else { rng.normal() })
+            .collect();
+        let mut blocked = vec![0.0; rows];
+        let mut scalar = vec![0.0; rows];
+        a.matvec_into_with(&v, &mut blocked, LinalgBacking::Blocked);
+        a.matvec_into_with(&v, &mut scalar, LinalgBacking::Scalar);
+        if !bits_equal(&blocked, &scalar) {
+            return Err(format!("matvec {rows}x{cols}: backings disagree bitwise"));
+        }
+        let w: Vec<f64> = (0..rows)
+            .map(|_| if rng.bernoulli(0.4) { 0.0 } else { rng.normal() })
+            .collect();
+        let mut tb = vec![0.0; cols];
+        let mut ts = vec![0.0; cols];
+        a.transpose_matvec_into_with(&w, &mut tb, LinalgBacking::Blocked);
+        a.transpose_matvec_into_with(&w, &mut ts, LinalgBacking::Scalar);
+        if !bits_equal(&tb, &ts) {
+            return Err(format!("transpose_matvec {rows}x{cols}: backings disagree bitwise"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn env_var_selects_the_scalar_oracle() {
+    // `from_env()` is the uncached read behind the `OnceLock`; this is
+    // the only test in this binary touching the variable (the kernel
+    // tests above pass backings explicitly), so the process-global
+    // mutation cannot race them. The cached `current()` is pinned at
+    // whatever the environment held at first use — flipping it requires
+    // a fresh process, which is exactly what the CI scalar-vs-blocked
+    // report diff does.
+    std::env::remove_var("PRONTO_LINALG");
+    assert_eq!(LinalgBacking::from_env(), LinalgBacking::Blocked);
+    std::env::set_var("PRONTO_LINALG", "scalar");
+    assert_eq!(LinalgBacking::from_env(), LinalgBacking::Scalar);
+    // Unknown values fall back to the default blocked kernels.
+    std::env::set_var("PRONTO_LINALG", "simd");
+    assert_eq!(LinalgBacking::from_env(), LinalgBacking::Blocked);
+    std::env::remove_var("PRONTO_LINALG");
+    assert_eq!(LinalgBacking::from_env(), LinalgBacking::Blocked);
+}

@@ -102,12 +102,14 @@ fn env_registry_applies_in_test_paths_too() {
 }
 
 #[test]
-fn set_var_allowed_only_in_queue_wheel_parity() {
+fn set_var_allowed_only_in_isolated_parity_binaries() {
     let src = include_str!("lint_fixtures/env_bad.rs");
-    let findings = lint_source("tests/queue_wheel_parity.rs", src);
-    // The mutation is waived there; the unregistered key still fires.
-    assert_eq!(findings.len(), 1, "{findings:?}");
-    assert!(findings[0].message.contains("unregistered env key"));
+    for path in ["tests/queue_wheel_parity.rs", "tests/linalg_oracle_parity.rs"] {
+        let findings = lint_source(path, src);
+        // The mutation is waived there; the unregistered key still fires.
+        assert_eq!(findings.len(), 1, "{path}: {findings:?}");
+        assert!(findings[0].message.contains("unregistered env key"));
+    }
 }
 
 #[test]
