@@ -14,11 +14,18 @@
 //! pronto bench diff BENCH_baseline.json BENCH_new.json --max-regress 10
 //! ```
 //!
-//! Rows present on only one side are reported but never fail the gate —
-//! sweeps legitimately grow and shrink across PRs. Wall-clock noise is
-//! the caller's problem: compare artifacts from the same machine and
-//! pick a threshold wide enough for its variance (the README documents
-//! the workflow).
+//! Rows present on only one side are printed with the joined rows —
+//! old-only as `dropped`, new-only as `new` rows with their measured
+//! throughput — but never fail the gate by default: sweeps legitimately
+//! grow and shrink across PRs. `--require-baseline` flips that for
+//! new-only rows, failing the run until the baseline artifact is
+//! regenerated (the strict mode CI uses once a sweep's shape is
+//! pinned). Both `BENCH_engine.json` (`bench = "engine"`) and
+//! `SWEEP_*.json` (`bench = "sweep"`) artifacts diff; grid rows join by
+//! their composite `scenario` id. Wall-clock noise is the caller's
+//! problem: compare artifacts from the same machine and pick a
+//! threshold wide enough for its variance (the README documents the
+//! workflow).
 
 use crate::ser::{parse_json, JsonValue};
 use anyhow::{anyhow, bail, Result};
@@ -58,8 +65,12 @@ pub struct BenchDiff {
     pub rows: Vec<RowDiff>,
     /// Rows only the old artifact has (dropped from the sweep).
     pub only_old: Vec<RowKey>,
-    /// Rows only the new artifact has (new sweep entries).
-    pub only_new: Vec<RowKey>,
+    /// Rows only the new artifact has (new sweep entries), with their
+    /// measured throughput. These were once dropped from the report
+    /// entirely — a fresh sweep/scale row could silently never gate —
+    /// so they now render as explicit `new` rows, and strict callers
+    /// (`--require-baseline`) can refuse them outright.
+    pub only_new: Vec<(RowKey, f64)>,
 }
 
 impl BenchDiff {
@@ -100,31 +111,40 @@ impl BenchDiff {
                 r.old_events_per_sec, r.new_events_per_sec
             ));
         }
+        for (k, eps) in &self.only_new {
+            // New rows line up under the same columns: no baseline
+            // figure, the measured throughput, and `new` in the delta
+            // slot so the eye catches them next to real regressions.
+            let key = k.to_string();
+            out.push_str(&format!(
+                "{key:<44} {:>14} {eps:>14.0} {:>9}\n",
+                "-", "new"
+            ));
+        }
         for k in &self.only_old {
             let key = k.to_string();
             out.push_str(&format!("{key:<44} dropped from the new sweep\n"));
-        }
-        for k in &self.only_new {
-            let key = k.to_string();
-            out.push_str(&format!("{key:<44} new in this sweep (no baseline)\n"));
         }
         out
     }
 }
 
-/// Extract `(key → events_per_sec)` from one `BENCH_engine.json`
-/// document. Validates the artifact kind and rejects duplicate keys —
-/// a doubled row means the join would silently compare the wrong pair.
+/// Extract `(key → events_per_sec)` from one benchmark artifact —
+/// `BENCH_engine.json` (`runs` array) or `SWEEP_*.json` (`rows` array;
+/// each row's `scenario` is its composite grid id). Validates the
+/// artifact kind and rejects duplicate keys — a doubled row means the
+/// join would silently compare the wrong pair.
 pub fn parse_bench_rows(text: &str, label: &str) -> Result<BTreeMap<RowKey, f64>> {
     let doc = parse_json(text).map_err(|e| anyhow!("{label}: invalid JSON: {e}"))?;
-    match doc.get("bench").and_then(JsonValue::as_str) {
-        Some("engine") => {}
-        other => bail!("{label}: not a BENCH_engine.json artifact (bench = {other:?})"),
-    }
+    let rows_key = match doc.get("bench").and_then(JsonValue::as_str) {
+        Some("engine") => "runs",
+        Some("sweep") => "rows",
+        other => bail!("{label}: not a bench artifact (bench = {other:?})"),
+    };
     let runs = doc
-        .get("runs")
+        .get(rows_key)
         .and_then(JsonValue::as_array)
-        .ok_or_else(|| anyhow!("{label}: missing runs array"))?;
+        .ok_or_else(|| anyhow!("{label}: missing {rows_key} array"))?;
     let mut rows = BTreeMap::new();
     for (i, run) in runs.iter().enumerate() {
         let scenario = run
@@ -172,7 +192,7 @@ pub fn bench_diff(old_text: &str, new_text: &str) -> Result<BenchDiff> {
             None => diff.only_old.push(key),
         }
     }
-    diff.only_new.extend(new.into_keys());
+    diff.only_new.extend(new);
     if diff.rows.is_empty() {
         bail!(
             "no comparable rows: the artifacts share no (scenario, nodes, threads) key \
@@ -239,8 +259,46 @@ mod tests {
         let d = bench_diff(&old, &new).unwrap();
         assert_eq!(d.rows.len(), 1);
         assert_eq!(d.only_old.len(), 1);
+        // New-only rows keep their measured throughput and render as
+        // explicit `new` table rows — before this fix they were reduced
+        // to their key and a footnote, so a fresh sweep row never
+        // surfaced its first measurement.
         assert_eq!(d.only_new.len(), 1);
-        assert!(d.render().contains("dropped from the new sweep"));
+        assert_eq!(d.only_new[0].0.scenario, "fresh");
+        assert!((d.only_new[0].1 - 7_000.0).abs() < 1e-9);
+        let table = d.render();
+        assert!(table.contains("dropped from the new sweep"));
+        let fresh_line = table
+            .lines()
+            .find(|l| l.contains("fresh"))
+            .expect("new-only row must render");
+        assert!(fresh_line.contains("7000"), "{fresh_line}");
+        assert!(fresh_line.trim_end().ends_with("new"), "{fresh_line}");
+    }
+
+    #[test]
+    fn sweep_artifacts_diff_by_composite_grid_id() {
+        let mk = |eps_a: f64, eps_b: f64| {
+            format!(
+                concat!(
+                    r#"{{"bench":"sweep","schema_version":1,"rows":["#,
+                    r#"{{"scenario":"sweep/queue-aware/f0.0020","nodes":24,"threads":1,"events_per_sec":{}}},"#,
+                    r#"{{"scenario":"sweep/signal-only/f0.0000","nodes":24,"threads":1,"events_per_sec":{}}}"#,
+                    r#"]}}"#
+                ),
+                eps_a, eps_b
+            )
+        };
+        let d = bench_diff(&mk(50_000.0, 60_000.0), &mk(40_000.0, 61_000.0)).unwrap();
+        assert_eq!(d.rows.len(), 2);
+        let bad = d.regressions_beyond(10.0);
+        assert_eq!(bad.len(), 1);
+        assert_eq!(bad[0].key.scenario, "sweep/queue-aware/f0.0020");
+        // Engine and sweep artifacts never share keys, so cross-kind
+        // diffs fail the no-comparable-rows check instead of silently
+        // comparing unrelated measurements.
+        let engine = doc(&[("capacity", 50, 1, 1.0)]);
+        assert!(bench_diff(&engine, &mk(1.0, 1.0)).is_err());
     }
 
     #[test]

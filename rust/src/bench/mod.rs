@@ -8,12 +8,14 @@
 pub mod diff;
 pub mod engine;
 pub mod experiments;
+pub mod sweep;
 
 pub use diff::{bench_diff, parse_bench_rows, BenchDiff, RowDiff, RowKey};
 pub use engine::{
     bench_engine, bench_engine_report, bench_engine_run, EngineBenchConfig, EngineBenchRun,
     ScaleRow, DEFAULT_BENCH_SCENARIOS,
 };
+pub use sweep::{run_sweep, run_sweep_cell, sweep_report, sweep_table, SweepConfig, SweepRow};
 
 use std::time::{Duration, Instant};
 

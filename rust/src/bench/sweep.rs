@@ -1,0 +1,419 @@
+//! `pronto sweep` — the declared-grid runner behind `SWEEP_*.json`.
+//!
+//! Sweeps fleet size × dispatch policy × failure rate through the
+//! discrete-event engine with the streaming trace source and cost-free
+//! `always` admission, the sensitivity-grid counterpart of `pronto bench
+//! engine`'s size ladder. Every cell is an independent run (fresh
+//! generator, source, policies, engine) whose deterministic fields are
+//! byte-identical at any `--threads` width, so two artifacts diff row by
+//! row. The failure axis maps to the correlated rack-outage hazard of
+//! the scenario's `FailureModel`; rate 0 runs the same grid cell with no
+//! failure layer at all, anchoring each column.
+//!
+//! Rows carry a composite grid id in their `scenario` field —
+//! `sweep/<policy>/f<rate>` — alongside `nodes`/`threads`, so
+//! `pronto bench diff` joins sweep artifacts by grid coordinates with
+//! the same `(scenario, nodes, threads)` key it uses for engine rows.
+//!
+//! ```text
+//! pronto sweep --quick --out SWEEP_quick.json
+//! pronto bench diff SWEEP_baseline.json SWEEP_quick.json --require-baseline
+//! ```
+
+use super::Table;
+use crate::scheduler::{Admission, QueuePolicy, RandomPolicy};
+use crate::ser::JsonValue;
+use crate::sim::{
+    CapacityModel, DiscreteEventEngine, DispatchPolicy, FailureModel, FederationSpec, Scenario,
+};
+use crate::telemetry::{fleet_members, GeneratorConfig, TraceGenerator, TraceSource};
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Cluster grouping for generated fleets (matches the engine bench).
+const SWEEP_FANOUT: usize = 8;
+
+/// Nodes per rack on the failure axis; fleet sizes should divide by it
+/// so outages take whole racks.
+const SWEEP_RACK_SIZE: usize = 4;
+
+/// The declared grid: every combination of these axes runs once.
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    /// Fleet sizes (multiples of the rack size keep outages whole-rack).
+    pub sizes: Vec<usize>,
+    /// Dispatch policies to score candidates with.
+    pub policies: Vec<DispatchPolicy>,
+    /// Per-rack per-step outage hazards; `0.0` disables the failure
+    /// layer entirely for that column.
+    pub failure_rates: Vec<f64>,
+    /// Steps per cell.
+    pub steps: usize,
+    pub seed: u64,
+    /// Observe-loop worker threads per cell (deterministic fields are
+    /// byte-identical across widths; recorded per row for the diff key).
+    pub threads: usize,
+    /// Quick sizing (CI smoke) — recorded in the artifact.
+    pub quick: bool,
+}
+
+impl SweepConfig {
+    /// Full sizing: 24/48/96 nodes × 3 policies × 3 hazards.
+    pub fn full() -> Self {
+        Self {
+            sizes: vec![24, 48, 96],
+            policies: vec![
+                DispatchPolicy::SignalOnly,
+                DispatchPolicy::QueueAware,
+                DispatchPolicy::LeastLoaded,
+            ],
+            failure_rates: vec![0.0, 0.002, 0.01],
+            steps: 800,
+            seed: 2021,
+            threads: 1,
+            quick: false,
+        }
+    }
+
+    /// Quick sizing for CI smoke: same 3×3×3 grid shape at smaller
+    /// fleets and a shorter trajectory (the acceptance floor is ≥ 3
+    /// sizes × 3 policies × 3 rates).
+    pub fn quick() -> Self {
+        Self {
+            sizes: vec![12, 24, 48],
+            steps: 240,
+            quick: true,
+            ..Self::full()
+        }
+    }
+
+    /// Honour `PRONTO_BENCH_QUICK=1`.
+    pub fn from_env() -> Self {
+        if std::env::var("PRONTO_BENCH_QUICK").map(|v| v == "1").unwrap_or(false) {
+            Self::quick()
+        } else {
+            Self::full()
+        }
+    }
+
+    /// Cells in the declared grid.
+    pub fn cells(&self) -> usize {
+        self.sizes.len() * self.policies.len() * self.failure_rates.len()
+    }
+}
+
+/// Stable artifact name for a dispatch policy.
+pub fn policy_name(p: DispatchPolicy) -> &'static str {
+    match p {
+        DispatchPolicy::SignalOnly => "signal-only",
+        DispatchPolicy::QueueAware => "queue-aware",
+        DispatchPolicy::LeastLoaded => "least-loaded",
+    }
+}
+
+/// Composite grid id carried in the row's `scenario` field: the
+/// non-numeric grid coordinates, fixed-width so ids are stable strings
+/// (`sweep/queue-aware/f0.0020`). `nodes` and `threads` stay separate —
+/// together the three make up `bench diff`'s `(scenario, nodes,
+/// threads)` join key.
+pub fn grid_id(policy: DispatchPolicy, failure_rate: f64) -> String {
+    format!("sweep/{}/f{:.4}", policy_name(policy), failure_rate)
+}
+
+/// One grid cell's measurement.
+#[derive(Debug, Clone)]
+pub struct SweepRow {
+    pub policy: DispatchPolicy,
+    pub failure_rate: f64,
+    pub nodes: usize,
+    pub steps: usize,
+    pub seed: u64,
+    pub threads: usize,
+    pub wall_ms: f64,
+    pub events: usize,
+    pub events_per_sec: f64,
+    pub jobs_arrived: usize,
+    pub jobs_completed: usize,
+    pub jobs_rejected: usize,
+    pub rack_outages: usize,
+}
+
+impl SweepRow {
+    pub fn grid_id(&self) -> String {
+        grid_id(self.policy, self.failure_rate)
+    }
+
+    pub fn to_json(&self) -> JsonValue {
+        let mut m = BTreeMap::new();
+        let num = |x: usize| JsonValue::Number(x as f64);
+        m.insert("scenario".into(), JsonValue::String(self.grid_id()));
+        m.insert("policy".into(), JsonValue::String(policy_name(self.policy).into()));
+        m.insert("failure_rate".into(), JsonValue::Number(self.failure_rate));
+        m.insert("nodes".into(), num(self.nodes));
+        m.insert("steps".into(), num(self.steps));
+        m.insert("seed".into(), JsonValue::String(self.seed.to_string()));
+        m.insert("threads".into(), num(self.threads));
+        m.insert("wall_ms".into(), JsonValue::Number(self.wall_ms));
+        m.insert("events".into(), num(self.events));
+        m.insert("events_per_sec".into(), JsonValue::Number(self.events_per_sec));
+        m.insert("jobs_arrived".into(), num(self.jobs_arrived));
+        m.insert("jobs_completed".into(), num(self.jobs_completed));
+        m.insert("jobs_rejected".into(), num(self.jobs_rejected));
+        m.insert("rack_outages".into(), num(self.rack_outages));
+        JsonValue::Object(m)
+    }
+}
+
+/// The scenario one grid cell runs: capacity + federation on, the
+/// requested dispatch policy, and — at a non-zero rate — whole-rack
+/// outages floored at a quarter of the fleet.
+fn cell_scenario(
+    nodes: usize,
+    steps: usize,
+    seed: u64,
+    threads: usize,
+    policy: DispatchPolicy,
+    failure_rate: f64,
+) -> Scenario {
+    let failures = (failure_rate > 0.0).then(|| FailureModel {
+        rack_size: SWEEP_RACK_SIZE,
+        rack_outage_hazard: failure_rate,
+        rack_outage_duration_mean: 30.0,
+        min_alive: (nodes / 4).max(1),
+        ..FailureModel::default()
+    });
+    Scenario {
+        name: grid_id(policy, failure_rate),
+        dispatch: policy,
+        capacity: Some(CapacityModel {
+            slots_per_node: 4,
+            contended_slots: 4,
+            queue_capacity: 8,
+            max_job_slots: 2,
+            queue_policy: QueuePolicy::Fifo,
+            migration_limit: 2,
+            ..CapacityModel::default()
+        }),
+        federation: FederationSpec { enabled: true, ..FederationSpec::default() },
+        failures,
+        ..Scenario::default()
+    }
+    .with_nodes(nodes)
+    .with_steps(steps)
+    .with_seed(seed)
+    .with_threads(threads)
+}
+
+/// Run one grid cell through the streaming source with `always`-accept
+/// policies, timed end to end. Cells share no state (see the engine
+/// bench's row-independence contract).
+pub fn run_sweep_cell(
+    nodes: usize,
+    policy: DispatchPolicy,
+    failure_rate: f64,
+    steps: usize,
+    seed: u64,
+    threads: usize,
+) -> Result<SweepRow> {
+    let scenario = cell_scenario(nodes, steps, seed, threads, policy, failure_rate);
+    scenario.validate()?;
+    let gen = TraceGenerator::new(GeneratorConfig::default(), seed);
+    let members = fleet_members(nodes, SWEEP_FANOUT);
+    let source = TraceSource::streaming(&gen, &members, steps, scenario.score_window);
+    let policies: Vec<Box<dyn Admission>> = (0..nodes)
+        .map(|i| {
+            Box::new(RandomPolicy::always_accept(seed ^ i as u64)) as Box<dyn Admission>
+        })
+        .collect();
+    let engine = DiscreteEventEngine::try_from_source(scenario, source, policies)?;
+    let t0 = Instant::now();
+    let report = engine.run();
+    let wall = t0.elapsed();
+    Ok(SweepRow {
+        policy,
+        failure_rate,
+        nodes,
+        steps,
+        seed,
+        threads,
+        wall_ms: wall.as_secs_f64() * 1e3,
+        events: report.events_processed,
+        events_per_sec: report.events_processed as f64 / wall.as_secs_f64().max(1e-9),
+        jobs_arrived: report.jobs_arrived,
+        jobs_completed: report.jobs_completed,
+        jobs_rejected: report.jobs_rejected,
+        rack_outages: report.rack_outages,
+    })
+}
+
+/// Run the whole declared grid in axis order (size-major, then policy,
+/// then rate), logging one line per cell to stderr.
+pub fn run_sweep(cfg: &SweepConfig) -> Result<Vec<SweepRow>> {
+    let mut rows = Vec::with_capacity(cfg.cells());
+    for &nodes in &cfg.sizes {
+        for &policy in &cfg.policies {
+            for &rate in &cfg.failure_rates {
+                let row = run_sweep_cell(nodes, policy, rate, cfg.steps, cfg.seed, cfg.threads)?;
+                eprintln!(
+                    "sweep: {:<26} {:>6} nodes — {:>8.1} ms, {} outages, {} jobs",
+                    row.grid_id(),
+                    row.nodes,
+                    row.wall_ms,
+                    row.rack_outages,
+                    row.jobs_arrived
+                );
+                rows.push(row);
+            }
+        }
+    }
+    Ok(rows)
+}
+
+/// The deterministic stdout table: grid coordinates plus the counters
+/// that must be byte-identical across `--threads` widths. Wall time and
+/// throughput live only in the JSON artifact, so CI can diff two
+/// renders of this table directly.
+pub fn sweep_table(rows: &[SweepRow]) -> Table {
+    let mut t = Table::new(
+        "pronto sweep — fleet × dispatch × failure rate",
+        &["grid", "nodes", "events", "arrived", "completed", "rejected", "outages"],
+    );
+    for r in rows {
+        t.row(&[
+            r.grid_id(),
+            r.nodes.to_string(),
+            r.events.to_string(),
+            r.jobs_arrived.to_string(),
+            r.jobs_completed.to_string(),
+            r.jobs_rejected.to_string(),
+            r.rack_outages.to_string(),
+        ]);
+    }
+    t
+}
+
+/// The `SWEEP_*.json` document (schema documented in the README): grid
+/// metadata plus one entry per cell.
+pub fn sweep_report(cfg: &SweepConfig, rows: &[SweepRow]) -> JsonValue {
+    let mut m = BTreeMap::new();
+    m.insert("bench".into(), JsonValue::String("sweep".into()));
+    m.insert("schema_version".into(), JsonValue::Number(1.0));
+    m.insert("quick".into(), JsonValue::Bool(cfg.quick));
+    m.insert("policy".into(), JsonValue::String("always".into()));
+    m.insert("trace_source".into(), JsonValue::String("streaming".into()));
+    m.insert("steps".into(), JsonValue::Number(cfg.steps as f64));
+    m.insert("seed".into(), JsonValue::String(cfg.seed.to_string()));
+    m.insert("threads".into(), JsonValue::Number(cfg.threads as f64));
+    m.insert(
+        "sizes".into(),
+        JsonValue::Array(cfg.sizes.iter().map(|&s| JsonValue::Number(s as f64)).collect()),
+    );
+    m.insert(
+        "policies".into(),
+        JsonValue::Array(
+            cfg.policies
+                .iter()
+                .map(|&p| JsonValue::String(policy_name(p).into()))
+                .collect(),
+        ),
+    );
+    m.insert(
+        "failure_rates".into(),
+        JsonValue::Array(cfg.failure_rates.iter().map(|&r| JsonValue::Number(r)).collect()),
+    );
+    m.insert(
+        "rows".into(),
+        JsonValue::Array(rows.iter().map(SweepRow::to_json).collect()),
+    );
+    JsonValue::Object(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::bench_diff;
+    use crate::ser::parse_json;
+
+    fn tiny() -> SweepConfig {
+        SweepConfig {
+            sizes: vec![8],
+            policies: vec![DispatchPolicy::SignalOnly, DispatchPolicy::QueueAware],
+            failure_rates: vec![0.0, 0.05],
+            steps: 60,
+            seed: 9,
+            threads: 1,
+            quick: true,
+        }
+    }
+
+    #[test]
+    fn declared_grids_meet_the_acceptance_floor() {
+        for cfg in [SweepConfig::full(), SweepConfig::quick()] {
+            assert!(cfg.sizes.len() >= 3);
+            assert!(cfg.policies.len() >= 3);
+            assert!(cfg.failure_rates.len() >= 3);
+            assert_eq!(cfg.cells(), 27);
+            assert!(cfg.failure_rates.contains(&0.0), "grid needs its no-failure anchor");
+            assert!(
+                cfg.sizes.iter().all(|s| s % SWEEP_RACK_SIZE == 0),
+                "sizes must divide into whole racks"
+            );
+        }
+    }
+
+    #[test]
+    fn grid_ids_are_stable_and_unique_per_cell() {
+        let cfg = SweepConfig::quick();
+        let mut seen = std::collections::BTreeSet::new();
+        for &p in &cfg.policies {
+            for &r in &cfg.failure_rates {
+                assert!(seen.insert(grid_id(p, r)), "duplicate grid id");
+            }
+        }
+        assert_eq!(grid_id(DispatchPolicy::QueueAware, 0.002), "sweep/queue-aware/f0.0020");
+    }
+
+    #[test]
+    fn rows_are_deterministic_across_observe_widths() {
+        let a = run_sweep(&tiny()).unwrap();
+        let b = run_sweep(&SweepConfig { threads: 3, ..tiny() }).unwrap();
+        assert_eq!(a.len(), 4);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.grid_id(), y.grid_id());
+            assert_eq!(x.events, y.events, "{} diverged across widths", x.grid_id());
+            assert_eq!(x.jobs_arrived, y.jobs_arrived);
+            assert_eq!(x.jobs_completed, y.jobs_completed);
+            assert_eq!(x.jobs_rejected, y.jobs_rejected);
+            assert_eq!(x.rack_outages, y.rack_outages);
+        }
+        // The rendered table carries only deterministic columns, so the
+        // two renders are byte-identical even at different widths.
+        assert_eq!(sweep_table(&a).render(), sweep_table(&b).render());
+        // The failure axis is live: the hazard column saw outages, the
+        // anchor column none.
+        let hot: usize =
+            a.iter().filter(|r| r.failure_rate > 0.0).map(|r| r.rack_outages).sum();
+        let cold: usize =
+            a.iter().filter(|r| r.failure_rate == 0.0).map(|r| r.rack_outages).sum();
+        assert!(hot > 0, "hazard column never fired an outage");
+        assert_eq!(cold, 0, "anchor column must stay failure-free");
+    }
+
+    #[test]
+    fn sweep_artifacts_join_in_bench_diff_by_grid_coordinates() {
+        let cfg = tiny();
+        let rows = run_sweep(&cfg).unwrap();
+        let doc = sweep_report(&cfg, &rows).to_string();
+        let parsed = parse_json(&doc).expect("valid json");
+        assert_eq!(parsed.get("bench").and_then(JsonValue::as_str), Some("sweep"));
+        assert_eq!(parsed.get("schema_version").and_then(JsonValue::as_usize), Some(1));
+        // A sweep artifact diffs against itself: every row joins on the
+        // (grid id, nodes, threads) key and nothing regresses.
+        let d = bench_diff(&doc, &doc).unwrap();
+        assert_eq!(d.rows.len(), rows.len());
+        assert!(d.only_old.is_empty() && d.only_new.is_empty());
+        assert!(d.regressions_beyond(0.0).is_empty());
+    }
+}

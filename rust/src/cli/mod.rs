@@ -13,7 +13,8 @@
 //! pronto federate   [--config FILE] [--nodes N] [--fanout F]
 //! pronto bench engine [--quick] [--no-scale] [--out FILE] [--sizes 100,1000,5000]
 //!                   [--steps N] [--seed S] [--scenarios a,b,c] [--threads N]
-//! pronto bench diff OLD.json NEW.json [--max-regress PCT]
+//! pronto bench diff OLD.json NEW.json [--max-regress PCT] [--require-baseline]
+//! pronto sweep      [--quick] [--steps N] [--seed S] [--threads N] [--out FILE]
 //! pronto bench-tables [--table 1..3] [--quick]
 //! pronto lint       [--json] [PATHS…] — determinism & safety static analysis
 //! pronto inspect    [--compile] — artifact manifest + compile check
@@ -24,7 +25,10 @@ mod args;
 pub use args::Args;
 
 use crate::baselines::*;
-use crate::bench::{bench_engine, bench_engine_report, EngineBenchConfig};
+use crate::bench::{
+    bench_engine, bench_engine_report, run_sweep, sweep_report, sweep_table, EngineBenchConfig,
+    SweepConfig,
+};
 use crate::config::ProntoConfig;
 use crate::scheduler::{
     Admission, CpuReadyOracle, NodeScheduler, ProntoPolicy, RandomPolicy,
@@ -61,7 +65,12 @@ COMMANDS:
                 default sweeps end with a 100k-node large-fleet scale row,
                 dropped by --no-scale or any --sizes/--scenarios override;
                 `bench diff OLD NEW --max-regress PCT` gates on events/s
-                regressions between two artifacts)
+                regressions between two artifacts — sweep artifacts too;
+                --require-baseline also fails on rows with no baseline)
+  sweep         fault-injection sensitivity grid (fleet size x dispatch
+                policy x rack-outage hazard; deterministic table on
+                stdout, schema-versioned SWEEP_*.json via --out;
+                --quick for the CI smoke grid)
   bench-tables  regenerate the paper tables (see also cargo bench)
   lint          determinism & safety static analysis over the source tree
                 (wall-clock, rng-discipline, unordered-iter, env-registry,
@@ -101,6 +110,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "eval" => cmd_eval(rest),
         "federate" => cmd_federate(rest),
         "bench" => cmd_bench(rest),
+        "sweep" => cmd_sweep(rest),
         "bench-tables" => cmd_bench_tables(rest),
         "lint" => cmd_lint(rest),
         "serve" => cmd_serve(rest),
@@ -311,8 +321,10 @@ fn cmd_sim(raw: &[String]) -> Result<()> {
         // panic.
         let mut engine =
             DiscreteEventEngine::try_from_source(scenario.clone(), source, policies)?;
-        if scenario.churn.is_some() {
-            // Rejoining nodes restart with fresh policy state.
+        if scenario.has_node_churn() {
+            // Rejoining nodes restart with fresh policy state. Rack
+            // outages in the failure layer churn nodes exactly like a
+            // churn model, so they need the factory too.
             let cfg = cfg.clone();
             let name = policy.to_string();
             engine = engine.with_policy_factory(Box::new(move |node| {
@@ -429,7 +441,7 @@ fn cmd_scenarios(raw: &[String]) -> Result<()> {
     println!("built-in scenarios (run with `pronto sim --scenario NAME`):");
     for name in CATALOG {
         let s = Scenario::named(name).expect("catalog entry");
-        let churn = if s.churn.is_some() { "churn" } else { "stable" };
+        let churn = if s.has_node_churn() { "churn" } else { "stable" };
         let cap = match &s.capacity {
             Some(c) => {
                 let mut tag = String::from(if c.pressure_enabled() {
@@ -464,8 +476,27 @@ fn cmd_scenarios(raw: &[String]) -> Result<()> {
         } else {
             "no federation"
         };
+        let faults = match s.failures {
+            Some(f) => {
+                let mut tags = Vec::new();
+                if f.rack_outages_enabled() {
+                    tags.push("rack-outages");
+                }
+                if f.partitions_enabled() {
+                    tags.push("partitions");
+                }
+                if f.stragglers_enabled() {
+                    tags.push("stragglers");
+                }
+                if f.antagonist_enabled() {
+                    tags.push("antagonist");
+                }
+                format!(", faults: {}", tags.join("+"))
+            }
+            None => String::new(),
+        };
         println!(
-            "  {name:<18} {} arrivals, {churn}, {lat}{cap}",
+            "  {name:<18} {} arrivals, {churn}, {lat}{cap}{faults}",
             arrival_kind(&s)
         );
     }
@@ -713,7 +744,7 @@ fn run_quality_engine(
         .collect::<Result<_>>()?;
     let mut engine = DiscreteEventEngine::try_from_source(scenario.clone(), source, policies)?
         .with_signal_capture();
-    if scenario.churn.is_some() {
+    if scenario.has_node_churn() {
         let cfg = cfg.clone();
         let name = policy.to_string();
         engine = engine.with_policy_factory(Box::new(move |node| {
@@ -781,7 +812,7 @@ fn cmd_federate(raw: &[String]) -> Result<()> {
 /// such artifacts row by row and exits non-zero when any row's events/s
 /// regressed past `--max-regress` percent (default 10).
 fn cmd_bench(raw: &[String]) -> Result<()> {
-    let args = Args::parse(raw, &["quick", "no-scale"])?;
+    let args = Args::parse(raw, &["quick", "no-scale", "require-baseline"])?;
     match args.positional().first().map(String::as_str) {
         Some("engine") => cmd_bench_engine(&args),
         Some("diff") => cmd_bench_diff(&args),
@@ -789,7 +820,8 @@ fn cmd_bench(raw: &[String]) -> Result<()> {
             "usage: pronto bench engine [--quick] [--no-scale] [--out FILE] \
              [--sizes 100,1000,5000] [--steps N] [--seed S] [--scenarios a,b,c] \
              [--threads N]\n\
-             \x20      pronto bench diff OLD.json NEW.json [--max-regress PCT]"
+             \x20      pronto bench diff OLD.json NEW.json [--max-regress PCT] \
+             [--require-baseline]"
         ),
     }
 }
@@ -856,7 +888,10 @@ fn cmd_bench_diff(args: &Args) -> Result<()> {
     let pos = args.positional();
     // pos[0] is the subcommand itself.
     if pos.len() != 3 {
-        bail!("usage: pronto bench diff OLD.json NEW.json [--max-regress PCT]");
+        bail!(
+            "usage: pronto bench diff OLD.json NEW.json [--max-regress PCT] \
+             [--require-baseline]"
+        );
     }
     let max_regress = args.get_f64("max-regress", 10.0)?;
     if !(max_regress.is_finite() && max_regress >= 0.0) {
@@ -868,6 +903,18 @@ fn cmd_bench_diff(args: &Args) -> Result<()> {
         .with_context(|| format!("reading new artifact {}", pos[2]))?;
     let diff = crate::bench::bench_diff(&old_text, &new_text)?;
     print!("{}", diff.render());
+    // Strict mode: a row with no baseline can't be gated, which is
+    // exactly the hole --require-baseline closes — fail until the
+    // baseline artifact is regenerated to cover the new rows.
+    if args.flag("require-baseline") && !diff.only_new.is_empty() {
+        let rows: Vec<String> =
+            diff.only_new.iter().map(|(k, _)| k.to_string()).collect();
+        bail!(
+            "--require-baseline: {} row(s) have no baseline measurement: {}",
+            diff.only_new.len(),
+            rows.join(", ")
+        );
+    }
     let bad = diff.regressions_beyond(max_regress);
     if !bad.is_empty() {
         // `regressions_beyond` only returns rows with a computable delta
@@ -887,6 +934,40 @@ fn cmd_bench_diff(args: &Args) -> Result<()> {
         diff.worst_regression_pct(),
         diff.rows.len()
     );
+    Ok(())
+}
+
+/// `pronto sweep [--quick] [--steps N] [--seed S] [--threads N]
+/// [--out FILE]`: the fault-injection sensitivity grid. Runs fleet size
+/// × dispatch policy × rack-outage hazard, prints the deterministic
+/// counter table to stdout (byte-identical at any `--threads` width —
+/// CI diffs two renders directly), and writes the schema-versioned
+/// `SWEEP_*.json` artifact, which `pronto bench diff` joins by grid
+/// coordinates.
+fn cmd_sweep(raw: &[String]) -> Result<()> {
+    let args = Args::parse(raw, &["quick"])?;
+    args.reject_unknown(&["steps", "seed", "threads", "out"])?;
+    let mut cfg = if args.flag("quick") {
+        SweepConfig::quick()
+    } else {
+        // PRONTO_BENCH_QUICK=1 selects quick sizing too (CI smoke).
+        SweepConfig::from_env()
+    };
+    cfg.steps = args.get_usize("steps", cfg.steps)?;
+    if cfg.steps == 0 {
+        bail!("--steps must be >= 1");
+    }
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+    cfg.threads = args.get_usize("threads", cfg.threads)?;
+    if cfg.threads == 0 {
+        bail!("--threads must be >= 1 (1 = the sequential observe loop)");
+    }
+    let rows = run_sweep(&cfg)?;
+    sweep_table(&rows).print();
+    let doc = sweep_report(&cfg, &rows);
+    let out = args.get("out").unwrap_or("SWEEP_grid.json");
+    std::fs::write(out, format!("{doc}\n")).with_context(|| format!("writing {out}"))?;
+    println!("wrote {} sweep rows to {out}", rows.len());
     Ok(())
 }
 
@@ -1365,6 +1446,80 @@ mod tests {
             "bench", "diff", &old_s, &ok_s, "--max-regress", "-3"
         ]))
         .is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bench_diff_require_baseline_rejects_new_only_rows() {
+        let dir = std::env::temp_dir().join("pronto_cli_bench_diff_strict");
+        std::fs::create_dir_all(&dir).unwrap();
+        let row = |scenario: &str, eps: f64| {
+            format!(
+                r#"{{"scenario":"{scenario}","nodes":200,"threads":1,"events_per_sec":{eps}}}"#
+            )
+        };
+        let old = dir.join("old.json");
+        let new = dir.join("new.json");
+        std::fs::write(
+            &old,
+            format!(
+                r#"{{"bench":"engine","schema_version":2,"runs":[{}]}}"#,
+                row("large-fleet", 100_000.0)
+            ),
+        )
+        .unwrap();
+        // NEW grows a row the baseline never measured.
+        std::fs::write(
+            &new,
+            format!(
+                r#"{{"bench":"engine","schema_version":2,"runs":[{},{}]}}"#,
+                row("large-fleet", 101_000.0),
+                row("flash-crowd", 55_000.0)
+            ),
+        )
+        .unwrap();
+        let (old_s, new_s) =
+            (old.to_string_lossy().to_string(), new.to_string_lossy().to_string());
+        // Default mode: the new row is reported, not fatal.
+        assert!(run(&argv(&["bench", "diff", &old_s, &new_s])).is_ok());
+        // Strict mode refuses to pass until the baseline covers it.
+        assert!(
+            run(&argv(&["bench", "diff", &old_s, &new_s, "--require-baseline"])).is_err(),
+            "--require-baseline must fail on baseline-less rows"
+        );
+        // A fully covered diff passes strict mode.
+        assert!(run(&argv(&["bench", "diff", &new_s, &new_s, "--require-baseline"])).is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sweep_writes_grid_artifact_and_diffs_against_itself() {
+        let dir = std::env::temp_dir().join("pronto_cli_sweep");
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("SWEEP_grid.json");
+        let out_s = out.to_string_lossy().to_string();
+        assert!(run(&argv(&["sweep", "--quick", "--steps", "40", "--out", &out_s])).is_ok());
+        let text = std::fs::read_to_string(&out).unwrap();
+        let doc = crate::ser::parse_json(&text).expect("valid SWEEP artifact");
+        assert_eq!(doc.get("bench").and_then(crate::ser::JsonValue::as_str), Some("sweep"));
+        assert_eq!(
+            doc.get("schema_version").and_then(crate::ser::JsonValue::as_usize),
+            Some(1)
+        );
+        let rows = doc.get("rows").and_then(crate::ser::JsonValue::as_array).unwrap();
+        assert_eq!(rows.len(), 27, "quick grid is 3 sizes x 3 policies x 3 rates");
+        assert!(rows.iter().all(|r| {
+            r.get("scenario")
+                .and_then(crate::ser::JsonValue::as_str)
+                .is_some_and(|s| s.starts_with("sweep/"))
+        }));
+        // The artifact gates through the same diff path as engine
+        // benches, strict mode included.
+        assert!(run(&argv(&["bench", "diff", &out_s, &out_s, "--require-baseline"])).is_ok());
+        // Bad knobs fail loudly.
+        assert!(run(&argv(&["sweep", "--steps", "0"])).is_err());
+        assert!(run(&argv(&["sweep", "--threads", "0"])).is_err());
+        assert!(run(&argv(&["sweep", "--frobnicate", "1"])).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 

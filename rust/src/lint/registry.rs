@@ -71,15 +71,22 @@ pub const SCHEMA_FILES: &[&str] = &[
     "src/sim/engine.rs",
     "src/sim/quality.rs",
     "src/bench/engine.rs",
+    "src/bench/sweep.rs",
 ];
 
 /// The pinned report-schema manifest: the union of keys emitted by
-/// `SimReport::to_json`, `QualityRow::to_json` / `quality_report`, and
-/// `EngineBenchRun::to_json` / `bench_engine_report`. Sorted; the
-/// registry test enforces order and uniqueness. Renaming or adding a
-/// report key is a schema change and must be made here, on purpose.
+/// `SimReport::to_json`, `QualityRow::to_json` / `quality_report`,
+/// `EngineBenchRun::to_json` / `bench_engine_report`, and
+/// `SweepRow::to_json` / `sweep_report`. Sorted; the registry test
+/// enforces order and uniqueness. Renaming or adding a report key is a
+/// schema change and must be made here, on purpose.
 pub const REPORT_KEYS: &[&str] = &[
     "acceptance_rate",
+    "antagonist_jobs_arrived",
+    "antagonist_jobs_rejected",
+    "antagonist_slo_attained",
+    "antagonist_slo_attainment",
+    "antagonist_slo_total",
     "bad_accepts",
     "bench",
     "decision_p50",
@@ -90,9 +97,13 @@ pub const REPORT_KEYS: &[&str] = &[
     "events",
     "events_per_sec",
     "f1",
+    "failure_rate",
+    "failure_rates",
     "false_positive_rate",
     "federation_late_drops",
+    "federation_partition_drops",
     "federation_pushes",
+    "federation_stale_replays",
     "federation_suppressed",
     "good_accepts",
     "jobs_accepted",
@@ -123,15 +134,21 @@ pub const REPORT_KEYS: &[&str] = &[
     "node_leaves",
     "nodes",
     "outcomes_digest",
+    "partition_events",
     "peak_inflight",
     "peak_queue_len",
     "placement_quality",
+    "policies",
     "policy",
     "precision",
     "precision_node_p50",
     "precision_node_p90",
     "predicted_spikes",
+    "primary_jobs_rejected",
+    "primary_slo_attained",
+    "primary_slo_total",
     "quick",
+    "rack_outages",
     "raises",
     "recall",
     "recall_node_p50",

@@ -69,6 +69,17 @@ pub mod streams {
     /// Per-leaf push-latency sampling in the thread-per-leaf concurrent
     /// federation (`federation::concurrent`).
     pub const CONCURRENT_PUSH_LATENCY: u64 = 11;
+    /// Correlated whole-rack outage hazard + outage durations
+    /// (`sim::engine`, fault injection).
+    pub const RACK_OUTAGE: u64 = 12;
+    /// Federation-tree partition hazard, member selection, and heal
+    /// times (`sim::engine`, fault injection).
+    pub const PARTITION: u64 = 13;
+    /// Straggler-node selection at engine init (`sim::engine`, fault
+    /// injection).
+    pub const STRAGGLER: u64 = 14;
+    /// Antagonist-tenant arrival draws (`sim::engine`, fault injection).
+    pub const ANTAGONIST: u64 = 15;
 
     /// Every registered stream, for uniqueness checks and docs.
     pub const ALL: &[(u64, &str)] = &[
@@ -83,6 +94,10 @@ pub mod streams {
         (HETERO, "hetero"),
         (PM_BASELINE, "pm-baseline"),
         (CONCURRENT_PUSH_LATENCY, "concurrent-push-latency"),
+        (RACK_OUTAGE, "rack-outage"),
+        (PARTITION, "partition"),
+        (STRAGGLER, "straggler"),
+        (ANTAGONIST, "antagonist"),
     ];
 }
 
@@ -416,7 +431,9 @@ mod tests {
         assert!(streams::ALL.contains(&(streams::ARRIVALS, "arrivals")));
         assert!(streams::ALL
             .contains(&(streams::CONCURRENT_PUSH_LATENCY, "concurrent-push-latency")));
-        assert_eq!(streams::ALL.len(), 11);
+        assert!(streams::ALL.contains(&(streams::RACK_OUTAGE, "rack-outage")));
+        assert!(streams::ALL.contains(&(streams::ANTAGONIST, "antagonist")));
+        assert_eq!(streams::ALL.len(), 15);
     }
 
     #[test]

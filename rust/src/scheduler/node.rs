@@ -294,6 +294,16 @@ impl HostCapacity {
             self.queue.drain(..).collect(),
         )
     }
+
+    /// Forget the host's queue-delay telemetry (EWMA + sample count).
+    /// Called when a node rejoins after an outage: the pre-outage
+    /// congestion history describes a host that no longer exists, and a
+    /// stale EWMA would keep steering queue-aware dispatch away from (or
+    /// toward) the fresh host for thousands of ticks.
+    pub fn reset_telemetry(&mut self) {
+        self.delay_ewma = 0.0;
+        self.delay_samples = 0;
+    }
 }
 
 /// One node's full local scheduling stack, generic over the embedding
@@ -609,6 +619,32 @@ mod tests {
         assert_eq!(h.queue_delay_ewma(), 100.0);
         h.note_queue_delay(0);
         assert!(h.queue_delay_ewma() < 100.0 && h.queue_delay_ewma() > 0.0);
+    }
+
+    #[test]
+    fn evacuate_keeps_but_reset_clears_delay_telemetry() {
+        // Regression (leave → join → probe): evacuation alone must not
+        // touch the EWMA — a mid-run pressure probe may still read it —
+        // but a rejoining node resets it, so post-heal probes never score
+        // the fresh host on pre-outage congestion.
+        let mut h = HostCapacity::new(2, 4, QueuePolicy::Fifo);
+        h.start(1, 2);
+        assert!(h.try_enqueue(2, 1, 0, 10));
+        h.note_queue_delay(400);
+        h.note_queue_delay(600);
+        assert!(h.queue_delay_ewma() > 0.0);
+        // The node leaves: jobs evacuate, telemetry survives the drain.
+        let (running, queued) = h.evacuate();
+        assert_eq!((running.len(), queued.len()), (1, 1));
+        assert!(h.queue_delay_ewma() > 0.0, "evacuate must not clear the EWMA");
+        // The node rejoins: telemetry resets, probes read a fresh host.
+        h.reset_telemetry();
+        assert_eq!(h.queue_delay_ewma(), 0.0);
+        assert_eq!(h.probe(false).queue_delay_ewma, 0.0);
+        // The next delay sample seeds the EWMA exactly (sample count was
+        // reset too — a stale count would have smoothed against zero).
+        h.note_queue_delay(250);
+        assert_eq!(h.queue_delay_ewma(), 250.0);
     }
 
     #[test]

@@ -246,6 +246,28 @@ pub struct SimReport {
     /// rejected, dropped, lost, late, or still in flight at the horizon —
     /// counts against attainment.
     pub slo_attained: usize,
+    /// Correlated rack outages that fired (fault injection; the key is
+    /// serialized only when a [`super::scenario::FailureModel`] is set).
+    pub rack_outages: usize,
+    /// Federation partitions that opened (fault injection).
+    pub partition_events: usize,
+    /// Pushes dropped at a partition cut (`partition_queue = false`).
+    pub federation_partition_drops: usize,
+    /// Queued pushes replayed *stale* when their partition healed.
+    pub federation_stale_replays: usize,
+    /// Antagonist-tenant breakdown (keys serialized only when the tenant
+    /// is active): arrivals, rejections, and SLO accounting of the second
+    /// stream. Primary-tenant figures are the totals minus these.
+    pub antagonist_jobs_arrived: usize,
+    pub antagonist_jobs_rejected: usize,
+    pub antagonist_slo_total: usize,
+    pub antagonist_slo_attained: usize,
+    /// Gate: a failure model was configured. Controls serialization of
+    /// the fault-injection keys; not itself serialized.
+    pub fault_injection: bool,
+    /// Gate: the antagonist tenant was configured. Controls serialization
+    /// of the per-tenant keys; not itself serialized.
+    pub antagonist_active: bool,
     /// Deepest wait queue observed on any node.
     pub peak_queue_len: usize,
     /// Time-averaged slot utilization over alive nodes — slot-ticks used
@@ -302,6 +324,15 @@ impl SimReport {
             return 1.0;
         }
         self.slo_attained as f64 / self.slo_total as f64
+    }
+
+    /// Fraction of the antagonist tenant's deadline-carrying jobs that
+    /// completed on time (1.0 when the tenant set none).
+    pub fn antagonist_slo_attainment(&self) -> f64 {
+        if self.antagonist_slo_total == 0 {
+            return 1.0;
+        }
+        self.antagonist_slo_attained as f64 / self.antagonist_slo_total as f64
     }
 
     /// Order-sensitive FNV/SplitMix fold over the outcome sequence: two
@@ -383,6 +414,59 @@ impl SimReport {
                 "slo_attainment".into(),
                 JsonValue::Number(self.slo_attainment()),
             );
+        }
+        // Fault-injection keys appear only when a failure model was
+        // configured; legacy scenarios render byte-identical JSON.
+        if self.fault_injection {
+            m.insert("rack_outages".into(), num(self.rack_outages));
+            m.insert("partition_events".into(), num(self.partition_events));
+            m.insert(
+                "federation_partition_drops".into(),
+                num(self.federation_partition_drops),
+            );
+            m.insert(
+                "federation_stale_replays".into(),
+                num(self.federation_stale_replays),
+            );
+        }
+        // Per-tenant breakdown, gated on the antagonist tenant. Primary
+        // figures are serialized explicitly so downstream tooling never
+        // has to re-derive the split.
+        if self.antagonist_active {
+            m.insert(
+                "antagonist_jobs_arrived".into(),
+                num(self.antagonist_jobs_arrived),
+            );
+            m.insert(
+                "antagonist_jobs_rejected".into(),
+                num(self.antagonist_jobs_rejected),
+            );
+            m.insert(
+                "primary_jobs_rejected".into(),
+                num(self.jobs_rejected - self.antagonist_jobs_rejected),
+            );
+            if self.slo_total > 0 {
+                m.insert(
+                    "antagonist_slo_total".into(),
+                    num(self.antagonist_slo_total),
+                );
+                m.insert(
+                    "antagonist_slo_attained".into(),
+                    num(self.antagonist_slo_attained),
+                );
+                m.insert(
+                    "antagonist_slo_attainment".into(),
+                    JsonValue::Number(self.antagonist_slo_attainment()),
+                );
+                m.insert(
+                    "primary_slo_total".into(),
+                    num(self.slo_total - self.antagonist_slo_total),
+                );
+                m.insert(
+                    "primary_slo_attained".into(),
+                    num(self.slo_attained - self.antagonist_slo_attained),
+                );
+            }
         }
         m.insert("peak_queue_len".into(), num(self.peak_queue_len));
         m.insert(
@@ -492,6 +576,8 @@ struct JobRec {
     /// Completion deadline (SLO), set at arrival when the scenario
     /// configures one.
     deadline: Option<SimTime>,
+    /// The job belongs to the antagonist tenant (fault injection).
+    antagonist: bool,
 }
 
 /// Event-driven slot-utilization integral: slot-ticks in use and
@@ -947,6 +1033,9 @@ impl DiscreteEventEngine {
         let mut migrate_rng = stream(streams::MIGRATE);
         let mut priority_rng = stream(streams::PRIORITY);
         let mut hetero_rng = stream(streams::HETERO);
+        let mut rack_rng = stream(streams::RACK_OUTAGE);
+        let mut partition_rng = stream(streams::PARTITION);
+        let mut antagonist_rng = stream(streams::ANTAGONIST);
 
         let fed = &scenario.federation;
         let mut tree = if fed.enabled {
@@ -990,11 +1079,50 @@ impl DiscreteEventEngine {
         let mut fleet = FleetState::new(n);
         let mut burst_on = false;
 
+        // Fault-injection state. Stragglers are designated once at init
+        // from their own stream; each carries a push-latency multiplier
+        // (1.0 on healthy nodes, so the multiply is an exact identity on
+        // legacy runs) and, with an observe lag, a small ring of its
+        // recent rejection signals. Partitions index a member table;
+        // `partitioned` counts overlapping cuts per leaf, and queued
+        // pushes wait in `partition_pending` until their leaf reconnects.
+        let failures = scenario.failures;
+        let mut straggler_mult: Vec<f64> = vec![1.0; n];
+        let mut straggler = vec![false; n];
+        let straggler_lag = failures
+            .filter(|f| f.stragglers_enabled())
+            .map_or(0, |f| f.straggler_observe_lag);
+        if let Some(f) = failures.filter(|f| f.stragglers_enabled()) {
+            let mut straggler_rng = stream(streams::STRAGGLER);
+            let id_pool: Vec<usize> = (0..n).collect();
+            let want = ((n as f64 * f.straggler_fraction).round() as usize).clamp(1, n);
+            let mut picked = Vec::new();
+            let mut scratch = SampleScratch::default();
+            sample_distinct(&mut straggler_rng, &id_pool, None, want, &mut picked, &mut scratch);
+            for &i in &picked {
+                straggler[i] = true;
+                straggler_mult[i] = f.straggler_delay_multiplier;
+            }
+        }
+        let mut straggler_rings: Vec<std::collections::VecDeque<bool>> = if straggler_lag > 0 {
+            vec![std::collections::VecDeque::with_capacity(straggler_lag + 1); n]
+        } else {
+            Vec::new()
+        };
+        let partitions_active =
+            failures.is_some_and(|f| f.partitions_enabled()) && fed.enabled;
+        let mut partitions: Vec<Vec<usize>> = Vec::new();
+        let mut partition_members_buf: Vec<usize> = Vec::new();
+        let mut partitioned: Vec<u32> = vec![0; n];
+        let mut partition_pending: Vec<(usize, usize, SimTime)> = Vec::new();
+
         let mut report = SimReport {
             scenario: scenario.name.clone(),
             nodes: n,
             steps,
             seed: scenario.seed,
+            fault_injection: failures.is_some(),
+            antagonist_active: failures.is_some_and(|f| f.antagonist_enabled()),
             ..Default::default()
         };
         let mut capture: Option<SignalCapture> = if capture {
@@ -1058,6 +1186,9 @@ impl DiscreteEventEngine {
                         late += 1;
                     }
                 }
+                // Pushes still parked at an unhealed partition cut would
+                // have replayed past the horizon too.
+                late += partition_pending.len();
                 report.federation_late_drops = late;
                 break;
             }
@@ -1094,6 +1225,29 @@ impl DiscreteEventEngine {
                                     can_accept[i] =
                                         policies[i].observe(source.features(i, step));
                                 }
+                            }
+                        }
+
+                        // 1a'. Stragglers publish a *lagged* rejection
+                        //      signal: the freshly computed value enters a
+                        //      per-node ring and dispatch sees the value
+                        //      from `straggler_observe_lag` steps ago
+                        //      (delayed telemetry columns). Sequential
+                        //      post-pass in node-id order, so reports stay
+                        //      byte-identical at any pool width.
+                        if straggler_lag > 0 {
+                            for i in 0..n {
+                                if !straggler[i] || !fleet.is_alive(i) {
+                                    continue;
+                                }
+                                let ring = &mut straggler_rings[i];
+                                ring.push_back(fleet.can_accept(i));
+                                let lagged = if ring.len() > straggler_lag {
+                                    ring.pop_front().unwrap()
+                                } else {
+                                    *ring.front().unwrap()
+                                };
+                                fleet.set_can_accept(i, lagged);
                             }
                         }
 
@@ -1164,6 +1318,81 @@ impl DiscreteEventEngine {
                                     planned_alive -= 1;
                                     queue.schedule(ev.time + 1, Event::NodeLeave { node: i });
                                 }
+                            }
+                        }
+
+                        // 2a. Correlated rack outages: each rack draws its
+                        //     hazard from the dedicated stream (one draw
+                        //     per rack per tick, so the stream position
+                        //     never depends on outcomes); a failing rack
+                        //     schedules NodeLeave for every alive member
+                        //     at the next tick and a shared NodeJoin burst
+                        //     when the outage elapses — the whole rack
+                        //     restarts together.
+                        if let Some(f) = failures.filter(|f| f.rack_outages_enabled()) {
+                            let mut planned_alive = fleet.alive_count();
+                            let racks = n.div_ceil(f.rack_size);
+                            for r in 0..racks {
+                                if !rack_rng.bernoulli(f.rack_outage_hazard) {
+                                    continue;
+                                }
+                                let lo = r * f.rack_size;
+                                let hi = ((r + 1) * f.rack_size).min(n);
+                                let members =
+                                    (lo..hi).filter(|&m| fleet.is_alive(m)).count();
+                                if members == 0
+                                    || planned_alive.saturating_sub(members) < f.min_alive
+                                {
+                                    continue; // outage floor
+                                }
+                                planned_alive -= members;
+                                report.rack_outages += 1;
+                                let dur = rack_rng
+                                    .exponential(1.0 / f.rack_outage_duration_mean.max(1e-9));
+                                let rejoin_at = ev.time + 1 + latency_to_ticks(dur);
+                                for m in lo..hi {
+                                    if fleet.is_alive(m) {
+                                        queue.schedule(
+                                            ev.time + 1,
+                                            Event::NodeLeave { node: m },
+                                        );
+                                        queue.schedule(rejoin_at, Event::NodeJoin { node: m });
+                                    }
+                                }
+                            }
+                        }
+
+                        // 2a'. Federation partition hazard: open a cut over
+                        //      a drawn member set; the heal is scheduled up
+                        //      front from the same stream, and the §5.2
+                        //      stale-merge path runs at heal time.
+                        if partitions_active {
+                            let f = failures.unwrap();
+                            if partition_rng.bernoulli(f.partition_hazard) {
+                                let want = ((fleet.alive_count() as f64
+                                    * f.partition_fraction)
+                                    .ceil() as usize)
+                                    .max(1);
+                                sample_distinct(
+                                    &mut partition_rng,
+                                    fleet.alive_ids(),
+                                    None,
+                                    want,
+                                    &mut partition_members_buf,
+                                    &mut probe_scratch,
+                                );
+                                let idx = partitions.len();
+                                partitions.push(partition_members_buf.clone());
+                                let dur = partition_rng
+                                    .exponential(1.0 / f.partition_duration_mean.max(1e-9));
+                                queue.schedule(
+                                    ev.time + 1,
+                                    Event::PartitionStart { partition: idx },
+                                );
+                                queue.schedule(
+                                    ev.time + 1 + latency_to_ticks(dur),
+                                    Event::PartitionHeal { partition: idx },
+                                );
                             }
                         }
 
@@ -1254,9 +1483,53 @@ impl DiscreteEventEngine {
                                 state: JobState::Dispatching,
                                 enqueued_at: None,
                                 deadline: None,
+                                antagonist: false,
                             });
                             let off = (2 + j as u64).min(TICKS_PER_STEP - 1);
                             queue.schedule(ev.time + off, Event::JobArrival { job_id });
+                        }
+
+                        // 3a. Antagonist tenant arrivals: a second Poisson
+                        //     stream whose count, duration, and demand all
+                        //     draw from the dedicated stream — enabling the
+                        //     tenant never shifts the primary workload.
+                        //     Scheduled after the primary batch within the
+                        //     tick (offsets continue where the batch ended).
+                        if let Some(f) = failures.filter(|f| f.antagonist_enabled()) {
+                            let ka = antagonist_rng.poisson(f.antagonist_rate) as usize;
+                            for j in 0..ka {
+                                let duration_steps =
+                                    service.sample(&mut antagonist_rng);
+                                let demand = match &cap {
+                                    Some(c) => {
+                                        1 + antagonist_rng
+                                            .gen_range(c.max_job_slots as usize)
+                                            as u32
+                                    }
+                                    None => 1,
+                                };
+                                let priority: Priority = if priority_levels > 1 {
+                                    f.antagonist_priority.min(priority_levels - 1)
+                                        as Priority
+                                } else {
+                                    0
+                                };
+                                let job_id = jobs.len() as JobId;
+                                jobs.push(JobRec {
+                                    demand,
+                                    duration_steps,
+                                    gen: 0,
+                                    migrations_left: initial_migrations,
+                                    priority,
+                                    state: JobState::Dispatching,
+                                    enqueued_at: None,
+                                    deadline: None,
+                                    antagonist: true,
+                                });
+                                let off =
+                                    (2 + (k + j) as u64).min(TICKS_PER_STEP - 1);
+                                queue.schedule(ev.time + off, Event::JobArrival { job_id });
+                            }
                         }
 
                         // 4. Federation push boundary: alive leaves offer
@@ -1266,8 +1539,30 @@ impl DiscreteEventEngine {
                         if tree.is_some() && (step + 1) % fed.push_every == 0 {
                             for &leaf in fleet.alive_ids() {
                                 if let Some(iterate) = policies[leaf].iterate() {
+                                    // The latency draw happens for every
+                                    // offer, partitioned or not, so the
+                                    // stream position depends only on the
+                                    // offer sequence.
                                     let delay = fed.latency.sample(&mut latency_rng);
-                                    let dt = latency_to_ticks(delay);
+                                    if partitioned[leaf] > 0 {
+                                        // Uplink cut: queue the snapshot
+                                        // for a stale replay on heal, or
+                                        // drop and count it.
+                                        if failures.is_some_and(|f| f.partition_queue) {
+                                            let snapshot = pool.put(iterate);
+                                            partition_pending
+                                                .push((leaf, snapshot, ev.time));
+                                        } else {
+                                            report.federation_partition_drops += 1;
+                                        }
+                                        continue;
+                                    }
+                                    // Stragglers push slower: the per-node
+                                    // multiplier scales the sampled delay
+                                    // (×1.0 — an exact identity — on
+                                    // healthy nodes).
+                                    let dt =
+                                        latency_to_ticks(delay * straggler_mult[leaf]);
                                     let snapshot = pool.put(iterate);
                                     queue.schedule(
                                         ev.time + dt,
@@ -1288,17 +1583,27 @@ impl DiscreteEventEngine {
 
                     Event::JobArrival { job_id } => {
                         let step = ticks_to_step(ev.time);
+                        let antagonist = jobs[job_id as usize].antagonist;
                         report.jobs_arrived += 1;
+                        if antagonist {
+                            report.antagonist_jobs_arrived += 1;
+                        }
                         // SLO clock starts at arrival, whatever happens next:
                         // rejected/dropped/lost jobs count against attainment.
                         if let Some(slo) = cap.as_ref().and_then(|c| c.slo_steps) {
                             jobs[job_id as usize].deadline =
                                 Some(ev.time + slo as u64 * TICKS_PER_STEP);
                             report.slo_total += 1;
+                            if antagonist {
+                                report.antagonist_slo_total += 1;
+                            }
                         }
                         if fleet.alive_count() == 0 {
                             report.jobs_rejected += 1;
                             report.jobs_unplaceable += 1;
+                            if antagonist {
+                                report.antagonist_jobs_rejected += 1;
+                            }
                             report.outcomes.push(JobOutcome::Rejected { at: step });
                             jobs[job_id as usize].state = JobState::Rejected;
                             continue;
@@ -1362,6 +1667,9 @@ impl DiscreteEventEngine {
                             }
                             None => {
                                 report.jobs_rejected += 1;
+                                if antagonist {
+                                    report.antagonist_jobs_rejected += 1;
+                                }
                                 let hi = score_hi(step);
                                 let justified = candidates.iter().any(|&c| {
                                     memo.spike_within(&mut source, c, step, hi, ready_threshold)
@@ -1381,11 +1689,24 @@ impl DiscreteEventEngine {
                             continue;
                         }
                         if !fleet.is_alive(node) {
-                            // Defensive: the target vanished between admission
-                            // and hand-off (cannot happen with the current
-                            // event timing, but the ledger must never leak).
-                            rec.state = JobState::Displaced;
-                            report.jobs_displaced += 1;
+                            // The target vanished between admission and
+                            // hand-off (mass-churn interleavings make this
+                            // reachable). The job used to be written off
+                            // outright, stranding its migration budget —
+                            // route it through the migrate path like any
+                            // other displacement so the ledger treatment
+                            // matches a post-placement departure.
+                            if rec.migrations_left > 0 {
+                                rec.migrations_left -= 1;
+                                rec.state = JobState::Migrating;
+                                queue.schedule(
+                                    ev.time + 1,
+                                    Event::JobMigrate { job_id, from: node },
+                                );
+                            } else {
+                                rec.state = JobState::Displaced;
+                                report.jobs_displaced += 1;
+                            }
                             continue;
                         }
                         // Clamp to the placed host's budget: on heterogeneous
@@ -1449,6 +1770,9 @@ impl DiscreteEventEngine {
                         if let Some(deadline) = rec.deadline {
                             if ev.time <= deadline {
                                 report.slo_attained += 1;
+                                if rec.antagonist {
+                                    report.antagonist_slo_attained += 1;
+                                }
                             }
                         }
                         total_inflight -= 1;
@@ -1571,6 +1895,15 @@ impl DiscreteEventEngine {
                                 continue; // floor reached since scheduling
                             }
                         }
+                        // Rack outages carry their own hard floor: the
+                        // hazard pre-checks it at scheduling time, but
+                        // same-tick interleavings with the churn model
+                        // could still overshoot — re-check at execution.
+                        if let Some(f) = failures.filter(|f| f.rack_outages_enabled()) {
+                            if fleet.alive_count() <= f.min_alive {
+                                continue;
+                            }
+                        }
                         // The sorted alive list and its dense rank map are
                         // maintained incrementally (O(shift)) — same
                         // resulting order as the historical binary-search
@@ -1641,6 +1974,11 @@ impl DiscreteEventEngine {
                         fleet.join(node);
                         report.node_joins += 1;
                         util.node_joined(ev.time, hosts.slots(node));
+                        // Rejoin bugfix: the pre-outage queue-delay EWMA
+                        // and sample count describe a host that no longer
+                        // exists — forget them so post-heal probes don't
+                        // steer queue-aware dispatch on stale congestion.
+                        hosts.reset_telemetry(node);
                         // A restarted machine comes back with empty local
                         // state…
                         if let Some(f) = &factory {
@@ -1665,6 +2003,40 @@ impl DiscreteEventEngine {
                         // Fresh nodes accept until their first telemetry tick
                         // says otherwise (cold PRONTO state raises no signal).
                         fleet.set_can_accept(node, true);
+                    }
+
+                    Event::PartitionStart { partition } => {
+                        report.partition_events += 1;
+                        // Counted, not flagged: overlapping cuts over the
+                        // same leaf must all heal before it reconnects.
+                        for &m in &partitions[partition] {
+                            partitioned[m] += 1;
+                        }
+                    }
+
+                    Event::PartitionHeal { partition } => {
+                        for &m in &partitions[partition] {
+                            partitioned[m] -= 1;
+                        }
+                        // Queued pushes from now-reconnected leaves replay
+                        // *stale*: the original send-time snapshot delivers
+                        // at heal time, which is exactly the §5.2
+                        // stale-merge regime. Scan order preserves the
+                        // queueing order, so replays merge FIFO per leaf.
+                        let mut i = 0;
+                        while i < partition_pending.len() {
+                            let (leaf, snapshot, sent_at) = partition_pending[i];
+                            if partitioned[leaf] == 0 {
+                                partition_pending.remove(i);
+                                report.federation_stale_replays += 1;
+                                queue.schedule(
+                                    ev.time,
+                                    Event::FederationPush { leaf, snapshot, sent_at },
+                                );
+                            } else {
+                                i += 1;
+                            }
+                        }
                     }
                 }
             }
@@ -2318,6 +2690,166 @@ mod tests {
         assert!(a.jobs_arrived >= 3_600, "storm too thin: {}", a.jobs_arrived);
         assert!(a.jobs_dropped > 0, "storm never overflowed the bounded queues");
         assert_ledger(&a);
+    }
+
+    #[test]
+    fn rack_outages_fire_rejoin_and_conserve_the_ledger() {
+        let sc = Scenario::named("rack-outage").unwrap().with_steps(1_500);
+        let tr = traces(24, 1_500, 101);
+        let report = DiscreteEventEngine::new(sc, tr.clone(), always_policies(&tr)).run();
+        assert!(report.rack_outages > 0, "no rack ever failed");
+        assert!(report.node_leaves > 0, "outages scheduled no departures");
+        assert!(report.node_joins > 0, "no rack ever came back");
+        let text = report.to_json_string();
+        assert!(text.contains("\"rack_outages\""));
+        assert!(text.contains("\"federation_stale_replays\""));
+        assert_ledger(&report);
+    }
+
+    #[test]
+    fn mass_rack_churn_storms_conserve_the_ledger_exactly() {
+        // Whole racks die under same-tick arrival storms: every
+        // JobEnqueue/NodeLeave interleaving must keep the ledger exact
+        // and the report byte-identical across observe-pool widths.
+        use crate::sim::scenario::{FailureModel, ReplaySchedule};
+        let counts: Vec<u32> = (0..40).map(|t| if t % 5 == 0 { 400 } else { 0 }).collect();
+        let sc = Scenario {
+            arrivals: ArrivalPattern::Replay {
+                schedule: std::sync::Arc::new(ReplaySchedule::from_counts(
+                    counts,
+                    "rack-storm",
+                )),
+            },
+            capacity: Some(CapacityModel {
+                slots_per_node: 2,
+                contended_slots: 2,
+                queue_capacity: 4,
+                max_job_slots: 1,
+                queue_policy: QueuePolicy::Fifo,
+                migration_limit: 1,
+                ..CapacityModel::default()
+            }),
+            failures: Some(FailureModel {
+                rack_size: 3,
+                rack_outage_hazard: 0.2,
+                rack_outage_duration_mean: 3.0,
+                min_alive: 3,
+                ..FailureModel::default()
+            }),
+            duration_mu: 0.5,
+            duration_sigma: 0.2,
+            ..Scenario::default()
+        }
+        .with_nodes(12)
+        .with_steps(40);
+        let tr = traces(12, 40, 7);
+        let run = |threads: usize| {
+            DiscreteEventEngine::new(
+                sc.clone().with_threads(threads),
+                tr.clone(),
+                always_policies(&tr),
+            )
+            .run()
+        };
+        let a = run(1);
+        let b = run(4);
+        assert_eq!(
+            a.to_json_string(),
+            b.to_json_string(),
+            "rack storm changed bytes across widths"
+        );
+        assert!(a.rack_outages > 2, "storm hazard barely fired: {}", a.rack_outages);
+        assert!(a.node_joins > 0, "racks never rejoined");
+        assert!(a.jobs_arrived >= 3_000, "storm too thin: {}", a.jobs_arrived);
+        assert_ledger(&a);
+    }
+
+    #[test]
+    fn partitions_queue_and_replay_stale_pushes() {
+        let sc = Scenario::named("partition").unwrap().with_nodes(12).with_steps(2_000);
+        let tr = traces(12, 2_000, 103);
+        let report = DiscreteEventEngine::new(sc, tr.clone(), pronto_policies(&tr)).run();
+        assert!(report.partition_events > 0, "no partition ever opened");
+        assert!(
+            report.federation_stale_replays > 0,
+            "no queued push ever replayed stale"
+        );
+        assert_eq!(
+            report.federation_partition_drops, 0,
+            "queue mode must not drop pushes"
+        );
+        let text = report.to_json_string();
+        assert!(text.contains("\"partition_events\""));
+        assert_ledger(&report);
+    }
+
+    #[test]
+    fn stragglers_slow_their_pushes_measurably() {
+        use crate::federation::LatencyModel;
+        use crate::sim::scenario::{FailureModel, FederationSpec};
+        // Constant base latency isolates the multiplier: healthy nodes
+        // deliver at 2 steps, the straggler fifth at 16 — the observed
+        // mean must sit strictly above the healthy constant.
+        let sc = Scenario {
+            federation: FederationSpec {
+                enabled: true,
+                latency: LatencyModel::Constant { steps: 2.0 },
+                ..Default::default()
+            },
+            failures: Some(FailureModel {
+                straggler_fraction: 0.2,
+                straggler_delay_multiplier: 8.0,
+                straggler_observe_lag: 2,
+                ..FailureModel::default()
+            }),
+            ..Scenario::default()
+        }
+        .with_nodes(10)
+        .with_steps(1_000);
+        let tr = traces(10, 1_000, 107);
+        let report =
+            DiscreteEventEngine::new(sc.clone(), tr.clone(), pronto_policies(&tr)).run();
+        let total = report.federation_pushes + report.federation_suppressed;
+        assert!(total > 0, "no pushes offered");
+        assert!(
+            report.mean_push_latency_steps > 2.1,
+            "straggler multiplier had no effect: mean {}",
+            report.mean_push_latency_steps
+        );
+        assert_ledger(&report);
+    }
+
+    #[test]
+    fn antagonist_tenant_reports_per_tenant_breakdown() {
+        let sc = Scenario::named("antagonist").unwrap().with_nodes(6).with_steps(1_200);
+        let tr = traces(6, 1_200, 105);
+        let report = DiscreteEventEngine::new(sc.clone(), tr.clone(), always_policies(&tr)).run();
+        assert!(report.antagonist_jobs_arrived > 0, "antagonist never showed up");
+        assert!(report.antagonist_jobs_arrived < report.jobs_arrived);
+        assert!(report.antagonist_slo_total > 0);
+        assert!(report.antagonist_slo_total <= report.slo_total);
+        assert!(report.antagonist_jobs_rejected <= report.jobs_rejected);
+        assert!(report.antagonist_slo_attained <= report.slo_attained);
+        let text = report.to_json_string();
+        assert!(text.contains("\"antagonist_slo_attainment\""));
+        assert!(text.contains("\"primary_jobs_rejected\""));
+        assert_ledger(&report);
+
+        // Enabling the tenant must not shift the primary workload: the
+        // same seed without the failure layer draws the same primary
+        // arrival sequence.
+        let plain = DiscreteEventEngine::new(
+            Scenario { failures: None, ..sc },
+            tr.clone(),
+            always_policies(&tr),
+        )
+        .run();
+        assert_eq!(
+            report.jobs_arrived - report.antagonist_jobs_arrived,
+            plain.jobs_arrived,
+            "antagonist stream shifted the primary arrivals"
+        );
+        assert!(!plain.to_json_string().contains("antagonist_"));
     }
 
     #[test]

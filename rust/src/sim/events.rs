@@ -107,6 +107,13 @@ pub enum Event {
     NodeJoin { node: usize },
     /// A node leaves the pool; its in-flight jobs are displaced.
     NodeLeave { node: usize },
+    /// A federation network partition opens: the member set indexed by
+    /// `partition` in the engine's partition table loses its uplink
+    /// (pushes are queued or dropped until the matching heal).
+    PartitionStart { partition: usize },
+    /// The partition closes; queued pushes replay *stale* (original
+    /// send-time snapshots), exercising the §5.2 stale-merge path.
+    PartitionHeal { partition: usize },
 }
 
 /// An event bound to a point on the simulation clock.

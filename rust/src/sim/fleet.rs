@@ -296,6 +296,13 @@ impl HostTable {
         self.sync(i);
         out
     }
+
+    /// Reset node `i`'s queue-delay telemetry (rejoin after an outage);
+    /// see [`HostCapacity::reset_telemetry`].
+    pub fn reset_telemetry(&mut self, i: usize) {
+        self.hosts[i].reset_telemetry();
+        self.sync(i);
+    }
 }
 
 #[cfg(test)]
@@ -423,5 +430,10 @@ mod tests {
         check(&t);
         assert_eq!(t.used(0), 0);
         assert_eq!(t.queue_len(0), 0);
+        // The delay mirror tracks the rejoin telemetry reset too.
+        assert!(t.probe(0, false).queue_delay_ewma > 0.0);
+        t.reset_telemetry(0);
+        check(&t);
+        assert_eq!(t.probe(0, false).queue_delay_ewma, 0.0);
     }
 }

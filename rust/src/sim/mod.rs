@@ -52,6 +52,6 @@ pub use events::{
     SimTime, TickBatch, TICKS_PER_STEP,
 };
 pub use scenario::{
-    ArrivalPattern, CapacityModel, ChurnModel, DispatchPolicy, FederationSpec, HostClass,
-    ProbePolicy, ReplaySchedule, Scenario, CATALOG,
+    ArrivalPattern, CapacityModel, ChurnModel, DispatchPolicy, FailureModel, FederationSpec,
+    HostClass, ProbePolicy, ReplaySchedule, Scenario, CATALOG,
 };

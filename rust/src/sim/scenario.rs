@@ -240,6 +240,99 @@ pub struct ChurnModel {
     pub min_alive: usize,
 }
 
+/// Fault-injection layer: correlated failures the benign catalog never
+/// exercises. Every component is inert at its zero default, draws from
+/// its own dedicated RNG stream in the engine (`rack-outage`,
+/// `partition`, `straggler`, `antagonist` in [`crate::rng::streams`]),
+/// and reports through keys that appear in the JSON only when the
+/// component is active — legacy reports stay byte-identical.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FailureModel {
+    /// Nodes per rack: node ids `[r·rack_size, (r+1)·rack_size)` form
+    /// rack `r`. Rack outages take the whole group down at once.
+    pub rack_size: usize,
+    /// Per-rack per-step probability of a correlated outage (0 = off).
+    pub rack_outage_hazard: f64,
+    /// Mean outage length in steps (exponential); the whole rack rejoins
+    /// together when it elapses.
+    pub rack_outage_duration_mean: f64,
+    /// Rack outages never drain the fleet below this many alive nodes.
+    pub min_alive: usize,
+    /// Per-step probability that a federation network partition opens
+    /// (0 = off). Requires federation to be enabled.
+    pub partition_hazard: f64,
+    /// Mean heal time in steps (exponential).
+    pub partition_duration_mean: f64,
+    /// Fraction of the fleet's leaves cut off per partition (at least 1).
+    pub partition_fraction: f64,
+    /// `true`: pushes from partitioned leaves queue at the cut and replay
+    /// **stale** on heal (the §5.2 stale-merge path). `false`: they are
+    /// dropped and counted (`federation_partition_drops`).
+    pub partition_queue: bool,
+    /// Fraction of nodes designated stragglers at engine init (0 = off).
+    pub straggler_fraction: f64,
+    /// Multiplier on a straggler's sampled federation push latency
+    /// (needs a non-instant latency model to have any effect).
+    pub straggler_delay_multiplier: f64,
+    /// A straggler's published rejection signal lags its computed one by
+    /// this many telemetry steps (delayed observe columns).
+    pub straggler_observe_lag: usize,
+    /// Poisson rate of a second, antagonist tenant's arrivals (0 = off).
+    /// All antagonist draws come from a dedicated stream, so enabling the
+    /// tenant never shifts the primary workload.
+    pub antagonist_rate: f64,
+    /// Priority class of antagonist jobs (clamped to the capacity model's
+    /// `priority_levels`).
+    pub antagonist_priority: u8,
+}
+
+impl Default for FailureModel {
+    fn default() -> Self {
+        Self {
+            rack_size: 8,
+            rack_outage_hazard: 0.0,
+            rack_outage_duration_mean: 60.0,
+            min_alive: 1,
+            partition_hazard: 0.0,
+            partition_duration_mean: 40.0,
+            partition_fraction: 0.25,
+            partition_queue: true,
+            straggler_fraction: 0.0,
+            straggler_delay_multiplier: 4.0,
+            straggler_observe_lag: 2,
+            antagonist_rate: 0.0,
+            antagonist_priority: 0,
+        }
+    }
+}
+
+impl FailureModel {
+    /// Does any rack ever go down?
+    pub fn rack_outages_enabled(&self) -> bool {
+        self.rack_outage_hazard > 0.0
+    }
+
+    /// Do partitions ever open?
+    pub fn partitions_enabled(&self) -> bool {
+        self.partition_hazard > 0.0
+    }
+
+    /// Are any nodes designated stragglers?
+    pub fn stragglers_enabled(&self) -> bool {
+        self.straggler_fraction > 0.0
+    }
+
+    /// Does the antagonist tenant submit jobs?
+    pub fn antagonist_enabled(&self) -> bool {
+        self.antagonist_rate > 0.0
+    }
+
+    /// Does the model induce node churn (leave/rejoin) on its own?
+    pub fn induces_churn(&self) -> bool {
+        self.rack_outages_enabled()
+    }
+}
+
 /// One class of hosts in a heterogeneous fleet: a slot budget and the
 /// relative weight with which nodes are assigned to the class.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -416,6 +509,8 @@ pub struct Scenario {
     pub federation: FederationSpec,
     /// Host capacity model; `None` = legacy admission-only simulation.
     pub capacity: Option<CapacityModel>,
+    /// Fault-injection layer; `None` = the benign legacy catalog.
+    pub failures: Option<FailureModel>,
 }
 
 impl Default for Scenario {
@@ -436,6 +531,7 @@ impl Default for Scenario {
             churn: None,
             federation: FederationSpec::default(),
             capacity: None,
+            failures: None,
         }
     }
 }
@@ -456,6 +552,10 @@ pub const CATALOG: &[&str] = &[
     "hetero",
     "large-fleet",
     "flash-crowd",
+    "rack-outage",
+    "partition",
+    "straggler",
+    "antagonist",
 ];
 
 impl Scenario {
@@ -684,9 +784,110 @@ impl Scenario {
                 },
                 ..base
             },
+            // Correlated whole-rack outages: racks of 4 hosts fail and
+            // rejoin together, evacuating their running sets and wait
+            // queues through the migration path. The ledger-conservation
+            // sweep drives this entry.
+            "rack-outage" => Scenario {
+                name: name.into(),
+                nodes: 24,
+                arrivals: ArrivalPattern::Poisson { rate: 0.5 },
+                capacity: Some(CapacityModel {
+                    slots_per_node: 4,
+                    contended_slots: 4,
+                    queue_capacity: 8,
+                    max_job_slots: 2,
+                    queue_policy: QueuePolicy::Fifo,
+                    migration_limit: 2,
+                    ..CapacityModel::default()
+                }),
+                federation: FederationSpec { enabled: true, ..Default::default() },
+                // min_alive 4 (not higher): the catalog smoke runs every
+                // entry at --nodes 6, and validation requires the floor
+                // to sit strictly below the fleet size.
+                failures: Some(FailureModel {
+                    rack_size: 4,
+                    rack_outage_hazard: 0.002,
+                    rack_outage_duration_mean: 60.0,
+                    min_alive: 4,
+                    ..FailureModel::default()
+                }),
+                ..base
+            },
+            // Federation-tree network partitions: a quarter of the leaves
+            // lose their uplink, their pushes queue at the cut, and heal
+            // replays them *stale* — the §5.2 stale-merge path under
+            // asynchrony the paper scopes out.
+            "partition" => Scenario {
+                name: name.into(),
+                federation: FederationSpec {
+                    enabled: true,
+                    latency: LatencyModel::Exponential { mean_steps: 2.0 },
+                    ..Default::default()
+                },
+                failures: Some(FailureModel {
+                    partition_hazard: 0.004,
+                    partition_duration_mean: 40.0,
+                    partition_fraction: 0.25,
+                    partition_queue: true,
+                    ..FailureModel::default()
+                }),
+                ..base
+            },
+            // Straggler nodes: a fifth of the fleet pushes its iterate 8×
+            // slower than the WAN baseline and publishes a rejection
+            // signal 3 steps stale — the dispatcher steers by telemetry
+            // that lags the host's real state.
+            "straggler" => Scenario {
+                name: name.into(),
+                federation: FederationSpec {
+                    enabled: true,
+                    latency: LatencyModel::Exponential { mean_steps: 2.0 },
+                    ..Default::default()
+                },
+                failures: Some(FailureModel {
+                    straggler_fraction: 0.2,
+                    straggler_delay_multiplier: 8.0,
+                    straggler_observe_lag: 3,
+                    ..FailureModel::default()
+                }),
+                ..base
+            },
+            // Antagonist tenant: a second arrival stream at high priority
+            // thrashes admission against the primary workload's SLO. The
+            // report splits attainment and rejections per tenant.
+            "antagonist" => Scenario {
+                name: name.into(),
+                arrivals: ArrivalPattern::Poisson { rate: 0.7 },
+                dispatch: DispatchPolicy::QueueAware,
+                capacity: Some(CapacityModel {
+                    slots_per_node: 2,
+                    contended_slots: 2,
+                    queue_capacity: 8,
+                    max_job_slots: 1,
+                    queue_policy: QueuePolicy::Fifo,
+                    migration_limit: 0,
+                    priority_levels: 3,
+                    slo_steps: Some(30),
+                    ..CapacityModel::default()
+                }),
+                failures: Some(FailureModel {
+                    antagonist_rate: 0.8,
+                    antagonist_priority: 2,
+                    ..FailureModel::default()
+                }),
+                ..base
+            },
             _ => return None,
         };
         Some(s)
+    }
+
+    /// Does the scenario ever take nodes down — via the churn model or
+    /// via failure-induced outages? Gates the rejoin policy factory in
+    /// the CLI (a restarted machine loses its in-memory state).
+    pub fn has_node_churn(&self) -> bool {
+        self.churn.is_some() || self.failures.is_some_and(|f| f.induces_churn())
     }
 
     /// Resolve a CLI `--scenario` argument: a catalog name, or a path to a
@@ -745,6 +946,10 @@ impl Scenario {
         // has no table arrays): slots are required, weights default equal.
         let mut host_class_slots: Option<Vec<f64>> = None;
         let mut host_class_weights: Option<Vec<f64>> = None;
+        // Failure model assembled likewise; presence of the section
+        // enables it (inert unless a hazard/rate/fraction is raised).
+        let mut failures_seen = false;
+        let mut failures = FailureModel::default();
         // Federation latency fields. Options so a parameter without the
         // selector (or vice versa) can be detected instead of silently
         // degenerating to instant delivery.
@@ -872,6 +1077,62 @@ impl Scenario {
                     ("churn", "min_alive") => {
                         churn_seen = true;
                         churn.min_alive = uint()?;
+                    }
+
+                    ("failures", "rack_size") => {
+                        failures_seen = true;
+                        failures.rack_size = uint()?;
+                    }
+                    ("failures", "rack_outage_hazard") => {
+                        failures_seen = true;
+                        failures.rack_outage_hazard = num()?;
+                    }
+                    ("failures", "rack_outage_duration_mean") => {
+                        failures_seen = true;
+                        failures.rack_outage_duration_mean = num()?;
+                    }
+                    ("failures", "min_alive") => {
+                        failures_seen = true;
+                        failures.min_alive = uint()?;
+                    }
+                    ("failures", "partition_hazard") => {
+                        failures_seen = true;
+                        failures.partition_hazard = num()?;
+                    }
+                    ("failures", "partition_duration_mean") => {
+                        failures_seen = true;
+                        failures.partition_duration_mean = num()?;
+                    }
+                    ("failures", "partition_fraction") => {
+                        failures_seen = true;
+                        failures.partition_fraction = num()?;
+                    }
+                    ("failures", "partition_queue") => {
+                        failures_seen = true;
+                        failures.partition_queue = boolean()?;
+                    }
+                    ("failures", "straggler_fraction") => {
+                        failures_seen = true;
+                        failures.straggler_fraction = num()?;
+                    }
+                    ("failures", "straggler_delay_multiplier") => {
+                        failures_seen = true;
+                        failures.straggler_delay_multiplier = num()?;
+                    }
+                    ("failures", "straggler_observe_lag") => {
+                        failures_seen = true;
+                        failures.straggler_observe_lag = uint()?;
+                    }
+                    ("failures", "antagonist_rate") => {
+                        failures_seen = true;
+                        failures.antagonist_rate = num()?;
+                    }
+                    ("failures", "antagonist_priority") => {
+                        failures_seen = true;
+                        failures.antagonist_priority =
+                            u8::try_from(uint()?).map_err(|_| {
+                                anyhow::anyhow!("failures.antagonist_priority out of range")
+                            })?;
                     }
 
                     ("federation", "enabled") => s.federation.enabled = boolean()?,
@@ -1025,6 +1286,9 @@ impl Scenario {
         if churn_seen {
             s.churn = Some(churn);
         }
+        if failures_seen {
+            s.failures = Some(failures);
+        }
         s.validate()?;
         Ok(s)
     }
@@ -1098,6 +1362,51 @@ impl Scenario {
             }
             if c.slo_steps == Some(0) {
                 bail!("scenario: capacity.slo_steps must be >= 1");
+            }
+        }
+        if let Some(f) = &self.failures {
+            let frac01 = |x: f64| x.is_finite() && (0.0..=1.0).contains(&x);
+            if !frac01(f.rack_outage_hazard) || !frac01(f.partition_hazard) {
+                bail!("scenario: failure hazards must be probabilities in [0, 1]");
+            }
+            if !frac01(f.straggler_fraction) {
+                bail!("scenario: failures.straggler_fraction must be in [0, 1]");
+            }
+            if f.rack_outages_enabled() {
+                if f.rack_size == 0 {
+                    bail!("scenario: failures.rack_size must be >= 1");
+                }
+                if !(f.rack_outage_duration_mean > 0.0) {
+                    bail!("scenario: failures.rack_outage_duration_mean must be positive");
+                }
+                if f.min_alive >= self.nodes {
+                    bail!(
+                        "scenario: failures.min_alive ({}) must be below nodes ({}) \
+                         or no rack can ever fail",
+                        f.min_alive,
+                        self.nodes
+                    );
+                }
+            }
+            if f.partitions_enabled() {
+                if !self.federation.enabled {
+                    bail!(
+                        "scenario: failures.partition_hazard needs federation.enabled \
+                         (there is no tree to partition)"
+                    );
+                }
+                if !(f.partition_duration_mean > 0.0) {
+                    bail!("scenario: failures.partition_duration_mean must be positive");
+                }
+                if !(f.partition_fraction > 0.0 && f.partition_fraction <= 1.0) {
+                    bail!("scenario: failures.partition_fraction must be in (0, 1]");
+                }
+            }
+            if f.stragglers_enabled() && !(f.straggler_delay_multiplier >= 1.0) {
+                bail!("scenario: failures.straggler_delay_multiplier must be >= 1");
+            }
+            if !(f.antagonist_rate.is_finite() && f.antagonist_rate >= 0.0) {
+                bail!("scenario: failures.antagonist_rate must be finite and non-negative");
             }
         }
         // Each regime's rate must be valid on its own — a healthy mean
@@ -1599,6 +1908,107 @@ migration_limit = 3
 
     fn cap_model_of(name: &str) -> Option<CapacityModel> {
         Scenario::named(name).unwrap().capacity
+    }
+
+    #[test]
+    fn failure_catalog_entries_compose_as_documented() {
+        let ro = Scenario::named("rack-outage").unwrap();
+        let f = ro.failures.unwrap();
+        assert!(f.rack_outages_enabled());
+        assert!(f.induces_churn());
+        assert!(ro.has_node_churn(), "rack outages must gate the rejoin factory");
+        assert!(ro.churn.is_none(), "outages come from the failure layer alone");
+        assert_eq!(ro.nodes % f.rack_size, 0, "partial racks complicate the sweep");
+        assert!(f.min_alive < ro.nodes);
+        assert!(ro.capacity.as_ref().unwrap().migration_limit > 0);
+
+        let pa = Scenario::named("partition").unwrap();
+        let f = pa.failures.unwrap();
+        assert!(f.partitions_enabled() && f.partition_queue);
+        assert!(pa.federation.enabled, "nothing to partition without a tree");
+        assert!(!pa.has_node_churn(), "partitions cut uplinks, not nodes");
+
+        let st = Scenario::named("straggler").unwrap();
+        let f = st.failures.unwrap();
+        assert!(f.stragglers_enabled());
+        assert!(f.straggler_delay_multiplier > 1.0);
+        assert!(f.straggler_observe_lag > 0);
+        assert!(
+            !st.federation.latency.is_instant(),
+            "a delay multiplier on instant pushes would be inert"
+        );
+
+        let an = Scenario::named("antagonist").unwrap();
+        let f = an.failures.unwrap();
+        assert!(f.antagonist_enabled());
+        let c = an.capacity.unwrap();
+        assert!(f.antagonist_priority < c.priority_levels);
+        assert!(c.slo_steps.is_some(), "per-tenant attainment needs an SLO");
+    }
+
+    #[test]
+    fn failures_toml_section_enables_and_validates() {
+        let s = Scenario::from_toml(
+            r#"
+[federation]
+enabled = true
+
+[failures]
+rack_size = 4
+rack_outage_hazard = 0.003
+rack_outage_duration_mean = 50
+min_alive = 6
+partition_hazard = 0.002
+partition_fraction = 0.5
+partition_queue = false
+straggler_fraction = 0.25
+straggler_delay_multiplier = 6
+straggler_observe_lag = 4
+antagonist_rate = 0.4
+antagonist_priority = 1
+"#,
+        )
+        .unwrap();
+        let f = s.failures.unwrap();
+        assert_eq!(f.rack_size, 4);
+        assert_eq!(f.rack_outage_hazard, 0.003);
+        assert_eq!(f.min_alive, 6);
+        assert!(!f.partition_queue);
+        assert_eq!(f.straggler_observe_lag, 4);
+        assert_eq!(f.antagonist_priority, 1);
+        assert!(s.has_node_churn());
+
+        // Unknown keys and invalid compositions fail loudly.
+        assert!(Scenario::from_toml("[failures]\nrack_hazard = 0.1\n").is_err());
+        assert!(Scenario::from_toml("[failures]\nrack_outage_hazard = 1.5\n").is_err());
+        assert!(Scenario::from_toml(
+            "[failures]\nrack_outage_hazard = 0.01\nrack_size = 0\n"
+        )
+        .is_err());
+        assert!(
+            Scenario::from_toml("[failures]\npartition_hazard = 0.01\n").is_err(),
+            "partitions without federation must be rejected"
+        );
+        assert!(Scenario::from_toml(
+            "[federation]\nenabled = true\n[failures]\npartition_hazard = 0.01\n\
+             partition_fraction = 0\n"
+        )
+        .is_err());
+        assert!(Scenario::from_toml(
+            "[failures]\nstraggler_fraction = 0.2\nstraggler_delay_multiplier = 0.5\n"
+        )
+        .is_err());
+        assert!(Scenario::from_toml("[failures]\nantagonist_rate = -1\n").is_err());
+        assert!(Scenario::from_toml(
+            "[scenario]\nnodes = 8\n[failures]\nrack_outage_hazard = 0.01\nmin_alive = 8\n"
+        )
+        .is_err());
+
+        // An inert section parses (all hazards at their zero defaults).
+        let s = Scenario::from_toml("[failures]\nrack_size = 8\n").unwrap();
+        let f = s.failures.unwrap();
+        assert!(!f.rack_outages_enabled() && !f.antagonist_enabled());
+        assert!(!s.has_node_churn());
     }
 
     #[test]

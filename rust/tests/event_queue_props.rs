@@ -424,6 +424,107 @@ fn same_tick_storm_interleavings_conserve_the_job_ledger() {
 }
 
 #[test]
+fn in_batch_partition_heal_ordering_is_sound_and_replays_later_same_tick() {
+    // The failure layer's partition machinery rests on two queue
+    // properties: (1) a partition's Start always drains before its Heal
+    // even when both land in the *same* batch (Start is scheduled
+    // first, and same-time events drain FIFO), so the engine's per-node
+    // overlap counters never under-run; (2) the stale replays a Heal
+    // handler schedules *at the batch's own timestamp* surface in a
+    // later batch at that same tick — after every heal of the tick has
+    // been applied, exactly like the JobEnqueue follow-up pattern.
+    forall("partition start/heal: overlap counters + stale replay batching", |rng| {
+        let nodes = 4 + rng.gen_range(12);
+        let parts = 1 + rng.gen_range(10);
+        let mut q = EventQueue::with_capacity(64);
+        let mut spans: Vec<(SimTime, SimTime)> = Vec::with_capacity(parts);
+        for p in 0..parts {
+            // Tight ranges force same-tick starts, heals, and overlaps
+            // between distinct partitions; a zero-length span puts a
+            // partition's own start and heal in one batch.
+            let ts = rng.gen_range(20) as SimTime;
+            let th = ts + rng.gen_range(10) as SimTime;
+            q.schedule(ts, Event::PartitionStart { partition: p });
+            q.schedule(th, Event::PartitionHeal { partition: p });
+            spans.push((ts, th));
+        }
+        // Deterministic member sets that overlap across partitions, so
+        // a node can sit under several concurrent cuts.
+        let members = |p: usize| (0..3).map(move |k| (p + k) % nodes);
+        let mut overlap = vec![0i64; nodes];
+        let mut pending_replays: Vec<(usize, SimTime)> = Vec::new();
+        let mut healed = 0usize;
+        let mut replayed = 0usize;
+        let mut batch = TickBatch::default();
+        while q.drain_tick(&mut batch) {
+            let t = batch.time();
+            for s in batch.events() {
+                match s.event {
+                    Event::PartitionStart { partition } => {
+                        for m in members(partition) {
+                            overlap[m] += 1;
+                        }
+                    }
+                    Event::PartitionHeal { partition } => {
+                        for m in members(partition) {
+                            overlap[m] -= 1;
+                            if overlap[m] < 0 {
+                                return Err(format!(
+                                    "overlap under-ran on node {m} at t={t}: \
+                                     a heal drained before its start"
+                                ));
+                            }
+                        }
+                        healed += 1;
+                        // Engine-style stale replay: scheduled at the
+                        // batch's own timestamp with the original
+                        // send-time payload.
+                        q.schedule(
+                            t,
+                            Event::FederationPush {
+                                leaf: partition % nodes,
+                                snapshot: partition,
+                                sent_at: spans[partition].0,
+                            },
+                        );
+                        pending_replays.push((partition, t));
+                    }
+                    Event::FederationPush { snapshot, sent_at, .. } => {
+                        let pos = pending_replays
+                            .iter()
+                            .position(|&(p, _)| p == snapshot)
+                            .ok_or("replay delivered that no heal scheduled")?;
+                        let (_, heal_t) = pending_replays.swap_remove(pos);
+                        if t != heal_t {
+                            return Err(format!(
+                                "stale replay drifted: healed at {heal_t}, delivered at {t}"
+                            ));
+                        }
+                        if sent_at != spans[snapshot].0 {
+                            return Err("replay lost its original send time".into());
+                        }
+                        replayed += 1;
+                    }
+                    other => return Err(format!("unexpected event {other:?}")),
+                }
+            }
+        }
+        if healed != parts || replayed != parts {
+            return Err(format!(
+                "lost partitions: {healed} healed, {replayed} replayed of {parts}"
+            ));
+        }
+        if !pending_replays.is_empty() {
+            return Err("a scheduled replay never drained".into());
+        }
+        if overlap.iter().any(|&c| c != 0) {
+            return Err("overlap counters did not return to zero".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn latency_to_ticks_is_monotone_and_never_zero() {
     forall("latency_to_ticks: floor 1, monotone, exact on whole steps", |rng| {
         let a = rng.next_f64() * 50.0;

@@ -1,0 +1,107 @@
+//! Integration coverage for the fault-injection scenario suite: every
+//! failure-catalog entry must produce byte-identical reports across
+//! observe-pool widths (`--threads 1` vs `4`) *and* across the two
+//! trace sources (streaming vs materialized), and the job ledger must
+//! conserve exactly under correlated rack churn.
+
+use pronto::scheduler::{Admission, RandomPolicy};
+use pronto::sim::{DiscreteEventEngine, Scenario, SimReport};
+use pronto::telemetry::{fleet_members, GeneratorConfig, TraceGenerator, TraceSource};
+
+/// Same membership rule as the CLI (`fleet_members`), which is what
+/// keeps the two trace sources byte-identical.
+const FANOUT: usize = 8;
+
+fn run(name: &str, nodes: usize, steps: usize, threads: usize, stream: bool) -> SimReport {
+    let sc = Scenario::named(name)
+        .unwrap_or_else(|| panic!("unknown scenario {name}"))
+        .with_nodes(nodes)
+        .with_steps(steps)
+        .with_threads(threads);
+    let seed = sc.seed;
+    let gen = TraceGenerator::new(GeneratorConfig::default(), seed);
+    let members = fleet_members(nodes, FANOUT);
+    let source = if stream {
+        TraceSource::streaming(&gen, &members, steps, sc.score_window)
+    } else {
+        let fleet: Vec<_> = members
+            .iter()
+            .map(|&(c, v)| gen.generate_vm_in_cluster(c, v, steps))
+            .collect();
+        TraceSource::materialized(fleet)
+    };
+    let policies: Vec<Box<dyn Admission>> = (0..nodes)
+        .map(|i| Box::new(RandomPolicy::always_accept(seed ^ i as u64)) as Box<dyn Admission>)
+        .collect();
+    DiscreteEventEngine::try_from_source(sc, source, policies)
+        .expect("engine builds")
+        .run()
+}
+
+fn assert_ledger(name: &str, r: &SimReport) {
+    let settled = r.jobs_rejected
+        + r.jobs_completed
+        + r.jobs_dropped
+        + r.jobs_displaced
+        + r.jobs_still_queued
+        + r.jobs_still_running;
+    assert_eq!(r.jobs_arrived, settled, "{name}: job ledger leaked");
+    assert_eq!(
+        r.jobs_arrived,
+        r.jobs_accepted + r.jobs_rejected,
+        "{name}: accept/reject split leaked"
+    );
+}
+
+#[test]
+fn failure_scenarios_are_byte_stable_across_widths_and_sources() {
+    // (scenario, nodes, steps) — sized so every failure mechanism
+    // actually fires while the 2×2 grid of runs stays cheap.
+    let cases = [
+        ("rack-outage", 12, 500),
+        ("partition", 8, 500),
+        ("straggler", 8, 400),
+        ("antagonist", 6, 400),
+    ];
+    for (name, nodes, steps) in cases {
+        let base = run(name, nodes, steps, 1, true);
+        let bytes = base.to_json_string();
+        assert_ledger(name, &base);
+        for (threads, stream) in [(4, true), (1, false), (4, false)] {
+            let other = run(name, nodes, steps, threads, stream);
+            assert_eq!(
+                bytes,
+                other.to_json_string(),
+                "{name} diverged at threads={threads} stream={stream}"
+            );
+        }
+    }
+}
+
+#[test]
+fn rack_outage_scenario_churns_and_conserves_under_longer_runs() {
+    let r = run("rack-outage", 16, 1_500, 4, true);
+    assert!(r.rack_outages > 0, "hazard never fired at this length");
+    assert!(r.node_leaves > 0 && r.node_joins > 0, "racks never cycled");
+    assert_ledger("rack-outage", &r);
+    // The failure keys are part of the serialized surface for failure
+    // scenarios — and only for them.
+    let text = r.to_json_string();
+    assert!(text.contains("\"rack_outages\""));
+    let legacy = run("baseline-poisson", 6, 200, 1, true).to_json_string();
+    assert!(
+        !legacy.contains("rack_outages") && !legacy.contains("antagonist"),
+        "legacy reports must not grow failure keys"
+    );
+}
+
+#[test]
+fn antagonist_scenario_reports_tenant_split_consistently() {
+    let r = run("antagonist", 6, 600, 1, true);
+    assert!(r.antagonist_jobs_arrived > 0, "tenant never arrived");
+    assert!(r.antagonist_jobs_arrived < r.jobs_arrived);
+    assert!(r.antagonist_jobs_rejected <= r.jobs_rejected);
+    assert!(r.antagonist_slo_total <= r.slo_total);
+    assert!(r.antagonist_slo_attained <= r.antagonist_slo_total);
+    assert_ledger("antagonist", &r);
+}
